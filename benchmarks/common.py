@@ -1,0 +1,90 @@
+"""Shared benchmark substrate: trained proxy models, eval metrics, timing.
+
+No ImageNet/SQuAD ships in the container, so each paper table is reproduced
+as a *proxy*: a smoke-scale model of the right family trained to convergence
+on the deterministic synthetic task (train/data.py), then PTQ'd with the
+method under test.  The comparisons (ours vs 1-term RTN vs GPTQ-lite etc.)
+therefore isolate exactly what the paper's tables isolate — the
+representation — while being runnable on CPU in seconds.
+
+Trained params are cached under /tmp so repeated benchmark runs are fast.
+"""
+from __future__ import annotations
+
+import os
+import time
+from typing import Callable, Dict, Optional, Tuple
+
+import jax
+import jax.numpy as jnp
+import numpy as np
+
+from repro.configs.base import get_arch
+from repro.dist import checkpoint as CKPT
+from repro.models import model as M
+from repro.models.layers import FP, QuantContext
+from repro.train.data import make_batch
+from repro.train.train_step import TrainConfig, loss_fn, make_train_step
+
+CACHE_DIR = os.environ.get("REPRO_BENCH_CACHE", "/tmp/repro_bench_models")
+
+
+def trained_model(arch: str, steps: int = 80, seq: int = 64, batch: int = 8,
+                  lr: float = 3e-3, seed: int = 0):
+    """Train (or load cached) a smoke model of the given arch."""
+    cfg = get_arch(arch, smoke=True)
+    ckpt_dir = os.path.join(CACHE_DIR, f"{arch}_s{steps}_q{seq}_b{batch}_seed{seed}")
+    template = jax.eval_shape(
+        lambda: M.init_params(jax.random.PRNGKey(seed), cfg, dtype=jnp.float32))
+    if CKPT.latest_step(ckpt_dir) is not None:
+        params, _ = CKPT.restore(ckpt_dir, template)
+        return cfg, params
+    params = M.init_params(jax.random.PRNGKey(seed), cfg, dtype=jnp.float32)
+    opt, step = make_train_step(cfg, TrainConfig(lr=lr, remat=False))
+    opt_state = opt.init(params)
+    step = jax.jit(step)
+    for i in range(steps):
+        b = {k: jnp.asarray(v) for k, v in make_batch(cfg, seq, batch, i, seed=seed).items()}
+        params, opt_state, _ = step(params, opt_state, b)
+    CKPT.save(ckpt_dir, steps, params)
+    return cfg, params
+
+
+def eval_metrics(cfg, params, qc: QuantContext = FP, *, n_batches: int = 4,
+                 seq: int = 64, batch: int = 8, seed_base: int = 1000) -> Dict[str, float]:
+    """Held-out loss + top-1 accuracy (the tables' accuracy proxy)."""
+    losses, accs = [], []
+    for i in range(n_batches):
+        b = {k: jnp.asarray(v) for k, v in
+             make_batch(cfg, seq, batch, seed_base + i).items()}
+        l, m = loss_fn(params, b, cfg, qc)
+        losses.append(float(l))
+        accs.append(float(m["accuracy"]))
+    return {"loss": float(np.mean(losses)), "accuracy": float(np.mean(accs)),
+            "ppl": float(np.exp(np.mean(losses)))}
+
+
+def time_fn(fn: Callable, *args, warmup: int = 1, iters: int = 3) -> float:
+    """Wall-time a jax callable; returns microseconds per call."""
+    for _ in range(warmup):
+        jax.block_until_ready(fn(*args))
+    t0 = time.perf_counter()
+    for _ in range(iters):
+        jax.block_until_ready(fn(*args))
+    return (time.perf_counter() - t0) / iters * 1e6
+
+
+class Row:
+    """CSV accumulator: name,us_per_call,derived."""
+    rows = []
+
+    @classmethod
+    def add(cls, name: str, us: float, derived):
+        cls.rows.append((name, us, derived))
+        print(f"{name},{us:.1f},{derived}")
+
+    @classmethod
+    def flush(cls):
+        out = list(cls.rows)
+        cls.rows = []
+        return out

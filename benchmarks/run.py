@@ -1,0 +1,39 @@
+"""Benchmark harness: one module per paper table/figure + kernels + roofline.
+Prints ``name,us_per_call,derived`` CSV rows (stdout).  Run:
+    PYTHONPATH=src python -m benchmarks.run [--only tableN]
+"""
+from __future__ import annotations
+
+import argparse
+import sys
+import traceback
+
+MODULES = (
+    "table1_accuracy", "table2_bitsweep", "table3_cost", "table4_nlp",
+    "table5_ablation", "table6_llm", "fig4_convergence", "kernel_bench",
+    "roofline", "perf_variants",
+)
+
+
+def main() -> None:
+    ap = argparse.ArgumentParser()
+    ap.add_argument("--only", default="", help="substring filter on module name")
+    args = ap.parse_args()
+    print("name,us_per_call,derived")
+    failed = []
+    for mod_name in MODULES:
+        if args.only and args.only not in mod_name:
+            continue
+        try:
+            mod = __import__(f"benchmarks.{mod_name}", fromlist=["run"])
+            mod.run()
+        except Exception as e:
+            failed.append(mod_name)
+            print(f"{mod_name},0,ERROR:{type(e).__name__}:{e}", file=sys.stderr)
+            traceback.print_exc(file=sys.stderr)
+    if failed:
+        raise SystemExit(f"benchmark modules failed: {failed}")
+
+
+if __name__ == "__main__":
+    main()

@@ -1,0 +1,74 @@
+"""Table 1 proxy: accuracy of FP=xINT vs same-family baselines at
+W4A4 / W2A4 / W2A2 across model families.
+
+Methods (all calibration-free or one-shot, as in the paper's table):
+  full        — FP reference
+  ours        — multi-term series (policy per bit setting)
+  rtn         — 1-term truncation of the same quantizer (= round-to-nearest)
+  gptq_lite   — error-propagating one-shot weight quantizer + dynamic A-RTN
+
+Derived column: held-out top-1 accuracy (the ImageNet-accuracy stand-in).
+"""
+from __future__ import annotations
+
+import jax
+import jax.numpy as jnp
+
+from benchmarks.common import Row, eval_metrics, time_fn, trained_model
+from repro.core.policy import ExpansionPolicy, NAMED_POLICIES
+from repro.core.ptq import expand_params
+from repro.models.layers import FP, QuantContext
+from repro.quant.baselines import gptq_lite_quantize
+from repro.train.data import make_batch
+
+ARCHS = ("qwen2_1_5b", "granite_20b")
+SETTINGS = ("w4a4", "w2a4", "w2a2")
+
+
+def _rtn_policy(pol: ExpansionPolicy) -> ExpansionPolicy:
+    import dataclasses
+    return dataclasses.replace(pol, w_terms=1, a_terms=1, w_saturating=False,
+                               first_last_terms=1)
+
+
+def _gptq_params(cfg, params):
+    """GPTQ-lite on every stacked GEMM weight (tiny calibration batch)."""
+    import numpy as np
+    r = np.random.default_rng(0)
+
+    def visit(path, leaf):
+        name = "/".join(str(getattr(p, "key", getattr(p, "idx", p))) for p in path)
+        if name.rsplit("/", 1)[-1] == "kernel" and leaf.ndim >= 2:
+            k = leaf.shape[-2]
+            x_cal = jnp.array(r.normal(size=(32, k)).astype("float32"))
+            flat = leaf.reshape(-1, *leaf.shape[-2:])
+            out = jnp.stack([gptq_lite_quantize(w, x_cal, 4) for w in flat])
+            return out.reshape(leaf.shape)
+        return leaf
+
+    return jax.tree_util.tree_map_with_path(visit, params)
+
+
+def run():
+    for arch in ARCHS:
+        cfg, params = trained_model(arch)
+        base = eval_metrics(cfg, params)
+        Row.add(f"table1/{arch}/full_prec", 0.0, f"acc={base['accuracy']:.4f}")
+        for setting in SETTINGS:
+            pol = NAMED_POLICIES[setting]
+            q = expand_params(params, pol)
+            m = eval_metrics(cfg, q, QuantContext(policy=pol))
+            Row.add(f"table1/{arch}/{setting}/ours", 0.0, f"acc={m['accuracy']:.4f}")
+            rp = _rtn_policy(pol)
+            mr = eval_metrics(cfg, expand_params(params, rp), QuantContext(policy=rp))
+            Row.add(f"table1/{arch}/{setting}/rtn", 0.0, f"acc={mr['accuracy']:.4f}")
+        # gptq-lite: weight-only 4-bit one-shot + dynamic 4-bit activations
+        gp = _gptq_params(cfg, params)
+        act_pol = ExpansionPolicy(w_bits=4, a_bits=4, w_terms=1, a_terms=1,
+                                  w_saturating=False)
+        mg = eval_metrics(cfg, gp)
+        Row.add(f"table1/{arch}/w4/gptq_lite", 0.0, f"acc={mg['accuracy']:.4f}")
+
+
+if __name__ == "__main__":
+    run()

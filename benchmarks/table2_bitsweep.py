@@ -1,0 +1,28 @@
+"""Table 2 proxy: accuracy + quantization time across bit settings.
+
+Paper: W3A3 / W2A4 / W4A2 / W8A8 on ResNet-18; here on the trained proxy LM.
+us_per_call = quantization wall time (the paper's 'Quant-Time' row).
+"""
+from __future__ import annotations
+
+from benchmarks.common import Row, eval_metrics, trained_model
+from repro.core.policy import NAMED_POLICIES
+from repro.core.ptq import expand_params_timed
+from repro.models.layers import QuantContext
+
+SETTINGS = ("w3a3", "w2a4", "w4a2", "w8a8", "w4a4")
+
+
+def run():
+    cfg, params = trained_model("qwen2_1_5b")
+    base = eval_metrics(cfg, params)
+    Row.add("table2/full_prec", 0.0, f"acc={base['accuracy']:.4f}")
+    for setting in SETTINGS:
+        pol = NAMED_POLICIES[setting]
+        q, seconds = expand_params_timed(params, pol)
+        m = eval_metrics(cfg, q, QuantContext(policy=pol))
+        Row.add(f"table2/{setting}", seconds * 1e6, f"acc={m['accuracy']:.4f}")
+
+
+if __name__ == "__main__":
+    run()

@@ -1,0 +1,33 @@
+"""Table 3 proxy: quantization cost & model size — no calibration data, no
+fine-tuning, seconds-scale quantization, size accounting incl. mixed
+precision.  us_per_call = quant wall time; derived = size + accuracy.
+"""
+from __future__ import annotations
+
+from benchmarks.common import Row, eval_metrics, trained_model
+from repro.core.policy import ExpansionPolicy, W4A4
+from repro.core.ptq import expand_params_timed, expansion_stats
+from repro.models.layers import QuantContext
+
+MIX = ExpansionPolicy(w_bits=2, a_bits=4, w_terms=2, a_terms=3,
+                      mixed=(("attn", (2, 4)), ("mlp", (4, 4))),
+                      first_last_bits=8)
+
+
+def run():
+    for arch in ("qwen2_1_5b", "mamba2_780m"):
+        cfg, params = trained_model(arch)
+        base = eval_metrics(cfg, params)
+        Row.add(f"table3/{arch}/full", 0.0,
+                f"acc={base['accuracy']:.4f} size=1.00x data=0 ft=none")
+        for name, pol in (("w4a4", W4A4), ("w2mix", MIX)):
+            q, seconds = expand_params_timed(params, pol)
+            st = expansion_stats(q)
+            m = eval_metrics(cfg, q, QuantContext(policy=pol))
+            Row.add(f"table3/{arch}/{name}", seconds * 1e6,
+                    f"acc={m['accuracy']:.4f} size={1/st['compression']:.2f}x "
+                    f"data=0 ft=none")
+
+
+if __name__ == "__main__":
+    run()

@@ -1,0 +1,27 @@
+"""Table 4 proxy: encoder-family task (BERT stand-in = hubert-family smoke
+encoder on frame classification) at W4A4 — ours vs 1-term RTN.
+"""
+from __future__ import annotations
+
+import dataclasses
+
+from benchmarks.common import Row, eval_metrics, trained_model
+from repro.core.policy import W4A4
+from repro.core.ptq import expand_params
+from repro.models.layers import QuantContext
+
+
+def run():
+    cfg, params = trained_model("hubert_xlarge", steps=60)
+    base = eval_metrics(cfg, params)
+    Row.add("table4/encoder/full", 0.0, f"acc={base['accuracy']:.4f}")
+    q = expand_params(params, W4A4)
+    m = eval_metrics(cfg, q, QuantContext(policy=W4A4))
+    Row.add("table4/encoder/ours_w4a4", 0.0, f"acc={m['accuracy']:.4f}")
+    rtn = dataclasses.replace(W4A4, w_terms=1, a_terms=1, w_saturating=False)
+    mr = eval_metrics(cfg, expand_params(params, rtn), QuantContext(policy=rtn))
+    Row.add("table4/encoder/rtn_w4a4", 0.0, f"acc={mr['accuracy']:.4f}")
+
+
+if __name__ == "__main__":
+    run()

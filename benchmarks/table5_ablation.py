@@ -1,0 +1,32 @@
+"""Table 5: onlyA / onlyW ablation — expanding activations matters more.
+
+onlyA: weights 1-term, activations multi-term;
+onlyW: weights multi-term, activations 1-term;
+ours:  both multi-term.
+"""
+from __future__ import annotations
+
+import dataclasses
+
+from benchmarks.common import Row, eval_metrics, trained_model
+from repro.core.policy import W4A4
+from repro.core.ptq import expand_params
+from repro.models.layers import QuantContext
+
+
+def run():
+    for arch in ("qwen2_1_5b", "deepseek_7b"):
+        cfg, params = trained_model(arch)
+        variants = {
+            "onlyA": dataclasses.replace(W4A4, w_terms=1, first_last_terms=1),
+            "onlyW": dataclasses.replace(W4A4, a_terms=1),
+            "ours": W4A4,
+        }
+        for name, pol in variants.items():
+            q = expand_params(params, pol)
+            m = eval_metrics(cfg, q, QuantContext(policy=pol))
+            Row.add(f"table5/{arch}/{name}", 0.0, f"acc={m['accuracy']:.4f}")
+
+
+if __name__ == "__main__":
+    run()

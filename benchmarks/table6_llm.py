@@ -1,0 +1,34 @@
+"""Table 6 proxy: W4A16 weight-only serving of the LM (the LLM/MMLU setting).
+
+Methods: full / ours (2-term W4 series, FP activations) / normal (1-term RTN
+W4 weight-only).  Derived: perplexity + accuracy on held-out stream.
+"""
+from __future__ import annotations
+
+import dataclasses
+
+from benchmarks.common import Row, eval_metrics, trained_model
+from repro.core.policy import W4A16
+from repro.core.ptq import expand_params
+from repro.models.layers import QuantContext
+
+
+def run():
+    for arch in ("qwen2_1_5b", "recurrentgemma_9b"):
+        cfg, params = trained_model(arch)
+        base = eval_metrics(cfg, params)
+        Row.add(f"table6/{arch}/full", 0.0,
+                f"acc={base['accuracy']:.4f} ppl={base['ppl']:.3f}")
+        q = expand_params(params, W4A16)
+        m = eval_metrics(cfg, q, QuantContext(policy=W4A16))
+        Row.add(f"table6/{arch}/ours_w4a16", 0.0,
+                f"acc={m['accuracy']:.4f} ppl={m['ppl']:.3f}")
+        rtn = dataclasses.replace(W4A16, w_terms=1, w_saturating=False,
+                                  first_last_terms=1)
+        mr = eval_metrics(cfg, expand_params(params, rtn), QuantContext(policy=rtn))
+        Row.add(f"table6/{arch}/normal_w4a16", 0.0,
+                f"acc={mr['accuracy']:.4f} ppl={mr['ppl']:.3f}")
+
+
+if __name__ == "__main__":
+    run()

@@ -1,0 +1,71 @@
+"""End-to-end serving driver (the paper's deployment story):
+
+1. train a small LM on the synthetic Markov task,
+2. series-expand it W4A4 — calibration-free, seconds,
+3. serve batched requests through the INT pipeline,
+4. report quantization time, accuracy preservation, throughput.
+
+    PYTHONPATH=src python examples/serve_expanded.py [--requests 16]
+"""
+import argparse
+import time
+
+import jax
+import jax.numpy as jnp
+import numpy as np
+
+from repro.configs.base import get_arch
+from repro.core.policy import W4A4
+from repro.infer.serve import Engine, ServeConfig
+from repro.models import model as M
+from repro.train.data import make_batch
+from repro.train.train_step import TrainConfig, loss_fn, make_train_step
+from repro.models.layers import QuantContext
+
+
+def main():
+    ap = argparse.ArgumentParser()
+    ap.add_argument("--requests", type=int, default=16)
+    ap.add_argument("--train-steps", type=int, default=60)
+    ap.add_argument("--max-new", type=int, default=24)
+    args = ap.parse_args()
+
+    cfg = get_arch("qwen2_1_5b", smoke=True)
+    print(f"training a {cfg.param_count()/1e3:.0f}k-param {cfg.family} LM "
+          f"for {args.train_steps} steps...")
+    params = M.init_params(jax.random.PRNGKey(0), cfg, dtype=jnp.float32)
+    opt, step = make_train_step(cfg, TrainConfig(lr=3e-3, remat=False))
+    opt_state = opt.init(params)
+    step = jax.jit(step)
+    for i in range(args.train_steps):
+        b = {k: jnp.asarray(v) for k, v in make_batch(cfg, 64, 8, i).items()}
+        params, opt_state, m = step(params, opt_state, b)
+    print(f"  final train loss {float(m['loss']):.3f}")
+
+    def ev(p, qc=None):
+        from repro.models.layers import FP
+        b = {k: jnp.asarray(v) for k, v in make_batch(cfg, 64, 8, 999).items()}
+        l, met = loss_fn(p, b, cfg, qc or FP)
+        return float(l), float(met["accuracy"])
+
+    base_loss, base_acc = ev(params)
+    eng = Engine(cfg, params, policy=W4A4,
+                 serve_cfg=ServeConfig(max_seq=96, max_batch=8))
+    q_loss, q_acc = ev(eng.params, QuantContext(policy=W4A4))
+    print(f"\nFP=xINT W4A4 expansion: {eng.quant_seconds:.2f}s, zero calibration data")
+    print(f"  loss {base_loss:.3f} -> {q_loss:.3f};  acc {base_acc:.3f} -> {q_acc:.3f}")
+
+    rng = np.random.default_rng(1)
+    for _ in range(args.requests):
+        eng.add_request(rng.integers(0, cfg.vocab_size, 16).tolist())
+    t0 = time.perf_counter()
+    out = eng.run(max_new_tokens=args.max_new)
+    dt = time.perf_counter() - t0
+    n_tok = sum(len(v) for v in out.values())
+    print(f"\nserved {len(out)} requests, {n_tok} tokens in {dt:.2f}s "
+          f"({n_tok/dt:.1f} tok/s batched on CPU)")
+    print("sample generation:", out[0][:16])
+
+
+if __name__ == "__main__":
+    main()

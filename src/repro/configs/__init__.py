@@ -1,0 +1,2 @@
+"""Assigned-architecture configs.  Importing a module registers (full, smoke)."""
+from repro.configs.base import ARCH_IDS, SHAPES, ArchConfig, ShapeConfig, get_arch, applicable_shapes, all_cells

@@ -1,0 +1,185 @@
+"""ArchConfig: one dataclass drives the whole zoo; per-arch modules register
+their exact assigned config plus a reduced smoke variant.
+
+Shapes (assigned): train_4k / prefill_32k / decode_32k / long_500k.
+``decode_*``/``long_*`` lower ``serve_step``; long_500k only runs for
+sub-quadratic archs (ssm/hybrid); encoder-only archs have no decode shapes.
+"""
+from __future__ import annotations
+
+import dataclasses
+import importlib
+from typing import Dict, Optional, Tuple
+
+
+@dataclasses.dataclass(frozen=True)
+class ArchConfig:
+    name: str
+    family: str                       # dense | moe | ssm | hybrid | vlm | audio
+    num_layers: int
+    d_model: int
+    num_heads: int                    # query heads (0 for attn-free)
+    num_kv_heads: int
+    d_ff: int
+    vocab_size: int
+    head_dim: int = 0                 # 0 -> d_model // num_heads
+    # block layout: the layer stack is num_stages x stage_pattern + tail_pattern
+    stage_pattern: Tuple[str, ...] = ("attn",)   # attn | local | cross | rglru | ssm | moe_attn
+    tail_pattern: Tuple[str, ...] = ()
+    # MoE
+    num_experts: int = 0
+    experts_per_token: int = 0
+    shared_expert: bool = False
+    # capacity factor: 1.25 = standard GShard dropping; smoke configs use a
+    # dropless value so prefill/decode/forward agree exactly (capacity
+    # dropping is batch-composition-dependent by construction)
+    capacity_factor: float = 1.25
+    # MLP / misc
+    mlp_act: str = "silu"
+    mlp_gated: bool = True
+    qkv_bias: bool = False
+    tie_embeddings: bool = False
+    logit_softcap: float = 0.0
+    attn_softcap: float = 0.0
+    norm: str = "rmsnorm"
+    # attention
+    window: int = 0                   # sliding window for "local" blocks
+    rope_theta: float = 1e4
+    attn_q_chunk: int = 0             # flash chunking (0 -> 1024 default)
+    attn_kv_chunk: int = 0
+    # SSM (mamba2)
+    ssm_state: int = 0
+    ssm_conv: int = 4
+    ssm_expand: int = 2
+    ssm_head_dim: int = 64
+    # RG-LRU
+    rnn_width: int = 0                # 0 -> d_model
+    # multimodal stubs
+    num_image_tokens: int = 0         # vlm: precomputed patch embeddings
+    image_embed_dim: int = 0          # raw patch-embedding dim (stub frontend)
+    frame_dim: int = 0                # audio: precomputed frame-embedding dim
+    is_encoder: bool = False          # encoder-only (no causal mask, no decode)
+    # numerics
+    dtype: str = "bfloat16"
+
+    def __post_init__(self):
+        if self.num_heads and not self.head_dim:
+            object.__setattr__(self, "head_dim", self.d_model // self.num_heads)
+        if not self.rnn_width:
+            object.__setattr__(self, "rnn_width", self.d_model)
+        pat = len(self.stage_pattern)
+        assert (self.num_layers - len(self.tail_pattern)) % pat == 0, (
+            self.name, self.num_layers, self.stage_pattern, self.tail_pattern)
+
+    @property
+    def num_stages(self) -> int:
+        return (self.num_layers - len(self.tail_pattern)) // len(self.stage_pattern)
+
+    @property
+    def sub_quadratic(self) -> bool:
+        """True if the arch can run long_500k (no full-attention block)."""
+        blocks = set(self.stage_pattern) | set(self.tail_pattern)
+        return "attn" not in blocks and "cross" not in blocks and "moe_attn" not in blocks
+
+    def param_count(self) -> int:
+        """Analytic parameter count (embedding + blocks + head)."""
+        d, f, v = self.d_model, self.d_ff, self.vocab_size
+        hd = self.head_dim
+        n_attn_q = self.num_heads * hd
+        n_attn_kv = self.num_kv_heads * hd
+        per_block = {
+            "attn": d * (n_attn_q + 2 * n_attn_kv) + n_attn_q * d
+                    + (3 if self.mlp_gated else 2) * d * f,
+            "local": d * (n_attn_q + 2 * n_attn_kv) + n_attn_q * d
+                     + (3 if self.mlp_gated else 2) * d * f,
+            "cross": d * (n_attn_q + 2 * n_attn_kv) + n_attn_q * d
+                     + (3 if self.mlp_gated else 2) * d * f,
+            "moe_attn": d * (n_attn_q + 2 * n_attn_kv) + n_attn_q * d
+                        + self.num_experts * 3 * d * f + d * self.num_experts
+                        + (3 * d * f if self.shared_expert else 0),
+            "rglru": 2 * d * self.rnn_width + 2 * self.rnn_width ** 2
+                     + self.rnn_width * d + (3 if self.mlp_gated else 2) * d * f,
+            "ssm": d * (2 * self.ssm_expand * d + 2 * self.ssm_state
+                        + (self.ssm_expand * d) // self.ssm_head_dim)
+                   + self.ssm_expand * d * d,
+        }
+        total = v * d + (0 if self.tie_embeddings else d * v)
+        for blk in tuple(self.stage_pattern) * self.num_stages + self.tail_pattern:
+            total += per_block[blk]
+        return total
+
+    def active_param_count(self) -> int:
+        """MoE: params touched per token (for MODEL_FLOPS = 6*N_active*D)."""
+        if self.num_experts == 0:
+            return self.param_count()
+        d, f = self.d_model, self.d_ff
+        dense_total = self.param_count()
+        moe_blocks = sum(1 for b in tuple(self.stage_pattern) * self.num_stages
+                         + self.tail_pattern if b == "moe_attn")
+        inactive = moe_blocks * (self.num_experts - self.experts_per_token) * 3 * d * f
+        return dense_total - inactive
+
+
+@dataclasses.dataclass(frozen=True)
+class ShapeConfig:
+    name: str
+    seq_len: int
+    global_batch: int
+    kind: str  # "train" | "prefill" | "decode"
+
+
+SHAPES: Dict[str, ShapeConfig] = {
+    "train_4k": ShapeConfig("train_4k", 4096, 256, "train"),
+    "prefill_32k": ShapeConfig("prefill_32k", 32768, 32, "prefill"),
+    "decode_32k": ShapeConfig("decode_32k", 32768, 128, "decode"),
+    "long_500k": ShapeConfig("long_500k", 524288, 1, "decode"),
+}
+
+ARCH_IDS = (
+    "grok_1_314b",
+    "llama4_scout_17b_a16e",
+    "recurrentgemma_9b",
+    "deepseek_7b",
+    "granite_20b",
+    "qwen2_1_5b",
+    "nemotron_4_340b",
+    "mamba2_780m",
+    "llama_3_2_vision_90b",
+    "hubert_xlarge",
+)
+
+_REGISTRY: Dict[str, "ArchConfig"] = {}
+_SMOKE: Dict[str, "ArchConfig"] = {}
+
+
+def register(full: ArchConfig, smoke: ArchConfig):
+    _REGISTRY[full.name] = full
+    _SMOKE[full.name] = smoke
+
+
+def get_arch(name: str, *, smoke: bool = False) -> ArchConfig:
+    name = name.replace("-", "_").replace(".", "_")
+    if name not in _REGISTRY:
+        if name not in ARCH_IDS:
+            raise KeyError(f"unknown arch {name!r}; known: {ARCH_IDS}")
+        importlib.import_module(f"repro.configs.{name}")
+    return (_SMOKE if smoke else _REGISTRY)[name]
+
+
+def applicable_shapes(cfg: ArchConfig) -> Tuple[str, ...]:
+    """Assignment-sanctioned shape cells for this arch (skips recorded in
+    EXPERIMENTS.md)."""
+    shapes = ["train_4k", "prefill_32k"]
+    if not cfg.is_encoder:
+        shapes.append("decode_32k")
+        if cfg.sub_quadratic:
+            shapes.append("long_500k")
+    return tuple(shapes)
+
+
+def all_cells():
+    """Every live (arch, shape) cell."""
+    for a in ARCH_IDS:
+        cfg = get_arch(a)
+        for s in applicable_shapes(cfg):
+            yield a, s

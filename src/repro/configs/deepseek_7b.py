@@ -1,0 +1,23 @@
+"""deepseek-7b [dense] — 30L d4096 32H (MHA kv=32) d_ff=11008 vocab=102400,
+llama-arch.  [arXiv:2401.02954; hf]"""
+from repro.configs.base import ArchConfig, register
+
+FULL = ArchConfig(
+    name="deepseek_7b", family="dense",
+    num_layers=30, d_model=4096, num_heads=32, num_kv_heads=32,
+    d_ff=11008, vocab_size=102400,
+    stage_pattern=("attn",),
+    mlp_act="silu", mlp_gated=True,
+    rope_theta=1e4,
+)
+
+SMOKE = ArchConfig(
+    name="deepseek_7b", family="dense",
+    num_layers=2, d_model=64, num_heads=4, num_kv_heads=4,
+    d_ff=128, vocab_size=256,
+    stage_pattern=("attn",),
+    mlp_act="silu", mlp_gated=True,
+    dtype="float32",
+)
+
+register(FULL, SMOKE)

@@ -1,0 +1,26 @@
+"""granite-20b [dense] — 52L d6144 48H (MQA kv=1) d_ff=24576 vocab=49152,
+llama-arch code model (gpt-bigcode heritage: MQA, GELU, LayerNorm).
+[arXiv:2405.04324; hf]"""
+from repro.configs.base import ArchConfig, register
+
+FULL = ArchConfig(
+    name="granite_20b", family="dense",
+    num_layers=52, d_model=6144, num_heads=48, num_kv_heads=1,
+    d_ff=24576, vocab_size=49152,
+    stage_pattern=("attn",),
+    mlp_act="gelu", mlp_gated=False,
+    norm="layernorm",
+    rope_theta=1e4,
+)
+
+SMOKE = ArchConfig(
+    name="granite_20b", family="dense",
+    num_layers=2, d_model=64, num_heads=4, num_kv_heads=1,
+    d_ff=256, vocab_size=256,
+    stage_pattern=("attn",),
+    mlp_act="gelu", mlp_gated=False,
+    norm="layernorm",
+    dtype="float32",
+)
+
+register(FULL, SMOKE)

@@ -1,0 +1,28 @@
+"""grok-1 314B [moe] — 64L d6144 48H (GQA kv=8) d_ff=32768 vocab=131072,
+MoE 8 experts top-2.  [hf:xai-org/grok-1; unverified]"""
+from repro.configs.base import ArchConfig, register
+
+FULL = ArchConfig(
+    name="grok_1_314b", family="moe",
+    num_layers=64, d_model=6144, num_heads=48, num_kv_heads=8,
+    d_ff=32768, vocab_size=131072,
+    stage_pattern=("moe_attn",),
+    num_experts=8, experts_per_token=2,
+    mlp_act="gelu", mlp_gated=True,
+    attn_softcap=30.0, logit_softcap=30.0,
+    rope_theta=1e4,
+)
+
+SMOKE = ArchConfig(
+    name="grok_1_314b", family="moe",
+    num_layers=2, d_model=64, num_heads=4, num_kv_heads=2,
+    d_ff=128, vocab_size=256,
+    stage_pattern=("moe_attn",),
+    num_experts=4, experts_per_token=2,
+    capacity_factor=8.0,  # dropless for exact prefill/decode consistency tests
+    mlp_act="gelu", mlp_gated=True,
+    attn_softcap=30.0, logit_softcap=30.0,
+    dtype="float32",
+)
+
+register(FULL, SMOKE)

@@ -1,0 +1,28 @@
+"""hubert-xlarge [audio] — 48L d1280 16H (MHA kv=16) d_ff=5120 vocab=504,
+encoder-only (same transformer as wav2vec2).  Conv feature extractor is a
+STUB per assignment: input_specs provides precomputed frame embeddings
+(B, T, 1280).  Encoder-only -> no decode shapes.  [arXiv:2106.07447; unverified]"""
+from repro.configs.base import ArchConfig, register
+
+FULL = ArchConfig(
+    name="hubert_xlarge", family="audio",
+    num_layers=48, d_model=1280, num_heads=16, num_kv_heads=16,
+    d_ff=5120, vocab_size=504,
+    stage_pattern=("attn",),
+    mlp_act="gelu", mlp_gated=False,
+    norm="layernorm",
+    frame_dim=1280, is_encoder=True,
+)
+
+SMOKE = ArchConfig(
+    name="hubert_xlarge", family="audio",
+    num_layers=2, d_model=64, num_heads=4, num_kv_heads=4,
+    d_ff=256, vocab_size=32,
+    stage_pattern=("attn",),
+    mlp_act="gelu", mlp_gated=False,
+    norm="layernorm",
+    frame_dim=24, is_encoder=True,
+    dtype="float32",
+)
+
+register(FULL, SMOKE)

@@ -1,0 +1,27 @@
+"""llama4-scout 17B-active [moe] — 48L d5120 40H (GQA kv=8) d_ff=8192
+vocab=202048, MoE 16 experts top-1 + shared expert; early-fusion frontend is
+out of scope (backbone only).  [hf:meta-llama/Llama-4-Scout-17B-16E; unverified]"""
+from repro.configs.base import ArchConfig, register
+
+FULL = ArchConfig(
+    name="llama4_scout_17b_a16e", family="moe",
+    num_layers=48, d_model=5120, num_heads=40, num_kv_heads=8,
+    d_ff=8192, vocab_size=202048,
+    stage_pattern=("moe_attn",),
+    num_experts=16, experts_per_token=1, shared_expert=True,
+    mlp_act="silu", mlp_gated=True,
+    rope_theta=5e5,
+)
+
+SMOKE = ArchConfig(
+    name="llama4_scout_17b_a16e", family="moe",
+    num_layers=2, d_model=64, num_heads=4, num_kv_heads=2,
+    d_ff=128, vocab_size=256,
+    stage_pattern=("moe_attn",),
+    num_experts=4, experts_per_token=1, shared_expert=True,
+    capacity_factor=8.0,  # dropless for exact prefill/decode consistency tests
+    mlp_act="silu", mlp_gated=True,
+    dtype="float32",
+)
+
+register(FULL, SMOKE)

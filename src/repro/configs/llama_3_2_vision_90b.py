@@ -1,0 +1,27 @@
+"""llama-3.2-vision-90b [vlm] — 100L d8192 64H (GQA kv=8) d_ff=28672
+vocab=128256; gated cross-attention image layers every 5th layer.
+Vision frontend is a STUB per assignment: input_specs provides precomputed
+patch embeddings (B, 1600, 1280).  [hf:meta-llama/Llama-3.2-11B-Vision; unverified]"""
+from repro.configs.base import ArchConfig, register
+
+FULL = ArchConfig(
+    name="llama_3_2_vision_90b", family="vlm",
+    num_layers=100, d_model=8192, num_heads=64, num_kv_heads=8,
+    d_ff=28672, vocab_size=128256,
+    stage_pattern=("attn", "attn", "attn", "attn", "cross"),
+    num_image_tokens=1600, image_embed_dim=1280,
+    mlp_act="silu", mlp_gated=True,
+    rope_theta=5e5,
+)
+
+SMOKE = ArchConfig(
+    name="llama_3_2_vision_90b", family="vlm",
+    num_layers=5, d_model=64, num_heads=4, num_kv_heads=2,
+    d_ff=128, vocab_size=256,
+    stage_pattern=("attn", "attn", "attn", "attn", "cross"),
+    num_image_tokens=8, image_embed_dim=32,
+    mlp_act="silu", mlp_gated=True,
+    dtype="float32",
+)
+
+register(FULL, SMOKE)

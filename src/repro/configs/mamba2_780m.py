@@ -1,0 +1,25 @@
+"""mamba2-780m [ssm] — 48L d1536 (attention-free) ssm_state=128, SSD
+(state-space duality) mixer.  O(1) decode state -> runs long_500k.
+[arXiv:2405.21060; unverified]"""
+from repro.configs.base import ArchConfig, register
+
+FULL = ArchConfig(
+    name="mamba2_780m", family="ssm",
+    num_layers=48, d_model=1536, num_heads=0, num_kv_heads=0,
+    d_ff=0, vocab_size=50280,
+    stage_pattern=("ssm",),
+    ssm_state=128, ssm_conv=4, ssm_expand=2, ssm_head_dim=64,
+    tie_embeddings=True,
+)
+
+SMOKE = ArchConfig(
+    name="mamba2_780m", family="ssm",
+    num_layers=2, d_model=64, num_heads=0, num_kv_heads=0,
+    d_ff=0, vocab_size=256,
+    stage_pattern=("ssm",),
+    ssm_state=16, ssm_conv=4, ssm_expand=2, ssm_head_dim=16,
+    tie_embeddings=True,
+    dtype="float32",
+)
+
+register(FULL, SMOKE)

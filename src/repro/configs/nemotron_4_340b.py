@@ -1,0 +1,26 @@
+"""nemotron-4-340b [dense] — 96L d18432 96H (GQA kv=8, head_dim 192)
+d_ff=73728 vocab=256000, squared-ReLU MLP (non-gated), LayerNorm.
+[arXiv:2402.16819; unverified]"""
+from repro.configs.base import ArchConfig, register
+
+FULL = ArchConfig(
+    name="nemotron_4_340b", family="dense",
+    num_layers=96, d_model=18432, num_heads=96, num_kv_heads=8,
+    d_ff=73728, vocab_size=256000,
+    stage_pattern=("attn",),
+    mlp_act="relu2", mlp_gated=False,
+    norm="layernorm",
+    rope_theta=1e4,
+)
+
+SMOKE = ArchConfig(
+    name="nemotron_4_340b", family="dense",
+    num_layers=2, d_model=64, num_heads=4, num_kv_heads=2,
+    d_ff=256, vocab_size=256,
+    stage_pattern=("attn",),
+    mlp_act="relu2", mlp_gated=False,
+    norm="layernorm",
+    dtype="float32",
+)
+
+register(FULL, SMOKE)

@@ -1,0 +1,25 @@
+"""qwen2-1.5b [dense] — 28L d1536 12H (GQA kv=2) d_ff=8960 vocab=151936,
+QKV bias, tied embeddings.  [arXiv:2407.10671; hf]"""
+from repro.configs.base import ArchConfig, register
+
+FULL = ArchConfig(
+    name="qwen2_1_5b", family="dense",
+    num_layers=28, d_model=1536, num_heads=12, num_kv_heads=2,
+    d_ff=8960, vocab_size=151936,
+    stage_pattern=("attn",),
+    mlp_act="silu", mlp_gated=True,
+    qkv_bias=True, tie_embeddings=True,
+    rope_theta=1e6,
+)
+
+SMOKE = ArchConfig(
+    name="qwen2_1_5b", family="dense",
+    num_layers=2, d_model=64, num_heads=4, num_kv_heads=2,
+    d_ff=128, vocab_size=256,
+    stage_pattern=("attn",),
+    mlp_act="silu", mlp_gated=True,
+    qkv_bias=True, tie_embeddings=True,
+    dtype="float32",
+)
+
+register(FULL, SMOKE)

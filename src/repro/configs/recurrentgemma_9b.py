@@ -1,0 +1,30 @@
+"""recurrentgemma-9b [hybrid] — 38L d4096 16H (MQA kv=1) d_ff=12288
+vocab=256000; RG-LRU + local attention in a 2:1 pattern (window 2048).
+Sub-quadratic -> runs the long_500k cell.  [arXiv:2402.19427; unverified]"""
+from repro.configs.base import ArchConfig, register
+
+FULL = ArchConfig(
+    name="recurrentgemma_9b", family="hybrid",
+    num_layers=38, d_model=4096, num_heads=16, num_kv_heads=1,
+    d_ff=12288, vocab_size=256000,
+    stage_pattern=("rglru", "rglru", "local"),
+    tail_pattern=("rglru", "rglru"),
+    window=2048, rnn_width=4096,
+    mlp_act="gelu", mlp_gated=True,
+    logit_softcap=30.0,
+    rope_theta=1e4,
+)
+
+SMOKE = ArchConfig(
+    name="recurrentgemma_9b", family="hybrid",
+    num_layers=5, d_model=64, num_heads=4, num_kv_heads=1,
+    d_ff=128, vocab_size=256,
+    stage_pattern=("rglru", "rglru", "local"),
+    tail_pattern=("rglru", "rglru"),
+    window=16, rnn_width=64,
+    mlp_act="gelu", mlp_gated=True,
+    logit_softcap=30.0,
+    dtype="float32",
+)
+
+register(FULL, SMOKE)

@@ -1,0 +1,26 @@
+"""FP=xINT core: low-bit series expansion of tensors, layers, and models."""
+from repro.core.expansion import (
+    ExpandedTensor,
+    expand,
+    expand_batched,
+    reconstruct,
+    residual,
+    theoretical_residual_bound,
+    auto_num_terms,
+    truncate,
+    drop_sat,
+)
+from repro.core.abelian import (
+    abelian_add,
+    abelian_neg,
+    abelian_zero_like,
+    abelian_sum,
+    abelian_mul,
+    basis_model,
+    basis_models,
+    num_basis_terms,
+    dequantize,
+)
+from repro.core.linear import expanded_apply, expand_weight, dense
+from repro.core.policy import ExpansionPolicy, get_policy, NAMED_POLICIES
+from repro.core.ptq import expand_params, expand_params_timed, expansion_stats, max_weight_residual

@@ -1,0 +1,132 @@
+"""AbelianAdd / AbelianMul over isomorphic models (FP=xINT §3.3).
+
+The carrier set is "isomorphic models" — parameter pytrees with identical
+treedef and leaf shapes.  The paper defines
+
+    Model(W1, A, x) (+) Model(W2, A, x) = Model(W1 + W2, A, x)        (Eq. 5)
+    U (*) model(W_i) = model(u_i * W_i)                               (Def. 2)
+
+so AbelianAdd is leafwise addition of parameters and AbelianMul is a
+per-layer scalar action.  ``(models, AbelianAdd)`` is an Abelian group
+(identity = zero params, inverse = negated params), which is exactly the
+contract AllReduce needs: the reduction used in
+``dist/expansion_parallel.py`` is ``jax.lax.psum`` — commutative and
+associative — applied to basis-model partial outputs.
+
+These operations are what make the *model-level* expansion (Theorem 2)
+executable: ``basis_models`` splits an expanded parameter pytree into the
+isomorphic single-term models whose ⊎-sum reconstructs the FP model.
+"""
+from __future__ import annotations
+
+from typing import Any, Callable, Dict, List, Sequence
+
+import jax
+import jax.numpy as jnp
+
+from repro.core.expansion import ExpandedTensor, _expand_scale_dims
+
+PyTree = Any
+
+
+def _binary(f: Callable, a: PyTree, b: PyTree) -> PyTree:
+    return jax.tree_util.tree_map(f, a, b)
+
+
+def abelian_add(a: PyTree, b: PyTree) -> PyTree:
+    """⊎ : leafwise parameter addition between isomorphic models (Eq. 5/6)."""
+    return _binary(lambda x, y: x + y, a, b)
+
+
+def abelian_neg(a: PyTree) -> PyTree:
+    """Group inverse."""
+    return jax.tree_util.tree_map(lambda x: -x, a)
+
+
+def abelian_zero_like(a: PyTree) -> PyTree:
+    """Group identity element."""
+    return jax.tree_util.tree_map(jnp.zeros_like, a)
+
+
+def abelian_sum(models: Sequence[PyTree]) -> PyTree:
+    """⊎-sum of many isomorphic models.  Order-independent (Abelian)."""
+    if not models:
+        raise ValueError("abelian_sum of empty sequence")
+    out = models[0]
+    for m in models[1:]:
+        out = abelian_add(out, m)
+    return out
+
+
+def abelian_mul(u: Sequence[float] | jnp.ndarray, layers: Sequence[PyTree]) -> List[PyTree]:
+    """U *̂ model: scale layer i's parameters by u_i (Definition 2)."""
+    if len(u) != len(layers):
+        raise ValueError(f"AbelianMul vector length {len(u)} != num layers {len(layers)}")
+    return [jax.tree_util.tree_map(lambda x, s=s: s * x, layer) for s, layer in zip(u, layers)]
+
+
+# ---------------------------------------------------------------------------
+# basis models of an expanded parameter pytree (Theorem 2)
+# ---------------------------------------------------------------------------
+def is_expanded(leaf) -> bool:
+    return isinstance(leaf, ExpandedTensor)
+
+
+def dequant_term(et: ExpandedTensor, k: int) -> jnp.ndarray:
+    """The FP weight contribution of series term k: scale_k * M~_k."""
+    s_b = _expand_scale_dims(et.scales[k], et.planes.ndim - 1, et.per_channel)
+    return s_b * et.planes[k].astype(jnp.float32)
+
+
+def dequant_affine(et: ExpandedTensor) -> jnp.ndarray:
+    """The non-series contribution: bias * M_nsy + M_sa (zero if symmetric/non-sat)."""
+    out = jnp.zeros(et.orig_shape, jnp.float32)
+    if et.bias is not None:
+        out = out + _expand_scale_dims(et.bias, len(et.orig_shape), et.per_channel)
+    if et.sat is not None:
+        out = out + et.sat
+    return out
+
+
+def num_basis_terms(params: PyTree) -> int:
+    """max term count across expanded leaves (+1 for the affine remainder)."""
+    terms = [l.num_terms for l in jax.tree_util.tree_leaves(params, is_leaf=is_expanded) if is_expanded(l)]
+    if not terms:
+        return 1
+    return max(terms) + 1
+
+
+def basis_model(params: PyTree, k: int) -> PyTree:
+    """Basis model k: every expanded weight contributes its k-th series term
+    (or zero if it has fewer terms); the LAST index carries the affine part
+    (bias*M_nsy + M_sa) plus every non-expanded FP leaf.
+
+    ``abelian_sum(basis_model(p, k) for k in range(num_basis_terms(p)))``
+    reconstructs the dequantized model exactly.
+    """
+    n = num_basis_terms(params)
+
+    def pick(leaf):
+        if is_expanded(leaf):
+            if k < leaf.num_terms:
+                return dequant_term(leaf, k)
+            if k == n - 1:
+                return dequant_affine(leaf)
+            return jnp.zeros(leaf.orig_shape, jnp.float32)
+        # non-expanded (FP) leaves ride along with the affine/base term
+        return leaf if k == n - 1 else jnp.zeros_like(leaf)
+
+    return jax.tree_util.tree_map(pick, params, is_leaf=is_expanded)
+
+
+def basis_models(params: PyTree) -> List[PyTree]:
+    return [basis_model(params, k) for k in range(num_basis_terms(params))]
+
+
+def dequantize(params: PyTree) -> PyTree:
+    """Full reconstruction: ⊎-sum of all basis models (== Theorem 2 RHS)."""
+    from repro.core.expansion import reconstruct
+
+    return jax.tree_util.tree_map(
+        lambda l: reconstruct(l) if is_expanded(l) else l, params, is_leaf=is_expanded
+    )

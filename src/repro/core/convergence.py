@@ -1,0 +1,63 @@
+"""Convergence accounting for the series expansion (Theorem 1/2 bounds).
+
+The residual after n INT-X terms is bounded by ``scale_1 / (2 * 2^{X(n-1)})``
+— exponential in ``n*X`` (total bits spent).  These helpers turn that bound
+into term-count decisions (the paper's two stopping rules):
+
+* activations: expand until ``max|residual| < 1e-4``  (Fig. 4b rule);
+* weights:     stop once ``scale_n * 2^X < 1e-2``     (§4 total-differential
+  rule — beyond that, W-error is invisible to the loss at first order).
+"""
+from __future__ import annotations
+
+import math
+from typing import Dict
+
+import jax.numpy as jnp
+
+from repro.core import expansion as E
+from repro.core.expansion import ExpandedTensor
+
+
+def residual_bound(scale1_max: float, bits: int, terms: int) -> float:
+    """Upper bound on max|residual| after ``terms`` INT-``bits`` planes."""
+    return scale1_max / (2.0 * E.scale_ratio(bits) ** (terms - 1))
+
+
+def convergence_rate(bits: int) -> float:
+    """Per-term geometric shrink factor: 1/ratio(X)."""
+    return 1.0 / E.scale_ratio(bits)
+
+
+def terms_for_threshold(scale1_max: float, bits: int, threshold: float = 1e-4,
+                        max_terms: int = 6) -> int:
+    """Fig. 4b rule: smallest n with residual bound < threshold."""
+    return E.auto_num_terms(scale1_max, bits, threshold, max_terms)
+
+
+def weight_terms_rule(scale1_max: float, bits: int, threshold: float = 1e-2,
+                      max_terms: int = 3) -> int:
+    """§4 rule: expand W while scale_n * 2^X >= threshold (then stop)."""
+    n = 1
+    ratio = E.scale_ratio(bits)
+    while scale1_max * (2.0 ** bits) / (ratio ** (n - 1)) >= threshold and n < max_terms:
+        n += 1
+    return n
+
+
+def measured_convergence(m: jnp.ndarray, bits: int, max_terms: int = 6,
+                         **expand_kw) -> Dict[int, float]:
+    """max|residual| per term count — empirical Fig. 4b curve for one tensor."""
+    et = E.expand(m, bits, max_terms, **expand_kw)
+    return {t: float(jnp.max(jnp.abs(E.residual(m, et, t)))) for t in range(1, max_terms + 1)}
+
+
+def effective_bits(bits: int, terms: int) -> int:
+    """Total information per element across the series (storage accounting)."""
+    return bits * terms
+
+
+def f32_noise_floor(absmax_val: float) -> float:
+    """Expansion below the f32 ulp of the input is meaningless; used by tests
+    to cap tolerance expectations (DESIGN.md §7)."""
+    return absmax_val * 2.0 ** -22

@@ -1,0 +1,331 @@
+"""Tensor-level low-bit series expansion (FP=xINT, Theorem 1).
+
+Expands a dense FP tensor ``M`` into
+
+    M  =  M_sa  +  bias * M_nsy  +  sum_i  scale_i * M~_i ,
+
+where every ``M~_i`` is an INT-X plane (stored in an int8 container), the
+scales follow the paper's dyadic schedule ``scale_i = 2^X * scale_{i+1}``,
+``bias * M_nsy`` (all-ones, rank-1) absorbs an asymmetric zero-point, and
+``M_sa`` is the sparse saturation correction produced by clipping.
+
+Numerical conventions (see DESIGN.md §7):
+
+* plane k=0 uses the symmetric grid ``[-(2^{X-1}-1), 2^{X-1}-1]`` so that
+  ``scale_1 = absmax / (2^{X-1}-1)`` maps the extremes exactly;
+* residual planes (k>=1) may use ``±2^{X-1}`` (the proof's bound) because a
+  round-to-nearest residual lies in ``[-scale_{k-1}/2, scale_{k-1}/2]``;
+  for X=8 the int8 container clamps +128 -> +127 and the clamp error is
+  re-absorbed by the next residual (sequential extraction);
+* extraction is *sequential* (numerically stable in f32); the paper's §4
+  closed form ``M~_k = INTX(M/s_k) - 2^X * INTX(M/s_{k-1})`` is provided in
+  :func:`extract_plane_closed_form` and is exactly equal to the sequential
+  extraction whenever no clamping fires (tested property).
+"""
+from __future__ import annotations
+
+import dataclasses
+import math
+from functools import partial
+from typing import Optional
+
+import jax
+import jax.numpy as jnp
+
+# ---------------------------------------------------------------------------
+# ACIQ-style Laplace-optimal clipping multipliers: clip = kappa(X) * b where
+# b is the Laplace scale estimated as mean |M - mu|.  (Banner et al., 2018.)
+# ---------------------------------------------------------------------------
+LAPLACE_CLIP_MULTIPLIER = {1: 1.86, 2: 2.83, 3: 3.89, 4: 5.03, 5: 6.20, 6: 7.41, 7: 8.64, 8: 9.89}
+
+
+def laplace_clip_multiplier(bits: int) -> float:
+    if bits in LAPLACE_CLIP_MULTIPLIER:
+        return LAPLACE_CLIP_MULTIPLIER[bits]
+    # asymptotic fit kappa ~= X*ln2 + 2.3 for larger X
+    return bits * math.log(2.0) + 2.3
+
+
+@partial(
+    jax.tree_util.register_dataclass,
+    data_fields=["planes", "scales", "bias", "sat"],
+    meta_fields=["bits", "per_channel", "batch_dims"],
+)
+@dataclasses.dataclass
+class ExpandedTensor:
+    """A tensor represented as a low-bit series (Theorem 1).
+
+    Attributes:
+      planes:  int8, shape (*B, t, *orig_shape).  INT-X values in an int8
+               container.  ``B`` are optional leading batch axes (e.g. the
+               expert axis of stacked MoE weights), see ``batch_dims``.
+      scales:  f32, shape (*B, t) (per-tensor) or (*B, t, C) with
+               C = orig_shape[-1] (per-channel over the last axis).
+      bias:    f32 (*B,) or (*B, C), the asymmetric zero offset
+               (``bias * M_nsy``), or None for symmetric expansions.
+      sat:     f32 (*B, *orig_shape), dense storage of the sparse saturation
+               correction ``M_sa``, or None for non-saturating expansions.
+      bits:    logical bit-width X of each plane (static).
+      per_channel: whether scales carry a channel dim (static).
+      batch_dims: number of leading batch axes (static); generic ops vmap
+               themselves over these (``expand_batched`` produces them).
+    """
+
+    planes: jnp.ndarray
+    scales: jnp.ndarray
+    bias: Optional[jnp.ndarray]
+    sat: Optional[jnp.ndarray]
+    bits: int
+    per_channel: bool
+    batch_dims: int = 0
+
+    @property
+    def num_terms(self) -> int:
+        return self.planes.shape[self.batch_dims]
+
+    @property
+    def orig_shape(self):
+        return self.planes.shape[self.batch_dims + 1:]
+
+    def unbatched_view(self) -> "ExpandedTensor":
+        """Static view with one batch axis peeled (for use inside jax.vmap)."""
+        assert self.batch_dims > 0
+        return dataclasses.replace(self, batch_dims=self.batch_dims - 1)
+
+    def __repr__(self):  # keep pytree-printing short
+        return (
+            f"ExpandedTensor(bits={self.bits}, terms={self.num_terms}, "
+            f"shape={tuple(self.orig_shape)}, per_channel={self.per_channel}, "
+            f"asym={self.bias is not None}, sat={self.sat is not None}, "
+            f"batch_dims={self.batch_dims})"
+        )
+
+
+# ---------------------------------------------------------------------------
+# scale / clip computation
+# ---------------------------------------------------------------------------
+def _reduce_all_but_last(x, fn):
+    axes = tuple(range(x.ndim - 1))
+    return fn(x, axis=axes)
+
+
+def laplace_b(m: jnp.ndarray, per_channel: bool) -> jnp.ndarray:
+    """Laplace scale estimate b = E|M - median| (we use mean as the center,
+    which matches the symmetric-about-zero weight distributions in practice)."""
+    if per_channel:
+        mu = _reduce_all_but_last(m, jnp.mean)
+        return _reduce_all_but_last(jnp.abs(m - mu), jnp.mean)
+    return jnp.mean(jnp.abs(m - jnp.mean(m)))
+
+
+def absmax(m: jnp.ndarray, per_channel: bool) -> jnp.ndarray:
+    if per_channel:
+        return _reduce_all_but_last(jnp.abs(m), jnp.max)
+    return jnp.max(jnp.abs(m))
+
+
+def clip_bound(m: jnp.ndarray, bits: int, saturating: bool, per_channel: bool) -> jnp.ndarray:
+    """Clipping bound c: absmax (non-saturating) or the Laplace-optimal clip."""
+    amax = absmax(m, per_channel)
+    if not saturating:
+        return amax
+    c = laplace_clip_multiplier(bits) * laplace_b(m, per_channel)
+    # never clip *outside* the data range, and guard against all-zero channels
+    return jnp.minimum(jnp.maximum(c, 1e-30), amax)
+
+
+def first_scale(c: jnp.ndarray, bits: int) -> jnp.ndarray:
+    """scale_1 = clip / (2^{X-1}-1); guarded so all-zero tensors stay finite."""
+    qmax = float(2 ** (bits - 1) - 1)
+    return jnp.maximum(c, 1e-30) / qmax
+
+
+def scale_ratio(bits: int) -> int:
+    """Inter-term scale ratio.  The paper's dyadic schedule is 2^X; a residual
+    in [-s/2, s/2] then needs the grid value ±2^{X-1}, which the int8
+    container holds for X < 8 but not for X = 8 (+128 overflows) — there the
+    clamp *stalls* convergence at ~s_2/2 on half-tie elements.  We therefore
+    use ratio 2^{X-1} for X = 8 (|q| <= 64, clamp-free, still geometric).
+    Documented deviation, see DESIGN.md §7."""
+    return 2 ** bits if bits < 8 else 2 ** (bits - 1)
+
+
+def term_scale(scale1: jnp.ndarray, bits: int, k: int) -> jnp.ndarray:
+    """scale_{k+1} = scale_k / ratio(X)  (dyadic schedule, Theorem 1)."""
+    return scale1 / float(scale_ratio(bits) ** k)
+
+
+# ---------------------------------------------------------------------------
+# plane extraction
+# ---------------------------------------------------------------------------
+def _plane_limits(bits: int, k: int, pack_safe: bool = False):
+    if k == 0 or pack_safe:
+        # pack_safe: every plane stays on the true X-bit grid [-(2^{X-1}-1),
+        # 2^{X-1}-1] so INT4 planes pack 2/byte (kernels/pack.py); the rare
+        # half-tie clamp error is absorbed by the next plane (sequential
+        # extraction) at the cost of a 3x slack on the final-term bound
+        hi = 2 ** (bits - 1) - 1
+    else:
+        hi = min(2 ** (bits - 1), 127)  # proof bound |q| <= 2^{X-1}; int8 cap
+    return -hi, hi
+
+
+def _expand_scale_dims(scale, target_ndim, per_channel):
+    """Reshape a per-tensor () or per-channel (C,) scale for broadcasting."""
+    if per_channel:
+        return scale.reshape((1,) * (target_ndim - 1) + scale.shape[-1:])
+    return scale
+
+
+def extract_planes_sequential(m: jnp.ndarray, scale1: jnp.ndarray, bits: int, terms: int,
+                              per_channel: bool, pack_safe: bool = False):
+    """Sequential residual extraction (canonical semantics).
+
+    Returns (planes int8 (t, *m.shape), residual f32)."""
+    r = m.astype(jnp.float32)
+    planes = []
+    for k in range(terms):
+        s = term_scale(scale1, bits, k)
+        s_b = _expand_scale_dims(s, m.ndim, per_channel)
+        lo, hi = _plane_limits(bits, k, pack_safe)
+        q = jnp.clip(jnp.round(r / s_b), lo, hi)
+        r = r - s_b * q
+        planes.append(q.astype(jnp.int8))
+    return jnp.stack(planes, axis=0), r
+
+
+def extract_plane_closed_form(m: jnp.ndarray, scale1: jnp.ndarray, bits: int, k: int, per_channel: bool):
+    """Paper §4 parallel closed form:
+    M~_k = INTX(M / s_k) - 2^X * INTX(M / s_{k-1});  M~_0 = INTX(M / s_0).
+
+    Exactly equals the sequential extraction whenever no clamping fires.
+    Computed in f32; valid while |M/s_k| < 2^24 (document: bits*k <= ~20).
+    """
+    s_k = _expand_scale_dims(term_scale(scale1, bits, k), m.ndim, per_channel)
+    cur = jnp.round(m.astype(jnp.float32) / s_k)
+    if k == 0:
+        lo, hi = _plane_limits(bits, 0)
+        return jnp.clip(cur, lo, hi).astype(jnp.int8)
+    s_prev = _expand_scale_dims(term_scale(scale1, bits, k - 1), m.ndim, per_channel)
+    prev = jnp.round(m.astype(jnp.float32) / s_prev)
+    lo, hi = _plane_limits(bits, k)
+    return jnp.clip(cur - float(scale_ratio(bits)) * prev, lo, hi).astype(jnp.int8)
+
+
+# ---------------------------------------------------------------------------
+# public API
+# ---------------------------------------------------------------------------
+def expand(
+    m: jnp.ndarray,
+    bits: int,
+    terms: int,
+    *,
+    symmetric: bool = True,
+    saturating: bool = False,
+    per_channel: bool = False,
+    keep_sat: bool = True,
+    pack_safe: bool = False,
+) -> ExpandedTensor:
+    """Expand tensor ``m`` into a ``terms``-term INT-``bits`` series (Theorem 1)."""
+    if terms < 1:
+        raise ValueError("terms must be >= 1")
+    if not 1 <= bits <= 8:
+        raise ValueError("bits must be in [1, 8] (int8 container)")
+    m = m.astype(jnp.float32)
+
+    bias = None
+    if not symmetric:
+        if per_channel:
+            mx = _reduce_all_but_last(m, jnp.max)
+            mn = _reduce_all_but_last(m, jnp.min)
+        else:
+            mx, mn = jnp.max(m), jnp.min(m)
+        bias = (mx + mn) / 2.0  # paper: (vmax - vmin)/2 + vmin
+        m = m - _expand_scale_dims(bias, m.ndim, per_channel)
+
+    sat = None
+    c = clip_bound(m, bits, saturating, per_channel)
+    if saturating:
+        c_b = _expand_scale_dims(c, m.ndim, per_channel)
+        clipped = jnp.clip(m, -c_b, c_b)
+        if keep_sat:
+            sat = (m - clipped).astype(jnp.float32)
+        m = clipped
+
+    scale1 = first_scale(c, bits)
+    planes, _ = extract_planes_sequential(m, scale1, bits, terms, per_channel, pack_safe)
+    scales = jnp.stack([term_scale(scale1, bits, k) for k in range(terms)], axis=0).astype(jnp.float32)
+    return ExpandedTensor(planes=planes, scales=scales, bias=bias, sat=sat, bits=bits, per_channel=per_channel)
+
+
+def expand_batched(
+    m: jnp.ndarray,
+    bits: int,
+    terms: int,
+    *,
+    batch_dims: int = 1,
+    **kwargs,
+) -> ExpandedTensor:
+    """Expand a stack of tensors (e.g. per-expert MoE weights) independently.
+
+    ``m``: (*B, ...) -> ExpandedTensor with ``batch_dims`` leading batch axes.
+    Each slice gets its own scales/bias/sat (per-expert quantizers)."""
+    fn = lambda x: expand(x, bits, terms, **kwargs)
+    for _ in range(batch_dims):
+        fn = jax.vmap(fn)
+    et = fn(m)
+    # vmap stacked the dataclass leaves but kept batch_dims=0 metadata
+    return dataclasses.replace(et, batch_dims=batch_dims)
+
+
+def reconstruct(et: ExpandedTensor, terms: Optional[int] = None) -> jnp.ndarray:
+    """Sum the series back to FP: M_sa + bias*M_nsy + sum_i scale_i * M~_i."""
+    if et.batch_dims > 0:
+        return jax.vmap(lambda e: reconstruct(e, terms))(et.unbatched_view())
+    t = et.num_terms if terms is None else min(terms, et.num_terms)
+    ndim = et.planes.ndim - 1
+    out = jnp.zeros(et.orig_shape, jnp.float32)
+    for k in range(t):
+        s_b = _expand_scale_dims(et.scales[k], ndim, et.per_channel)
+        out = out + s_b * et.planes[k].astype(jnp.float32)
+    if et.bias is not None:
+        out = out + _expand_scale_dims(et.bias, ndim, et.per_channel)
+    if et.sat is not None:
+        out = out + et.sat
+    return out
+
+
+def residual(m: jnp.ndarray, et: ExpandedTensor, terms: Optional[int] = None) -> jnp.ndarray:
+    return m.astype(jnp.float32) - reconstruct(et, terms)
+
+
+def theoretical_residual_bound(et: ExpandedTensor) -> jnp.ndarray:
+    """|residual| <= scale_n / 2: the ±2^{X-1} residual grid (ratio 2^X, X<8)
+    or the halved ratio (X=8) make clamping impossible, so round-to-nearest's
+    half-step bound is exact at every term."""
+    last = jax.lax.index_in_dim(et.scales, et.num_terms - 1, axis=et.batch_dims, keepdims=False)
+    return jnp.max(last) * 0.5
+
+
+def auto_num_terms(scale1_max: float, bits: int, threshold: float = 1e-4, max_terms: int = 6) -> int:
+    """Smallest n with scale_n/2 = scale_1/(2*ratio^{n-1}) < threshold (Fig 4b rule)."""
+    n = 1
+    while scale1_max / (2.0 * scale_ratio(bits) ** (n - 1)) >= threshold and n < max_terms:
+        n += 1
+    return n
+
+
+def truncate(et: ExpandedTensor, terms: int) -> ExpandedTensor:
+    """Drop trailing series terms (used by term-count ablations)."""
+    t = min(terms, et.num_terms)
+    bd = et.batch_dims
+    return dataclasses.replace(
+        et,
+        planes=jax.lax.slice_in_dim(et.planes, 0, t, axis=bd),
+        scales=jax.lax.slice_in_dim(et.scales, 0, t, axis=bd),
+    )
+
+
+def drop_sat(et: ExpandedTensor) -> ExpandedTensor:
+    """Drop the saturation correction (paper §4: its loss influence is small)."""
+    return dataclasses.replace(et, sat=None)

@@ -1,0 +1,137 @@
+"""Single-layer low-bit expansion (FP=xINT §3.2, Eq. 3/4).
+
+Decompose  x = bias_a*1 + x~ + sigma_a   (center, clip)
+           w = S_w + bias_w*M_nsy + W_sa (series + affine remainder)
+
+with  S_w = sum_j sw_j * W_j  and  x~ the centered-clipped activation whose
+series is Q(x~) = sum_i sa_i * A_i.  Then
+
+  x @ w =  Q(x~) @ S_w                      <- SeriesGEMM  (INT8 MXU path)
+         + rowsum(x~) (x) bias_w            <- rank-1 M_nsy fast path, O(n^2)
+         + x~ @ W_sa                        <- sparse saturation correction
+         + bias_a (x) colsum(w)             <- rank-1 (all-ones row), O(n^2)
+         + sigma_a @ w                      <- activation clip overflow
+         + [ (x~ - Q(x~)) @ S_w ]           <- DROPPED: the quantization error
+
+Every kept term except SeriesGEMM is computed exactly from the FP activation
+(available at runtime — activations are quantized dynamically), so the *only*
+approximation is the exponentially-vanishing series residual — this is what
+Theorem 1/2 convergence buys.  The rank-1 terms realize the paper's
+"Computation Complexity of M_nsy Multiplication" O(n^2) analysis.
+"""
+from __future__ import annotations
+
+from typing import Optional
+
+import jax
+import jax.numpy as jnp
+
+from repro.core import expansion as E
+from repro.core.expansion import ExpandedTensor
+from repro.core.policy import ExpansionPolicy
+from repro.kernels import ops, ref
+
+
+def expand_weight(w: jnp.ndarray, policy: ExpansionPolicy, *, bits: Optional[int] = None,
+                  terms: Optional[int] = None) -> ExpandedTensor:
+    """Expand a (K, N) weight per policy (per-channel, symmetric, Laplace clip)."""
+    return E.expand(
+        w,
+        bits if bits is not None else policy.w_bits,
+        terms if terms is not None else policy.w_terms,
+        symmetric=policy.w_symmetric,
+        saturating=policy.w_saturating,
+        per_channel=policy.w_per_channel,
+        keep_sat=policy.keep_w_sat,
+    )
+
+
+def series_colsum(w_et: ExpandedTensor) -> jnp.ndarray:
+    """colsum over K of S_w = sum_j sw_j * W_j  ->  (N,)."""
+    cs = jnp.sum(w_et.planes.astype(jnp.int32), axis=-2).astype(jnp.float32)  # (tw, N)
+    scales = w_et.scales if w_et.per_channel else w_et.scales[:, None]
+    return jnp.sum(scales * cs, axis=0)
+
+
+def full_colsum(w_et: ExpandedTensor) -> jnp.ndarray:
+    """colsum over K of the reconstructed w (series + bias*M_nsy + W_sa)."""
+    k = w_et.orig_shape[-2]
+    out = series_colsum(w_et)
+    if w_et.bias is not None:
+        out = out + float(k) * w_et.bias
+    if w_et.sat is not None:
+        out = out + jnp.sum(w_et.sat, axis=-2)
+    return out
+
+
+def _dynamic_act_params(x2d: jnp.ndarray, policy: ExpansionPolicy, a_bits: int):
+    """Calibration-free per-batch activation quantizer: center, clip, scale1."""
+    bias_a = None
+    xc = x2d
+    if not policy.a_symmetric:
+        bias_a = (jnp.max(x2d) + jnp.min(x2d)) / 2.0
+        xc = x2d - bias_a
+    c = E.clip_bound(xc, a_bits, policy.a_saturating, per_channel=False)
+    xt = jnp.clip(xc, -c, c)
+    sigma = xc - xt if policy.keep_a_sat else None
+    a_scale1 = E.first_scale(c, a_bits)
+    return xt, bias_a, sigma, a_scale1
+
+
+def expanded_apply(
+    x: jnp.ndarray,
+    w_et: ExpandedTensor,
+    policy: ExpansionPolicy,
+    *,
+    a_bits: Optional[int] = None,
+    a_terms: Optional[int] = None,
+    use_kernel: bool = False,
+) -> jnp.ndarray:
+    """y = x @ w with w series-expanded and x dynamically expanded (Eq. 4).
+
+    x: (..., K); w_et planes: (tw, K, N).  Returns (..., N) f32.
+    ``a_terms == 0`` (or a_bits >= 16) selects the weight-only path (W4A16).
+    """
+    a_bits = a_bits if a_bits is not None else policy.a_bits
+    a_terms = a_terms if a_terms is not None else policy.a_terms
+    k, n = w_et.orig_shape[-2], w_et.orig_shape[-1]
+    lead = x.shape[:-1]
+    x2d = x.reshape(-1, k).astype(jnp.float32)
+
+    if a_terms <= 0 or a_bits >= 16:
+        # weight-only quantization: exact FP activation x reconstructed weight
+        out = ref.dequant_matmul_ref(
+            x2d, w_et.planes, w_et.scales if w_et.per_channel else w_et.scales[:, None] * jnp.ones((1, n)))
+        if w_et.bias is not None:
+            out = out + jnp.sum(x2d, axis=-1, keepdims=True) * w_et.bias
+        if w_et.sat is not None:
+            out = out + x2d @ w_et.sat
+        return out.reshape(*lead, n)
+
+    xt, bias_a, sigma, a_scale1 = _dynamic_act_params(x2d, policy, a_bits)
+
+    w_scales = w_et.scales if w_et.per_channel else jnp.broadcast_to(w_et.scales[:, None], (w_et.num_terms, n))
+    out = ops.series_matmul(
+        xt, a_scale1, w_et.planes, w_scales, a_bits=a_bits, a_terms=a_terms, use_kernel=use_kernel)
+
+    # rank-1 M_nsy fast path:  x~ @ (bias_w * ones)  ==  rowsum(x~) (x) bias_w
+    if w_et.bias is not None:
+        out = out + jnp.sum(xt, axis=-1, keepdims=True) * w_et.bias
+    # sparse saturation correction of the weight
+    if w_et.sat is not None:
+        out = out + xt @ w_et.sat
+    # rank-1 all-ones row from the activation zero-point: bias_a (x) colsum(w)
+    if bias_a is not None:
+        out = out + bias_a * full_colsum(w_et)[None, :]
+    # activation clip overflow (usually dropped per §4; kept only if configured)
+    if sigma is not None:
+        out = out + sigma @ E.reconstruct(w_et)
+    return out.reshape(*lead, n)
+
+
+def dense(x: jnp.ndarray, w, policy: Optional[ExpansionPolicy] = None, **kw) -> jnp.ndarray:
+    """Dispatch: ExpandedTensor -> expanded_apply; plain array -> x @ w."""
+    if isinstance(w, ExpandedTensor):
+        assert policy is not None, "expanded weight needs an ExpansionPolicy"
+        return expanded_apply(x, w, policy, **kw)
+    return jnp.dot(x, w)

@@ -1,0 +1,84 @@
+"""Expansion policies: which bits / how many series terms / where (FP=xINT §4, §5.1).
+
+The paper's empirical rules, encoded:
+
+* weights need only 2–3 terms (zero-gradient argument: ∂ℓ/∂W = 0 at a trained
+  optimum, so W-error enters at second order) — ``w_terms`` defaults to 2;
+* activations carry the accuracy — expand until ``max|residual| < 1e-4``
+  (Fig. 4b) with a cap, ``a_terms`` defaults to policy-driven auto;
+* first and last matmul layers stay at 8-bit (§5.1);
+* weights per-channel, activations per-tensor & dynamic (calibration-free);
+* saturating (Laplace clip) quantization for the first plane, with the sparse
+  ``M_sa`` correction kept for weights and dropped for activations (§4).
+"""
+from __future__ import annotations
+
+import dataclasses
+from typing import Dict, Optional, Tuple
+
+
+@dataclasses.dataclass(frozen=True)
+class ExpansionPolicy:
+    """Static (hashable) configuration for FP=xINT expansion."""
+
+    w_bits: int = 4
+    a_bits: int = 4
+    w_terms: int = 2
+    a_terms: int = 3
+    # quantizer shape
+    w_per_channel: bool = True
+    w_symmetric: bool = True
+    a_symmetric: bool = False          # activations are asymmetric (post-GELU etc.)
+    w_saturating: bool = True          # Laplace clip on the weight's first plane
+    a_saturating: bool = False         # activations keep full range: LLM-style
+                                       # outliers make clipped-and-dropped A_sa
+                                       # expensive (measured +0.31 loss on the
+                                       # smoke LM) — beyond-paper default
+    keep_w_sat: bool = True
+    keep_a_sat: bool = False           # paper §4: A_sa influence is small
+    # layer placement
+    first_last_bits: int = 8           # §5.1: first & last layers at 8-bit
+    first_last_terms: int = 1
+    # per-layer mixed-precision overrides: name -> (bits_w, bits_a)
+    mixed: Optional[Tuple[Tuple[str, Tuple[int, int]], ...]] = None
+    # activation handling: dynamic per-batch scales (calibration-free)
+    act_dynamic: bool = True
+    # auto term selection threshold (Fig 4b: expand until maxdiff < 1e-4)
+    auto_term_threshold: float = 1e-4
+    max_terms: int = 6
+
+    def layer_bits(self, name: str, is_first_or_last: bool) -> Tuple[int, int]:
+        if self.mixed:
+            for key, bits in self.mixed:
+                if key in name:
+                    return bits
+        if is_first_or_last:
+            return (self.first_last_bits, self.first_last_bits)
+        return (self.w_bits, self.a_bits)
+
+    def layer_terms(self, is_first_or_last: bool) -> Tuple[int, int]:
+        if is_first_or_last:
+            return (self.first_last_terms, self.first_last_terms)
+        return (self.w_terms, self.a_terms)
+
+
+# canonical settings used across benchmarks (paper Tables 1/2/6)
+W4A4 = ExpansionPolicy(w_bits=4, a_bits=4, w_terms=2, a_terms=3)
+W2A4 = ExpansionPolicy(w_bits=2, a_bits=4, w_terms=3, a_terms=3)
+W4A2 = ExpansionPolicy(w_bits=4, a_bits=2, w_terms=2, a_terms=4)
+W2A2 = ExpansionPolicy(w_bits=2, a_bits=2, w_terms=3, a_terms=5)
+W3A3 = ExpansionPolicy(w_bits=3, a_bits=3, w_terms=2, a_terms=4)
+W8A8 = ExpansionPolicy(w_bits=8, a_bits=8, w_terms=1, a_terms=1)
+W4A16 = ExpansionPolicy(w_bits=4, a_bits=16, w_terms=2, a_terms=0)  # weight-only (Table 6)
+
+NAMED_POLICIES: Dict[str, ExpansionPolicy] = {
+    "w4a4": W4A4, "w2a4": W2A4, "w4a2": W4A2, "w2a2": W2A2,
+    "w3a3": W3A3, "w8a8": W8A8, "w4a16": W4A16,
+}
+
+
+def get_policy(name: str) -> ExpansionPolicy:
+    try:
+        return NAMED_POLICIES[name.lower()]
+    except KeyError:
+        raise KeyError(f"unknown policy {name!r}; known: {sorted(NAMED_POLICIES)}") from None

@@ -1,0 +1,140 @@
+"""Model-level low-bit expansion driver (FP=xINT §3.3, Theorem 2).
+
+Walks a parameter pytree and replaces every matmul weight with its
+:class:`ExpandedTensor` series.  Calibration-free: every quantizer parameter
+(clip, scales, bias, sat) is a pure function of the weight itself; activation
+quantizers are dynamic (per batch) — no calibration set, no fine-tuning.
+
+Weight-leaf identification is by path convention (the model zoo names every
+GEMM weight ``kernel``); embedding gather tables (``embedding``) and norms/
+biases stay FP.  First/last layers (paths matching ``first_last_patterns``)
+are expanded at 8-bit per the paper's §5.1 protocol.
+"""
+from __future__ import annotations
+
+import re
+import time
+from typing import Any, Dict, Optional, Tuple
+
+import jax
+import jax.numpy as jnp
+
+from repro.core import expansion as E
+from repro.core.expansion import ExpandedTensor
+from repro.core.policy import ExpansionPolicy
+
+PyTree = Any
+
+DEFAULT_FIRST_LAST = (r"lm_head", r"\bhead\b", r"embed_out", r"in_proj_first", r"patch_proj", r"frame_proj")
+
+
+def _path_str(path) -> str:
+    parts = []
+    for p in path:
+        if hasattr(p, "key"):
+            parts.append(str(p.key))
+        elif hasattr(p, "idx"):
+            parts.append(str(p.idx))
+        else:
+            parts.append(str(p))
+    return "/".join(parts)
+
+
+def is_gemm_weight(name: str, leaf) -> bool:
+    if not isinstance(leaf, jnp.ndarray) and not hasattr(leaf, "shape"):
+        return False
+    if isinstance(leaf, ExpandedTensor):
+        return False
+    base = name.rsplit("/", 1)[-1]
+    return base == "kernel" and leaf.ndim >= 2
+
+
+def expand_params(
+    params: PyTree,
+    policy: ExpansionPolicy,
+    *,
+    first_last_patterns: Tuple[str, ...] = DEFAULT_FIRST_LAST,
+    skip_patterns: Tuple[str, ...] = (),
+) -> PyTree:
+    """Replace every GEMM weight leaf with its series expansion.
+
+    Weights with >2 dims (stacked experts / scanned layers) are expanded with
+    independent per-slice quantizers over the leading axes (``expand_batched``).
+    """
+    fl_re = [re.compile(p) for p in first_last_patterns]
+    skip_re = [re.compile(p) for p in skip_patterns]
+
+    def visit(path, leaf):
+        name = _path_str(path)
+        if not is_gemm_weight(name, leaf):
+            return leaf
+        if any(r.search(name) for r in skip_re):
+            return leaf
+        is_fl = any(r.search(name) for r in fl_re)
+        bits, _ = policy.layer_bits(name, is_fl)
+        terms, _ = policy.layer_terms(is_fl)
+        bd = leaf.ndim - 2
+        if bd > 0:
+            return E.expand_batched(
+                leaf, bits, terms, batch_dims=bd,
+                symmetric=policy.w_symmetric, saturating=policy.w_saturating,
+                per_channel=policy.w_per_channel, keep_sat=policy.keep_w_sat)
+        return E.expand(
+            leaf, bits, terms,
+            symmetric=policy.w_symmetric, saturating=policy.w_saturating,
+            per_channel=policy.w_per_channel, keep_sat=policy.keep_w_sat)
+
+    return jax.tree_util.tree_map_with_path(visit, params)
+
+
+def expand_params_timed(params: PyTree, policy: ExpansionPolicy, **kw):
+    """Returns (expanded_params, wall_seconds) — the paper's 'Quant-Time'."""
+    t0 = time.perf_counter()
+    out = jax.block_until_ready(jax.jit(lambda p: expand_params(p, policy, **kw))(params))
+    return out, time.perf_counter() - t0
+
+
+def expansion_stats(params: PyTree) -> Dict[str, float]:
+    """Size accounting: FP bytes vs expanded bytes (planes int8 + scales +
+    affine terms), plus counts.  Model-size numbers for Table 3."""
+    fp_bytes = 0
+    q_bytes = 0
+    n_expanded = 0
+    n_leaves = 0
+    for leaf in jax.tree_util.tree_leaves(params, is_leaf=lambda l: isinstance(l, ExpandedTensor)):
+        n_leaves += 1
+        if isinstance(leaf, ExpandedTensor):
+            n_expanded += 1
+            orig = int(jnp.prod(jnp.array(leaf.orig_shape)))
+            batch = int(jnp.prod(jnp.array(leaf.planes.shape[: leaf.batch_dims]))) if leaf.batch_dims else 1
+            fp_bytes += 4 * orig * batch
+            # logical low-bit storage: bits/8 bytes per element per term
+            q_bytes += leaf.planes.size * leaf.bits // 8 + leaf.scales.size * 4
+            if leaf.bias is not None:
+                q_bytes += leaf.bias.size * 4
+            if leaf.sat is not None:
+                nnz = int(jnp.sum(leaf.sat != 0))
+                q_bytes += nnz * 8  # value + index
+        else:
+            b = leaf.size * leaf.dtype.itemsize
+            fp_bytes += b
+            q_bytes += b
+    return {
+        "fp_bytes": float(fp_bytes), "quant_bytes": float(q_bytes),
+        "compression": float(fp_bytes) / max(float(q_bytes), 1.0),
+        "expanded_leaves": float(n_expanded), "total_leaves": float(n_leaves),
+    }
+
+
+def max_weight_residual(params_fp: PyTree, params_q: PyTree) -> jnp.ndarray:
+    """max over expanded leaves of |W - reconstruct(W_expanded)| (Fig. 4b x-axis)."""
+    maxes = []
+
+    def visit(q, fp):
+        if isinstance(q, ExpandedTensor):
+            maxes.append(jnp.max(jnp.abs(fp - E.reconstruct(q))))
+        return q
+
+    jax.tree_util.tree_map(visit, params_q, params_fp,
+                           is_leaf=lambda l: isinstance(l, ExpandedTensor))
+    return jnp.max(jnp.stack(maxes)) if maxes else jnp.float32(0.0)

@@ -1,0 +1,1 @@
+from repro.infer.serve import Engine, ServeConfig, make_serve_step

@@ -1,0 +1,48 @@
+"""KV/state-cache accounting and helpers.
+
+Cache construction lives with the blocks (models/blocks.init_block_cache,
+models/model.init_cache); this module provides the size model used by the
+serving engine's admission control and the roofline's memory-term notes.
+"""
+from __future__ import annotations
+
+from typing import Dict
+
+import numpy as np
+
+from repro.configs.base import ArchConfig
+from repro.models.ssm import ssm_dims
+
+
+def cache_bytes_per_token(cfg: ArchConfig, dtype_bytes: int = 2) -> Dict[str, float]:
+    """Bytes of cache that grow per sequence position, and fixed state bytes."""
+    growing = 0.0
+    fixed = 0.0
+    blocks = tuple(cfg.stage_pattern) * cfg.num_stages + tuple(cfg.tail_pattern)
+    for kind in blocks:
+        if kind in ("attn", "moe_attn"):
+            growing += 2 * cfg.num_kv_heads * cfg.head_dim * dtype_bytes
+        elif kind == "local":
+            fixed += 2 * min(cfg.window, 1 << 30) * cfg.num_kv_heads * cfg.head_dim * dtype_bytes
+        elif kind == "cross":
+            fixed += 2 * cfg.num_image_tokens * cfg.num_kv_heads * cfg.head_dim * dtype_bytes
+        elif kind == "rglru":
+            fixed += (cfg.rnn_width + 3 * cfg.rnn_width) * dtype_bytes
+        elif kind == "ssm":
+            d = ssm_dims(cfg)
+            fixed += (d["heads"] * d["p"] * d["n"] + (cfg.ssm_conv - 1) * d["conv_ch"]) * dtype_bytes
+    return {"growing_per_token": growing, "fixed": fixed}
+
+
+def total_cache_bytes(cfg: ArchConfig, batch: int, s_max: int, dtype_bytes: int = 2) -> float:
+    c = cache_bytes_per_token(cfg, dtype_bytes)
+    grow = c["growing_per_token"] * s_max
+    return batch * (grow + c["fixed"])
+
+
+def max_batch_for_hbm(cfg: ArchConfig, s_max: int, hbm_bytes: float,
+                      param_bytes: float, dtype_bytes: int = 2) -> int:
+    """Admission control: largest decode batch whose caches + params fit."""
+    per_seq = total_cache_bytes(cfg, 1, s_max, dtype_bytes)
+    free = hbm_bytes - param_bytes
+    return max(0, int(np.floor(free / max(per_seq, 1.0))))

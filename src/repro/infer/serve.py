@@ -1,0 +1,130 @@
+"""Batched serving engine for FP=xINT-expanded models.
+
+The PTQ paper's deployment story: expand a trained FP model once (seconds,
+calibration-free), then serve the INT series.  The engine:
+
+* expands params at admission (``policy`` given) — the quantization step
+  the paper times in Table 2/3;
+* groups equal-length requests into batches (exactness over padding
+  heuristics: attention math is identical to the unbatched run);
+* runs jit'd prefill + donated-cache decode steps (in-place cache update);
+* continuous-batching-lite: a request queue is drained group by group, new
+  groups admitted as slots free up.
+
+``make_serve_step`` is the function the multi-pod dry-run lowers for the
+``decode_*`` cells.
+"""
+from __future__ import annotations
+
+import dataclasses
+import time
+from collections import defaultdict
+from functools import partial
+from typing import Any, Dict, List, Optional, Sequence, Tuple
+
+import jax
+import jax.numpy as jnp
+import numpy as np
+
+from repro.configs.base import ArchConfig
+from repro.core import ptq as PTQ
+from repro.core.policy import ExpansionPolicy
+from repro.models import model as M
+from repro.models.layers import FP, QuantContext
+
+PyTree = Any
+
+
+@dataclasses.dataclass(frozen=True)
+class ServeConfig:
+    max_seq: int = 512            # decode capacity (cache size)
+    max_batch: int = 8
+    temperature: float = 0.0      # 0 = greedy
+    eos_id: int = -1              # -1 = never stop early
+    seed: int = 0
+
+
+def make_serve_step(cfg: ArchConfig, qc: QuantContext = FP):
+    """serve_step(params, tokens (B,1), caches, cache_len) ->
+    (logits (B,V), caches') — the unit the decode dry-run cells lower."""
+    def serve_step(params, tokens, caches, cache_len):
+        return M.decode_step(params, tokens, caches, cache_len, cfg, qc)
+    return serve_step
+
+
+class Engine:
+    def __init__(self, cfg: ArchConfig, params: PyTree, *,
+                 policy: Optional[ExpansionPolicy] = None,
+                 serve_cfg: ServeConfig = ServeConfig(),
+                 use_kernel: bool = False):
+        self.cfg = cfg
+        self.sc = serve_cfg
+        self.qc = QuantContext(policy=policy, use_kernel=use_kernel) if policy else FP
+        t0 = time.perf_counter()
+        if policy is not None:
+            params = jax.jit(lambda p: PTQ.expand_params(p, policy))(params)
+            params = jax.block_until_ready(params)
+        self.quant_seconds = time.perf_counter() - t0
+        self.params = params
+        self._queue: List[Tuple[int, List[int]]] = []
+        self._next_id = 0
+
+        self._prefill = jax.jit(
+            lambda p, batch: M.prefill(p, batch, cfg, self.qc, s_max=self.sc.max_seq))
+        self._decode = jax.jit(
+            lambda p, tok, caches, clen: M.decode_step(p, tok, caches, clen, cfg, self.qc),
+            donate_argnums=(2,))
+
+    # ------------------------------------------------------------------
+    def add_request(self, tokens: Sequence[int]) -> int:
+        rid = self._next_id
+        self._next_id += 1
+        self._queue.append((rid, list(tokens)))
+        return rid
+
+    def _form_groups(self) -> List[List[Tuple[int, List[int]]]]:
+        by_len: Dict[int, List] = defaultdict(list)
+        for rid, toks in self._queue:
+            by_len[len(toks)].append((rid, toks))
+        groups = []
+        for _, reqs in sorted(by_len.items()):
+            for i in range(0, len(reqs), self.sc.max_batch):
+                groups.append(reqs[i:i + self.sc.max_batch])
+        return groups
+
+    def run(self, max_new_tokens: int = 16) -> Dict[int, List[int]]:
+        """Drain the queue; returns request id -> generated tokens."""
+        out: Dict[int, List[int]] = {}
+        key = jax.random.PRNGKey(self.sc.seed)
+        for group in self._form_groups():
+            rids = [rid for rid, _ in group]
+            prompts = np.array([t for _, t in group], np.int32)
+            b, s = prompts.shape
+            assert s + max_new_tokens <= self.sc.max_seq, "over decode capacity"
+            logits, caches = self._prefill(self.params, {"tokens": jnp.asarray(prompts)})
+            gen = [[] for _ in rids]
+            alive = np.ones(b, bool)
+            clen = jnp.int32(s)
+            tok = self._sample(logits, key)
+            for t in range(max_new_tokens):
+                for i in range(b):
+                    if alive[i]:
+                        gen[i].append(int(tok[i, 0]))
+                        if int(tok[i, 0]) == self.sc.eos_id:
+                            alive[i] = False
+                if not alive.any() or t == max_new_tokens - 1:
+                    break
+                logits, caches = self._decode(self.params, tok, caches, clen)
+                clen = clen + 1
+                key, sub = jax.random.split(key)
+                tok = self._sample(logits, sub)
+            for rid, g in zip(rids, gen):
+                out[rid] = g
+        self._queue.clear()
+        return out
+
+    def _sample(self, logits: jnp.ndarray, key) -> jnp.ndarray:
+        if self.sc.temperature <= 0.0:
+            return jnp.argmax(logits, axis=-1)[:, None].astype(jnp.int32)
+        tok = jax.random.categorical(key, logits / self.sc.temperature, axis=-1)
+        return tok[:, None].astype(jnp.int32)

@@ -1,0 +1,3 @@
+"""Pallas TPU kernels for the FP=xINT hot loops (+ jnp oracles in ref.py)."""
+from repro.kernels.ops import residual_quantize, series_matmul, packed_dequant_matmul, kernels_enabled
+from repro.kernels.pack import pack_int4, unpack_int4, packed_bytes

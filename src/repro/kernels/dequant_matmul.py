@@ -1,0 +1,76 @@
+"""Pallas TPU kernel: packed-INT4 weight-only dequant GEMM (W4A16 serving).
+
+The Table-6 deployment mode: activations stay bf16/f32, weights are the
+packed INT4 series.  The kernel streams *packed* planes from HBM (0.5
+byte/value/term — 4x less weight traffic than bf16), unpacks in VMEM with
+the shift sign-extension idiom, folds the per-channel scales, and runs the
+GEMM at the activation dtype.  This is the kernel the §Perf C3 iteration
+projects onto real TPUs.
+
+out = x @ (sum_j sw_j * unpack(W_packed_j))
+
+Grid: (M/bm, N/bn, K/bk) with K innermost for accumulation; the packed
+block is (tw, bk, bn//2).
+"""
+from __future__ import annotations
+
+import functools
+
+import jax
+import jax.numpy as jnp
+from jax.experimental import pallas as pl
+
+
+def _unpack_int4_block(packed: jnp.ndarray) -> jnp.ndarray:
+    """(bk, bn//2) int8 -> (bk, bn) int8, sign-extended nibbles."""
+    p = packed.astype(jnp.int32)
+    lo = (p << 28) >> 28
+    hi = (p << 24) >> 28
+    bk, half = packed.shape
+    return jnp.stack([lo, hi], axis=-1).reshape(bk, half * 2).astype(jnp.int8)
+
+
+def _kernel(x_ref, wp_ref, ws_ref, o_ref, *, tw: int):
+    kk = pl.program_id(2)
+
+    @pl.when(kk == 0)
+    def _init():
+        o_ref[...] = jnp.zeros_like(o_ref)
+
+    x = x_ref[...].astype(jnp.float32)               # (bm, bk)
+    acc = jnp.zeros_like(o_ref)
+    for j in range(tw):                              # unpack + scale in VMEM
+        w_j = _unpack_int4_block(wp_ref[j]).astype(jnp.float32)   # (bk, bn)
+        w_j = w_j * ws_ref[j][None, :]               # per-channel scale fold
+        acc = acc + jnp.dot(x, w_j, preferred_element_type=jnp.float32)
+    o_ref[...] += acc
+
+
+def dequant_matmul_pallas(
+    x: jnp.ndarray,           # (M, K) f32/bf16
+    w_packed: jnp.ndarray,    # (tw, K, N//2) int8 — packed INT4 planes
+    w_scales: jnp.ndarray,    # (tw, N) f32
+    *,
+    block_m: int = 256,
+    block_n: int = 256,
+    block_k: int = 512,
+    interpret: bool = True,
+) -> jnp.ndarray:
+    m, k = x.shape
+    tw, k2, n_half = w_packed.shape
+    n = n_half * 2
+    assert k == k2 and w_scales.shape == (tw, n)
+    assert m % block_m == 0 and n % block_n == 0 and k % block_k == 0
+    grid = (m // block_m, n // block_n, k // block_k)
+    return pl.pallas_call(
+        functools.partial(_kernel, tw=tw),
+        out_shape=jax.ShapeDtypeStruct((m, n), jnp.float32),
+        grid=grid,
+        in_specs=[
+            pl.BlockSpec((block_m, block_k), lambda i, j, kk: (i, kk)),
+            pl.BlockSpec((tw, block_k, block_n // 2), lambda i, j, kk: (0, kk, j)),
+            pl.BlockSpec((tw, block_n), lambda i, j, kk: (0, j)),
+        ],
+        out_specs=pl.BlockSpec((block_m, block_n), lambda i, j, kk: (i, j)),
+        interpret=interpret,
+    )(x.astype(jnp.float32), w_packed, w_scales.astype(jnp.float32))

@@ -1,0 +1,134 @@
+"""jit'd public wrappers around the Pallas kernels, with padding + dispatch.
+
+On this CPU container the kernels run under ``interpret=True`` (the kernel
+body executes in Python on CPU — bit-exact vs. the TPU lowering contract);
+on a real TPU the same calls compile to Mosaic.  Set ``REPRO_NO_PALLAS=1``
+to force the pure-jnp reference path (used to cross-check, and in
+distributed dry-runs where interpret-mode callbacks cannot be partitioned).
+"""
+from __future__ import annotations
+
+import os
+from functools import partial
+
+import jax
+import jax.numpy as jnp
+
+from repro.kernels import ref
+from repro.kernels.dequant_matmul import dequant_matmul_pallas
+from repro.kernels.pack import pack_int4, unpack_int4
+from repro.kernels.residual_quantize import residual_quantize_pallas
+from repro.kernels.series_matmul import series_matmul_pallas
+
+
+def _on_tpu() -> bool:
+    return jax.default_backend() == "tpu"
+
+
+def kernels_enabled() -> bool:
+    return os.environ.get("REPRO_NO_PALLAS", "0") != "1"
+
+
+def _pad_to(x: jnp.ndarray, mults, axes):
+    pads = [(0, 0)] * x.ndim
+    needs = False
+    for ax, mult in zip(axes, mults):
+        rem = (-x.shape[ax]) % mult
+        if rem:
+            pads[ax] = (0, rem)
+            needs = True
+    return jnp.pad(x, pads) if needs else x
+
+
+def _pick_block(dim: int, pref: int, align: int = 8) -> int:
+    """Largest block <= pref that keeps padding overhead small; fall back to
+    the padded-to-align dim itself for small inputs."""
+    if dim >= pref:
+        return pref
+    return max(align, ((dim + align - 1) // align) * align)
+
+
+@partial(jax.jit, static_argnames=("bits", "terms", "use_kernel", "block_m", "block_n"))
+def residual_quantize(
+    x: jnp.ndarray,
+    scale1: jnp.ndarray,
+    *,
+    bits: int,
+    terms: int,
+    use_kernel: bool = True,
+    block_m: int = 256,
+    block_n: int = 256,
+) -> jnp.ndarray:
+    """(M, N) f32, () scale -> (terms, M, N) int8 planes."""
+    if not (use_kernel and kernels_enabled()):
+        return ref.residual_quantize_ref(x, scale1, bits, terms)
+    m, n = x.shape
+    bm, bn = _pick_block(m, block_m), _pick_block(n, block_n)
+    xp = _pad_to(x, (bm, bn), (0, 1))
+    planes = residual_quantize_pallas(
+        xp, scale1, bits=bits, terms=terms, block_m=bm, block_n=bn,
+        interpret=not _on_tpu(),
+    )
+    return planes[:, :m, :n]
+
+
+@partial(jax.jit, static_argnames=("a_bits", "a_terms", "use_kernel", "block_m", "block_n", "block_k"))
+def series_matmul(
+    x: jnp.ndarray,
+    a_scale1: jnp.ndarray,
+    w_planes: jnp.ndarray,
+    w_scales: jnp.ndarray,
+    *,
+    a_bits: int,
+    a_terms: int,
+    use_kernel: bool = True,
+    block_m: int = 256,
+    block_n: int = 256,
+    block_k: int = 512,
+) -> jnp.ndarray:
+    """Fused sum_{i,j} sa_i sw_j (A_i @ W_j).  x (M,K); w_planes (tw,K,N)."""
+    tw, k, n = w_planes.shape
+    if w_scales.ndim == 1:  # canonicalize to per-channel
+        w_scales = jnp.broadcast_to(w_scales[:, None], (tw, n))
+    if not (use_kernel and kernels_enabled()):
+        return ref.series_matmul_ref(x, a_scale1, w_planes, w_scales, a_bits=a_bits, a_terms=a_terms)
+    m = x.shape[0]
+    bm, bn, bk = _pick_block(m, block_m), _pick_block(n, block_n), _pick_block(k, block_k)
+    xp = _pad_to(x, (bm, bk), (0, 1))
+    wp = _pad_to(w_planes, (bk, bn), (1, 2))
+    wsp = _pad_to(w_scales, (bn,), (1,))
+    out = series_matmul_pallas(
+        xp, a_scale1, wp, wsp, a_bits=a_bits, a_terms=a_terms,
+        block_m=bm, block_n=bn, block_k=bk, interpret=not _on_tpu(),
+    )
+    return out[:m, :n]
+
+
+@partial(jax.jit, static_argnames=("use_kernel", "block_m", "block_n", "block_k"))
+def packed_dequant_matmul(
+    x: jnp.ndarray,
+    w_packed: jnp.ndarray,
+    w_scales: jnp.ndarray,
+    *,
+    use_kernel: bool = True,
+    block_m: int = 256,
+    block_n: int = 256,
+    block_k: int = 512,
+) -> jnp.ndarray:
+    """Weight-only W4A16 GEMM over packed INT4 planes (kernels/dequant_matmul).
+
+    x (M, K); w_packed (tw, K, N//2) int8; w_scales (tw, N) -> (M, N) f32."""
+    tw, k, n_half = w_packed.shape
+    n = n_half * 2
+    if w_scales.ndim == 1:
+        w_scales = jnp.broadcast_to(w_scales[:, None], (tw, n))
+    if not (use_kernel and kernels_enabled()):
+        return ref.dequant_matmul_ref(x, unpack_int4(w_packed), w_scales)
+    m = x.shape[0]
+    bm, bk = _pick_block(m, block_m), _pick_block(k, block_k)
+    bn = _pick_block(n, block_n, align=16)  # even halves after packing
+    xp = _pad_to(x, (bm, bk), (0, 1))
+    wp = _pad_to(w_packed, (bk, bn // 2), (1, 2))
+    wsp = _pad_to(w_scales, (bn,), (1,))
+    out = dequant_matmul_pallas(xp, wp, wsp, block_m=bm, block_n=bn, block_k=bk)
+    return out[:m, :n]

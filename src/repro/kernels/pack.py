@@ -1,0 +1,39 @@
+"""INT4 plane packing: 2 values per int8 byte (§Perf C-series follow-up).
+
+W4 series planes stored unpacked occupy 1 byte/value — the same container
+bytes as bf16 weights at 2 terms, wasting the 4-bit logical width.  Packing
+two INT4 values per byte halves plane HBM traffic; the unpack is two shifts
+(VPU-friendly on TPU, exactly the `(x << 4) >> 4` sign-extension idiom).
+
+Packing applies to bits <= 4 planes (values in [-8, 7]).  The packed layout
+pairs adjacent elements of the LAST axis: packed[..., i] holds
+(plane[..., 2i] & 0xF) | (plane[..., 2i+1] << 4).
+"""
+from __future__ import annotations
+
+import jax.numpy as jnp
+
+
+def pack_int4(planes: jnp.ndarray) -> jnp.ndarray:
+    """int8 planes with values in [-8, 7], even last axis -> packed int8."""
+    assert planes.shape[-1] % 2 == 0, planes.shape
+    lo = planes[..., 0::2].astype(jnp.int32) & 0xF
+    hi = (planes[..., 1::2].astype(jnp.int32) & 0xF) << 4
+    return (lo | hi).astype(jnp.int8)
+
+
+def unpack_int4(packed: jnp.ndarray) -> jnp.ndarray:
+    """packed int8 -> int8 planes (sign-extended 4-bit values)."""
+    p = packed.astype(jnp.int32)
+    lo = (p << 28) >> 28                      # sign-extend low nibble
+    hi = (p << 24) >> 28                      # sign-extend high nibble
+    out_shape = packed.shape[:-1] + (packed.shape[-1] * 2,)
+    out = jnp.stack([lo, hi], axis=-1).reshape(out_shape)
+    return out.astype(jnp.int8)
+
+
+def packed_bytes(planes: jnp.ndarray, bits: int) -> int:
+    """Storage bytes with packing (vs planes.size unpacked)."""
+    if bits <= 4:
+        return planes.size // 2
+    return planes.size

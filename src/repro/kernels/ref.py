@@ -1,0 +1,93 @@
+"""Pure-jnp oracles for the Pallas kernels.
+
+Two kernel contracts (see DESIGN.md §3):
+
+1. ``residual_quantize``: one pass over a 2-D f32 tensor producing ``terms``
+   INT-X planes (int8 container) under the dyadic scale schedule
+   ``s_k = scale1 / 2^{X k}`` with sequential (error-feedback) extraction.
+
+2. ``series_matmul``: the fused layer-expansion GEMM
+   ``out = sum_{i<ta, j<tw} sa_i * sw_j * (A_i @ W_j)``
+   where ``A_i`` are the residual planes of the (pre-centered, pre-clipped)
+   activation ``x`` and ``W_j`` are the weight planes.  INT8xINT8->INT32 dot,
+   f32 scale-accumulate.  Asymmetric/saturation affine corrections are
+   *outside* this contract (added by ``core/linear.py`` identically for both
+   the oracle and the kernel path).
+
+These oracles are the semantics; the Pallas kernels must match them exactly
+(same rounding, same clamps) — asserted by ``tests/test_kernels.py`` sweeps.
+"""
+from __future__ import annotations
+
+import jax
+import jax.numpy as jnp
+
+
+def _scale_ratio(bits: int) -> int:
+    # Mirrors repro.core.expansion.scale_ratio (duplicated: kernels stay
+    # import-cycle-free): 2^X for X<8, 2^{X-1} for X=8 (int8 container).
+    return 2 ** bits if bits < 8 else 2 ** (bits - 1)
+
+
+def _plane_limits(bits: int, k: int):
+    if k == 0:
+        hi = 2 ** (bits - 1) - 1
+    else:
+        hi = min(2 ** (bits - 1), 127)
+    return -hi, hi
+
+
+def residual_quantize_ref(x: jnp.ndarray, scale1: jnp.ndarray, bits: int, terms: int) -> jnp.ndarray:
+    """Sequential residual quantization, per-tensor scalar ``scale1``.
+
+    Returns int8 planes of shape (terms, *x.shape)."""
+    r = x.astype(jnp.float32)
+    planes = []
+    for k in range(terms):
+        s = scale1 / float(_scale_ratio(bits) ** k)
+        lo, hi = _plane_limits(bits, k)
+        q = jnp.clip(jnp.round(r / s), lo, hi)
+        r = r - s * q
+        planes.append(q.astype(jnp.int8))
+    return jnp.stack(planes, axis=0)
+
+
+def series_matmul_ref(
+    x: jnp.ndarray,            # (M, K) f32 — already centered & clipped
+    a_scale1: jnp.ndarray,     # () f32
+    w_planes: jnp.ndarray,     # (tw, K, N) int8
+    w_scales: jnp.ndarray,     # (tw,) or (tw, N) f32
+    *,
+    a_bits: int,
+    a_terms: int,
+) -> jnp.ndarray:
+    """out = sum_{i,j} sa_i * sw_j * (A_i @ W_j), f32 (M, N)."""
+    m, k = x.shape
+    tw, k2, n = w_planes.shape
+    assert k == k2, (x.shape, w_planes.shape)
+    a_planes = residual_quantize_ref(x, a_scale1, a_bits, a_terms)  # (ta, M, K)
+    out = jnp.zeros((m, n), jnp.float32)
+    for i in range(a_terms):
+        sa_i = a_scale1 / float(_scale_ratio(a_bits) ** i)
+        for j in range(tw):
+            acc = jax.lax.dot_general(
+                a_planes[i], w_planes[j],
+                (((1,), (0,)), ((), ())),
+                preferred_element_type=jnp.int32,
+            )
+            sw_j = w_scales[j]  # () or (N,) — broadcasts over rows
+            out = out + (sa_i * sw_j) * acc.astype(jnp.float32)
+    return out
+
+
+def dequant_matmul_ref(
+    x: jnp.ndarray,            # (M, K) f32 or bf16
+    w_planes: jnp.ndarray,     # (tw, K, N) int8
+    w_scales: jnp.ndarray,     # (tw,) or (tw, N) f32
+) -> jnp.ndarray:
+    """Weight-only path (W4A16): out = x @ (sum_j sw_j * W_j).  f32 (M, N)."""
+    tw, k, n = w_planes.shape
+    w = jnp.zeros((k, n), jnp.float32)
+    for j in range(tw):
+        w = w + w_scales[j] * w_planes[j].astype(jnp.float32)
+    return jnp.dot(x.astype(jnp.float32), w)

@@ -1,0 +1,71 @@
+"""Pallas TPU kernel: fused residual series quantization (Theorem 1 extraction).
+
+One HBM read of the f32 tensor produces all ``terms`` INT-X planes (int8
+container) — the TPU-native form of the paper's "Parallelization of Computing
+M~_i" (§4): extraction is elementwise across the tile, the term loop runs in
+VMEM registers, so HBM traffic is ``4 + terms`` bytes/element instead of
+``terms * 8`` for a naive per-term implementation.
+
+Grid: (M/bm, N/bn) independent tiles.  scale1 is a per-tensor scalar passed
+as a (1, 1) f32 operand (index-mapped to every tile).
+"""
+from __future__ import annotations
+
+import functools
+
+import jax
+import jax.numpy as jnp
+from jax.experimental import pallas as pl
+
+
+def _scale_ratio(bits: int) -> int:
+    # mirrors repro.core.expansion.scale_ratio (no import cycle in kernels)
+    return 2 ** bits if bits < 8 else 2 ** (bits - 1)
+
+
+def _plane_limits(bits: int, k: int):
+    if k == 0:
+        hi = 2 ** (bits - 1) - 1
+    else:
+        hi = min(2 ** (bits - 1), 127)
+    return -hi, hi
+
+
+def _kernel(x_ref, s_ref, o_ref, *, bits: int, terms: int):
+    r = x_ref[...].astype(jnp.float32)
+    s1 = s_ref[0, 0]
+    for k in range(terms):                       # static unroll, runs in VREGs
+        s = s1 / float(_scale_ratio(bits) ** k)
+        lo, hi = _plane_limits(bits, k)
+        q = jnp.clip(jnp.round(r / s), lo, hi)
+        r = r - s * q
+        o_ref[k, :, :] = q.astype(jnp.int8)
+
+
+def residual_quantize_pallas(
+    x: jnp.ndarray,
+    scale1: jnp.ndarray,
+    *,
+    bits: int,
+    terms: int,
+    block_m: int = 256,
+    block_n: int = 256,
+    interpret: bool = True,
+) -> jnp.ndarray:
+    """x: (M, N) f32; scale1: () f32  ->  planes (terms, M, N) int8.
+
+    M, N must be multiples of the block sizes (ops.py pads)."""
+    m, n = x.shape
+    assert m % block_m == 0 and n % block_n == 0, (x.shape, block_m, block_n)
+    grid = (m // block_m, n // block_n)
+    return pl.pallas_call(
+        functools.partial(_kernel, bits=bits, terms=terms),
+        out_shape=jax.ShapeDtypeStruct((terms, m, n), jnp.int8),
+        grid=grid,
+        in_specs=[
+            pl.BlockSpec((block_m, block_n), lambda i, j: (i, j)),
+            pl.BlockSpec((1, 1), lambda i, j: (0, 0)),
+        ],
+        out_specs=pl.BlockSpec((terms, block_m, block_n), lambda i, j: (0, i, j)),
+        interpret=interpret,
+    )(x.astype(jnp.float32), scale1.reshape(1, 1).astype(jnp.float32))

@@ -1,0 +1,105 @@
+"""Pallas TPU kernel: fused series-expansion GEMM (FP=xINT layer expansion, Eq. 3).
+
+Computes  out = sum_{i<ta, j<tw}  sa_i * sw_j[n] * (A_i @ W_j)
+
+where A_i are the residual INT-X planes of the activation tile — quantized
+*inside the kernel in VMEM*, never materialized to HBM — and W_j are the
+pre-expanded weight planes.  Each int8 x int8 dot hits the MXU with int32
+accumulation (v5e: 394 TOPS int8 = 2x bf16 peak); per-(i,j) partials are
+scale-folded into a single f32 accumulator held in the revisited output
+block.
+
+This fusion is the TPU-native adaptation of the paper's "parallel term
+computation": a naive implementation reads A from HBM ta times (once per
+term GEMM); here the activation tile is read once and re-quantized in
+registers, so the memory roofline term scales with 1 activation read + tw
+weight-plane reads instead of ta*(activation+weight) reads.
+
+Grid: (M/bm, N/bn, K/bk), K innermost ("arbitrary") for accumulation.
+Weight scales are canonicalized to per-channel (tw, N) by ops.py.
+"""
+from __future__ import annotations
+
+import functools
+
+import jax
+import jax.numpy as jnp
+from jax.experimental import pallas as pl
+
+
+def _scale_ratio(bits: int) -> int:
+    # mirrors repro.core.expansion.scale_ratio (no import cycle in kernels)
+    return 2 ** bits if bits < 8 else 2 ** (bits - 1)
+
+
+def _plane_limits(bits: int, k: int):
+    if k == 0:
+        hi = 2 ** (bits - 1) - 1
+    else:
+        hi = min(2 ** (bits - 1), 127)
+    return -hi, hi
+
+
+def _kernel(x_ref, s_ref, w_ref, ws_ref, o_ref, *, a_bits: int, a_terms: int, tw: int):
+    kk = pl.program_id(2)
+
+    @pl.when(kk == 0)
+    def _init():
+        o_ref[...] = jnp.zeros_like(o_ref)
+
+    sa1 = s_ref[0, 0]
+    r = x_ref[...].astype(jnp.float32)           # (bm, bk) activation tile
+    acc = jnp.zeros_like(o_ref)
+    for i in range(a_terms):                     # sequential residual planes in VREGs
+        sa_i = sa1 / float(_scale_ratio(a_bits) ** i)
+        lo, hi = _plane_limits(a_bits, i)
+        q = jnp.clip(jnp.round(r / sa_i), lo, hi)
+        r = r - sa_i * q
+        a_i = q.astype(jnp.int8)
+        for j in range(tw):                      # int8 MXU GEMM per weight plane
+            p = jax.lax.dot_general(
+                a_i, w_ref[j],
+                (((1,), (0,)), ((), ())),
+                preferred_element_type=jnp.int32,
+            )
+            acc = acc + (sa_i * ws_ref[j]) * p.astype(jnp.float32)
+    o_ref[...] += acc
+
+
+def series_matmul_pallas(
+    x: jnp.ndarray,           # (M, K) f32 — centered & clipped activations
+    a_scale1: jnp.ndarray,    # () f32
+    w_planes: jnp.ndarray,    # (tw, K, N) int8
+    w_scales: jnp.ndarray,    # (tw, N) f32
+    *,
+    a_bits: int,
+    a_terms: int,
+    block_m: int = 256,
+    block_n: int = 256,
+    block_k: int = 512,
+    interpret: bool = True,
+) -> jnp.ndarray:
+    m, k = x.shape
+    tw, k2, n = w_planes.shape
+    assert k == k2 and w_scales.shape == (tw, n)
+    assert m % block_m == 0 and n % block_n == 0 and k % block_k == 0, (
+        (m, k, n), (block_m, block_k, block_n))
+    grid = (m // block_m, n // block_n, k // block_k)
+    return pl.pallas_call(
+        functools.partial(_kernel, a_bits=a_bits, a_terms=a_terms, tw=tw),
+        out_shape=jax.ShapeDtypeStruct((m, n), jnp.float32),
+        grid=grid,
+        in_specs=[
+            pl.BlockSpec((block_m, block_k), lambda i, j, kk: (i, kk)),
+            pl.BlockSpec((1, 1), lambda i, j, kk: (0, 0)),
+            pl.BlockSpec((tw, block_k, block_n), lambda i, j, kk: (0, kk, j)),
+            pl.BlockSpec((tw, block_n), lambda i, j, kk: (0, j)),
+        ],
+        out_specs=pl.BlockSpec((block_m, block_n), lambda i, j, kk: (i, j)),
+        interpret=interpret,
+    )(
+        x.astype(jnp.float32),
+        a_scale1.reshape(1, 1).astype(jnp.float32),
+        w_planes,
+        w_scales.astype(jnp.float32),
+    )

@@ -1,0 +1,291 @@
+import os
+os.environ["XLA_FLAGS"] = "--xla_force_host_platform_device_count=512"
+# (MUST be the first two lines: jax locks the device count on first init.)
+os.environ.setdefault("REPRO_NO_PALLAS", "1")  # SPMD partitions the jnp series
+                                               # path; Mosaic kernels swap in on
+                                               # real TPUs (kernels/ops.py).
+
+"""Multi-pod dry-run: lower + compile every (arch x shape x mesh) cell.
+
+For each cell this builds the production mesh, constructs ShapeDtypeStruct
+stand-ins for params / optimizer state / inputs (zero allocation), applies
+the sharding rules, then ``jax.jit(step).lower(...).compile()``.  Success
+proves the distribution config is coherent (shardings legal, collectives
+supported, memory model known); the compiled artifact yields
+
+  * memory_analysis()  -> bytes per device (fits/doesn't),
+  * cost_analysis()    -> HLO FLOPs & bytes for §Roofline,
+  * as_text()          -> the collective schedule (parsed into per-op bytes).
+
+Results are cached as JSON under benchmarks/results/dryrun/ so the roofline
+pass and EXPERIMENTS.md tables read from one source of truth.
+
+Usage:
+  PYTHONPATH=src python -m repro.launch.dryrun --arch deepseek_7b --shape train_4k --mesh single
+  PYTHONPATH=src python -m repro.launch.dryrun --all --mesh both
+"""
+import argparse
+import json
+import re
+import time
+import traceback
+from typing import Any, Dict, Optional
+
+import jax
+import jax.numpy as jnp
+from jax.sharding import NamedSharding, PartitionSpec as P
+
+from repro.configs.base import ARCH_IDS, SHAPES, applicable_shapes, get_arch
+from repro.core import ptq as PTQ
+from repro.core.policy import ExpansionPolicy
+from repro.dist.sharding import ShardingRules
+from repro.infer.serve import make_serve_step
+from repro.launch.hlo_cost import total_costs
+from repro.launch.mesh import dp_axes, make_production_mesh
+from repro.models import model as M
+from repro.models.layers import FP, QuantContext
+from repro.train.train_step import TrainConfig, make_train_step
+
+RESULTS_DIR = os.path.join(os.path.dirname(__file__), "..", "..", "..",
+                           "benchmarks", "results", "dryrun")
+
+# serving policy for prefill/decode cells: W4A4 series without dense sat
+# tensors (deploy form — the sparse correction is dropped per paper §4)
+SERVE_POLICY = ExpansionPolicy(w_bits=4, a_bits=4, w_terms=2, a_terms=3,
+                               keep_w_sat=False, keep_a_sat=False,
+                               a_saturating=False,
+                               first_last_bits=8, first_last_terms=1)
+
+_COLLECTIVES = ("all-gather", "all-reduce", "reduce-scatter", "all-to-all",
+                "collective-permute")
+_DTYPE_BYTES = {"f64": 8, "f32": 4, "bf16": 2, "f16": 2, "s32": 4, "u32": 4,
+                "s8": 1, "u8": 1, "pred": 1, "s16": 2, "u16": 2, "s64": 8, "u64": 8}
+
+
+def parse_collectives(hlo_text: str) -> Dict[str, Any]:
+    """Sum operand bytes of every collective op in post-SPMD HLO, keyed by
+    op kind; also records group sizes for ring-factor adjustment."""
+    out: Dict[str, Any] = {k: {"bytes": 0.0, "count": 0, "ops": []} for k in _COLLECTIVES}
+    shape_re = re.compile(r"(\w+)\[([\d,]*)\]")
+    for line in hlo_text.splitlines():
+        stripped = line.strip()
+        m = re.match(r"%?\S+ = (.+?) (all-gather|all-reduce|reduce-scatter|all-to-all|collective-permute)(-start)?\(", stripped)
+        if not m:
+            continue
+        outshape, kind = m.group(1), m.group(2)
+        nbytes = 0.0
+        for dt, dims in shape_re.findall(outshape):
+            if dt not in _DTYPE_BYTES:
+                continue
+            n = 1
+            for d in dims.split(","):
+                if d:
+                    n *= int(d)
+            nbytes += n * _DTYPE_BYTES[dt]
+        g = re.search(r"replica_groups=\[(\d+),(\d+)\]", stripped)
+        group = int(g.group(2)) if g else 0
+        out[kind]["bytes"] += nbytes
+        out[kind]["count"] += 1
+        out[kind]["ops"].append({"bytes": nbytes, "group": group})
+    for k in out:
+        del out[k]["ops"][64:]  # cap the per-op detail
+    return out
+
+
+def pick_grad_accum(global_batch: int, dp_size: int, target_micro_rows: int = 16) -> int:
+    """Largest accumulation count whose microbatch still divides the dp axes."""
+    best = 1
+    for ga in range(1, global_batch + 1):
+        if global_batch % ga:
+            continue
+        micro = global_batch // ga
+        if micro % dp_size == 0 and micro >= dp_size:
+            if micro <= max(target_micro_rows, dp_size):
+                return ga
+            best = ga
+    return best
+
+
+def build_cell(arch: str, shape_name: str, mesh, *, serve_policy=SERVE_POLICY,
+               use_sp: bool = True, fsdp: bool = True, donate: bool = True,
+               remat: bool = True, moe_ep: bool = True,
+               grad_accum: int = 0, int8_kv: bool = False,
+               attn_chunks: str = "", fp_serve: bool = False,
+               capacity_factor: float = 0.0):
+    """Returns (fn, example_args_structs, in_shardings, donate_argnums)."""
+    import dataclasses as _dc
+    cfg = get_arch(arch)
+    if attn_chunks:
+        qc_, kc_ = (int(x) for x in attn_chunks.split(","))
+        cfg = _dc.replace(cfg, attn_q_chunk=qc_, attn_kv_chunk=kc_)
+    if capacity_factor:
+        cfg = _dc.replace(cfg, capacity_factor=capacity_factor)
+    sh = SHAPES[shape_name]
+    dp = dp_axes(mesh)
+    dp_size = 1
+    for a in dp:
+        dp_size *= mesh.shape[a]
+    shard_batch = sh.global_batch % dp_size == 0 and sh.global_batch >= dp_size
+    rules = ShardingRules(mesh, dp, fsdp=fsdp, shard_batch=shard_batch)
+
+    # sequence-parallel residual-stream constraint (train/prefill only)
+    act_constraint = None
+    if use_sp and sh.kind in ("train", "prefill"):
+        seq = sh.seq_len
+        tp = mesh.shape["model"]
+        if seq % tp == 0:
+            dp_spec = tuple(dp) if len(dp) > 1 else dp[0]
+            sp_sharding = NamedSharding(
+                mesh, P(dp_spec if shard_batch else None, "model", None))
+            act_constraint = lambda x: jax.lax.with_sharding_constraint(x, sp_sharding)
+
+    params_struct = jax.eval_shape(lambda: M.init_params(jax.random.PRNGKey(0), cfg))
+
+    if sh.kind == "train":
+        tc = TrainConfig(
+            optimizer="adafactor" if cfg.param_count() > 1e11 else "adamw",
+            grad_accum=grad_accum or pick_grad_accum(sh.global_batch, dp_size),
+            remat=remat)
+        opt, train_step = make_train_step(cfg, tc, FP, act_constraint=act_constraint)
+        opt_struct = jax.eval_shape(opt.init, params_struct)
+        batch_struct = M.input_specs(cfg, sh)["batch"]
+        p_specs = rules.param_specs(params_struct)
+        o_specs = rules.opt_state_specs(tc.optimizer, params_struct, p_specs)
+        b_specs = rules.batch_specs(batch_struct)
+        in_sh = (p_specs, o_specs, b_specs)
+        args = (params_struct, opt_struct, batch_struct)
+        out_sh = (p_specs, o_specs, None)
+        return train_step, args, in_sh, out_sh, ((0, 1) if donate else ()), tc
+
+    # serving cells: expand the params per the deploy policy
+    # (--fp-serve keeps FP params: the paper-faithful unquantized baseline)
+    if fp_serve:
+        qc = QuantContext(policy=None, int8_kv=int8_kv)
+        q_struct = params_struct
+    else:
+        qc = QuantContext(policy=serve_policy, int8_kv=int8_kv)
+        q_struct = jax.eval_shape(lambda p: PTQ.expand_params(p, serve_policy), params_struct)
+    qp_specs = rules.param_specs(q_struct)
+
+    if sh.kind == "prefill":
+        def prefill_step(params, batch):
+            return M.prefill(params, batch, cfg, qc, act_constraint=act_constraint)
+        batch_struct = M.input_specs(cfg, sh)["batch"]
+        b_specs = rules.batch_specs(batch_struct)
+        return prefill_step, (q_struct, batch_struct), (qp_specs, b_specs), None, (), None
+
+    # decode
+    serve_step = make_serve_step(cfg, qc)
+    specs = M.input_specs(cfg, sh, int8_kv=int8_kv)
+    cache_specs = rules.cache_specs(specs["caches"])
+    tok_specs = rules.batch_specs({"tokens": specs["tokens"]})["tokens"]
+    in_sh = (qp_specs, tok_specs, cache_specs, rules.replicated())
+    args = (q_struct, specs["tokens"], specs["caches"], specs["cache_len"])
+    return serve_step, args, in_sh, None, ((2,) if donate else ()), None
+
+
+def run_cell(arch: str, shape_name: str, mesh_kind: str, *, save: bool = True,
+             tag: str = "", **build_kw) -> Dict[str, Any]:
+    t0 = time.time()
+    mesh = make_production_mesh(multi_pod=(mesh_kind == "multi"))
+    rec: Dict[str, Any] = {"arch": arch, "shape": shape_name, "mesh": mesh_kind,
+                           "mesh_shape": dict(mesh.shape), "tag": tag}
+    try:
+        fn, args, in_sh, out_sh, donate, tc = build_cell(arch, shape_name, mesh, **build_kw)
+        with mesh:
+            jitted = jax.jit(fn, in_shardings=in_sh, out_shardings=out_sh,
+                             donate_argnums=donate)
+            lowered = jitted.lower(*args)
+            t_lower = time.time() - t0
+            compiled = lowered.compile()
+            t_compile = time.time() - t0 - t_lower
+        mem = compiled.memory_analysis()
+        print(mem)                      # proves it fits (bytes per device)
+        ca = compiled.cost_analysis()
+        print({k: ca.get(k) for k in ("flops", "bytes accessed")})
+        hlo_text = compiled.as_text()
+        coll = parse_collectives(hlo_text)
+        loop_aware = total_costs(hlo_text)
+        cfg = get_arch(arch)
+        rec.update({
+            "ok": True,
+            "lower_s": round(t_lower, 2), "compile_s": round(t_compile, 2),
+            "flops": float(ca.get("flops", 0.0)),
+            "bytes_accessed": float(ca.get("bytes accessed", 0.0)),
+            "transcendentals": float(ca.get("transcendentals", 0.0)),
+            "memory": {
+                "argument_bytes": mem.argument_size_in_bytes,
+                "output_bytes": mem.output_size_in_bytes,
+                "temp_bytes": mem.temp_size_in_bytes,
+                "alias_bytes": mem.alias_size_in_bytes,
+                "code_bytes": mem.generated_code_size_in_bytes,
+            },
+            "collectives": coll,
+            "loop_aware": loop_aware,
+            "grad_accum": getattr(tc, "grad_accum", None) if tc else None,
+            "param_count": cfg.param_count(),
+            "active_param_count": cfg.active_param_count(),
+        })
+    except Exception as e:  # a failing cell is a bug — record it loudly
+        rec.update({"ok": False, "error": f"{type(e).__name__}: {e}",
+                    "traceback": traceback.format_exc()[-4000:]})
+        print(f"FAILED {arch} {shape_name} {mesh_kind}: {e}")
+    if save:
+        os.makedirs(RESULTS_DIR, exist_ok=True)
+        suffix = f"_{tag}" if tag else ""
+        path = os.path.join(RESULTS_DIR, f"{arch}__{shape_name}__{mesh_kind}{suffix}.json")
+        with open(path, "w") as f:
+            json.dump(rec, f, indent=1)
+    return rec
+
+
+def main():
+    ap = argparse.ArgumentParser()
+    ap.add_argument("--arch", choices=ARCH_IDS)
+    ap.add_argument("--shape", choices=tuple(SHAPES))
+    ap.add_argument("--mesh", choices=("single", "multi", "both"), default="single")
+    ap.add_argument("--all", action="store_true", help="every live cell")
+    ap.add_argument("--tag", default="", help="variant tag for perf iterations")
+    ap.add_argument("--no-sp", action="store_true")
+    ap.add_argument("--no-fsdp", action="store_true")
+    ap.add_argument("--no-remat", action="store_true")
+    ap.add_argument("--grad-accum", type=int, default=0)
+    ap.add_argument("--int8-kv", action="store_true")
+    ap.add_argument("--attn-chunks", default="", help="e.g. 2048,4096")
+    ap.add_argument("--fp-serve", action="store_true", help="unquantized serving baseline")
+    ap.add_argument("--capacity-factor", type=float, default=0.0)
+    ap.add_argument("--skip-existing", action="store_true")
+    args = ap.parse_args()
+
+    meshes = ("single", "multi") if args.mesh == "both" else (args.mesh,)
+    if args.all:
+        cells = [(a, s) for a in ARCH_IDS for s in applicable_shapes(get_arch(a))]
+    else:
+        assert args.arch and args.shape, "--arch/--shape or --all"
+        cells = [(args.arch, args.shape)]
+
+    build_kw = dict(use_sp=not args.no_sp, fsdp=not args.no_fsdp,
+                    remat=not args.no_remat, grad_accum=args.grad_accum,
+                    int8_kv=args.int8_kv, attn_chunks=args.attn_chunks,
+                    fp_serve=args.fp_serve, capacity_factor=args.capacity_factor)
+    n_ok = 0
+    for arch, shape in cells:
+        for mk in meshes:
+            suffix = f"_{args.tag}" if args.tag else ""
+            path = os.path.join(RESULTS_DIR, f"{arch}__{shape}__{mk}{suffix}.json")
+            if args.skip_existing and os.path.exists(path):
+                with open(path) as f:
+                    if json.load(f).get("ok"):
+                        n_ok += 1
+                        print(f"skip (cached ok): {arch} {shape} {mk}")
+                        continue
+            print(f"=== {arch} {shape} {mk} ===", flush=True)
+            rec = run_cell(arch, shape, mk, tag=args.tag, **build_kw)
+            n_ok += bool(rec.get("ok"))
+    total = len(cells) * len(meshes)
+    print(f"\n{n_ok}/{total} cells compiled OK")
+    raise SystemExit(0 if n_ok == total else 1)
+
+
+if __name__ == "__main__":
+    main()

@@ -1,0 +1,298 @@
+"""Loop-aware cost model over optimized (post-SPMD) HLO text.
+
+``compiled.cost_analysis()`` counts while-loop bodies ONCE — useless for
+scan-based models (a 96-layer stack scans one stage 96x, a train step scans
+grad_accum microbatches).  This module re-derives per-device totals by
+walking the computation call graph and multiplying by known trip counts
+(``backend_config={"known_trip_count":{"n":...}}``, present for lax.scan):
+
+  * flops        — 2 * prod(dot output dims) * prod(contracted dims) per
+                   ``dot`` (GEMMs dominate; elementwise flops are not
+                   counted — noted in EXPERIMENTS.md);
+  * bytes        — per top-level instruction: output bytes + operand bytes
+                   (post-fusion buffer traffic ≈ HBM bytes); control-flow
+                   plumbing (tuples, parameters, bitcasts) excluded;
+  * collectives  — output bytes per op kind, trip-multiplied, with replica
+                   group sizes for ring-factor adjustment;
+  * int_dot_flops — the subset of flops whose operands are integer (the
+                   MXU int8 path: credited at 2x peak in the dtype-aware
+                   roofline).
+
+Cross-checked against analytic FLOPs in benchmarks/roofline.py.
+"""
+from __future__ import annotations
+
+import dataclasses
+import json
+import re
+from typing import Any, Dict, List, Optional, Tuple
+
+_SHAPE_RE = re.compile(r"(f64|f32|bf16|f16|f8\w*|s64|s32|s16|s8|u64|u32|u16|u8|pred|c64|c128)\[([\d,]*)\]")
+_DTYPE_BYTES = {"f64": 8, "f32": 4, "bf16": 2, "f16": 2, "s64": 8, "s32": 4,
+                "s16": 2, "s8": 1, "u64": 8, "u32": 4, "u16": 2, "u8": 1,
+                "pred": 1, "c64": 8, "c128": 16}
+_INT_TYPES = {"s8", "u8", "s16", "u16", "s32", "u32"}
+_COLLECTIVES = ("all-gather", "all-reduce", "reduce-scatter", "all-to-all",
+                "collective-permute")
+_SKIP_BYTES_OPS = {"tuple", "get-tuple-element", "parameter", "constant",
+                   "bitcast", "after-all", "partition-id", "replica-id",
+                   "iota", "while", "conditional", "call",
+                   # pure dtype converts: CPU-backend artifacts (no native
+                   # bf16 GEMM); on the TPU target these do not exist —
+                   # operand lookups resolve THROUGH converts to the source
+                   # dtype instead (TPU-faithful accounting)
+                   "convert"}
+
+
+def _shape_bytes(type_str: str) -> float:
+    total = 0.0
+    for dt, dims in _SHAPE_RE.findall(type_str):
+        n = 1
+        for d in dims.split(","):
+            if d:
+                n *= int(d)
+        total += n * _DTYPE_BYTES.get(dt, 4)
+    return total
+
+
+def _shape_dims(type_str: str) -> Optional[Tuple[str, List[int]]]:
+    m = _SHAPE_RE.search(type_str)
+    if not m:
+        return None
+    dims = [int(d) for d in m.group(2).split(",") if d]
+    return m.group(1), dims
+
+
+@dataclasses.dataclass
+class CompStats:
+    flops: float = 0.0
+    int_dot_flops: float = 0.0
+    bytes: float = 0.0
+    transcendentals: float = 0.0
+    collectives: Dict[str, Dict[str, float]] = dataclasses.field(default_factory=dict)
+    calls: List[Tuple[str, float, str]] = dataclasses.field(default_factory=list)  # (callee, trips, kind)
+
+
+# out-type is either a tuple "(...)" (may contain /*index=N*/ comments but
+# never parens) or a single shape token
+_INSTR_RE = re.compile(r"^\s*(?:ROOT\s+)?%?([\w.\-]+)\s*=\s*(\([^()]*\)|\S+)\s+([\w\-]+)(?:\.\d+)?\(")
+_COMP_START_RE = re.compile(r"^(?:ENTRY\s+)?%?([\w.\-]+)(?:\.\d+)?\s*\(.*\)\s*->.*{")
+
+
+def parse_hlo(text: str) -> Tuple[Dict[str, CompStats], Dict[str, str], str]:
+    """Returns (computations, symbol->type map per comp merged, entry name)."""
+    comps: Dict[str, CompStats] = {}
+    entry = ""
+    cur: Optional[str] = None
+    cur_stats: Optional[CompStats] = None
+    symbols: Dict[str, str] = {}
+    convert_src: Dict[str, str] = {}  # convert output name -> source operand
+
+    def _resolve_type(name: str, depth: int = 0) -> str:
+        while name in convert_src and depth < 8:
+            name = convert_src[name]
+            depth += 1
+        return symbols.get(name, "")
+
+    for raw in text.splitlines():
+        line = raw.rstrip()
+        if cur is None:
+            m = _COMP_START_RE.match(line.strip())
+            if m and line.rstrip().endswith("{"):
+                cur = m.group(1)
+                if line.lstrip().startswith("ENTRY"):
+                    entry = cur
+                cur_stats = comps.setdefault(cur, CompStats())
+                # parameters declared in the signature: name: type
+                for pm in re.finditer(r"([\w.\-]+)\s*:\s*((?:\([^)]*\))|(?:\S+?))(?:,|\)\s*->)", line):
+                    symbols[pm.group(1)] = pm.group(2)
+            continue
+        if line.strip() == "}":
+            cur = None
+            cur_stats = None
+            continue
+
+        m = _INSTR_RE.match(line)
+        if not m:
+            continue
+        name, out_type, op = m.group(1), m.group(2), m.group(3)
+        symbols[name] = out_type
+        s = cur_stats
+        assert s is not None
+        if op == "convert":
+            om = re.search(r"\(%?([\w.\-]+)\)", line[line.index("("):])
+            if om:
+                convert_src[name] = om.group(1)
+
+        # --- call edges ---
+        if op == "while":
+            body = re.search(r"body=%?([\w.\-]+)", line)
+            trips = 1.0
+            tm = re.search(r'"known_trip_count":\{"n":"?(\d+)"?\}', line)
+            if tm:
+                trips = float(tm.group(1))
+            if body:
+                s.calls.append((body.group(1), trips, "while"))
+            cond = re.search(r"condition=%?([\w.\-]+)", line)
+            if cond:
+                s.calls.append((cond.group(1), trips, "while"))
+            continue
+        if op == "fusion":
+            cm = re.search(r"calls=%?([\w.\-]+)", line)
+            if cm:
+                # fusion internals are registers, not HBM: flops-only edge
+                s.calls.append((cm.group(1), 1.0, "fusion"))
+        if op == "conditional":
+            for cm in re.finditer(r"(?:true_computation|false_computation|branch_computations=\{)([^,}]+)", line):
+                for name2 in re.findall(r"%?([\w.\-]+)", cm.group(1)):
+                    s.calls.append((name2, 1.0, "cond"))
+        if op == "call":
+            cm = re.search(r"to_apply=%?([\w.\-]+)", line)
+            if cm:
+                s.calls.append((cm.group(1), 1.0, "call"))
+
+        # --- collectives (by op name) ---
+        base_op = op[:-6] if op.endswith("-start") else op
+        if base_op in _COLLECTIVES:
+            b = _shape_bytes(out_type)
+            g = re.search(r"replica_groups=\[(\d+),(\d+)\]", line)
+            group = int(g.group(2)) if g else 0
+            d = s.collectives.setdefault(base_op, {"bytes": 0.0, "count": 0.0, "group": 0.0})
+            d["bytes"] += b
+            d["count"] += 1
+            d["group"] = max(d["group"], group)
+
+        # --- dot flops ---
+        if op == "dot":
+            out = _shape_dims(out_type)
+            lhs_m = re.search(r"\(%?([\w.\-]+)", line[line.index(op):])
+            lc = re.search(r"lhs_contracting_dims=\{([\d,]*)\}", line)
+            if out and lhs_m and lc:
+                lhs_type = symbols.get(lhs_m.group(1), "")
+                lhs = _shape_dims(lhs_type)
+                if lhs:
+                    contract = 1
+                    for i in [int(x) for x in lc.group(1).split(",") if x]:
+                        if i < len(lhs[1]):
+                            contract *= lhs[1][i]
+                    n_out = 1
+                    for d_ in out[1]:
+                        n_out *= d_
+                    f = 2.0 * n_out * contract
+                    s.flops += f
+                    if lhs[0] in _INT_TYPES:
+                        s.int_dot_flops += f
+        if op in ("exponential", "tanh", "log", "rsqrt", "power", "logistic"):
+            out = _shape_dims(out_type)
+            if out:
+                n_out = 1
+                for d_ in out[1]:
+                    n_out *= d_
+                s.transcendentals += n_out
+
+        # --- bytes ---
+        if op not in _SKIP_BYTES_OPS:
+            operands = [om.group(1) for om in
+                        re.finditer(r"%([\w.\-]+)", line[line.index("("):])
+                        if om.group(1) in symbols]
+            if op == "dynamic-update-slice" or (
+                    op == "fusion" and "dynamic_update_slice" in line):
+                # in-place buffer update (aliased): traffic = the update slice
+                # (read + write), NOT the whole cache buffer.  Ignore index
+                # scalars when picking the update operand.
+                op_bytes = [b_ for o in operands
+                            if (b_ := _shape_bytes(_resolve_type(o))) >= 256]
+                b = 2.0 * (min(op_bytes) if op_bytes else _shape_bytes(out_type))
+            else:
+                b = _shape_bytes(out_type)
+                for o in operands:
+                    b += _shape_bytes(_resolve_type(o))
+            s.bytes += b
+    return comps, symbols, entry
+
+
+def top_contributors(text: str, k: int = 20) -> List[Tuple[float, str, str]]:
+    """(bytes*trips, computation, op-metadata) for the k heaviest instruction
+    groups — the hillclimb's 'profile'.  Trips are accumulated down the call
+    graph; instructions are grouped by (computation, op, out_type)."""
+    comps, symbols, entry = parse_hlo(text)
+    # effective trip multiplier per computation
+    mult: Dict[str, float] = {entry: 1.0}
+    changed = True
+    guard = 0
+    while changed and guard < 64:
+        changed = False
+        guard += 1
+        for name, s in comps.items():
+            m = mult.get(name)
+            if m is None:
+                continue
+            for callee, trips, kind in s.calls:
+                new = m * trips
+                if mult.get(callee, 0.0) < new:
+                    mult[callee] = new
+                    changed = True
+    groups: Dict[Tuple[str, str, str], float] = {}
+    cur = None
+    for raw in text.splitlines():
+        line = raw.rstrip()
+        if cur is None:
+            m = _COMP_START_RE.match(line.strip())
+            if m and line.rstrip().endswith("{"):
+                cur = m.group(1)
+            continue
+        if line.strip() == "}":
+            cur = None
+            continue
+        m = _INSTR_RE.match(line)
+        if not m or cur not in mult:
+            continue
+        name, out_type, op = m.group(1), m.group(2), m.group(3)
+        if op in _SKIP_BYTES_OPS:
+            continue
+        b = _shape_bytes(out_type)
+        for om in re.finditer(r"%([\w.\-]+)", line[line.index("("):]):
+            if om.group(1) in symbols:
+                b += _shape_bytes(symbols[om.group(1)])
+        meta = ""
+        mm = re.search(r'op_name="([^"]+)"', line)
+        if mm:
+            meta = mm.group(1)[-80:]
+        key = (cur, f"{op} {out_type[:48]}", meta)
+        groups[key] = groups.get(key, 0.0) + b * mult[cur]
+    ranked = sorted(((v, f"{c} x{mult[c]:.0f}", f"{o} | {meta}")
+                     for (c, o, meta), v in groups.items()), reverse=True)
+    return ranked[:k]
+
+
+def total_costs(text: str) -> Dict[str, Any]:
+    """Walk the call graph from ENTRY with trip multiplication."""
+    comps, _, entry = parse_hlo(text)
+    memo: Dict[str, Dict[str, Any]] = {}
+
+    def walk(name: str, depth: int = 0) -> Dict[str, Any]:
+        if name in memo:
+            return memo[name]
+        if name not in comps or depth > 64:
+            return {"flops": 0.0, "int_dot_flops": 0.0, "bytes": 0.0,
+                    "transcendentals": 0.0, "collectives": {}}
+        s = comps[name]
+        out = {"flops": s.flops, "int_dot_flops": s.int_dot_flops,
+               "bytes": s.bytes, "transcendentals": s.transcendentals,
+               "collectives": {k: dict(v) for k, v in s.collectives.items()}}
+        for callee, trips, kind in s.calls:
+            sub = walk(callee, depth + 1)
+            out["flops"] += trips * sub["flops"]
+            out["int_dot_flops"] += trips * sub["int_dot_flops"]
+            out["transcendentals"] += trips * sub["transcendentals"]
+            if kind != "fusion":  # fusion internals never touch HBM
+                out["bytes"] += trips * sub["bytes"]
+            for k, v in sub["collectives"].items():
+                d = out["collectives"].setdefault(k, {"bytes": 0.0, "count": 0.0, "group": 0.0})
+                d["bytes"] += trips * v["bytes"]
+                d["count"] += trips * v["count"]
+                d["group"] = max(d["group"], v["group"])
+        memo[name] = out
+        return out
+
+    return walk(entry)

@@ -1,0 +1,27 @@
+"""Production meshes.  Functions, not module constants — importing this
+module never touches jax device state (the dry-run sets the fake-device
+XLA flag before anything jax-related runs)."""
+from __future__ import annotations
+
+from typing import Tuple
+
+import jax
+
+
+def make_production_mesh(*, multi_pod: bool = False):
+    """16x16 = 256 chips per pod; 2 pods = 512 chips multi-pod."""
+    shape = (2, 16, 16) if multi_pod else (16, 16)
+    axes = ("pod", "data", "model") if multi_pod else ("data", "model")
+    return jax.make_mesh(shape, axes,
+                         axis_types=(jax.sharding.AxisType.Auto,) * len(axes))
+
+
+def dp_axes(mesh) -> Tuple[str, ...]:
+    """The data-parallel axes of a production mesh (everything but model)."""
+    return tuple(a for a in mesh.axis_names if a != "model")
+
+
+def make_host_mesh(shape: Tuple[int, ...], axes: Tuple[str, ...]):
+    """Small mesh over the host's visible devices (tests/examples)."""
+    return jax.make_mesh(shape, axes,
+                         axis_types=(jax.sharding.AxisType.Auto,) * len(axes))

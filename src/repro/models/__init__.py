@@ -1,0 +1,2 @@
+"""Model zoo: the 10 assigned architectures as one config-driven family."""
+from repro.models.model import Model, init_params, input_specs

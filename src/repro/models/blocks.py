@@ -1,0 +1,309 @@
+"""Transformer-family blocks: attn / local / cross / moe_attn / rglru / ssm.
+
+Each block kind provides (init, forward, decode_step) with a uniform
+signature so ``model.py`` can scan heterogeneous stage patterns.  Forward
+returns ``(x, cache)`` where cache feeds the decode path:
+
+  attn/moe_attn : {"k","v"} full KV           (B, S_max, G, Dh)
+  local         : {"k","v","slot_pos"} ring   (B, W, G, Dh) sliding window
+  cross         : {"k","v"} static image KV   (B, T_img, G, Dh)
+  rglru         : {"conv","h"}                O(1) recurrent state
+  ssm           : {"conv","ssm"}              O(1) SSD state
+"""
+from __future__ import annotations
+
+from typing import Dict, Optional, Tuple
+
+import jax
+import jax.numpy as jnp
+
+from repro.models import attention as ATT
+from repro.models import layers as L
+from repro.models import moe as MOE
+from repro.models import rglru as RG
+from repro.models import ssm as SSM
+from repro.models.layers import QuantContext
+
+
+# ---------------------------------------------------------------------------
+# init
+# ---------------------------------------------------------------------------
+def _attn_init(key, cfg, dtype):
+    d, hd = cfg.d_model, cfg.head_dim
+    h, g = cfg.num_heads, cfg.num_kv_heads
+    ks = jax.random.split(key, 4)
+    return {
+        "q": L.dense_init(ks[0], d, h * hd, bias=cfg.qkv_bias, dtype=dtype),
+        "k": L.dense_init(ks[1], d, g * hd, bias=cfg.qkv_bias, dtype=dtype),
+        "v": L.dense_init(ks[2], d, g * hd, bias=cfg.qkv_bias, dtype=dtype),
+        "o": L.dense_init(ks[3], h * hd, d, dtype=dtype),
+    }
+
+
+def block_init(key, kind: str, cfg, dtype=jnp.float32) -> Dict:
+    d = cfg.d_model
+    k1, k2, k3 = jax.random.split(key, 3)
+    if kind in ("attn", "local", "cross", "moe_attn"):
+        p = {"ln": L.norm_init(d, dtype), "attn": _attn_init(k1, cfg, dtype),
+             "mlp_ln": L.norm_init(d, dtype)}
+        if kind == "moe_attn":
+            p["moe"] = MOE.moe_init(k2, cfg, dtype)
+        else:
+            p["mlp"] = L.mlp_init(k2, d, cfg.d_ff, gated=cfg.mlp_gated, dtype=dtype)
+        if kind == "cross":
+            p["xattn_gate"] = jnp.zeros((), dtype)  # gated cross-attn (llama3.2-v)
+        return p
+    if kind == "rglru":
+        return {"ln": L.norm_init(d, dtype), "rec": RG.rglru_init(k1, cfg, dtype),
+                "mlp_ln": L.norm_init(d, dtype),
+                "mlp": L.mlp_init(k2, d, cfg.d_ff, gated=cfg.mlp_gated, dtype=dtype)}
+    if kind == "ssm":
+        return {"ln": L.norm_init(d, dtype), "mixer": SSM.ssm_init(k1, cfg, dtype)}
+    raise ValueError(f"unknown block kind {kind!r}")
+
+
+# ---------------------------------------------------------------------------
+# helpers
+# ---------------------------------------------------------------------------
+def _qkv(qc, p, x, cfg, positions: Optional[jnp.ndarray], *, rope: bool):
+    b, s, _ = x.shape
+    hd, h, g = cfg.head_dim, cfg.num_heads, cfg.num_kv_heads
+    q = L.dense(qc, x, p["q"]).reshape(b, s, h, hd)
+    k = L.dense(qc, x, p["k"]).reshape(b, s, g, hd)
+    v = L.dense(qc, x, p["v"]).reshape(b, s, g, hd)
+    if rope:
+        q = L.apply_rope(q, positions, cfg.rope_theta)
+        k = L.apply_rope(k, positions, cfg.rope_theta)
+    return q, k, v
+
+
+def _mlp_part(qc, kind, p, x, cfg):
+    h = L.apply_norm(cfg.norm, p["mlp_ln"], x)
+    if kind == "moe_attn":
+        return x + MOE.moe_apply(qc, p["moe"], h, cfg)
+    return x + L.mlp_apply(qc, p["mlp"], h, cfg.mlp_act)
+
+
+# ---------------------------------------------------------------------------
+# forward (full sequence: train / prefill)
+# ---------------------------------------------------------------------------
+def block_forward(qc: QuantContext, kind: str, p: Dict, x: jnp.ndarray, cfg, *,
+                  positions: jnp.ndarray, side: Optional[Dict] = None,
+                  s_max: int = 0) -> Tuple[jnp.ndarray, Dict]:
+    b = x.shape[0]
+    if kind in ("attn", "local", "moe_attn"):
+        h = L.apply_norm(cfg.norm, p["ln"], x)
+        causal = not cfg.is_encoder
+        window = cfg.window if kind == "local" else 0
+        q, k, v = _qkv(qc, p["attn"], h, cfg, positions, rope=not cfg.is_encoder)
+        att = ATT.flash_attention(q, k, v, causal=causal, window=window,
+                                  softcap=cfg.attn_softcap,
+                                  q_chunk=cfg.attn_q_chunk or 1024,
+                                  kv_chunk=cfg.attn_kv_chunk or 1024)
+        x = x + L.dense(qc, att.reshape(b, att.shape[1], -1), p["attn"]["o"])
+        x = _mlp_part(qc, kind, p, x, cfg)
+        if kind == "local":
+            w = min(cfg.window, k.shape[1])
+            cache = {"k": k[:, -w:], "v": v[:, -w:],
+                     "slot_pos": positions[-w:] if positions.ndim == 1 else positions[0, -w:]}
+        elif qc.int8_kv:
+            kq, ks = ATT.quantize_kv(k)
+            vq, vs = ATT.quantize_kv(v)
+            cache = {"k": kq, "ks": ks, "v": vq, "vs": vs}
+        else:
+            cache = {"k": k, "v": v}
+        return x, cache
+    if kind == "cross":
+        assert side is not None and "image_emb" in side, "cross block needs image side input"
+        h = L.apply_norm(cfg.norm, p["ln"], x)
+        hd, hq, g = cfg.head_dim, cfg.num_heads, cfg.num_kv_heads
+        q = L.dense(qc, h, p["attn"]["q"]).reshape(b, h.shape[1], hq, hd)
+        img = side["image_emb"]                               # (B, T_img, D)
+        t_img = img.shape[1]
+        k_img = L.dense(qc, img, p["attn"]["k"]).reshape(b, t_img, g, hd)
+        v_img = L.dense(qc, img, p["attn"]["v"]).reshape(b, t_img, g, hd)
+        att = ATT.cross_attention(q, k_img, v_img)
+        gate = jnp.tanh(p["xattn_gate"])
+        x = x + gate * L.dense(qc, att.reshape(b, att.shape[1], -1), p["attn"]["o"])
+        x = _mlp_part(qc, kind, p, x, cfg)
+        return x, {"k": k_img, "v": v_img}
+    if kind == "rglru":
+        h = L.apply_norm(cfg.norm, p["ln"], x)
+        y, cache = RG.rglru_apply(qc, p["rec"], h, cfg)
+        x = x + y
+        x = _mlp_part(qc, kind, p, x, cfg)
+        return x, cache
+    if kind == "ssm":
+        h = L.apply_norm(cfg.norm, p["ln"], x)
+        y, cache = SSM.ssm_apply(qc, p["mixer"], h, cfg)
+        return x + y, cache
+    raise ValueError(kind)
+
+
+def make_image_kv(qc: QuantContext, p: Dict, image_emb: jnp.ndarray, cfg):
+    """Compute the static cross-attention KV from projected image embeddings
+    using the *first cross block's* K/V projections (shared convention)."""
+    b, t, _ = image_emb.shape
+    g, hd = cfg.num_kv_heads, cfg.head_dim
+    k = L.dense(qc, image_emb, p["k"]).reshape(b, t, g, hd)
+    v = L.dense(qc, image_emb, p["v"]).reshape(b, t, g, hd)
+    return k, v
+
+
+# ---------------------------------------------------------------------------
+# decode (single token against cache)
+# ---------------------------------------------------------------------------
+def block_decode(qc: QuantContext, kind: str, p: Dict, x: jnp.ndarray, cache: Dict,
+                 cfg, *, cache_len: jnp.ndarray) -> Tuple[jnp.ndarray, Dict]:
+    """x: (B, 1, D); cache_len: () — tokens already in cache (new token at
+    position cache_len)."""
+    b = x.shape[0]
+    pos = jnp.full((b, 1), cache_len, jnp.int32)
+    if kind in ("attn", "moe_attn"):
+        h = L.apply_norm(cfg.norm, p["ln"], x)
+        q, k, v = _qkv(qc, p["attn"], h, cfg, pos, rope=True)
+        if qc.int8_kv:
+            att = ATT.decode_attention_int8(
+                q, cache["k"], cache["ks"], cache["v"], cache["vs"], k, v,
+                cache_len, softcap=cfg.attn_softcap)
+            kq, ks = ATT.quantize_kv(k)
+            vq, vs = ATT.quantize_kv(v)
+            new_cache = {
+                "k": jax.lax.dynamic_update_slice_in_dim(cache["k"], kq, cache_len, axis=1),
+                "ks": jax.lax.dynamic_update_slice_in_dim(cache["ks"], ks, cache_len, axis=1),
+                "v": jax.lax.dynamic_update_slice_in_dim(cache["v"], vq, cache_len, axis=1),
+                "vs": jax.lax.dynamic_update_slice_in_dim(cache["vs"], vs, cache_len, axis=1),
+            }
+        else:
+            kc = jax.lax.dynamic_update_slice_in_dim(cache["k"], k, cache_len, axis=1)
+            vc = jax.lax.dynamic_update_slice_in_dim(cache["v"], v, cache_len, axis=1)
+            att = ATT.decode_attention(q, kc, vc, cache_len + 1,
+                                       softcap=cfg.attn_softcap)
+            new_cache = {"k": kc, "v": vc}
+        x = x + L.dense(qc, att.reshape(b, 1, -1), p["attn"]["o"])
+        x = _mlp_part(qc, kind, p, x, cfg)
+        return x, new_cache
+    if kind == "local":
+        h = L.apply_norm(cfg.norm, p["ln"], x)
+        q, k, v = _qkv(qc, p["attn"], h, cfg, pos, rope=True)
+        w = cache["k"].shape[1]
+        slot = jnp.mod(cache_len, w)
+        kc = jax.lax.dynamic_update_slice_in_dim(cache["k"], k, slot, axis=1)
+        vc = jax.lax.dynamic_update_slice_in_dim(cache["v"], v, slot, axis=1)
+        slot_pos = jax.lax.dynamic_update_slice_in_dim(
+            cache["slot_pos"], pos[0].astype(cache["slot_pos"].dtype), slot, axis=0)
+        # ring attention: mask slots outside (cache_len - window, cache_len]
+        valid = (slot_pos >= 0) & (slot_pos > cache_len - cfg.window) & (slot_pos <= cache_len)
+        sc_q = q.reshape(b, cfg.num_kv_heads, cfg.num_heads // cfg.num_kv_heads, -1)
+        sc = jnp.einsum("bgrd,bkgd->bgrk", sc_q * (cfg.head_dim ** -0.5), kc)
+        sc = jnp.where(valid[None, None, None, :], sc, ATT.NEG_INF)
+        att = jnp.einsum("bgrk,bkgd->bgrd", jax.nn.softmax(sc, axis=-1), vc)
+        x = x + L.dense(qc, att.reshape(b, 1, -1), p["attn"]["o"])
+        x = _mlp_part(qc, kind, p, x, cfg)
+        return x, {"k": kc, "v": vc, "slot_pos": slot_pos}
+    if kind == "cross":
+        h = L.apply_norm(cfg.norm, p["ln"], x)
+        hd, hq = cfg.head_dim, cfg.num_heads
+        q = L.dense(qc, h, p["attn"]["q"]).reshape(b, 1, hq, hd)
+        att = ATT.decode_attention(q, cache["k"], cache["v"],
+                                   jnp.int32(cache["k"].shape[1]))
+        gate = jnp.tanh(p["xattn_gate"])
+        x = x + gate * L.dense(qc, att.reshape(b, 1, -1), p["attn"]["o"])
+        x = _mlp_part(qc, kind, p, x, cfg)
+        return x, cache
+    if kind == "rglru":
+        h = L.apply_norm(cfg.norm, p["ln"], x)
+        y, cache = RG.rglru_decode_step(qc, p["rec"], h, cache, cfg)
+        x = x + y
+        x = _mlp_part(qc, kind, p, x, cfg)
+        return x, cache
+    if kind == "ssm":
+        h = L.apply_norm(cfg.norm, p["ln"], x)
+        y, cache = SSM.ssm_decode_step(qc, p["mixer"], h, cache, cfg)
+        return x + y, cache
+    raise ValueError(kind)
+
+
+# ---------------------------------------------------------------------------
+# delta decode: read the (old) layer cache, return one-token deltas so the
+# caller can update the stacked cache in place (no full-buffer copies).
+# Exactly equal to block_decode (tests assert bitwise-level closeness).
+# ---------------------------------------------------------------------------
+def block_decode_delta(qc: QuantContext, kind: str, p: Dict, x: jnp.ndarray,
+                       cache: Dict, cfg, *, cache_len: jnp.ndarray
+                       ) -> Tuple[jnp.ndarray, Dict]:
+    """Returns (x, delta).  delta keys mirror the cache; values are either
+    one-token slices (attn k/v, local k/v/slot_pos), full small states
+    (rglru/ssm), or None (cross: static)."""
+    b = x.shape[0]
+    pos = jnp.full((b, 1), cache_len, jnp.int32)
+    if kind in ("attn", "moe_attn"):
+        h = L.apply_norm(cfg.norm, p["ln"], x)
+        q, k, v = _qkv(qc, p["attn"], h, cfg, pos, rope=True)
+        if qc.int8_kv:
+            att = ATT.decode_attention_int8(
+                q, cache["k"], cache["ks"], cache["v"], cache["vs"], k, v,
+                cache_len, softcap=cfg.attn_softcap)
+            kq, ks = ATT.quantize_kv(k)
+            vq, vs = ATT.quantize_kv(v)
+            delta = {"k": kq, "ks": ks, "v": vq, "vs": vs}
+        else:
+            att = ATT.decode_attention_appended(q, cache["k"], cache["v"], k, v,
+                                                cache_len, softcap=cfg.attn_softcap)
+            delta = {"k": k, "v": v}
+        x = x + L.dense(qc, att.reshape(b, 1, -1), p["attn"]["o"])
+        x = _mlp_part(qc, kind, p, x, cfg)
+        return x, delta
+    if kind == "local":
+        h = L.apply_norm(cfg.norm, p["ln"], x)
+        q, k, v = _qkv(qc, p["attn"], h, cfg, pos, rope=True)
+        w = cache["k"].shape[1]
+        slot = jnp.mod(cache_len, w)
+        sp = cache["slot_pos"]
+        # mask out the slot we are about to overwrite plus out-of-window slots
+        valid = (sp >= 0) & (sp > cache_len - cfg.window) & (sp < cache_len)
+        att = ATT.decode_attention_appended(q, cache["k"], cache["v"], k, v,
+                                            cache_len, valid_mask=valid,
+                                            softcap=cfg.attn_softcap)
+        x = x + L.dense(qc, att.reshape(b, 1, -1), p["attn"]["o"])
+        x = _mlp_part(qc, kind, p, x, cfg)
+        return x, {"k": k, "v": v,
+                   "slot_pos": pos[0].astype(sp.dtype)}
+    if kind == "cross":
+        x, _ = block_decode(qc, kind, p, x, cache, cfg, cache_len=cache_len)
+        return x, {"k": None, "v": None}
+    # recurrent kinds: the full (small) state is the delta
+    return block_decode(qc, kind, p, x, cache, cfg, cache_len=cache_len)
+
+
+# ---------------------------------------------------------------------------
+# empty caches for serve_step lowering (shapes only — works under eval_shape)
+# ---------------------------------------------------------------------------
+def init_block_cache(kind: str, cfg, batch: int, s_max: int, dtype=jnp.bfloat16,
+                     int8_kv: bool = False):
+    g, hd = cfg.num_kv_heads, cfg.head_dim
+    if kind in ("attn", "moe_attn"):
+        shape = (batch, s_max, g, hd)
+        if int8_kv:
+            return {"k": jnp.zeros(shape, jnp.int8),
+                    "ks": jnp.zeros(shape[:-1], jnp.float32),
+                    "v": jnp.zeros(shape, jnp.int8),
+                    "vs": jnp.zeros(shape[:-1], jnp.float32)}
+        return {"k": jnp.zeros(shape, dtype), "v": jnp.zeros(shape, dtype)}
+    if kind == "local":
+        w = min(cfg.window, s_max)
+        shape = (batch, w, g, hd)
+        return {"k": jnp.zeros(shape, dtype), "v": jnp.zeros(shape, dtype),
+                "slot_pos": jnp.full((w,), -1, jnp.int32)}
+    if kind == "cross":
+        t = cfg.num_image_tokens
+        return {"k": jnp.zeros((batch, t, g, hd), dtype),
+                "v": jnp.zeros((batch, t, g, hd), dtype)}
+    if kind == "rglru":
+        dr = cfg.rnn_width
+        return {"conv": jnp.zeros((batch, 3, dr), dtype), "h": jnp.zeros((batch, dr), dtype)}
+    if kind == "ssm":
+        d = SSM.ssm_dims(cfg)
+        return {"conv": jnp.zeros((batch, cfg.ssm_conv - 1, d["conv_ch"]), dtype),
+                "ssm": jnp.zeros((batch, d["heads"], d["p"], d["n"]), dtype)}
+    raise ValueError(kind)

@@ -1,0 +1,182 @@
+"""Shared layer primitives: norms, MLPs, RoPE, embeddings, init helpers.
+
+Every GEMM weight is a dict leaf named ``kernel`` and is applied through
+:func:`repro.core.linear.dense`, so the whole zoo is expandable by
+``core.ptq.expand_params`` without model-specific plumbing.  A
+:class:`QuantContext` (policy + on/off) is threaded through apply fns as a
+static argument.
+"""
+from __future__ import annotations
+
+import dataclasses
+from typing import Any, Dict, Optional
+
+import jax
+import jax.numpy as jnp
+
+from repro.core.expansion import ExpandedTensor
+from repro.core.linear import dense as _dense
+from repro.core.policy import ExpansionPolicy
+
+PyTree = Any
+
+
+@dataclasses.dataclass(frozen=True)
+class QuantContext:
+    """Static quantization context threaded through model apply fns."""
+    policy: Optional[ExpansionPolicy] = None
+    use_kernel: bool = False  # Pallas path (CPU interpret / TPU Mosaic)
+    int8_kv: bool = False     # int8 KV cache + int8 attention dots (serving)
+
+    @property
+    def enabled(self) -> bool:
+        return self.policy is not None
+
+
+FP = QuantContext(policy=None)
+
+
+def dense(qc: QuantContext, x: jnp.ndarray, params: Dict, name: str = "kernel") -> jnp.ndarray:
+    w = params[name]
+    if isinstance(w, ExpandedTensor):
+        # the series GEMM accumulates in f32; return in the stream dtype
+        y = _dense(x, w, qc.policy, use_kernel=qc.use_kernel).astype(x.dtype)
+    else:
+        y = jnp.dot(x, w)
+    if "bias" in params:
+        y = y + params["bias"]
+    return y
+
+
+# ---------------------------------------------------------------------------
+# init helpers
+# ---------------------------------------------------------------------------
+def dense_init(key, d_in: int, d_out: int, *, bias: bool = False, scale: float = 1.0,
+               dtype=jnp.float32) -> Dict:
+    std = scale / (d_in ** 0.5)
+    p = {"kernel": jax.random.normal(key, (d_in, d_out), dtype) * std}
+    if bias:
+        p["bias"] = jnp.zeros((d_out,), dtype)
+    return p
+
+
+def norm_init(dim: int, dtype=jnp.float32) -> Dict:
+    return {"scale": jnp.ones((dim,), dtype)}
+
+
+def rmsnorm(params: Dict, x: jnp.ndarray, eps: float = 1e-6) -> jnp.ndarray:
+    var = jnp.mean(jnp.square(x.astype(jnp.float32)), axis=-1, keepdims=True)
+    y = x * jax.lax.rsqrt(var + eps)
+    return (y * params["scale"]).astype(x.dtype)
+
+
+def layernorm(params: Dict, x: jnp.ndarray, eps: float = 1e-5) -> jnp.ndarray:
+    x32 = x.astype(jnp.float32)
+    mu = jnp.mean(x32, axis=-1, keepdims=True)
+    var = jnp.var(x32, axis=-1, keepdims=True)
+    y = (x32 - mu) * jax.lax.rsqrt(var + eps)
+    return (y * params["scale"]).astype(x.dtype)
+
+
+def apply_norm(kind: str, params: Dict, x: jnp.ndarray) -> jnp.ndarray:
+    return rmsnorm(params, x) if kind == "rmsnorm" else layernorm(params, x)
+
+
+# ---------------------------------------------------------------------------
+# MLPs
+# ---------------------------------------------------------------------------
+def act_fn(name: str):
+    if name == "silu":
+        return jax.nn.silu
+    if name == "gelu":
+        return jax.nn.gelu
+    if name == "relu2":  # nemotron squared-ReLU
+        return lambda x: jnp.square(jax.nn.relu(x))
+    raise ValueError(f"unknown activation {name!r}")
+
+
+def mlp_init(key, d_model: int, d_ff: int, *, gated: bool, dtype=jnp.float32) -> Dict:
+    ks = jax.random.split(key, 3)
+    p = {"wi": dense_init(ks[0], d_model, d_ff, dtype=dtype),
+         "wo": dense_init(ks[1], d_ff, d_model, dtype=dtype)}
+    if gated:
+        p["wg"] = dense_init(ks[2], d_model, d_ff, dtype=dtype)
+    return p
+
+
+def mlp_apply(qc: QuantContext, params: Dict, x: jnp.ndarray, activation: str) -> jnp.ndarray:
+    h = dense(qc, x, params["wi"])
+    if "wg" in params:  # gated (SwiGLU / GeGLU)
+        h = act_fn(activation)(dense(qc, x, params["wg"])) * h
+    else:
+        h = act_fn(activation)(h)
+    return dense(qc, h, params["wo"])
+
+
+# ---------------------------------------------------------------------------
+# rotary position embeddings
+# ---------------------------------------------------------------------------
+def rope_freqs(head_dim: int, theta: float) -> jnp.ndarray:
+    return 1.0 / (theta ** (jnp.arange(0, head_dim, 2, dtype=jnp.float32) / head_dim))
+
+
+def apply_rope(x: jnp.ndarray, positions: jnp.ndarray, theta: float) -> jnp.ndarray:
+    """x: (B, S, H, Dh); positions: (B, S) or (S,)."""
+    dh = x.shape[-1]
+    freqs = rope_freqs(dh, theta)                      # (Dh/2,)
+    if positions.ndim == 1:
+        positions = positions[None, :]
+    ang = positions[..., None].astype(jnp.float32) * freqs  # (B, S, Dh/2)
+    cos, sin = jnp.cos(ang)[:, :, None, :], jnp.sin(ang)[:, :, None, :]
+    x1, x2 = jnp.split(x, 2, axis=-1)
+    return jnp.concatenate([x1 * cos - x2 * sin, x2 * cos + x1 * sin], axis=-1).astype(x.dtype)
+
+
+# ---------------------------------------------------------------------------
+# embeddings / heads
+# ---------------------------------------------------------------------------
+def embed_init(key, vocab: int, d_model: int, dtype=jnp.float32) -> Dict:
+    return {"embedding": jax.random.normal(key, (vocab, d_model), dtype) * 0.02}
+
+
+def embed_apply(params: Dict, tokens: jnp.ndarray) -> jnp.ndarray:
+    return jnp.take(params["embedding"], tokens, axis=0)
+
+
+def logits_apply(qc: QuantContext, params: PyTree, x: jnp.ndarray, *,
+                 tie_embeddings: bool, softcap: float = 0.0) -> jnp.ndarray:
+    if tie_embeddings:
+        logits = jnp.dot(x, params["embed"]["embedding"].T)
+    else:
+        logits = dense(qc, x, params["lm_head"])
+    if softcap > 0.0:
+        logits = softcap * jnp.tanh(logits / softcap)
+    return logits
+
+
+# ---------------------------------------------------------------------------
+# causal depthwise conv (mamba2 / RG-LRU short conv)
+# ---------------------------------------------------------------------------
+def conv1d_init(key, channels: int, width: int, dtype=jnp.float32) -> Dict:
+    return {"w": jax.random.normal(key, (width, channels), dtype) * (1.0 / width ** 0.5),
+            "b": jnp.zeros((channels,), dtype)}
+
+
+def causal_conv1d(params: Dict, x: jnp.ndarray) -> jnp.ndarray:
+    """Depthwise causal conv; x: (B, L, C) -> (B, L, C)."""
+    w = params["w"]                                   # (K, C)
+    k = w.shape[0]
+    xp = jnp.pad(x, ((0, 0), (k - 1, 0), (0, 0)))
+    out = jnp.zeros_like(x)
+    for i in range(k):                                # small static unroll
+        out = out + xp[:, i : i + x.shape[1], :] * w[i]
+    return out + params["b"]
+
+
+def causal_conv1d_step(params: Dict, conv_state: jnp.ndarray, x_t: jnp.ndarray):
+    """Single-token conv step.  conv_state: (B, K-1, C); x_t: (B, C)."""
+    w = params["w"]
+    k = w.shape[0]
+    window = jnp.concatenate([conv_state, x_t[:, None, :]], axis=1)  # (B, K, C)
+    out = jnp.einsum("bkc,kc->bc", window, w) + params["b"]
+    return out, window[:, 1:, :]

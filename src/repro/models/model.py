@@ -1,0 +1,365 @@
+"""Config-driven model assembly: init / forward / prefill / decode / specs.
+
+The layer stack is ``num_stages x stage_pattern + tail_pattern``; stage
+parameters are *stacked* (leading ``num_stages`` axis) and run under
+``jax.lax.scan`` — HLO stays one-stage-sized regardless of depth, which
+keeps the 96-layer/340B dry-run compile tractable.  Expanded
+(:class:`ExpandedTensor`) weights ride through the same scan; their static
+``batch_dims`` metadata is peeled inside the scan body.
+
+Modality frontends are stubs per the assignment: VLM cells take precomputed
+patch embeddings (``image_emb``), audio cells take precomputed frame
+embeddings (``frames``); each gets a projection GEMM into d_model.
+"""
+from __future__ import annotations
+
+import dataclasses
+import functools
+from typing import Any, Dict, Optional, Tuple
+
+import jax
+import jax.numpy as jnp
+
+from repro.configs.base import ArchConfig, SHAPES, ShapeConfig
+from repro.core.expansion import ExpandedTensor
+from repro.models import blocks as B
+from repro.models import layers as L
+from repro.models.layers import FP, QuantContext
+
+PyTree = Any
+
+
+def _dtype(cfg: ArchConfig):
+    return jnp.bfloat16 if cfg.dtype == "bfloat16" else jnp.float32
+
+
+def _stage_block_names(cfg: ArchConfig):
+    return [f"b{i}_{kind}" for i, kind in enumerate(cfg.stage_pattern)]
+
+
+def peel_expanded(tree: PyTree) -> PyTree:
+    """After lax.scan slices the stage axis off every leaf, fix the static
+    batch_dims metadata of ExpandedTensor leaves to match."""
+    def fix(leaf):
+        if isinstance(leaf, ExpandedTensor) and leaf.batch_dims > 0:
+            return leaf.unbatched_view()
+        return leaf
+    return jax.tree_util.tree_map(fix, tree, is_leaf=lambda l: isinstance(l, ExpandedTensor))
+
+
+# ---------------------------------------------------------------------------
+# init
+# ---------------------------------------------------------------------------
+def init_params(key, cfg: ArchConfig, dtype=None) -> PyTree:
+    dtype = dtype or _dtype(cfg)
+    keys = jax.random.split(key, 8)
+    p: Dict[str, Any] = {}
+    if not cfg.frame_dim:
+        p["embed"] = L.embed_init(keys[0], cfg.vocab_size, cfg.d_model, dtype)
+    if cfg.frame_dim:
+        p["frame_proj"] = L.dense_init(keys[1], cfg.frame_dim, cfg.d_model, dtype=dtype)
+    if cfg.num_image_tokens:
+        p["image_proj"] = L.dense_init(keys[2], cfg.image_embed_dim, cfg.d_model, dtype=dtype)
+
+    stage_keys = jax.random.split(keys[3], cfg.num_stages)
+    stages: Dict[str, Any] = {}
+    for i, kind in enumerate(cfg.stage_pattern):
+        init_one = lambda k, kind=kind, i=i: B.block_init(
+            jax.random.fold_in(k, i), kind, cfg, dtype)
+        stages[f"b{i}_{kind}"] = jax.vmap(init_one)(stage_keys)
+    p["stages"] = stages
+
+    if cfg.tail_pattern:
+        tail_keys = jax.random.split(keys[4], len(cfg.tail_pattern))
+        p["tail"] = {f"t{i}_{kind}": B.block_init(tail_keys[i], kind, cfg, dtype)
+                     for i, kind in enumerate(cfg.tail_pattern)}
+
+    p["final_norm"] = L.norm_init(cfg.d_model, dtype)
+    if not cfg.tie_embeddings:
+        p["lm_head"] = L.dense_init(keys[5], cfg.d_model, cfg.vocab_size, dtype=dtype)
+    return p
+
+
+# ---------------------------------------------------------------------------
+# embedding / frontend
+# ---------------------------------------------------------------------------
+def _embed(qc, params, batch, cfg) -> Tuple[jnp.ndarray, Optional[Dict]]:
+    if cfg.frame_dim:
+        x = L.dense(qc, batch["frames"].astype(_dtype(cfg)), params["frame_proj"])
+    else:
+        x = L.embed_apply(params["embed"], batch["tokens"])
+    side = None
+    if cfg.num_image_tokens and "image_emb" in batch:
+        img = L.dense(qc, batch["image_emb"].astype(_dtype(cfg)), params["image_proj"])
+        side = {"image_emb": img}
+    return x, side
+
+
+# ---------------------------------------------------------------------------
+# forward (train) / prefill
+# ---------------------------------------------------------------------------
+def _run_stack(qc, params, x, cfg, *, positions, side, remat: bool, collect_cache: bool,
+               act_constraint=None):
+    names = _stage_block_names(cfg)
+
+    def stage_fn(x, stage_params):
+        stage_params = peel_expanded(stage_params)
+        caches = {}
+        for name, kind in zip(names, cfg.stage_pattern):
+            x, c = B.block_forward(qc, kind, stage_params[name], x, cfg,
+                                   positions=positions, side=side)
+            caches[name] = c if collect_cache else None
+        if act_constraint is not None:  # e.g. sequence-parallel residual stream
+            x = act_constraint(x)
+        return x, caches
+
+    body = jax.checkpoint(stage_fn) if remat else stage_fn
+    x, stage_caches = jax.lax.scan(body, x, params["stages"])
+
+    tail_caches = {}
+    if cfg.tail_pattern:
+        for i, kind in enumerate(cfg.tail_pattern):
+            name = f"t{i}_{kind}"
+            x, c = B.block_forward(qc, kind, params["tail"][name], x, cfg,
+                                   positions=positions, side=side)
+            tail_caches[name] = c if collect_cache else None
+    return x, stage_caches, tail_caches
+
+
+def forward(params: PyTree, batch: Dict, cfg: ArchConfig, qc: QuantContext = FP,
+            *, remat: bool = False, act_constraint=None) -> jnp.ndarray:
+    """Full-sequence logits (B, S, V) — training / evaluation path."""
+    x, side = _embed(qc, params, batch, cfg)
+    s = x.shape[1]
+    positions = jnp.arange(s)
+    x, _, _ = _run_stack(qc, params, x, cfg, positions=positions, side=side,
+                         remat=remat, collect_cache=False,
+                         act_constraint=act_constraint)
+    x = L.apply_norm(cfg.norm, params["final_norm"], x)
+    return L.logits_apply(qc, params, x, tie_embeddings=cfg.tie_embeddings,
+                          softcap=cfg.logit_softcap)
+
+
+def prefill(params: PyTree, batch: Dict, cfg: ArchConfig, qc: QuantContext = FP,
+            *, s_max: int = 0, act_constraint=None) -> Tuple[jnp.ndarray, PyTree]:
+    """Process a prompt; returns (last-position logits (B, V), caches).
+
+    attn caches are padded to ``s_max`` (decode capacity) when given."""
+    x, side = _embed(qc, params, batch, cfg)
+    s = x.shape[1]
+    positions = jnp.arange(s)
+    x, stage_caches, tail_caches = _run_stack(
+        qc, params, x, cfg, positions=positions, side=side, remat=False,
+        collect_cache=True, act_constraint=act_constraint)
+    x = L.apply_norm(cfg.norm, params["final_norm"], x[:, -1:, :])
+    logits = L.logits_apply(qc, params, x, tie_embeddings=cfg.tie_embeddings,
+                            softcap=cfg.logit_softcap)
+    caches = {"stages": stage_caches, "tail": tail_caches}
+    if s_max:
+        caches = fit_caches_for_decode(caches, cfg, s, s_max)
+    return logits[:, 0, :], caches
+
+
+def fit_caches_for_decode(caches: PyTree, cfg: ArchConfig, s: int, s_max: int) -> PyTree:
+    """Resize prefill caches to decode capacity ``s_max``:
+
+    * attn/moe KV: zero-pad the time axis from ``s`` to ``s_max``;
+    * local (ring buffer): roll entries so slot ``j`` holds position ``p``
+      with ``p % w == j`` (the decode-write invariant), pad if ``s < w``;
+    * cross / recurrent caches: already fixed-size — untouched.
+    """
+    def visit(path, leaf):
+        if leaf is None:
+            return None
+        names = [str(getattr(p, "key", getattr(p, "idx", ""))) for p in path]
+        block = next((n for n in names if "_" in n), "")
+        key = names[-1]
+        is_local = block.endswith("_local")
+        is_cross = block.endswith("_cross")
+        if is_cross or key not in ("k", "v", "ks", "vs", "slot_pos"):
+            return leaf
+        # time axis: k/v (…,B,T,G,D) -> ndim-3; ks/vs (…,B,T,G) -> ndim-2;
+        # slot_pos (…,W) -> ndim-1
+        t_ax = {"k": leaf.ndim - 3, "v": leaf.ndim - 3,
+                "ks": leaf.ndim - 2, "vs": leaf.ndim - 2,
+                "slot_pos": leaf.ndim - 1}[key]
+        cur = leaf.shape[t_ax]
+        if is_local:
+            w_target = min(cfg.window, s_max)
+            if cur >= w_target and s >= w_target:
+                shift = (s - cur) % w_target
+                return jnp.roll(leaf, shift, axis=t_ax)
+            pads = [(0, 0)] * leaf.ndim
+            pads[t_ax] = (0, max(0, w_target - cur))
+            fill = -1 if key == "slot_pos" else 0
+            return jnp.pad(leaf, pads, constant_values=fill)
+        if key == "slot_pos":
+            return leaf
+        pads = [(0, 0)] * leaf.ndim
+        pads[t_ax] = (0, max(0, s_max - cur))
+        return jnp.pad(leaf, pads)
+
+    return jax.tree_util.tree_map_with_path(visit, caches)
+
+
+def decode_step(params: PyTree, tokens: jnp.ndarray, caches: PyTree,
+                cache_len: jnp.ndarray, cfg: ArchConfig, qc: QuantContext = FP,
+                *, inplace: bool = False) -> Tuple[jnp.ndarray, PyTree]:
+    """One token step: tokens (B, 1) -> (logits (B, V), updated caches).
+
+    ``inplace=True`` runs the layer loop as a fori_loop whose carry holds
+    the *stacked* caches and writes only the new token's slice — the
+    TPU-production pattern (while-carry aliasing + in-place DUS).  On this
+    container's CPU backend the fori carry defeats XLA's buffer aliasing
+    (measured 7x MORE traffic than the scan form — EXPERIMENTS.md §Perf
+    iteration D2), so the default here is the scan form; flip the default
+    when deploying on real TPUs."""
+    batch = {"tokens": tokens}
+    x, _ = _embed(qc, params, batch, cfg)
+    names = _stage_block_names(cfg)
+
+    if inplace:
+        def write_delta(kind, stacked, delta, i):
+            """Write the one-token delta into the stacked (L, ...) buffers."""
+            out = {}
+            for key, val in delta.items():
+                buf = stacked[key]
+                if val is None:
+                    out[key] = buf
+                    continue
+                if kind in ("attn", "moe_attn") and key in ("k", "v"):
+                    out[key] = jax.lax.dynamic_update_slice(
+                        buf, val[None].astype(buf.dtype), (i, 0, cache_len, 0, 0))
+                elif kind in ("attn", "moe_attn") and key in ("ks", "vs"):
+                    out[key] = jax.lax.dynamic_update_slice(
+                        buf, val[None].astype(buf.dtype), (i, 0, cache_len, 0))
+                elif kind == "local" and key in ("k", "v"):
+                    slot = jnp.mod(cache_len, buf.shape[2])
+                    out[key] = jax.lax.dynamic_update_slice(
+                        buf, val[None].astype(buf.dtype), (i, 0, slot, 0, 0))
+                elif kind == "local" and key == "slot_pos":
+                    slot = jnp.mod(cache_len, buf.shape[1])
+                    out[key] = jax.lax.dynamic_update_slice(
+                        buf, val[None].astype(buf.dtype), (i, slot))
+                else:  # full small recurrent state (rglru/ssm)
+                    out[key] = jax.lax.dynamic_update_index_in_dim(
+                        buf, val.astype(buf.dtype), i, 0)
+            return out
+
+        def layer_body(i, carry):
+            x, stage_caches = carry
+            stage_params = peel_expanded(jax.tree_util.tree_map(
+                lambda a: jax.lax.dynamic_index_in_dim(a, i, 0, keepdims=False),
+                params["stages"]))
+            new_caches = {}
+            xi = x
+            for name, kind in zip(names, cfg.stage_pattern):
+                layer_cache = jax.tree_util.tree_map(
+                    lambda a: jax.lax.dynamic_index_in_dim(a, i, 0, keepdims=False),
+                    stage_caches[name])
+                xi, delta = B.block_decode_delta(qc, kind, stage_params[name], xi,
+                                                 layer_cache, cfg, cache_len=cache_len)
+                new_caches[name] = delta
+            stage_caches = {
+                name: write_delta(kind, stage_caches[name], new_caches[name], i)
+                for name, kind in zip(names, cfg.stage_pattern)}
+            return xi, stage_caches
+
+        x, stage_caches = jax.lax.fori_loop(
+            0, cfg.num_stages, layer_body, (x, caches["stages"]))
+    else:
+        def stage_fn(x, scan_in):
+            stage_params, stage_cache = scan_in
+            stage_params = peel_expanded(stage_params)
+            new_caches = {}
+            for name, kind in zip(names, cfg.stage_pattern):
+                x, c = B.block_decode(qc, kind, stage_params[name], x, stage_cache[name],
+                                      cfg, cache_len=cache_len)
+                new_caches[name] = c
+            return x, new_caches
+
+        x, stage_caches = jax.lax.scan(stage_fn, x, (params["stages"], caches["stages"]))
+
+    tail_caches = {}
+    if cfg.tail_pattern:
+        for i, kind in enumerate(cfg.tail_pattern):
+            name = f"t{i}_{kind}"
+            x, c = B.block_decode(qc, kind, params["tail"][name], x,
+                                  caches["tail"][name], cfg, cache_len=cache_len)
+            tail_caches[name] = c
+
+    x = L.apply_norm(cfg.norm, params["final_norm"], x)
+    logits = L.logits_apply(qc, params, x, tie_embeddings=cfg.tie_embeddings,
+                            softcap=cfg.logit_softcap)
+    return logits[:, 0, :], {"stages": stage_caches, "tail": tail_caches}
+
+
+# ---------------------------------------------------------------------------
+# cache construction & input specs (ShapeDtypeStruct stand-ins, no allocation)
+# ---------------------------------------------------------------------------
+def init_cache(cfg: ArchConfig, batch: int, s_max: int, dtype=None,
+               int8_kv: bool = False) -> PyTree:
+    dtype = dtype or _dtype(cfg)
+    stage_caches = {}
+    for i, kind in enumerate(cfg.stage_pattern):
+        one = lambda _, kind=kind: B.init_block_cache(kind, cfg, batch, s_max,
+                                                      dtype, int8_kv=int8_kv)
+        stage_caches[f"b{i}_{kind}"] = jax.vmap(one)(jnp.arange(cfg.num_stages))
+    tail = {f"t{i}_{kind}": B.init_block_cache(kind, cfg, batch, s_max, dtype,
+                                               int8_kv=int8_kv)
+            for i, kind in enumerate(cfg.tail_pattern)}
+    return {"stages": stage_caches, "tail": tail}
+
+
+def input_specs(cfg: ArchConfig, shape: str | ShapeConfig,
+                int8_kv: bool = False) -> Dict[str, Any]:
+    """ShapeDtypeStruct stand-ins for every model input of a dry-run cell."""
+    sh = SHAPES[shape] if isinstance(shape, str) else shape
+    b, s = sh.global_batch, sh.seq_len
+    dt = _dtype(cfg)
+    tok = lambda *shape: jax.ShapeDtypeStruct(shape, jnp.int32)
+
+    def batch_specs(seq):
+        spec: Dict[str, Any] = {}
+        if cfg.frame_dim:
+            spec["frames"] = jax.ShapeDtypeStruct((b, seq, cfg.frame_dim), dt)
+        else:
+            spec["tokens"] = tok(b, seq)
+        if cfg.num_image_tokens:
+            spec["image_emb"] = jax.ShapeDtypeStruct(
+                (b, cfg.num_image_tokens, cfg.image_embed_dim), dt)
+        return spec
+
+    if sh.kind == "train":
+        spec = batch_specs(s)
+        spec["labels"] = tok(b, s)
+        return {"batch": spec}
+    if sh.kind == "prefill":
+        return {"batch": batch_specs(s)}
+    if sh.kind == "decode":
+        caches = jax.eval_shape(lambda: init_cache(cfg, b, s, int8_kv=int8_kv))
+        spec: Dict[str, Any] = {"tokens": tok(b, 1), "caches": caches,
+                                "cache_len": jax.ShapeDtypeStruct((), jnp.int32)}
+        return spec
+    raise ValueError(sh.kind)
+
+
+# ---------------------------------------------------------------------------
+# convenience wrapper
+# ---------------------------------------------------------------------------
+@dataclasses.dataclass(frozen=True)
+class Model:
+    cfg: ArchConfig
+    qc: QuantContext = FP
+
+    def init(self, key, dtype=None):
+        return init_params(key, self.cfg, dtype)
+
+    def __call__(self, params, batch, **kw):
+        return forward(params, batch, self.cfg, self.qc, **kw)
+
+    def prefill(self, params, batch, **kw):
+        return prefill(params, batch, self.cfg, self.qc, **kw)
+
+    def decode_step(self, params, tokens, caches, cache_len):
+        return decode_step(params, tokens, caches, cache_len, self.cfg, self.qc)

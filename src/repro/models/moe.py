@@ -1,0 +1,104 @@
+"""Mixture-of-Experts FFN with capacity-based einsum dispatch (MaxText-style).
+
+Tokens are routed top-k with a per-group capacity ``C = ceil(group * k / E *
+capacity_factor)``; overflow tokens are dropped (standard Switch/GShard
+semantics).  Dispatch/combine are one-hot einsums — fully SPMD-shardable:
+the expert axis maps to the ``model`` mesh axis (expert parallelism), the
+group axis follows the batch sharding.
+
+Expert GEMM weights are stacked ``(E, D, F)`` kernels; under FP=xINT they
+are expanded per-expert (``expand_batched``: independent quantizers per
+expert) and applied through a vmap of the expanded matmul.
+"""
+from __future__ import annotations
+
+import math
+from typing import Dict
+
+import jax
+import jax.numpy as jnp
+
+from repro.core.expansion import ExpandedTensor
+from repro.core.linear import expanded_apply
+from repro.models import layers as L
+from repro.models.layers import QuantContext
+
+
+def moe_init(key, cfg, dtype=jnp.float32) -> Dict:
+    d, f, e = cfg.d_model, cfg.d_ff, cfg.num_experts
+    ks = jax.random.split(key, 5)
+    std_in, std_out = d ** -0.5, f ** -0.5
+    p = {
+        "router": L.dense_init(ks[0], d, e, dtype=dtype),
+        "wi": {"kernel": jax.random.normal(ks[1], (e, d, f), dtype) * std_in},
+        "wg": {"kernel": jax.random.normal(ks[2], (e, d, f), dtype) * std_in},
+        "wo": {"kernel": jax.random.normal(ks[3], (e, f, d), dtype) * std_out},
+    }
+    if cfg.shared_expert:
+        p["shared"] = L.mlp_init(ks[4], d, f, gated=True, dtype=dtype)
+    return p
+
+
+def _expert_mm(qc: QuantContext, x_e: jnp.ndarray, w, act=None) -> jnp.ndarray:
+    """x_e: (E, C', D) @ stacked kernels (E, D, F) -> (E, C', F)."""
+    if isinstance(w["kernel"], ExpandedTensor):
+        et = w["kernel"]
+        assert et.batch_dims == 1, et
+        out = jax.vmap(lambda xe, we: expanded_apply(xe, we, qc.policy, use_kernel=qc.use_kernel))(
+            x_e, et.unbatched_view())
+    else:
+        out = jnp.einsum("ecd,edf->ecf", x_e, w["kernel"])
+    return out
+
+
+def moe_apply(qc: QuantContext, params: Dict, x: jnp.ndarray, cfg,
+              *, group_size: int = 4096) -> jnp.ndarray:
+    """x: (B, S, D) -> (B, S, D)."""
+    b, s, d = x.shape
+    e, k = cfg.num_experts, cfg.experts_per_token
+    tokens = b * s
+    g_sz = min(group_size, tokens)
+    assert tokens % g_sz == 0, (tokens, g_sz)
+    g = tokens // g_sz
+    cap = min(g_sz, max(k, math.ceil(g_sz * k / e * cfg.capacity_factor)))
+
+    xg = x.reshape(g, g_sz, d)
+    logits = L.dense(qc, xg, params["router"])               # (G, S', E)
+    probs = jax.nn.softmax(logits.astype(jnp.float32), axis=-1)
+    gate_vals, gate_idx = jax.lax.top_k(probs, k)            # (G, S', k)
+    if k > 1:
+        gate_vals = gate_vals / jnp.sum(gate_vals, axis=-1, keepdims=True)
+
+    # position of each (token, slot) within its expert queue
+    onehot = jax.nn.one_hot(gate_idx, e, dtype=jnp.int32)    # (G, S', k, E)
+    flat = onehot.reshape(g, g_sz * k, e)
+    pos = jnp.cumsum(flat, axis=1) - 1                       # arrival order per expert
+    pos = pos.reshape(g, g_sz, k, e)
+    keep = (pos < cap) & (onehot > 0)                        # (G, S', k, E)
+    # disp (G, S', k, E, C): token s's k-th choice occupies slot c of expert e
+    pos_cap = jnp.clip(pos, 0, cap - 1)
+    disp = keep[..., None] & (jax.nn.one_hot(pos_cap, cap, dtype=jnp.int32) > 0)
+    dispatch = jnp.any(disp, axis=2).astype(x.dtype)         # (G, S', E, C) 0/1
+    combine = jnp.einsum("gsk,gskec->gsec", gate_vals, disp.astype(jnp.float32))
+
+    x_e = jnp.einsum("gsec,gsd->gecd", dispatch, xg)         # (G, E, C, D)
+    x_e = x_e.transpose(1, 0, 2, 3).reshape(e, g * cap, d)
+    h = _expert_mm(qc, x_e, params["wi"])
+    hg = _expert_mm(qc, x_e, params["wg"])
+    h = jax.nn.silu(hg) * h
+    y_e = _expert_mm(qc, h, params["wo"])                    # (E, G*C, D)
+    y_e = y_e.reshape(e, g, cap, d).transpose(1, 0, 2, 3)    # (G, E, C, D)
+    y = jnp.einsum("gsec,gecd->gsd", combine, y_e)
+    y = y.reshape(b, s, d)
+
+    if "shared" in params:
+        y = y + L.mlp_apply(qc, params["shared"], x, "silu")
+    return y.astype(x.dtype)
+
+
+def load_balance_loss(logits: jnp.ndarray, gate_idx: jnp.ndarray, e: int) -> jnp.ndarray:
+    """Switch-style auxiliary loss (exposed for the training loop)."""
+    probs = jax.nn.softmax(logits.astype(jnp.float32), axis=-1)
+    frac_tokens = jnp.mean(jax.nn.one_hot(gate_idx[..., 0], e), axis=tuple(range(gate_idx.ndim - 1)))
+    frac_probs = jnp.mean(probs, axis=tuple(range(probs.ndim - 1)))
+    return e * jnp.sum(frac_tokens * frac_probs)

@@ -1,0 +1,82 @@
+"""RG-LRU recurrent block (Griffin / RecurrentGemma, arXiv:2402.19427).
+
+Linear recurrence  h_t = a_t * h_{t-1} + sqrt(1 - a_t^2) * (i_t * x_t)  with
+input-dependent gates; parallelized over sequence with
+``jax.lax.associative_scan`` (combine: (a1,b1)∘(a2,b2) = (a1*a2, a2*b1+b2)),
+O(log L) depth — the TPU-native mapping of the recurrence.  Decode is an
+O(1) state update (enables the ``long_500k`` cell for recurrentgemma).
+
+The block is Griffin's "recurrent block": two D->D_rnn input GEMMs (gate
+branch, recurrent branch), a short causal conv, the RG-LRU, and an output
+GEMM — all GEMMs are FP=xINT-expandable ``kernel`` leaves.
+"""
+from __future__ import annotations
+
+from typing import Dict, Tuple
+
+import jax
+import jax.numpy as jnp
+
+from repro.models import layers as L
+from repro.models.layers import QuantContext
+
+_C = 8.0  # Griffin's recurrence-gate temperature
+
+
+def rglru_init(key, cfg, dtype=jnp.float32) -> Dict:
+    d, dr = cfg.d_model, cfg.rnn_width
+    ks = jax.random.split(key, 6)
+    return {
+        "in_x": L.dense_init(ks[0], d, dr, dtype=dtype),      # recurrent branch
+        "in_gate": L.dense_init(ks[1], d, dr, dtype=dtype),   # GeLU gate branch
+        "conv": L.conv1d_init(ks[2], dr, 4, dtype=dtype),
+        "w_r": L.dense_init(ks[3], dr, dr, dtype=dtype),      # recurrence gate
+        "w_i": L.dense_init(ks[4], dr, dr, dtype=dtype),      # input gate
+        "lam": jnp.full((dr,), 4.0, dtype),                   # a = sigmoid(lam)^ (c r)
+        "out": L.dense_init(ks[5], dr, d, dtype=dtype),
+    }
+
+
+def _gates(qc, params, xr):
+    """log_a: (..., Dr) in (-inf, 0];  gated input."""
+    r = jax.nn.sigmoid(L.dense(qc, xr, params["w_r"]))
+    i = jax.nn.sigmoid(L.dense(qc, xr, params["w_i"]))
+    log_a = -_C * r * jax.nn.softplus(params["lam"])          # <= 0
+    a = jnp.exp(log_a)
+    mult = jnp.sqrt(jnp.maximum(1.0 - jnp.square(a), 1e-12))
+    return a, mult * (i * xr)
+
+
+def rglru_apply(qc: QuantContext, params: Dict, x_in: jnp.ndarray,
+                cfg) -> Tuple[jnp.ndarray, Dict]:
+    """x_in: (B,L,D) -> (out (B,L,D), cache {'conv', 'h'})."""
+    xr_raw = L.dense(qc, x_in, params["in_x"])                # (B,L,Dr)
+    gate = jax.nn.gelu(L.dense(qc, x_in, params["in_gate"]))
+    xr = L.causal_conv1d(params["conv"], xr_raw)
+    a, b = _gates(qc, params, xr)
+
+    def combine(e1, e2):
+        a1, b1 = e1
+        a2, b2 = e2
+        return a1 * a2, a2 * b1 + b2
+
+    a_sc, h = jax.lax.associative_scan(combine, (a, b), axis=1)
+    out = L.dense(qc, h * gate, params["out"])
+    k = params["conv"]["w"].shape[0]
+    l_ = x_in.shape[1]
+    conv_state = xr_raw[:, -(k - 1):, :] if l_ >= k - 1 else jnp.pad(
+        xr_raw, ((0, 0), (k - 1 - l_, 0), (0, 0)))
+    return out, {"conv": conv_state, "h": h[:, -1, :]}
+
+
+def rglru_decode_step(qc: QuantContext, params: Dict, x_t: jnp.ndarray,
+                      cache: Dict, cfg) -> Tuple[jnp.ndarray, Dict]:
+    """x_t: (B,1,D); cache: {'conv': (B,K-1,Dr), 'h': (B,Dr)}."""
+    x = x_t[:, 0, :]
+    xr_raw = L.dense(qc, x, params["in_x"])                   # (B,Dr)
+    gate = jax.nn.gelu(L.dense(qc, x, params["in_gate"]))
+    xr, conv_state = L.causal_conv1d_step(params["conv"], cache["conv"], xr_raw)
+    a, b = _gates(qc, params, xr)
+    h = a * cache["h"] + b
+    out = L.dense(qc, h * gate, params["out"])
+    return out[:, None, :], {"conv": conv_state, "h": h}

@@ -1,0 +1,152 @@
+"""Mamba-2 mixer via the SSD (state-space duality) chunked algorithm
+(Dao & Gu, 2024 — arXiv:2405.21060).
+
+The chunked form recasts the selective-scan as GEMMs (MXU-friendly):
+within-chunk attention-like einsums + an inter-chunk state recurrence of
+length L/Q.  Decode is an O(1) state update — this is why mamba2 runs the
+``long_500k`` cell that full-attention archs must skip.
+
+Only the *parameter* GEMMs (in_proj / out_proj) carry FP=xINT expanded
+weights; the SSD data-data products (C·B^T, decays) have no static weight
+to expand (DESIGN.md §5 arch-applicability note).
+"""
+from __future__ import annotations
+
+from typing import Dict, Tuple
+
+import jax
+import jax.numpy as jnp
+
+from repro.models import layers as L
+from repro.models.layers import QuantContext
+
+
+def ssm_dims(cfg) -> Dict[str, int]:
+    d_inner = cfg.ssm_expand * cfg.d_model
+    heads = d_inner // cfg.ssm_head_dim
+    return {
+        "d_inner": d_inner,
+        "heads": heads,
+        "p": cfg.ssm_head_dim,
+        "n": cfg.ssm_state,
+        "conv_ch": d_inner + 2 * cfg.ssm_state,
+        "in_dim": 2 * d_inner + 2 * cfg.ssm_state + heads,
+    }
+
+
+def ssm_init(key, cfg, dtype=jnp.float32) -> Dict:
+    d = ssm_dims(cfg)
+    ks = jax.random.split(key, 4)
+    return {
+        "in_proj": L.dense_init(ks[0], cfg.d_model, d["in_dim"], dtype=dtype),
+        "conv": L.conv1d_init(ks[1], d["conv_ch"], cfg.ssm_conv, dtype=dtype),
+        "a_log": jnp.zeros((d["heads"],), dtype),        # A = -exp(a_log) = -1
+        "d_skip": jnp.ones((d["heads"],), dtype),
+        "dt_bias": jnp.full((d["heads"],), -2.0, dtype), # softplus(-2) ~= 0.13
+        "norm": L.norm_init(d["d_inner"], dtype),
+        "out_proj": L.dense_init(ks[2], d["d_inner"], cfg.d_model, dtype=dtype),
+    }
+
+
+def _split_zxbcdt(zxbcdt, d):
+    z = zxbcdt[..., : d["d_inner"]]
+    xbc = zxbcdt[..., d["d_inner"] : d["d_inner"] + d["conv_ch"]]
+    dt = zxbcdt[..., d["d_inner"] + d["conv_ch"] :]
+    return z, xbc, dt
+
+
+def _split_xbc(xbc, d):
+    x = xbc[..., : d["d_inner"]]
+    bv = xbc[..., d["d_inner"] : d["d_inner"] + d["n"]]
+    cv = xbc[..., d["d_inner"] + d["n"] :]
+    return x, bv, cv
+
+
+def ssd_chunked(x, dt, a, bv, cv, *, chunk: int):
+    """SSD core.  x: (B,L,H,P); dt: (B,L,H); a: (H,) (negative);
+    bv, cv: (B,L,N).  Returns y: (B,L,H,P) and final state (B,H,P,N)."""
+    b, l, h, p = x.shape
+    n = bv.shape[-1]
+    chunk = min(chunk, l)
+    assert l % chunk == 0, (l, chunk)
+    nc = l // chunk
+
+    da = dt * a                                             # (B,L,H)  <= 0
+    xc = x.reshape(b, nc, chunk, h, p)
+    dtc = dt.reshape(b, nc, chunk, h)
+    dac = da.reshape(b, nc, chunk, h)
+    bc = bv.reshape(b, nc, chunk, n)
+    cc = cv.reshape(b, nc, chunk, n)
+
+    cum = jnp.cumsum(dac, axis=2)                           # (B,nc,Q,H)
+    # --- intra-chunk (attention-like GEMMs) ---
+    cb = jnp.einsum("bcin,bcjn->bcij", cc, bc)              # (B,nc,Q,Q)
+    decay = jnp.exp(cum[:, :, :, None, :] - cum[:, :, None, :, :])  # (B,nc,Q,Q,H) i,j
+    tri = jnp.tril(jnp.ones((chunk, chunk), bool))
+    scores = jnp.where(tri[None, None, :, :, None], cb[..., None] * decay, 0.0)
+    y_intra = jnp.einsum("bcijh,bcjh,bcjhp->bcihp", scores, dtc, xc)
+    # --- per-chunk end states ---
+    state_decay = jnp.exp(cum[:, :, -1:, :] - cum)          # (B,nc,Q,H)
+    s_chunk = jnp.einsum("bcjh,bcjn,bcjhp->bchpn", state_decay * dtc, bc, xc)
+    # --- inter-chunk recurrence ---
+    total_decay = jnp.exp(cum[:, :, -1, :])                 # (B,nc,H)
+
+    def body(s_prev, inp):
+        td, sc = inp                                        # (B,H), (B,H,P,N)
+        s_new = td[:, :, None, None] * s_prev + sc
+        return s_new, s_prev                                # emit state *entering* the chunk
+
+    s0 = jnp.zeros((b, h, p, n), x.dtype)
+    s_final, s_prevs = jax.lax.scan(
+        body, s0, (jnp.moveaxis(total_decay, 1, 0), jnp.moveaxis(s_chunk, 1, 0)))
+    s_prevs = jnp.moveaxis(s_prevs, 0, 1)                   # (B,nc,H,P,N)
+    y_inter = jnp.einsum("bcin,bchpn,bcih->bcihp", cc, s_prevs, jnp.exp(cum))
+    y = (y_intra + y_inter).reshape(b, l, h, p)
+    return y, s_final
+
+
+def ssm_apply(qc: QuantContext, params: Dict, x_in: jnp.ndarray, cfg,
+              *, chunk: int = 256) -> Tuple[jnp.ndarray, Dict]:
+    """Full-sequence mixer.  x_in: (B,L,D).  Returns (out, final_cache)."""
+    d = ssm_dims(cfg)
+    zxbcdt = L.dense(qc, x_in, params["in_proj"])
+    z, xbc, dt = _split_zxbcdt(zxbcdt, d)
+    xbc = jax.nn.silu(L.causal_conv1d(params["conv"], xbc))
+    xs, bv, cv = _split_xbc(xbc, d)
+    dt = jax.nn.softplus(dt + params["dt_bias"])            # (B,L,H)
+    a = -jnp.exp(params["a_log"])
+    b_, l_ = x_in.shape[0], x_in.shape[1]
+    xh = xs.reshape(b_, l_, d["heads"], d["p"])
+    y, s_final = ssd_chunked(xh, dt, a, bv, cv, chunk=chunk)
+    y = y + params["d_skip"][None, None, :, None] * xh
+    y = y.reshape(b_, l_, d["d_inner"])
+    y = L.rmsnorm(params["norm"], y * jax.nn.silu(z))
+    out = L.dense(qc, y, params["out_proj"])
+    # conv cache = last K-1 pre-activation conv inputs
+    k = cfg.ssm_conv
+    xbc_raw = _split_zxbcdt(zxbcdt, d)[1]
+    conv_state = xbc_raw[:, -(k - 1):, :] if l_ >= k - 1 else jnp.pad(
+        xbc_raw, ((0, 0), (k - 1 - l_, 0), (0, 0)))
+    return out, {"conv": conv_state, "ssm": s_final}
+
+
+def ssm_decode_step(qc: QuantContext, params: Dict, x_t: jnp.ndarray, cache: Dict,
+                    cfg) -> Tuple[jnp.ndarray, Dict]:
+    """Single-token state update.  x_t: (B,1,D)."""
+    d = ssm_dims(cfg)
+    zxbcdt = L.dense(qc, x_t[:, 0, :], params["in_proj"])   # (B, in_dim)
+    z, xbc, dt = _split_zxbcdt(zxbcdt, d)
+    conv_out, conv_state = L.causal_conv1d_step(params["conv"], cache["conv"], xbc)
+    xbc = jax.nn.silu(conv_out)
+    xs, bv, cv = _split_xbc(xbc, d)
+    dt = jax.nn.softplus(dt + params["dt_bias"])            # (B,H)
+    a = -jnp.exp(params["a_log"])
+    xh = xs.reshape(xs.shape[0], d["heads"], d["p"])
+    da = jnp.exp(dt * a)                                    # (B,H)
+    s = cache["ssm"] * da[:, :, None, None] + jnp.einsum(
+        "bh,bn,bhp->bhpn", dt, bv, xh)
+    y = jnp.einsum("bn,bhpn->bhp", cv, s) + params["d_skip"][None, :, None] * xh
+    y = y.reshape(y.shape[0], d["d_inner"])
+    y = L.rmsnorm(params["norm"], y * jax.nn.silu(z))
+    out = L.dense(qc, y, params["out_proj"])
+    return out[:, None, :], {"conv": conv_state, "ssm": s}

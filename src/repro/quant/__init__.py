@@ -1,0 +1,2 @@
+from repro.quant.baselines import rtn_quantize_params, rtn_quantize_tensor, gptq_lite_quantize
+from repro.quant.observers import MinMaxObserver, PercentileObserver, LaplaceObserver

@@ -1,0 +1,83 @@
+"""Baseline PTQ methods the paper compares against (Tables 1-3, 'Normal').
+
+* ``rtn_quantize_*``  — round-to-nearest min-max PTQ (the 'Normal' row in
+  Table 6): one scale per channel, no series, no correction terms.
+* ``gptq_lite_quantize`` — a GPTQ-flavoured one-shot method: column-by-column
+  rounding with error propagation into the not-yet-quantized columns,
+  using a diagonal Hessian proxy (mean x^2 per input feature) from a tiny
+  calibration batch.  This stands in for the calibrated-PTQ family
+  (AdaQuant/BRECQ/GPTQ) that FP=xINT is benchmarked against.
+
+Both produce *plain FP reconstructions* so they can be dropped into the same
+model-apply path as the FP weights (the accuracy comparison isolates the
+representation, exactly like the paper's tables).
+"""
+from __future__ import annotations
+
+from functools import partial
+from typing import Any, Optional
+
+import jax
+import jax.numpy as jnp
+
+PyTree = Any
+
+
+def rtn_quantize_tensor(w: jnp.ndarray, bits: int, *, per_channel: bool = True,
+                        symmetric: bool = True) -> jnp.ndarray:
+    """Round-to-nearest quantize-dequantize (single term, min-max scales)."""
+    w = w.astype(jnp.float32)
+    qmax = float(2 ** (bits - 1) - 1)
+    axes = tuple(range(w.ndim - 1)) if per_channel else tuple(range(w.ndim))
+    if symmetric:
+        s = jnp.maximum(jnp.max(jnp.abs(w), axis=axes, keepdims=True), 1e-30) / qmax
+        return s * jnp.clip(jnp.round(w / s), -qmax, qmax)
+    lo = jnp.min(w, axis=axes, keepdims=True)
+    hi = jnp.max(w, axis=axes, keepdims=True)
+    s = jnp.maximum(hi - lo, 1e-30) / (2.0**bits - 1)
+    z = jnp.round(-lo / s)
+    return s * (jnp.clip(jnp.round(w / s) + z, 0, 2.0**bits - 1) - z)
+
+
+def rtn_quantize_activation(x: jnp.ndarray, bits: int) -> jnp.ndarray:
+    """Dynamic per-tensor RTN for activations (the W_xA_y baselines)."""
+    return rtn_quantize_tensor(x, bits, per_channel=False, symmetric=False)
+
+
+def rtn_quantize_params(params: PyTree, bits: int) -> PyTree:
+    """Quantize-dequantize every GEMM weight leaf (path ends in 'kernel')."""
+    def visit(path, leaf):
+        name = "/".join(str(getattr(p, "key", getattr(p, "idx", p))) for p in path)
+        if name.rsplit("/", 1)[-1] == "kernel" and hasattr(leaf, "ndim") and leaf.ndim >= 2:
+            return rtn_quantize_tensor(leaf, bits)
+        return leaf
+
+    return jax.tree_util.tree_map_with_path(visit, params)
+
+
+@partial(jax.jit, static_argnames=("bits",))
+def gptq_lite_quantize(w: jnp.ndarray, x_cal: jnp.ndarray, bits: int) -> jnp.ndarray:
+    """One-shot error-propagating quantization of a (K, N) weight.
+
+    Processes input-dim rows in order; the rounding error of row k is pushed
+    into the remaining rows weighted by the (diagonal-proxy) correlation of
+    feature k with later features — a Hessian-diagonal GPTQ variant that
+    needs only ``mean(x^2)`` statistics from ``x_cal`` (B, K).
+    """
+    w = w.astype(jnp.float32)
+    k, n = w.shape
+    qmax = float(2 ** (bits - 1) - 1)
+    s = jnp.maximum(jnp.max(jnp.abs(w), axis=0), 1e-30) / qmax  # per out-channel
+    h = jnp.mean(x_cal.astype(jnp.float32) ** 2, axis=0) + 1e-6  # (K,) diag Hessian proxy
+
+    def body(carry, inputs):
+        err_acc = carry                       # (N,) running error in output space
+        w_row, h_k = inputs
+        # compensate this row for the accumulated error of earlier rows
+        w_eff = w_row - err_acc / jnp.maximum(h_k, 1e-6) * h_k / k
+        q = jnp.clip(jnp.round(w_eff / s), -qmax, qmax) * s
+        err_acc = err_acc + (w_eff - q) * h_k
+        return err_acc, q
+
+    _, wq = jax.lax.scan(body, jnp.zeros((n,), jnp.float32), (w, h))
+    return wq

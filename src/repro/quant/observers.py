@@ -1,0 +1,65 @@
+"""Activation-range observers for the baseline PTQ methods.
+
+FP=xINT itself is calibration-free (dynamic activation quantizers); these
+observers exist for the *baselines* the paper compares against, which
+calibrate static ranges on a small sample set.
+"""
+from __future__ import annotations
+
+import dataclasses
+from typing import Optional
+
+import jax.numpy as jnp
+
+
+@dataclasses.dataclass
+class MinMaxObserver:
+    lo: Optional[jnp.ndarray] = None
+    hi: Optional[jnp.ndarray] = None
+
+    def update(self, x: jnp.ndarray):
+        lo, hi = jnp.min(x), jnp.max(x)
+        self.lo = lo if self.lo is None else jnp.minimum(self.lo, lo)
+        self.hi = hi if self.hi is None else jnp.maximum(self.hi, hi)
+        return self
+
+    def range(self):
+        assert self.lo is not None, "observer saw no data"
+        return self.lo, self.hi
+
+
+@dataclasses.dataclass
+class PercentileObserver:
+    """Clip to the p/100 absolute-value percentile (outlier-robust)."""
+    p: float = 99.9
+    amax: Optional[jnp.ndarray] = None
+
+    def update(self, x: jnp.ndarray):
+        a = jnp.percentile(jnp.abs(x), self.p)
+        self.amax = a if self.amax is None else jnp.maximum(self.amax, a)
+        return self
+
+    def range(self):
+        assert self.amax is not None
+        return -self.amax, self.amax
+
+
+@dataclasses.dataclass
+class LaplaceObserver:
+    """ACIQ-style Laplace-optimal clip (what FP=xINT's first plane uses)."""
+    bits: int = 4
+    b: Optional[jnp.ndarray] = None
+    n: int = 0
+
+    def update(self, x: jnp.ndarray):
+        b = jnp.mean(jnp.abs(x - jnp.mean(x)))
+        self.b = b if self.b is None else (self.b * self.n + b) / (self.n + 1)
+        self.n += 1
+        return self
+
+    def range(self):
+        from repro.core.expansion import laplace_clip_multiplier
+
+        assert self.b is not None
+        c = laplace_clip_multiplier(self.bits) * self.b
+        return -c, c

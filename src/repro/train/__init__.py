@@ -1,0 +1,3 @@
+from repro.train.optimizer import adamw, adafactor, sgd, OptState
+from repro.train.train_step import TrainConfig, make_train_step, loss_fn
+from repro.train.data import SyntheticLM, make_host_loader

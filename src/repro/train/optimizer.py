@@ -1,0 +1,159 @@
+"""Sharded-state optimizers, hand-rolled (no optax in the container).
+
+* ``adamw`` — AdamW with optionally bf16 first/second moments (halves
+  optimizer HBM — the default for the >100B dry-run cells) and an fp32
+  update path (moments are upcast per step).
+* ``adafactor`` — factored second moment (row/col statistics) for the
+  340B-class cells where even bf16 Adam moments don't fit.
+* ``sgd`` — momentum SGD (baseline/debug).
+
+All follow the same functional contract:
+
+    opt = adamw(lr=..., ...)
+    state = opt.init(params)
+    params, state = opt.update(grads, params, state)
+
+States are pytrees mirroring the param tree — they shard with the same
+PartitionSpec rules as their parameters (dist/sharding.py).
+"""
+from __future__ import annotations
+
+import dataclasses
+from typing import Any, Callable, NamedTuple, Optional
+
+import jax
+import jax.numpy as jnp
+
+PyTree = Any
+
+
+class Optimizer(NamedTuple):
+    init: Callable[[PyTree], PyTree]
+    update: Callable[[PyTree, PyTree, PyTree], tuple]
+
+
+class OptState(NamedTuple):
+    step: jnp.ndarray
+    inner: PyTree
+
+
+def _tmap(f, *trees, **kw):
+    return jax.tree_util.tree_map(f, *trees, **kw)
+
+
+def global_norm(tree: PyTree) -> jnp.ndarray:
+    leaves = [jnp.sum(jnp.square(x.astype(jnp.float32))) for x in jax.tree_util.tree_leaves(tree)]
+    return jnp.sqrt(jnp.sum(jnp.stack(leaves)))
+
+
+def clip_by_global_norm(grads: PyTree, max_norm: float) -> PyTree:
+    g = global_norm(grads)
+    scale = jnp.minimum(1.0, max_norm / jnp.maximum(g, 1e-12))
+    return _tmap(lambda x: x * scale, grads)
+
+
+def adamw(lr: float = 1e-3, b1: float = 0.9, b2: float = 0.95, eps: float = 1e-8,
+          weight_decay: float = 0.0, moment_dtype=jnp.float32,
+          schedule: Optional[Callable[[jnp.ndarray], jnp.ndarray]] = None) -> Optimizer:
+    def init(params):
+        zeros = lambda p: jnp.zeros(p.shape, moment_dtype)
+        return OptState(jnp.zeros((), jnp.int32), {"m": _tmap(zeros, params), "v": _tmap(zeros, params)})
+
+    def update(grads, params, state):
+        step = state.step + 1
+        lr_t = lr * (schedule(step) if schedule else 1.0)
+        t = step.astype(jnp.float32)
+        bc1 = 1.0 - b1 ** t
+        bc2 = 1.0 - b2 ** t
+
+        def upd(g, p, m, v):
+            g32 = g.astype(jnp.float32)
+            m32 = b1 * m.astype(jnp.float32) + (1 - b1) * g32
+            v32 = b2 * v.astype(jnp.float32) + (1 - b2) * jnp.square(g32)
+            u = (m32 / bc1) / (jnp.sqrt(v32 / bc2) + eps)
+            if weight_decay:
+                u = u + weight_decay * p.astype(jnp.float32)
+            p_new = (p.astype(jnp.float32) - lr_t * u).astype(p.dtype)
+            return p_new, m32.astype(moment_dtype), v32.astype(moment_dtype)
+
+        out = _tmap(upd, grads, params, state.inner["m"], state.inner["v"])
+        params_new = _tmap(lambda o: o[0], out, is_leaf=lambda x: isinstance(x, tuple))
+        m_new = _tmap(lambda o: o[1], out, is_leaf=lambda x: isinstance(x, tuple))
+        v_new = _tmap(lambda o: o[2], out, is_leaf=lambda x: isinstance(x, tuple))
+        return params_new, OptState(step, {"m": m_new, "v": v_new})
+
+    return Optimizer(init, update)
+
+
+def adafactor(lr: float = 1e-2, decay: float = 0.8, eps: float = 1e-30,
+              clip_threshold: float = 1.0, weight_decay: float = 0.0) -> Optimizer:
+    """Factored second-moment optimizer (Shazeer & Stern, 2018) — O(row+col)
+    state for matrices; full state for vectors."""
+    def init(params):
+        def zero(p):
+            if p.ndim >= 2:
+                return {"vr": jnp.zeros(p.shape[:-1], jnp.float32),
+                        "vc": jnp.zeros(p.shape[:-2] + p.shape[-1:], jnp.float32)}
+            return {"v": jnp.zeros(p.shape, jnp.float32)}
+        return OptState(jnp.zeros((), jnp.int32),
+                        _tmap(zero, params))
+
+    def update(grads, params, state):
+        step = state.step + 1
+        t = step.astype(jnp.float32)
+        beta = 1.0 - t ** (-decay)
+
+        def upd(g, p, s):
+            g32 = g.astype(jnp.float32)
+            g2 = jnp.square(g32) + eps
+            if g.ndim >= 2:
+                vr = beta * s["vr"] + (1 - beta) * jnp.mean(g2, axis=-1)
+                vc = beta * s["vc"] + (1 - beta) * jnp.mean(g2, axis=-2)
+                denom = jnp.maximum(jnp.mean(vr, axis=-1, keepdims=True), eps)
+                vhat = vr[..., None] * vc[..., None, :] / denom[..., None]
+                u = g32 * jax.lax.rsqrt(vhat + eps)
+                s_new = {"vr": vr, "vc": vc}
+            else:
+                v = beta * s["v"] + (1 - beta) * g2
+                u = g32 * jax.lax.rsqrt(v + eps)
+                s_new = {"v": v}
+            rms_u = jnp.sqrt(jnp.mean(jnp.square(u)) + eps)
+            u = u / jnp.maximum(1.0, rms_u / clip_threshold)
+            if weight_decay:
+                u = u + weight_decay * p.astype(jnp.float32)
+            return (p.astype(jnp.float32) - lr * u).astype(p.dtype), s_new
+
+        # params first: its leaves are arrays, so the factored-stat dicts in
+        # state.inner are passed whole to upd (never mistaken for subtrees)
+        out = _tmap(lambda p, g, s: upd(g, p, s), params, grads, state.inner)
+        params_new = _tmap(lambda o: o[0], out, is_leaf=lambda x: isinstance(x, tuple))
+        s_new = _tmap(lambda o: o[1], out, is_leaf=lambda x: isinstance(x, tuple))
+        return params_new, OptState(step, s_new)
+
+    return Optimizer(init, update)
+
+
+def sgd(lr: float = 1e-2, momentum: float = 0.9) -> Optimizer:
+    def init(params):
+        return OptState(jnp.zeros((), jnp.int32), _tmap(lambda p: jnp.zeros_like(p, jnp.float32), params))
+
+    def update(grads, params, state):
+        m = _tmap(lambda mo, g: momentum * mo + g.astype(jnp.float32), state.inner, grads)
+        params_new = _tmap(lambda p, mo: (p.astype(jnp.float32) - lr * mo).astype(p.dtype), params, m)
+        return params_new, OptState(state.step + 1, m)
+
+    return Optimizer(init, update)
+
+
+def warmup_cosine(warmup: int, total: int, floor: float = 0.1):
+    def sched(step):
+        s = step.astype(jnp.float32)
+        warm = s / jnp.maximum(1.0, float(warmup))
+        frac = (s - warmup) / jnp.maximum(1.0, float(total - warmup))
+        cos = floor + (1 - floor) * 0.5 * (1 + jnp.cos(jnp.pi * jnp.clip(frac, 0, 1)))
+        return jnp.where(s < warmup, warm, cos)
+    return sched
+
+
+def get_optimizer(name: str, **kw) -> Optimizer:
+    return {"adamw": adamw, "adafactor": adafactor, "sgd": sgd}[name](**kw)

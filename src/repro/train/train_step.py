@@ -1,0 +1,158 @@
+"""Training step: microbatched grad accumulation + remat + clip + optimizer.
+
+The canonical step (used by the dry-run and launch/train.py):
+
+  * split the global batch into ``grad_accum`` microbatches (scan),
+  * per-microbatch forward/backward with per-stage remat
+    (``forward(..., remat=True)`` checkpoints each scanned stage),
+  * mean-accumulate grads in fp32,
+  * optional residual-series gradient compression (dist/compression.py)
+    applied to the accumulated grads before the optimizer — the paper's own
+    Theorem 1 reused as a comms compressor (beyond-paper),
+  * global-norm clip + optimizer update.
+
+Under pjit the whole step is one XLA program: FSDP all-gathers, reduce-
+scatters, and the microbatch scan schedule all show up in the dry-run HLO
+that §Roofline parses.
+"""
+from __future__ import annotations
+
+import dataclasses
+from functools import partial
+from typing import Any, Callable, Dict, Optional, Tuple
+
+import jax
+import jax.numpy as jnp
+
+from repro.configs.base import ArchConfig
+from repro.models import model as M
+from repro.models.layers import FP, QuantContext
+from repro.train import optimizer as OPT
+
+PyTree = Any
+
+
+@dataclasses.dataclass(frozen=True)
+class TrainConfig:
+    optimizer: str = "adamw"
+    lr: float = 3e-4
+    weight_decay: float = 0.01
+    grad_clip: float = 1.0
+    grad_accum: int = 1              # microbatches per step
+    remat: bool = True
+    moment_dtype: str = "bfloat16"   # adam moments (HBM saver at scale)
+    compress_grads: bool = False     # residual-series int8 all-reduce
+    compress_bits: int = 8
+    compress_terms: int = 1
+    z_loss: float = 0.0
+
+
+def make_optimizer(tc: TrainConfig):
+    if tc.optimizer == "adamw":
+        return OPT.adamw(lr=tc.lr, weight_decay=tc.weight_decay,
+                         moment_dtype=jnp.bfloat16 if tc.moment_dtype == "bfloat16" else jnp.float32)
+    if tc.optimizer == "adafactor":
+        return OPT.adafactor(lr=tc.lr, weight_decay=tc.weight_decay)
+    return OPT.sgd(lr=tc.lr)
+
+
+def loss_fn(params: PyTree, batch: Dict, cfg: ArchConfig, qc: QuantContext = FP,
+            *, remat: bool = False, z_loss: float = 0.0,
+            act_constraint=None) -> Tuple[jnp.ndarray, Dict]:
+    """Next-token (decoder) or frame-label (encoder) cross entropy."""
+    logits = M.forward(params, batch, cfg, qc, remat=remat,
+                       act_constraint=act_constraint)            # (B, S, V)
+    labels = batch["labels"]
+    if not cfg.is_encoder:
+        logits = logits[:, :-1, :]
+        labels = labels[:, 1:]
+    logits = logits.astype(jnp.float32)
+    logz = jax.nn.logsumexp(logits, axis=-1)
+    # vocab-sharding-safe label pick: fused compare-select-reduce instead of
+    # take_along_axis (which would all-gather a model-sharded vocab axis)
+    v = logits.shape[-1]
+    onehot = (labels[..., None] == jax.lax.broadcasted_iota(jnp.int32, (1, 1, v), 2))
+    picked = jnp.sum(jnp.where(onehot, logits, 0.0), axis=-1)
+    ll = picked - logz
+    loss = -jnp.mean(ll)
+    if z_loss:
+        loss = loss + z_loss * jnp.mean(jnp.square(logz))
+    acc = jnp.mean((jnp.argmax(logits, -1) == labels).astype(jnp.float32))
+    return loss, {"loss": loss, "accuracy": acc}
+
+
+def _microbatch(batch: Dict, n: int) -> Dict:
+    """(B, ...) -> (n, B//n, ...) for every leaf."""
+    def split(x):
+        b = x.shape[0]
+        assert b % n == 0, (b, n)
+        return x.reshape(n, b // n, *x.shape[1:])
+    return jax.tree_util.tree_map(split, batch)
+
+
+def make_train_step(cfg: ArchConfig, tc: TrainConfig, qc: QuantContext = FP,
+                    compressor: Optional[Callable[[PyTree], PyTree]] = None,
+                    act_constraint=None):
+    """Returns (opt, train_step) with
+    train_step(params, opt_state, batch) -> (params, opt_state, metrics).
+
+    With ``tc.compress_grads`` the error-feedback buffer is carried *inside*
+    the optimizer state (functional — safe under jit/donation); ``opt.init``
+    is wrapped accordingly."""
+    opt = make_optimizer(tc)
+
+    def grad_one(params, mb):
+        (loss, metrics), grads = jax.value_and_grad(
+            lambda p: loss_fn(p, mb, cfg, qc, remat=tc.remat, z_loss=tc.z_loss,
+                              act_constraint=act_constraint),
+            has_aux=True)(params)
+        return grads, metrics
+
+    def accumulate_grads(params, batch):
+        if tc.grad_accum > 1:
+            mbs = _microbatch(batch, tc.grad_accum)
+
+            def body(acc, mb):
+                grads, metrics = grad_one(params, mb)
+                acc = jax.tree_util.tree_map(
+                    lambda a, g: a + g.astype(jnp.float32) / tc.grad_accum, acc, grads)
+                return acc, metrics
+
+            zeros = jax.tree_util.tree_map(lambda p: jnp.zeros(p.shape, jnp.float32), params)
+            grads, metrics = jax.lax.scan(body, zeros, mbs)
+            metrics = jax.tree_util.tree_map(lambda m: jnp.mean(m), metrics)
+        else:
+            grads, metrics = grad_one(params, batch)
+        return grads, metrics
+
+    def finish(params, opt_state, grads, metrics):
+        if tc.grad_clip:
+            grads = OPT.clip_by_global_norm(grads, tc.grad_clip)
+        metrics = dict(metrics, grad_norm=OPT.global_norm(grads))
+        params, opt_state = opt.update(grads, params, opt_state)
+        return params, opt_state, metrics
+
+    if tc.compress_grads and compressor is None:
+        from repro.dist.compression import CompressionConfig, make_compressor
+        cc = CompressionConfig(bits=tc.compress_bits, terms=tc.compress_terms)
+
+        def opt_init_with_err(params):
+            init_err, _ = make_compressor(params, cc)
+            return {"opt": opt.init(params), "err": init_err()}
+
+        def train_step_c(params, state, batch):
+            _, compress = make_compressor(params, cc)
+            grads, metrics = accumulate_grads(params, batch)
+            grads, err_new = compress(grads, state["err"])
+            params2, opt_state2, metrics = finish(params, state["opt"], grads, metrics)
+            return params2, {"opt": opt_state2, "err": err_new}, metrics
+
+        return opt._replace(init=opt_init_with_err), train_step_c
+
+    def train_step(params, opt_state, batch):
+        grads, metrics = accumulate_grads(params, batch)
+        if compressor is not None:
+            grads = compressor(grads)
+        return finish(params, opt_state, grads, metrics)
+
+    return opt, train_step

@@ -1,0 +1,10 @@
+import numpy as np
+import pytest
+
+# NOTE: no XLA_FLAGS here by design — single-device tests must see 1 device.
+# Multi-device tests spawn subprocesses that set the flag themselves.
+
+
+@pytest.fixture
+def rng():
+    return np.random.default_rng(0)

@@ -1,0 +1,97 @@
+"""Abelian group axioms (§3.3) + basis-model decomposition (Theorem 2)."""
+import jax
+import jax.numpy as jnp
+import numpy as np
+import pytest
+from hypothesis import given, settings, strategies as st
+
+from repro.core import abelian as A
+from repro.core import expansion as E
+from repro.core.policy import W4A4
+from repro.core.ptq import expand_params
+
+
+def _model(rng, seed_shift=0):
+    r = np.random.default_rng(0 + seed_shift)
+    return {"l1": {"kernel": jnp.array(r.normal(size=(8, 16)).astype(np.float32))},
+            "l2": {"kernel": jnp.array(r.normal(size=(16, 4)).astype(np.float32)),
+                   "bias": jnp.array(r.normal(size=(4,)).astype(np.float32))}}
+
+
+def _eq(a, b, atol=1e-6):
+    jax.tree_util.tree_map(
+        lambda x, y: np.testing.assert_allclose(np.asarray(x), np.asarray(y), atol=atol), a, b)
+
+
+def test_group_axioms(rng):
+    m1, m2, m3 = _model(rng, 1), _model(rng, 2), _model(rng, 3)
+    # commutativity
+    _eq(A.abelian_add(m1, m2), A.abelian_add(m2, m1))
+    # associativity
+    _eq(A.abelian_add(A.abelian_add(m1, m2), m3),
+        A.abelian_add(m1, A.abelian_add(m2, m3)))
+    # identity
+    zero = A.abelian_zero_like(m1)
+    _eq(A.abelian_add(m1, zero), m1)
+    # inverse
+    _eq(A.abelian_add(m1, A.abelian_neg(m1)), zero)
+
+
+def test_abelian_mul_action(rng):
+    m = _model(rng)
+    layers = [m["l1"], m["l2"]]
+    out = A.abelian_mul([2.0, -0.5], layers)
+    np.testing.assert_allclose(np.asarray(out[0]["kernel"]),
+                               2.0 * np.asarray(m["l1"]["kernel"]))
+    np.testing.assert_allclose(np.asarray(out[1]["kernel"]),
+                               -0.5 * np.asarray(m["l2"]["kernel"]))
+    # distributivity of the scalar action over AbelianAdd
+    m2 = _model(rng, 5)
+    lhs = A.abelian_mul([2.0], [A.abelian_add(m["l1"], m2["l1"])])[0]
+    rhs = A.abelian_add(A.abelian_mul([2.0], [m["l1"]])[0],
+                        A.abelian_mul([2.0], [m2["l1"]])[0])
+    _eq(lhs, rhs)
+
+
+def test_eq5_weight_additivity_linear_model(rng):
+    """Eq. 5: Model(W1, x) (+) Model(W2, x) == Model(W1+W2, x) for linear model."""
+    r = np.random.default_rng(3)
+    w1 = jnp.array(r.normal(size=(8, 8)).astype(np.float32))
+    w2 = jnp.array(r.normal(size=(8, 8)).astype(np.float32))
+    x = jnp.array(r.normal(size=(4, 8)).astype(np.float32))
+    np.testing.assert_allclose(np.asarray(x @ w1 + x @ w2),
+                               np.asarray(x @ (w1 + w2)), rtol=1e-5)
+
+
+def test_basis_models_sum_to_dequant(rng):
+    params = _model(rng)
+    q = expand_params(params, W4A4)
+    bs = A.basis_models(q)
+    assert len(bs) == A.num_basis_terms(q)
+    total = A.abelian_sum(bs)
+    _eq(total, A.dequantize(q), atol=1e-5)
+    # order independence (Abelian): reversed sum identical
+    total_r = A.abelian_sum(list(reversed(bs)))
+    _eq(total, total_r, atol=1e-6)
+
+
+def test_basis_models_carry_fp_leaves_once(rng):
+    params = _model(rng)
+    q = expand_params(params, W4A4)
+    bs = A.basis_models(q)
+    # the non-expanded bias must appear exactly once (in the affine term)
+    biases = [np.asarray(b["l2"]["bias"]) for b in bs]
+    nonzero = [b for b in biases if np.abs(b).sum() > 0]
+    assert len(nonzero) == 1
+    np.testing.assert_allclose(nonzero[0], np.asarray(params["l2"]["bias"]))
+
+
+@settings(max_examples=20, deadline=None)
+@given(seed=st.integers(0, 2**31 - 1), n=st.integers(2, 5))
+def test_property_sum_permutation_invariant(seed, n):
+    r = np.random.default_rng(seed)
+    models = [{"w": jnp.array(r.normal(size=(6, 6)).astype(np.float32))} for _ in range(n)]
+    perm = r.permutation(n)
+    a = A.abelian_sum(models)
+    b = A.abelian_sum([models[i] for i in perm])
+    np.testing.assert_allclose(np.asarray(a["w"]), np.asarray(b["w"]), atol=1e-5)

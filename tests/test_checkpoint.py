@@ -1,0 +1,97 @@
+"""Checkpointing: atomic commit, keep-k GC, async, corrupted-ignore, restore."""
+import os
+import threading
+import time
+
+import jax
+import jax.numpy as jnp
+import numpy as np
+import pytest
+
+from repro.dist import checkpoint as CKPT
+
+
+def _state(seed=0):
+    r = np.random.default_rng(seed)
+    return {"params": {"w": jnp.array(r.normal(size=(8, 8)).astype(np.float32)),
+                       "b": jnp.array(r.normal(size=(8,)).astype(np.float32))},
+            "step": jnp.int32(seed)}
+
+
+def _eq(a, b):
+    jax.tree_util.tree_map(
+        lambda x, y: np.testing.assert_array_equal(np.asarray(x), np.asarray(y)), a, b)
+
+
+def test_roundtrip(tmp_path):
+    st = _state(3)
+    CKPT.save(str(tmp_path), 3, st)
+    restored, step = CKPT.restore(str(tmp_path), jax.eval_shape(lambda: st))
+    assert step == 3
+    _eq(st, restored)
+
+
+def test_latest_and_keep_k(tmp_path):
+    for s in range(6):
+        CKPT.save(str(tmp_path), s, _state(s), keep=3)
+    steps = CKPT.committed_steps(str(tmp_path))
+    assert steps == [3, 4, 5]
+    assert CKPT.latest_step(str(tmp_path)) == 5
+
+
+def test_uncommitted_ignored(tmp_path):
+    CKPT.save(str(tmp_path), 1, _state(1))
+    # fake a crashed (uncommitted) later checkpoint: dir without .DONE
+    os.makedirs(tmp_path / "step_000000002")
+    assert CKPT.latest_step(str(tmp_path)) == 1
+    restored, step = CKPT.restore(str(tmp_path), jax.eval_shape(lambda: _state(1)))
+    assert step == 1
+    # gc removes the orphan
+    CKPT.gc_old(str(tmp_path), keep=3)
+    assert not os.path.exists(tmp_path / "step_000000002")
+
+
+def test_shape_mismatch_rejected(tmp_path):
+    CKPT.save(str(tmp_path), 0, _state())
+    bad = {"params": {"w": jnp.zeros((4, 4)), "b": jnp.zeros((8,))}, "step": jnp.int32(0)}
+    with pytest.raises(ValueError, match="shape mismatch"):
+        CKPT.restore(str(tmp_path), jax.eval_shape(lambda: bad))
+
+
+def test_missing_leaf_rejected(tmp_path):
+    CKPT.save(str(tmp_path), 0, _state())
+    extra = {"params": {"w": jnp.zeros((8, 8)), "b": jnp.zeros((8,)),
+                        "new": jnp.zeros((2,))}, "step": jnp.int32(0)}
+    with pytest.raises(KeyError):
+        CKPT.restore(str(tmp_path), jax.eval_shape(lambda: extra))
+
+
+def test_async_checkpointer(tmp_path):
+    ck = CKPT.AsyncCheckpointer(str(tmp_path), keep=2)
+    st = _state(7)
+    ck.save(7, st)
+    ck.wait()
+    restored, step = CKPT.restore(str(tmp_path), jax.eval_shape(lambda: st))
+    assert step == 7
+    _eq(st, restored)
+
+
+def test_async_overlapping_saves(tmp_path):
+    ck = CKPT.AsyncCheckpointer(str(tmp_path), keep=10)
+    for s in range(4):
+        ck.save(s, _state(s))   # each save waits for the previous
+    ck.wait()
+    assert CKPT.committed_steps(str(tmp_path)) == [0, 1, 2, 3]
+
+
+def test_restore_with_shardings_device_put(tmp_path):
+    """The elastic path: restore with explicit (here trivial) shardings."""
+    st = _state(1)
+    CKPT.save(str(tmp_path), 1, st)
+    shardings = jax.tree_util.tree_map(
+        lambda _: jax.sharding.SingleDeviceSharding(jax.devices()[0]), st)
+    restored, _ = CKPT.restore(str(tmp_path), jax.eval_shape(lambda: st),
+                               shardings=shardings)
+    _eq(st, restored)
+    for leaf in jax.tree_util.tree_leaves(restored):
+        assert leaf.sharding == jax.sharding.SingleDeviceSharding(jax.devices()[0])

@@ -1,0 +1,86 @@
+"""Assigned configs: exact hyperparameters + analytic size sanity."""
+import pytest
+
+from repro.configs.base import ARCH_IDS, SHAPES, applicable_shapes, get_arch
+
+# (arch, expected_total_params, tolerance) — vs published sizes
+SIZES = {
+    "grok_1_314b": (314e9, 0.15),
+    "llama4_scout_17b_a16e": (109e9, 0.30),   # 109B total / 17B active
+    "recurrentgemma_9b": (9e9, 0.35),
+    "deepseek_7b": (7e9, 0.15),
+    "granite_20b": (20e9, 0.20),
+    "qwen2_1_5b": (1.5e9, 0.25),
+    "nemotron_4_340b": (340e9, 0.15),
+    "mamba2_780m": (0.78e9, 0.25),
+    "llama_3_2_vision_90b": (88e9, 0.25),
+    "hubert_xlarge": (0.96e9, 0.25),
+}
+
+EXACT = {
+    "grok_1_314b": dict(num_layers=64, d_model=6144, num_heads=48, num_kv_heads=8,
+                        d_ff=32768, vocab_size=131072, num_experts=8, experts_per_token=2),
+    "llama4_scout_17b_a16e": dict(num_layers=48, d_model=5120, num_heads=40,
+                                  num_kv_heads=8, d_ff=8192, vocab_size=202048,
+                                  num_experts=16, experts_per_token=1),
+    "recurrentgemma_9b": dict(num_layers=38, d_model=4096, num_heads=16,
+                              num_kv_heads=1, d_ff=12288, vocab_size=256000),
+    "deepseek_7b": dict(num_layers=30, d_model=4096, num_heads=32, num_kv_heads=32,
+                        d_ff=11008, vocab_size=102400),
+    "granite_20b": dict(num_layers=52, d_model=6144, num_heads=48, num_kv_heads=1,
+                        d_ff=24576, vocab_size=49152),
+    "qwen2_1_5b": dict(num_layers=28, d_model=1536, num_heads=12, num_kv_heads=2,
+                       d_ff=8960, vocab_size=151936, qkv_bias=True),
+    "nemotron_4_340b": dict(num_layers=96, d_model=18432, num_heads=96,
+                            num_kv_heads=8, d_ff=73728, vocab_size=256000,
+                            mlp_act="relu2"),
+    "mamba2_780m": dict(num_layers=48, d_model=1536, ssm_state=128, vocab_size=50280),
+    "llama_3_2_vision_90b": dict(num_layers=100, d_model=8192, num_heads=64,
+                                 num_kv_heads=8, d_ff=28672, vocab_size=128256),
+    "hubert_xlarge": dict(num_layers=48, d_model=1280, num_heads=16,
+                          num_kv_heads=16, d_ff=5120, vocab_size=504,
+                          is_encoder=True),
+}
+
+
+@pytest.mark.parametrize("arch", ARCH_IDS)
+def test_exact_assigned_config(arch):
+    cfg = get_arch(arch)
+    for k, v in EXACT[arch].items():
+        assert getattr(cfg, k) == v, (arch, k, getattr(cfg, k), v)
+
+
+@pytest.mark.parametrize("arch", ARCH_IDS)
+def test_param_count_vs_published(arch):
+    cfg = get_arch(arch)
+    expect, tol = SIZES[arch]
+    n = cfg.param_count()
+    assert abs(n - expect) / expect < tol, (arch, n, expect)
+
+
+def test_shape_cells():
+    cells = {(a, s) for a in ARCH_IDS for s in applicable_shapes(get_arch(a))}
+    assert len(cells) == 31
+    # encoder-only: no decode shapes
+    assert ("hubert_xlarge", "decode_32k") not in cells
+    assert ("hubert_xlarge", "long_500k") not in cells
+    # long_500k only for sub-quadratic archs
+    longs = {a for (a, s) in cells if s == "long_500k"}
+    assert longs == {"mamba2_780m", "recurrentgemma_9b"}
+
+
+@pytest.mark.parametrize("arch", ARCH_IDS)
+def test_smoke_same_family(arch):
+    full, smoke = get_arch(arch), get_arch(arch, smoke=True)
+    assert full.family == smoke.family
+    assert full.stage_pattern == smoke.stage_pattern
+    assert (full.num_experts > 0) == (smoke.num_experts > 0)
+    assert full.is_encoder == smoke.is_encoder
+    assert smoke.param_count() < 1e7
+
+
+def test_moe_active_params():
+    g = get_arch("grok_1_314b")
+    assert g.active_param_count() < g.param_count()
+    d = get_arch("deepseek_7b")
+    assert d.active_param_count() == d.param_count()

@@ -1,0 +1,181 @@
+"""Theorem 1 (tensor low-bit series expansion): bounds, schedules, properties."""
+import jax
+import jax.numpy as jnp
+import numpy as np
+import pytest
+from hypothesis import given, settings, strategies as st
+
+from repro.core import expansion as E
+from repro.core import convergence as C
+
+BITS = (2, 3, 4, 8)
+
+
+def _rand(rng, shape, scale=1.0):
+    return jnp.array(rng.normal(size=shape).astype(np.float32) * scale)
+
+
+@pytest.mark.parametrize("bits", BITS)
+@pytest.mark.parametrize("terms", (1, 2, 3, 4))
+@pytest.mark.parametrize("symmetric", (True, False))
+@pytest.mark.parametrize("saturating", (True, False))
+def test_residual_bound(rng, bits, terms, symmetric, saturating):
+    m = _rand(rng, (48, 64))
+    et = E.expand(m, bits, terms, symmetric=symmetric, saturating=saturating,
+                  per_channel=True)
+    res = float(jnp.max(jnp.abs(E.residual(m, et))))
+    bound = float(E.theoretical_residual_bound(et))
+    noise = C.f32_noise_floor(float(jnp.max(jnp.abs(m))))
+    assert res <= bound * 1.01 + noise, (res, bound)
+
+
+@pytest.mark.parametrize("bits", BITS)
+def test_exponential_convergence(rng, bits):
+    """Each extra term shrinks the residual by the scale ratio (Theorem 1)."""
+    m = _rand(rng, (64, 64))
+    et = E.expand(m, bits, 4, saturating=False)
+    prev = None
+    ratio = E.scale_ratio(bits)
+    for t in range(1, 5):
+        r = float(jnp.max(jnp.abs(E.residual(m, et, t))))
+        if prev is not None and r > 1e-6:  # above f32 noise floor
+            assert r <= prev / ratio * 1.05, (t, r, prev)
+        prev = r
+
+
+def test_scale_schedule_dyadic(rng):
+    """scale_i = ratio * scale_{i+1} exactly (the paper's parallelism enabler)."""
+    m = _rand(rng, (32, 32))
+    for bits in BITS:
+        et = E.expand(m, bits, 3)
+        s = np.asarray(et.scales)
+        ratio = E.scale_ratio(bits)
+        np.testing.assert_allclose(s[0], ratio * s[1], rtol=1e-6)
+        np.testing.assert_allclose(s[1], ratio * s[2], rtol=1e-6)
+
+
+def test_closed_form_matches_sequential(rng):
+    """Paper §4 parallel extraction == sequential (up to f32 tie flips)."""
+    m = _rand(rng, (64, 96))
+    s1 = E.first_scale(E.clip_bound(m, 4, False, False), 4)
+    et = E.expand(m, 4, 3, symmetric=True, saturating=False)
+    for k in range(3):
+        cf = np.asarray(E.extract_plane_closed_form(m, s1, 4, k, False)).astype(int)
+        sq = np.asarray(et.planes[k]).astype(int)
+        d = np.abs(cf - sq)
+        assert d.max() <= 1
+        assert (d > 0).mean() < 0.01  # only isolated f32 rounding ties
+
+
+def test_planes_are_int_range(rng):
+    for bits in BITS:
+        et = E.expand(_rand(rng, (32, 48)), bits, 3, saturating=True)
+        p = np.asarray(et.planes).astype(int)
+        hi0 = 2 ** (bits - 1) - 1
+        hi = min(2 ** (bits - 1), 127)
+        assert np.abs(p[0]).max() <= hi0
+        assert np.abs(p[1:]).max() <= hi
+
+
+def test_negation_symmetry(rng):
+    """expand(-M) == -expand(M) for symmetric non-saturating quantizers."""
+    m = _rand(rng, (16, 16))
+    a = E.expand(m, 4, 3, symmetric=True, saturating=False)
+    b = E.expand(-m, 4, 3, symmetric=True, saturating=False)
+    np.testing.assert_array_equal(np.asarray(a.planes), -np.asarray(b.planes))
+
+
+def test_asymmetric_absorbs_offset(rng):
+    """A constant offset lands in bias*M_nsy, not in the planes."""
+    m = _rand(rng, (32, 32))
+    a = E.expand(m, 4, 2, symmetric=False, saturating=False)
+    b = E.expand(m + 7.5, 4, 2, symmetric=False, saturating=False)
+    np.testing.assert_array_equal(np.asarray(a.planes), np.asarray(b.planes))
+    np.testing.assert_allclose(float(b.bias - a.bias), 7.5, rtol=1e-5)
+
+
+def test_saturation_correction_exact(rng):
+    """M_sa + clipped series reconstructs heavy-tailed tensors to bound."""
+    m = _rand(rng, (64, 64))
+    m = m.at[0, 0].set(50.0).at[1, 1].set(-40.0)  # outliers
+    et = E.expand(m, 4, 3, saturating=True, keep_sat=True)
+    res = float(jnp.max(jnp.abs(E.residual(m, et))))
+    assert res <= float(E.theoretical_residual_bound(et)) * 1.01 + 1e-5
+    assert et.sat is not None and float(jnp.max(jnp.abs(et.sat))) > 1.0
+    # dropping sat loses exactly the clipped mass
+    et2 = E.drop_sat(et)
+    res2 = float(jnp.max(jnp.abs(E.residual(m, et2))))
+    assert res2 >= 1.0
+
+
+def test_per_channel_isolation(rng):
+    """Scaling one channel must not change other channels' planes."""
+    m = _rand(rng, (32, 8))
+    m2 = m.at[:, 3].multiply(100.0)
+    a = E.expand(m, 4, 2, per_channel=True)
+    b = E.expand(m2, 4, 2, per_channel=True)
+    other = [c for c in range(8) if c != 3]
+    np.testing.assert_array_equal(np.asarray(a.planes)[..., other],
+                                  np.asarray(b.planes)[..., other])
+
+
+def test_batched_expansion_matches_loop(rng):
+    m = _rand(rng, (4, 16, 24))
+    et = E.expand_batched(m, 4, 2, per_channel=True, saturating=True)
+    assert et.batch_dims == 1 and et.num_terms == 2
+    for e in range(4):
+        et_e = E.expand(m[e], 4, 2, per_channel=True, saturating=True)
+        np.testing.assert_array_equal(np.asarray(et.planes[e]), np.asarray(et_e.planes))
+    rec = E.reconstruct(et)
+    assert rec.shape == m.shape
+
+
+def test_truncate(rng):
+    m = _rand(rng, (16, 16))
+    et = E.expand(m, 4, 4)
+    t2 = E.truncate(et, 2)
+    assert t2.num_terms == 2
+    np.testing.assert_array_equal(np.asarray(t2.planes), np.asarray(et.planes[:2]))
+
+
+def test_auto_num_terms():
+    assert E.auto_num_terms(1.0, 4, threshold=1e-4) == 5   # 1/(2*16^4) < 1e-4
+    assert E.auto_num_terms(0.1, 8, threshold=1e-4) == 3   # ratio 128 for X=8
+    assert E.auto_num_terms(1e-6, 4, threshold=1e-4) == 1
+
+
+@settings(max_examples=40, deadline=None)
+@given(
+    bits=st.sampled_from(BITS),
+    terms=st.integers(1, 4),
+    rows=st.integers(1, 24),
+    cols=st.integers(1, 24),
+    scale=st.floats(1e-3, 1e3),
+    seed=st.integers(0, 2**31 - 1),
+    symmetric=st.booleans(),
+    saturating=st.booleans(),
+)
+def test_property_bound_holds(bits, terms, rows, cols, scale, seed, symmetric, saturating):
+    """Hypothesis: the Theorem-1 bound holds for arbitrary shapes/scales."""
+    r = np.random.default_rng(seed)
+    m = jnp.array((r.normal(size=(rows, cols)) * scale).astype(np.float32))
+    et = E.expand(m, bits, terms, symmetric=symmetric, saturating=saturating)
+    res = float(jnp.max(jnp.abs(E.residual(m, et))))
+    bound = float(E.theoretical_residual_bound(et))
+    noise = C.f32_noise_floor(float(jnp.max(jnp.abs(m))) + 1e-30)
+    assert res <= bound * 1.02 + noise + 1e-12
+
+
+@settings(max_examples=25, deadline=None)
+@given(seed=st.integers(0, 2**31 - 1), bits=st.sampled_from((2, 4)),
+       terms=st.integers(1, 3))
+def test_property_reconstruct_idempotent(seed, bits, terms):
+    """Expanding a reconstruction reproduces identical planes (fixed point)."""
+    r = np.random.default_rng(seed)
+    m = jnp.array(r.normal(size=(8, 8)).astype(np.float32))
+    et = E.expand(m, bits, terms, saturating=False)
+    rec = E.reconstruct(et)
+    et2 = E.expand(rec, bits, terms, saturating=False)
+    rec2 = E.reconstruct(et2)
+    np.testing.assert_allclose(np.asarray(rec), np.asarray(rec2),
+                               atol=float(E.theoretical_residual_bound(et)) * 0.1 + 1e-6)

@@ -1,0 +1,80 @@
+"""INT8 KV cache + int8 attention dots (beyond-paper serving feature)."""
+import jax
+import jax.numpy as jnp
+import numpy as np
+import pytest
+
+from repro.configs.base import get_arch
+from repro.models import attention as ATT
+from repro.models import model as M
+from repro.models.layers import FP, QuantContext
+
+QC8 = QuantContext(int8_kv=True)
+
+
+def test_quantize_kv_roundtrip(rng):
+    x = jnp.array(rng.normal(size=(2, 16, 4, 32)).astype(np.float32))
+    q, s = ATT.quantize_kv(x)
+    assert q.dtype == jnp.int8 and s.shape == (2, 16, 4)
+    rec = q.astype(jnp.float32) * s[..., None]
+    rel = float(jnp.linalg.norm(rec - x) / jnp.linalg.norm(x))
+    assert rel < 0.01
+
+
+def test_int8_decode_attention_close_to_fp(rng):
+    b, t, g, r, d = 2, 24, 2, 2, 16
+    h = g * r
+    q = jnp.array(rng.normal(size=(b, 1, h, d)).astype(np.float32))
+    k = jnp.array(rng.normal(size=(b, t, g, d)).astype(np.float32))
+    v = jnp.array(rng.normal(size=(b, t, g, d)).astype(np.float32))
+    k_new = jnp.array(rng.normal(size=(b, 1, g, d)).astype(np.float32))
+    v_new = jnp.array(rng.normal(size=(b, 1, g, d)).astype(np.float32))
+    clen = jnp.int32(20)
+    fp = ATT.decode_attention_appended(q, k, v, k_new, v_new, clen)
+    kq, ks = ATT.quantize_kv(k)
+    vq, vs = ATT.quantize_kv(v)
+    i8 = ATT.decode_attention_int8(q, kq, ks, vq, vs, k_new, v_new, clen)
+    rel = float(jnp.linalg.norm(i8 - fp) / jnp.linalg.norm(fp))
+    assert rel < 0.03, rel
+
+
+@pytest.mark.parametrize("arch", ("qwen2_1_5b", "grok_1_314b"))
+def test_int8_kv_decode_consistency(rng, arch):
+    """int8-kv decode stays close to FP decode; inplace == scan exactly."""
+    cfg = get_arch(arch, smoke=True)
+    params = M.init_params(jax.random.PRNGKey(0), cfg)
+    b, s = 2, 20
+    tokens = jnp.array(rng.integers(0, cfg.vocab_size, (b, s + 2)), jnp.int32)
+    pre = {"tokens": tokens[:, :s]}
+    _, c_fp = M.prefill(params, pre, cfg, FP, s_max=32)
+    _, c_i8 = M.prefill(params, pre, cfg, QC8, s_max=32)
+    # cache layout: int8 planes + scales
+    k_leaf = c_i8["stages"][f"b0_{cfg.stage_pattern[0]}"]["k"]
+    assert k_leaf.dtype == jnp.int8
+    clen = jnp.int32(s)
+    for t in range(2):
+        tok = tokens[:, s + t:s + t + 1]
+        l_fp, c_fp = M.decode_step(params, tok, c_fp, clen, cfg, FP)
+        l_i8, c_i8 = M.decode_step(params, tok, c_i8, clen, cfg, QC8)
+        rel = float(jnp.linalg.norm(l_i8 - l_fp) / jnp.linalg.norm(l_fp))
+        assert rel < 0.08, (t, rel)
+        clen = clen + 1
+
+
+def test_int8_kv_inplace_equals_scan(rng):
+    cfg = get_arch("qwen2_1_5b", smoke=True)
+    params = M.init_params(jax.random.PRNGKey(0), cfg)
+    tokens = jnp.array(rng.integers(0, cfg.vocab_size, (2, 12)), jnp.int32)
+    _, caches = M.prefill(params, {"tokens": tokens[:, :10]}, cfg, QC8, s_max=24)
+    l1, _ = M.decode_step(params, tokens[:, 10:11], caches, jnp.int32(10), cfg, QC8, inplace=True)
+    l2, _ = M.decode_step(params, tokens[:, 10:11], caches, jnp.int32(10), cfg, QC8, inplace=False)
+    np.testing.assert_array_equal(np.asarray(l1), np.asarray(l2))
+
+
+def test_int8_cache_specs_and_sizes():
+    cfg = get_arch("deepseek_7b")
+    c8 = jax.eval_shape(lambda: M.init_cache(cfg, 8, 1024, int8_kv=True))
+    cf = jax.eval_shape(lambda: M.init_cache(cfg, 8, 1024))
+    b8 = sum(l.size * l.dtype.itemsize for l in jax.tree_util.tree_leaves(c8))
+    bf = sum(l.size * l.dtype.itemsize for l in jax.tree_util.tree_leaves(cf))
+    assert b8 < 0.6 * bf  # int8 + f32 scales ~= 0.52x of bf16

@@ -1,0 +1,102 @@
+"""Pallas kernels (interpret mode) vs pure-jnp oracles: shape/dtype sweeps."""
+import jax
+import jax.numpy as jnp
+import numpy as np
+import pytest
+from hypothesis import given, settings, strategies as st
+
+from repro.core import expansion as E
+from repro.kernels import ops, ref
+
+BITS = (2, 3, 4, 8)
+SHAPES_Q = [(8, 16), (33, 65), (128, 128), (256, 300), (1, 7)]
+SHAPES_MM = [(8, 16, 8), (32, 48, 24), (64, 128, 96), (129, 257, 65)]
+
+
+@pytest.mark.parametrize("shape", SHAPES_Q)
+@pytest.mark.parametrize("bits", BITS)
+@pytest.mark.parametrize("terms", (1, 3))
+def test_residual_quantize_kernel_matches_ref(rng, shape, bits, terms):
+    x = jnp.array(rng.normal(size=shape).astype(np.float32) * 3.0)
+    s1 = E.first_scale(jnp.max(jnp.abs(x)), bits)
+    pk = ops.residual_quantize(x, s1, bits=bits, terms=terms, use_kernel=True)
+    pr = ops.residual_quantize(x, s1, bits=bits, terms=terms, use_kernel=False)
+    np.testing.assert_array_equal(np.asarray(pk), np.asarray(pr))
+
+
+@pytest.mark.parametrize("in_dtype", (jnp.float32, jnp.bfloat16))
+def test_residual_quantize_dtypes(rng, in_dtype):
+    x = jnp.array(rng.normal(size=(32, 32)).astype(np.float32)).astype(in_dtype)
+    s1 = E.first_scale(jnp.max(jnp.abs(x.astype(jnp.float32))), 4)
+    pk = ops.residual_quantize(x.astype(jnp.float32), s1, bits=4, terms=2, use_kernel=True)
+    pr = ops.residual_quantize(x.astype(jnp.float32), s1, bits=4, terms=2, use_kernel=False)
+    np.testing.assert_array_equal(np.asarray(pk), np.asarray(pr))
+    assert pk.dtype == jnp.int8
+
+
+@pytest.mark.parametrize("m,k,n", SHAPES_MM)
+@pytest.mark.parametrize("a_bits", (2, 4, 8))
+@pytest.mark.parametrize("tw", (1, 2))
+def test_series_matmul_kernel_matches_ref(rng, m, k, n, a_bits, tw):
+    x = jnp.array(rng.normal(size=(m, k)).astype(np.float32))
+    w = jnp.array(rng.normal(size=(k, n)).astype(np.float32))
+    w_et = E.expand(w, 4, tw, per_channel=True, saturating=False)
+    s1 = E.first_scale(jnp.max(jnp.abs(x)), a_bits)
+    kw = dict(a_bits=a_bits, a_terms=3)
+    yk = ops.series_matmul(x, s1, w_et.planes, w_et.scales, use_kernel=True, **kw)
+    yr = ops.series_matmul(x, s1, w_et.planes, w_et.scales, use_kernel=False, **kw)
+    np.testing.assert_allclose(np.asarray(yk), np.asarray(yr), rtol=1e-5, atol=1e-5)
+
+
+def test_series_matmul_per_tensor_scales(rng):
+    x = jnp.array(rng.normal(size=(16, 32)).astype(np.float32))
+    w = jnp.array(rng.normal(size=(32, 8)).astype(np.float32))
+    w_et = E.expand(w, 4, 2, per_channel=False, saturating=False)
+    s1 = E.first_scale(jnp.max(jnp.abs(x)), 4)
+    yk = ops.series_matmul(x, s1, w_et.planes, w_et.scales, a_bits=4, a_terms=2, use_kernel=True)
+    yr = ops.series_matmul(x, s1, w_et.planes, w_et.scales, a_bits=4, a_terms=2, use_kernel=False)
+    np.testing.assert_allclose(np.asarray(yk), np.asarray(yr), rtol=1e-5, atol=1e-5)
+
+
+def test_series_matmul_approximates_fp(rng):
+    """The kernel's output converges to x@w as terms grow (Eq. 3)."""
+    x = jnp.array(rng.normal(size=(32, 64)).astype(np.float32))
+    w = jnp.array(rng.normal(size=(64, 32)).astype(np.float32))
+    errs = []
+    for tw, ta in ((1, 1), (2, 2), (3, 3)):
+        w_et = E.expand(w, 4, tw, per_channel=True, saturating=False)
+        s1 = E.first_scale(jnp.max(jnp.abs(x)), 4)
+        y = ops.series_matmul(x, s1, w_et.planes, w_et.scales, a_bits=4, a_terms=ta,
+                              use_kernel=True)
+        errs.append(float(jnp.linalg.norm(y - x @ w)))
+    assert errs[0] > errs[1] > errs[2], errs
+
+
+def test_block_size_invariance(rng):
+    """Tiling must not change results (pure tiling, no cross-tile state)."""
+    x = jnp.array(rng.normal(size=(100, 120)).astype(np.float32))
+    w = jnp.array(rng.normal(size=(120, 60)).astype(np.float32))
+    w_et = E.expand(w, 4, 2, per_channel=True, saturating=False)
+    s1 = E.first_scale(jnp.max(jnp.abs(x)), 4)
+    outs = []
+    for bm, bn, bk in ((32, 32, 32), (64, 16, 64), (128, 128, 128)):
+        outs.append(np.asarray(ops.series_matmul(
+            x, s1, w_et.planes, w_et.scales, a_bits=4, a_terms=2, use_kernel=True,
+            block_m=bm, block_n=bn, block_k=bk)))
+    # f32 accumulation order differs across K tilings: ulp-level tolerance
+    np.testing.assert_allclose(outs[0], outs[1], rtol=1e-4, atol=1e-5)
+    np.testing.assert_allclose(outs[0], outs[2], rtol=1e-4, atol=1e-5)
+
+
+@settings(max_examples=20, deadline=None)
+@given(m=st.integers(1, 40), k=st.integers(1, 60), n=st.integers(1, 40),
+       bits=st.sampled_from((2, 4, 8)), seed=st.integers(0, 2**31 - 1))
+def test_property_kernel_ref_equal(m, k, n, bits, seed):
+    r = np.random.default_rng(seed)
+    x = jnp.array(r.normal(size=(m, k)).astype(np.float32))
+    w = jnp.array(r.normal(size=(k, n)).astype(np.float32))
+    w_et = E.expand(w, bits, 2, per_channel=True, saturating=False)
+    s1 = E.first_scale(jnp.max(jnp.abs(x)) + 1e-30, bits)
+    yk = ops.series_matmul(x, s1, w_et.planes, w_et.scales, a_bits=bits, a_terms=2, use_kernel=True)
+    yr = ops.series_matmul(x, s1, w_et.planes, w_et.scales, a_bits=bits, a_terms=2, use_kernel=False)
+    np.testing.assert_allclose(np.asarray(yk), np.asarray(yr), rtol=1e-5, atol=1e-5)

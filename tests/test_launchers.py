@@ -1,0 +1,49 @@
+"""CLI launchers: train.py (incl. crash/restart + compression) and serve.py."""
+import numpy as np
+import pytest
+
+from repro.launch import serve as serve_cli
+from repro.launch import train as train_cli
+
+
+def test_train_cli_runs_and_restarts(tmp_path):
+    args = ["--arch", "qwen2_1_5b", "--smoke", "--seq", "32", "--batch", "4",
+            "--ckpt-dir", str(tmp_path / "ck"), "--ckpt-every", "2"]
+    # first life: stop after 3 of 6 steps
+    train_cli.main(args + ["--steps", "6", "--max-steps-this-life", "3"])
+    # second life: restores and finishes
+    state = train_cli.main(args + ["--steps", "6"])
+    assert state is not None
+    from repro.dist import checkpoint as CKPT
+    assert CKPT.latest_step(str(tmp_path / "ck")) == 5
+
+
+def test_train_cli_with_compression(tmp_path):
+    state = train_cli.main([
+        "--arch", "qwen2_1_5b", "--smoke", "--steps", "3", "--seq", "32",
+        "--batch", "4", "--compress-grads", "--ckpt-dir", str(tmp_path / "ck2")])
+    assert state is not None
+    # compressed path carries the error-feedback buffer in the opt state
+    assert "err" in state["opt"]
+
+
+def test_train_cli_grad_accum(tmp_path):
+    train_cli.main(["--arch", "mamba2_780m", "--smoke", "--steps", "2",
+                    "--seq", "32", "--batch", "4", "--grad-accum", "2",
+                    "--remat", "--ckpt-dir", str(tmp_path / "ck3")])
+
+
+def test_serve_cli(capsys):
+    out = serve_cli.main(["--arch", "qwen2_1_5b", "--smoke", "--requests", "3",
+                          "--prompt-len", "8", "--max-new", "4", "--max-seq", "32"])
+    assert len(out) == 3
+    assert all(len(v) == 4 for v in out.values())
+    text = capsys.readouterr().out
+    assert "quantization time" in text
+
+
+def test_serve_cli_fp(capsys):
+    out = serve_cli.main(["--arch", "recurrentgemma_9b", "--smoke", "--fp",
+                          "--requests", "2", "--prompt-len", "8", "--max-new",
+                          "3", "--max-seq", "32"])
+    assert len(out) == 2

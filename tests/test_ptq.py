@@ -1,0 +1,102 @@
+"""Model-level PTQ driver: pytree walk, first/last 8-bit, size stats,
+end-to-end output closeness, quant-time."""
+import jax
+import jax.numpy as jnp
+import numpy as np
+import pytest
+
+from repro.configs.base import get_arch
+from repro.core import expansion as E
+from repro.core.expansion import ExpandedTensor
+from repro.core.policy import ExpansionPolicy, W2A2, W4A4, W8A8
+from repro.core.ptq import (expand_params, expand_params_timed, expansion_stats,
+                            max_weight_residual)
+from repro.models import model as M
+from repro.models.layers import QuantContext
+
+
+def _tiny_params(rng):
+    r = np.random.default_rng(0)
+    return {
+        "embed": {"embedding": jnp.array(r.normal(size=(64, 16)).astype(np.float32))},
+        "stages": {"b0_attn": {"attn": {"q": {"kernel": jnp.array(r.normal(size=(2, 16, 16)).astype(np.float32))}},
+                               "ln": {"scale": jnp.ones((2, 16))}}},
+        "lm_head": {"kernel": jnp.array(r.normal(size=(16, 64)).astype(np.float32))},
+    }
+
+
+def test_walk_selects_gemm_weights(rng):
+    q = expand_params(_tiny_params(rng), W4A4)
+    assert isinstance(q["stages"]["b0_attn"]["attn"]["q"]["kernel"], ExpandedTensor)
+    assert isinstance(q["lm_head"]["kernel"], ExpandedTensor)
+    # embedding gather table & norms stay FP
+    assert not isinstance(q["embed"]["embedding"], ExpandedTensor)
+    assert not isinstance(q["stages"]["b0_attn"]["ln"]["scale"], ExpandedTensor)
+
+
+def test_first_last_8bit(rng):
+    q = expand_params(_tiny_params(rng), W4A4)
+    assert q["lm_head"]["kernel"].bits == 8       # last layer protected (§5.1)
+    assert q["stages"]["b0_attn"]["attn"]["q"]["kernel"].bits == 4
+
+
+def test_stacked_stage_weights_get_batch_dims(rng):
+    q = expand_params(_tiny_params(rng), W4A4)
+    et = q["stages"]["b0_attn"]["attn"]["q"]["kernel"]
+    assert et.batch_dims == 1                      # per-layer quantizers
+    assert et.planes.shape[0] == 2
+
+
+def test_mixed_precision_override(rng):
+    pol = ExpansionPolicy(w_bits=4, a_bits=4, mixed=(("lm_head", (2, 8)),),
+                          first_last_bits=4)
+    q = expand_params(_tiny_params(rng), pol)
+    assert q["lm_head"]["kernel"].bits == 2
+
+
+def test_expansion_stats(rng):
+    q = expand_params(_tiny_params(rng), W4A4)
+    st = expansion_stats(q)
+    assert st["expanded_leaves"] == 2
+    assert st["compression"] > 1.0                 # W4 planes beat fp32 storage
+
+
+def test_max_weight_residual_threshold(rng):
+    p = _tiny_params(rng)
+    res = []
+    for terms in (1, 2, 3):
+        pol = ExpansionPolicy(w_bits=4, a_bits=4, w_terms=terms, first_last_terms=terms)
+        res.append(float(max_weight_residual(p, expand_params(p, pol))))
+    assert res[0] > res[1] > res[2]
+
+
+@pytest.mark.parametrize("pol,tol", [(W8A8, 0.05), (W4A4, 0.15)])
+def test_e2e_model_output_close(rng, pol, tol):
+    """Quantized smoke model's logits stay close to FP — the PTQ contract."""
+    cfg = get_arch("qwen2_1_5b", smoke=True)
+    params = M.init_params(jax.random.PRNGKey(0), cfg)
+    tokens = jnp.array(rng.integers(0, cfg.vocab_size, (2, 24)), jnp.int32)
+    y_fp = M.forward(params, {"tokens": tokens}, cfg)
+    q = expand_params(params, pol)
+    y_q = M.forward(q, {"tokens": tokens}, cfg, QuantContext(policy=pol))
+    rel = float(jnp.linalg.norm(y_q - y_fp) / jnp.linalg.norm(y_fp))
+    assert rel < tol, rel
+    # top-1 predictions mostly preserved
+    agree = float(jnp.mean((jnp.argmax(y_q, -1) == jnp.argmax(y_fp, -1)).astype(jnp.float32)))
+    assert agree > 0.8, agree
+
+
+def test_quant_time_is_fast(rng):
+    """Calibration-free expansion is seconds, not hours (paper Table 3)."""
+    cfg = get_arch("qwen2_1_5b", smoke=True)
+    params = M.init_params(jax.random.PRNGKey(0), cfg)
+    _, seconds = expand_params_timed(params, W4A4)
+    assert seconds < 60.0
+
+
+def test_expand_is_deterministic(rng):
+    p = _tiny_params(rng)
+    q1 = expand_params(p, W4A4)
+    q2 = expand_params(p, W4A4)
+    jax.tree_util.tree_map(
+        lambda a, b: np.testing.assert_array_equal(np.asarray(a), np.asarray(b)), q1, q2)
