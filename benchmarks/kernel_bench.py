@@ -2,25 +2,48 @@
 the kernel body in Python, so us_per_call documents the harness, NOT TPU
 perf; the TPU-side analysis lives in roofline.py).  Cross-checks: fused
 kernel == ref == fp32 within tolerance at benchmark sizes.
+
+Besides the CSV rows, every case appends a structured record to ``RECORDS``
+(us/call, maxerr vs ref, MXU dot dispatches per block from jaxpr
+inspection, the autotuned block config, and the modeled HBM traffic of the
+single-pass pipeline vs the seed's) — benchmarks/run.py dumps these to
+``BENCH_kernels.json`` so the perf trajectory is tracked per PR.
 """
 from __future__ import annotations
+
+from typing import Any, Dict, List
 
 import jax
 import jax.numpy as jnp
 import numpy as np
 
 from benchmarks.common import Row, time_fn
+from benchmarks.roofline import series_gemm_traffic
 from repro.core import expansion as E
 from repro.kernels import ops
 from repro.kernels.pack import pack_int4
 
+RECORDS: List[Dict[str, Any]] = []
+
+
+def _record(name: str, us: float, maxerr: float, dispatches: int,
+            cfg: ops.BlockConfig, extra: Dict[str, Any]) -> None:
+    RECORDS.append({
+        "name": name, "us_per_call": round(us, 2),
+        "maxerr_vs_ref": maxerr, "gemm_dispatches_per_block": dispatches,
+        "block_m": cfg.block_m, "block_n": cfg.block_n, "block_k": cfg.block_k,
+        **extra,
+    })
+
 
 def run():
+    RECORDS.clear()
     rng = np.random.default_rng(0)
+    ta, tw = 3, 2
     for m, k, n in ((128, 512, 256), (256, 1024, 512)):
         x = jnp.array(rng.normal(size=(m, k)).astype(np.float32))
         w = jnp.array(rng.normal(size=(k, n)).astype(np.float32))
-        w_et = E.expand(w, 4, 2, per_channel=True)
+        w_et = E.expand(w, 4, tw, per_channel=True)
         s1 = E.first_scale(jnp.max(jnp.abs(x)), 4)
 
         fp = jax.jit(lambda a, b: a @ b)
@@ -28,26 +51,47 @@ def run():
         Row.add(f"kernel/fp_matmul/{m}x{k}x{n}", us_fp, "ref")
 
         f_kernel = lambda: ops.series_matmul(x, s1, w_et.planes, w_et.scales,
-                                             a_bits=4, a_terms=3, use_kernel=True)
+                                             a_bits=4, a_terms=ta, use_kernel=True)
         f_ref = lambda: ops.series_matmul(x, s1, w_et.planes, w_et.scales,
-                                          a_bits=4, a_terms=3, use_kernel=False)
+                                          a_bits=4, a_terms=ta, use_kernel=False)
         us_k = time_fn(f_kernel)
         us_r = time_fn(f_ref)
         err = float(jnp.max(jnp.abs(f_kernel() - f_ref())))
-        Row.add(f"kernel/series_matmul_pallas/{m}x{k}x{n}", us_k, f"maxerr_vs_ref={err:.1e}")
+        dispatches = ops.gemm_dispatch_count(
+            ops.series_matmul, x, s1, w_et.planes, w_et.scales,
+            a_bits=4, a_terms=ta, use_kernel=True)
+        cfg = ops.select_block_config("series", m, k, n, ta, tw)
+        traffic = series_gemm_traffic(m, k, n, ta, tw, block_m=cfg.block_m,
+                                      block_n=cfg.block_n, block_k=cfg.block_k)
+        Row.add(f"kernel/series_matmul_pallas/{m}x{k}x{n}", us_k,
+                f"maxerr_vs_ref={err:.1e} dispatches={dispatches}")
         Row.add(f"kernel/series_matmul_jnp/{m}x{k}x{n}", us_r, "oracle")
+        _record(f"series_matmul/{m}x{k}x{n}", us_k, err, dispatches, cfg, {
+            "ta": ta, "tw": tw, "us_ref": round(us_r, 2), "us_fp": round(us_fp, 2),
+            "model_bytes_single_pass": traffic["single_pass"]["bytes"],
+            "model_bytes_seed": traffic["seed_fused"]["bytes"],
+            "model_quant_elems": traffic["single_pass"]["quant_elems"],
+        })
 
-        fq = lambda: ops.residual_quantize(x, s1, bits=4, terms=3, use_kernel=True)
-        Row.add(f"kernel/residual_quantize/{m}x{k}", time_fn(fq), "3 planes")
+        fq = lambda: ops.residual_quantize(x, s1, bits=4, terms=ta, use_kernel=True)
+        us_q = time_fn(fq)
+        Row.add(f"kernel/residual_quantize/{m}x{k}", us_q, f"{ta} planes")
+        _record(f"residual_quantize/{m}x{k}", us_q, 0.0, 0,
+                ops.select_block_config("quant", m, 0, k, ta, 0), {"terms": ta})
 
         # packed INT4 weight-only GEMM (W4A16 serving kernel)
-        et4 = E.expand(w, 4, 2, per_channel=True, pack_safe=True)
+        et4 = E.expand(w, 4, tw, per_channel=True, pack_safe=True)
         packed = pack_int4(et4.planes)
         fp4 = lambda: ops.packed_dequant_matmul(x, packed, et4.scales, use_kernel=True)
         err4 = float(jnp.max(jnp.abs(fp4() - ops.packed_dequant_matmul(
             x, packed, et4.scales, use_kernel=False))))
-        Row.add(f"kernel/packed_dequant_matmul/{m}x{k}x{n}", time_fn(fp4),
-                f"maxerr_vs_ref={err4:.1e} bytes=0.5/val/term")
+        us_p = time_fn(fp4)
+        disp4 = ops.gemm_dispatch_count(
+            ops.packed_dequant_matmul, x, packed, et4.scales, use_kernel=True)
+        Row.add(f"kernel/packed_dequant_matmul/{m}x{k}x{n}", us_p,
+                f"maxerr_vs_ref={err4:.1e} dispatches={disp4} bytes=0.5/val/term")
+        _record(f"packed_dequant_matmul/{m}x{k}x{n}", us_p, err4, disp4,
+                ops.select_block_config("dequant", m, k, n, 0, tw), {"tw": tw})
 
 
 if __name__ == "__main__":

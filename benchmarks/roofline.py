@@ -35,6 +35,60 @@ LINK_BW = 50e9
 RESULTS_DIR = os.path.join(os.path.dirname(__file__), "results", "dryrun")
 
 
+def _cdiv(a: int, b: int) -> int:
+    return -(-a // b)
+
+
+def series_gemm_traffic(m: int, k: int, n: int, ta: int, tw: int, *,
+                        block_m: int = 256, block_n: int = 256,
+                        block_k: int = 512) -> Dict[str, float]:
+    """Analytic HBM traffic + quantize work for the series GEMM, per pipeline.
+
+    Three pipelines (kernels/series_matmul.py, DESIGN.md §3):
+
+      naive        — residual planes materialized to HBM, ta*tw separate
+                     plane GEMMs, f32 output read-modify-written per K step;
+      seed_fused   — the seed kernel: planes quantized in VMEM (never hit
+                     HBM) but re-quantized per N step, and the output block
+                     read-modify-written once per K step;
+      single_pass  — this PR: VMEM scratch accumulation (output written
+                     once), quantize-once plane reuse across N blocks.
+
+    ``quant_elems`` counts round/clip residual-chain element-passes (VPU
+    work, not HBM bytes) — the quantize-once win shows up there.
+    Returns bytes (f32 activations/outputs, int8 planes).
+    """
+    nbm, nbn, nbk = _cdiv(m, block_m), _cdiv(n, block_n), _cdiv(k, block_k)
+    x_stream = 4.0 * m * k * nbn          # activation block per (j, kk) step
+    w_stream = 1.0 * tw * k * n * nbm     # int8 weight planes per M strip
+    scales = 4.0 * tw * n * nbm * nbk
+    out_once = 4.0 * m * n
+    out_rmw = 2.0 * 4.0 * m * n * nbk     # read+write per K step
+
+    naive = {
+        "bytes": (4.0 * m * k + ta * m * k)            # quantize pass
+        + ta * tw * (1.0 * m * k * nbn + 1.0 * k * n * nbm) + out_rmw,
+        "quant_elems": float(ta * m * k),
+        "mxu_dispatches_per_block": float(ta * tw),
+    }
+    seed_fused = {
+        "bytes": x_stream + w_stream + scales + out_rmw,
+        "quant_elems": float(ta * m * k) * nbn,        # re-quantized per N step
+        "mxu_dispatches_per_block": float(ta * tw),
+    }
+    single_pass = {
+        "bytes": x_stream + w_stream + scales + out_once,
+        "quant_elems": float(ta * m * k),              # quantize-once reuse
+        "mxu_dispatches_per_block": float(ta),         # stacked-plane GEMM
+    }
+    return {
+        "naive": naive, "seed_fused": seed_fused, "single_pass": single_pass,
+        "bytes_saved_vs_seed": seed_fused["bytes"] - single_pass["bytes"],
+        "t_memory_single_pass": single_pass["bytes"] / HBM_BW,
+        "t_memory_seed": seed_fused["bytes"] / HBM_BW,
+    }
+
+
 def wire_bytes(collectives: Dict[str, Any]) -> float:
     total = 0.0
     for kind, v in collectives.items():

@@ -1,10 +1,13 @@
 """Benchmark harness: one module per paper table/figure + kernels + roofline.
-Prints ``name,us_per_call,derived`` CSV rows (stdout).  Run:
+Prints ``name,us_per_call,derived`` CSV rows (stdout) and writes the kernel
+perf trajectory to ``benchmarks/results/BENCH_kernels.json``.  Run:
     PYTHONPATH=src python -m benchmarks.run [--only tableN]
 """
 from __future__ import annotations
 
 import argparse
+import json
+import os
 import sys
 import traceback
 
@@ -14,23 +17,47 @@ MODULES = (
     "roofline", "perf_variants",
 )
 
+BENCH_JSON = os.path.join(os.path.dirname(__file__), "results", "BENCH_kernels.json")
+
+
+def _write_kernel_json(path: str) -> None:
+    from benchmarks import kernel_bench
+    if not kernel_bench.RECORDS:
+        return
+    os.makedirs(os.path.dirname(path), exist_ok=True)
+    payload = {
+        "backend": "interpret-cpu",
+        "note": "us_per_call times the interpret-mode harness (NOT TPU perf);"
+                " dispatch counts and modeled bytes are backend-invariant",
+        "records": kernel_bench.RECORDS,
+    }
+    with open(path, "w") as f:
+        json.dump(payload, f, indent=2)
+    print(f"wrote {path} ({len(kernel_bench.RECORDS)} records)", file=sys.stderr)
+
 
 def main() -> None:
     ap = argparse.ArgumentParser()
     ap.add_argument("--only", default="", help="substring filter on module name")
+    ap.add_argument("--json-out", default=BENCH_JSON,
+                    help="where to write BENCH_kernels.json")
     args = ap.parse_args()
     print("name,us_per_call,derived")
     failed = []
+    ran_kernels = False
     for mod_name in MODULES:
         if args.only and args.only not in mod_name:
             continue
         try:
             mod = __import__(f"benchmarks.{mod_name}", fromlist=["run"])
             mod.run()
+            ran_kernels = ran_kernels or mod_name == "kernel_bench"
         except Exception as e:
             failed.append(mod_name)
             print(f"{mod_name},0,ERROR:{type(e).__name__}:{e}", file=sys.stderr)
             traceback.print_exc(file=sys.stderr)
+    if ran_kernels:
+        _write_kernel_json(args.json_out)
     if failed:
         raise SystemExit(f"benchmark modules failed: {failed}")
 

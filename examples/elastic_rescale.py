@@ -24,8 +24,8 @@ from repro.train.train_step import TrainConfig, make_train_step
 
 
 def make_mesh(d, m):
-    return jax.make_mesh((d, m), ("data", "model"),
-                         axis_types=(jax.sharding.AxisType.Auto,) * 2)
+    from repro.launch.mesh import make_host_mesh
+    return make_host_mesh((d, m), ("data", "model"))
 
 
 def main():

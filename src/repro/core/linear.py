@@ -29,7 +29,7 @@ import jax.numpy as jnp
 from repro.core import expansion as E
 from repro.core.expansion import ExpandedTensor
 from repro.core.policy import ExpansionPolicy
-from repro.kernels import ops, ref
+from repro.kernels import ops
 
 
 def expand_weight(w: jnp.ndarray, policy: ExpansionPolicy, *, bits: Optional[int] = None,
@@ -100,7 +100,7 @@ def expanded_apply(
 
     if a_terms <= 0 or a_bits >= 16:
         # weight-only quantization: exact FP activation x reconstructed weight
-        out = ref.dequant_matmul_ref(
+        out = ops.dequant_matmul(
             x2d, w_et.planes, w_et.scales if w_et.per_channel else w_et.scales[:, None] * jnp.ones((1, n)))
         if w_et.bias is not None:
             out = out + jnp.sum(x2d, axis=-1, keepdims=True) * w_et.bias

@@ -1,0 +1,2 @@
+"""Distributed-systems substrate: checkpointing, fault handling, sharding
+rules, gradient compression, and the Theorem-2 term-parallel executors."""

@@ -1,0 +1,191 @@
+"""Atomic, resumable checkpointing (single-host; npz per step).
+
+Layout: ``<dir>/step_%09d/state.npz`` plus a ``.DONE`` commit marker written
+last — a crash mid-save leaves an uncommitted directory that readers ignore
+and ``gc_old`` removes.  Leaves are keyed by their pytree key-path, so
+restore can validate structure (missing leaf -> KeyError) and shapes
+(mismatch -> ValueError) against an ``eval_shape`` template before touching
+the model.  ``AsyncCheckpointer`` overlaps the write with training (each
+save waits for the previous one — at most one outstanding write).
+"""
+from __future__ import annotations
+
+import os
+import shutil
+import threading
+from typing import Any, List, Optional, Tuple
+
+import jax
+import numpy as np
+
+PyTree = Any
+
+_STEP_PREFIX = "step_"
+_DONE = ".DONE"
+_FILE = "state.npz"
+
+
+def _step_dir(directory: str, step: int) -> str:
+    return os.path.join(directory, f"{_STEP_PREFIX}{step:09d}")
+
+
+def _flatten(tree: PyTree):
+    leaves, treedef = jax.tree_util.tree_flatten_with_path(tree)
+    return [(jax.tree_util.keystr(path), leaf) for path, leaf in leaves], treedef
+
+
+# npz silently degrades extension dtypes (bfloat16, float8_*) to void — store
+# those as flat raw bytes plus "<key>::dtype" / "<key>::shape" sidecar
+# entries so the exact dtype round-trips.
+_DTYPE_KEY = "::dtype"
+_SHAPE_KEY = "::shape"
+
+
+def _encode_leaf(key: str, arr: np.ndarray, out: dict) -> None:
+    if arr.dtype.kind in "biufc":
+        out[key] = arr
+        return
+    out[key] = arr.reshape(-1).view(np.uint8)
+    out[key + _DTYPE_KEY] = np.array(arr.dtype.name)
+    out[key + _SHAPE_KEY] = np.array(arr.shape, np.int64)
+
+
+def _decode_leaf(key: str, data) -> np.ndarray:
+    arr = data[key]
+    if key + _DTYPE_KEY not in data.files:
+        return arr
+    import ml_dtypes
+    dtype = np.dtype(getattr(ml_dtypes, str(data[key + _DTYPE_KEY])))
+    shape = tuple(int(d) for d in data[key + _SHAPE_KEY])
+    return arr.view(dtype).reshape(shape)
+
+
+def committed_steps(directory: str) -> List[int]:
+    """Sorted steps with a commit marker (crashed saves are invisible)."""
+    if not os.path.isdir(directory):
+        return []
+    out = []
+    for name in os.listdir(directory):
+        if name.startswith(_STEP_PREFIX) and \
+                os.path.exists(os.path.join(directory, name, _DONE)):
+            out.append(int(name[len(_STEP_PREFIX):]))
+    return sorted(out)
+
+
+def latest_step(directory: str) -> Optional[int]:
+    steps = committed_steps(directory)
+    return steps[-1] if steps else None
+
+
+def gc_old(directory: str, keep: int) -> None:
+    """Remove all but the newest ``keep`` committed steps AND any
+    uncommitted (crashed) step directories — including ``step_*.tmp``
+    leftovers from a save killed mid-write."""
+    if not os.path.isdir(directory):
+        return
+    committed = committed_steps(directory)
+    drop = set(committed[:-keep] if keep else committed)
+    for name in os.listdir(directory):
+        if not name.startswith(_STEP_PREFIX):
+            continue
+        path = os.path.join(directory, name)
+        try:
+            step = int(name[len(_STEP_PREFIX):])
+        except ValueError:           # crashed save's step_*.tmp directory
+            shutil.rmtree(path, ignore_errors=True)
+            continue
+        if step in drop or not os.path.exists(os.path.join(path, _DONE)):
+            shutil.rmtree(path, ignore_errors=True)
+
+
+def save(directory: str, step: int, state: PyTree, keep: Optional[int] = None) -> None:
+    """Atomic commit: write into a temp dir, fsync, rename, mark .DONE."""
+    os.makedirs(directory, exist_ok=True)
+    final = _step_dir(directory, step)
+    tmp = final + ".tmp"
+    if os.path.exists(tmp):
+        shutil.rmtree(tmp)
+    os.makedirs(tmp)
+    flat, _ = _flatten(state)
+    arrays: dict = {}
+    for key, leaf in flat:
+        _encode_leaf(key, np.asarray(jax.device_get(leaf)), arrays)
+    with open(os.path.join(tmp, _FILE), "wb") as f:
+        np.savez(f, **arrays)
+        f.flush()
+        os.fsync(f.fileno())
+    if os.path.exists(final):
+        shutil.rmtree(final)
+    os.replace(tmp, final)
+    with open(os.path.join(final, _DONE), "w") as f:
+        f.write("ok\n")
+    if keep:
+        gc_old(directory, keep)
+
+
+def restore(directory: str, template: PyTree,
+            shardings: Optional[PyTree] = None) -> Tuple[PyTree, int]:
+    """Load the latest committed step into the ``template`` structure.
+
+    ``template`` comes from ``jax.eval_shape`` — every leaf is validated by
+    key-path (KeyError if absent in the checkpoint) and shape (ValueError).
+    ``shardings``: optional pytree of Shardings (same structure) applied via
+    device_put — the elastic-rescale path."""
+    step = latest_step(directory)
+    if step is None:
+        raise FileNotFoundError(f"no committed checkpoint under {directory}")
+    with np.load(os.path.join(_step_dir(directory, step), _FILE)) as data:
+        flat, treedef = _flatten(template)
+        sh_leaves = None
+        if shardings is not None:
+            sh_leaves = [s for _, s in _flatten(shardings)[0]]
+        leaves = []
+        for idx, (key, tmpl) in enumerate(flat):
+            if key not in data.files:
+                raise KeyError(f"checkpoint at step {step} has no leaf {key}")
+            arr = _decode_leaf(key, data)
+            if tuple(arr.shape) != tuple(tmpl.shape):
+                raise ValueError(
+                    f"shape mismatch at {key}: checkpoint {arr.shape} vs "
+                    f"template {tmpl.shape}")
+            if sh_leaves is not None:
+                leaves.append(jax.device_put(arr, sh_leaves[idx]))
+            else:
+                leaves.append(jax.numpy.asarray(arr))
+        return jax.tree_util.tree_unflatten(treedef, leaves), step
+
+
+class AsyncCheckpointer:
+    """Background-thread writer: ``save`` returns immediately; each save
+    waits for the previous write (at most one in flight); ``wait`` joins."""
+
+    def __init__(self, directory: str, keep: int = 3):
+        self.directory = directory
+        self.keep = keep
+        self._thread: Optional[threading.Thread] = None
+        self._error: Optional[BaseException] = None
+
+    def save(self, step: int, state: PyTree) -> None:
+        self.wait()
+        # materialize on host in the caller (device buffers may be donated)
+        host_state = jax.tree_util.tree_map(
+            lambda x: np.asarray(jax.device_get(x)), state)
+
+        def _worker():
+            try:
+                save(self.directory, step, host_state, self.keep)
+            except BaseException as e:  # surfaced on the next wait()/save()
+                self._error = e
+
+        self._thread = threading.Thread(target=_worker, daemon=True)
+        self._thread.start()
+
+    def wait(self) -> None:
+        """Join the in-flight write; re-raises any exception it hit (a
+        silently-failed checkpoint is worse than a crashed trainer)."""
+        if self._thread is not None:
+            self._thread.join()
+            self._thread = None
+        if self._error is not None:
+            err, self._error = self._error, None
+            raise err

@@ -1,0 +1,99 @@
+"""Expansion (term) parallelism: Theorem 2 executed across devices.
+
+The series GEMM is a sum of independent per-term GEMMs —
+``out = sum_j Q(x~) @ (sw_j * W_j)`` — an Abelian reduction, so the weight
+terms can be scattered over a mesh axis and combined with a single psum
+(the paper's AllReduce execution model).  The affine corrections of
+Eq. 4 (rank-1 M_nsy terms, saturation, clip overflow) are cheap O(n^2)
+adds computed replicated, outside the parallel region.
+
+Term counts that do not divide the axis are zero-plane padded: a plane of
+zeros with zero scale contributes nothing to the psum.
+"""
+from __future__ import annotations
+
+from functools import partial
+from typing import List
+
+import jax
+import jax.numpy as jnp
+from jax.experimental.shard_map import shard_map
+from jax.sharding import Mesh, PartitionSpec as P
+
+from repro.core import expansion as E
+from repro.core import linear as LIN
+from repro.core.expansion import ExpandedTensor
+from repro.core.policy import ExpansionPolicy
+from repro.kernels import ref
+
+AXIS = "expand"
+
+
+def make_expand_mesh(n_devices: int) -> Mesh:
+    """1-D mesh over the first ``n_devices`` devices, axis name "expand"."""
+    import numpy as np
+    devs = np.array(jax.devices()[:n_devices])
+    return Mesh(devs, (AXIS,))
+
+
+def _padded_terms(w_et: ExpandedTensor, n_shards: int):
+    """(planes (t_pad, K, N), per-channel scales (t_pad, N)) zero-padded so
+    the term axis divides the mesh axis."""
+    tw = w_et.num_terms
+    n = w_et.orig_shape[-1]
+    planes = w_et.planes
+    scales = w_et.scales if w_et.per_channel else \
+        jnp.broadcast_to(w_et.scales[:, None], (tw, n))
+    pad = (-tw) % n_shards
+    if pad:
+        planes = jnp.pad(planes, ((0, pad), (0, 0), (0, 0)))
+        scales = jnp.pad(scales, ((0, pad), (0, 0)))
+    return planes, scales.astype(jnp.float32)
+
+
+def term_parallel_apply(x: jnp.ndarray, w_et: ExpandedTensor,
+                        policy: ExpansionPolicy, mesh: Mesh) -> jnp.ndarray:
+    """Distributed twin of core.linear.expanded_apply (weight-term sharding).
+
+    x: (..., K); returns (..., N) f32 — matches the local fused result up to
+    psum reassociation."""
+    a_bits, a_terms = policy.a_bits, policy.a_terms
+    k, n = w_et.orig_shape[-2], w_et.orig_shape[-1]
+    lead = x.shape[:-1]
+    x2d = x.reshape(-1, k).astype(jnp.float32)
+    xt, bias_a, sigma, a_scale1 = LIN._dynamic_act_params(x2d, policy, a_bits)
+
+    n_shards = mesh.shape[AXIS]
+    planes, scales = _padded_terms(w_et, n_shards)
+
+    @partial(shard_map, mesh=mesh,
+             in_specs=(P(), P(), P(AXIS), P(AXIS)), out_specs=P())
+    def _series(xt_r, s1_r, planes_l, scales_l):
+        part = ref.series_matmul_ref(xt_r, s1_r, planes_l, scales_l,
+                                     a_bits=a_bits, a_terms=a_terms)
+        return jax.lax.psum(part, AXIS)
+
+    out = _series(xt, a_scale1, planes, scales)
+
+    # affine corrections — identical to expanded_apply's epilogue
+    if w_et.bias is not None:
+        out = out + jnp.sum(xt, axis=-1, keepdims=True) * w_et.bias
+    if w_et.sat is not None:
+        out = out + xt @ w_et.sat
+    if bias_a is not None:
+        out = out + bias_a * LIN.full_colsum(w_et)[None, :]
+    if sigma is not None:
+        out = out + sigma @ E.reconstruct(w_et)
+    return out.reshape(*lead, n)
+
+
+def term_parallel_mlp_forward(x: jnp.ndarray, ets: List[ExpandedTensor],
+                              policy: ExpansionPolicy, mesh: Mesh) -> jnp.ndarray:
+    """Theorem 2 over a whole MLP stack: per-layer psum (AbelianAdd) with the
+    nonlinearity duplicated on every shard (it is cheap and data-parallel)."""
+    h = x
+    for i, et in enumerate(ets):
+        h = term_parallel_apply(h, et, policy, mesh)
+        if i < len(ets) - 1:
+            h = jax.nn.gelu(h)
+    return h

@@ -1,0 +1,89 @@
+"""Fault tolerance: preemption-safe training supervision + stragglers.
+
+``TrainSupervisor`` wraps the train loop's lifecycle: restore-or-init from
+the newest committed checkpoint (bitwise-identical resume — the data loader
+is step-keyed, so a crashed run replays exactly), periodic checkpointing
+every ``ckpt_every`` steps, and a final synchronous save.  It also feeds
+per-step wall times to a ``StragglerDetector`` so slow steps (preempted
+neighbors, thermal throttling) are logged without poisoning the EMA.
+"""
+from __future__ import annotations
+
+import time
+from typing import Any, Callable, List, Optional, Tuple
+
+import jax
+
+from repro.dist import checkpoint as CKPT
+
+PyTree = Any
+
+
+class StragglerDetector:
+    """Flag steps slower than ``factor`` x the EMA of healthy step times.
+
+    The first ``warmup`` observations seed the EMA and are never flagged;
+    flagged steps do NOT update the EMA (a straggler must not raise the bar
+    for detecting the next one)."""
+
+    def __init__(self, factor: float = 2.0, warmup: int = 2, decay: float = 0.9):
+        self.factor = factor
+        self.warmup = warmup
+        self.decay = decay
+        self.ema: Optional[float] = None
+        self.count = 0
+        self.slow_steps: List[Tuple[int, float]] = []
+
+    def observe(self, step: int, dt: float) -> bool:
+        self.count += 1
+        if self.ema is None:
+            self.ema = dt
+            return False
+        if self.count > self.warmup and dt > self.factor * self.ema:
+            self.slow_steps.append((step, dt))
+            return True
+        self.ema = self.decay * self.ema + (1.0 - self.decay) * dt
+        return False
+
+
+class TrainSupervisor:
+    """Checkpoint-driven lifecycle for one training 'life'.
+
+    init_state: zero-arg callable building the fresh {params, opt, ...}
+    state pytree; its ``jax.eval_shape`` is the restore template."""
+
+    def __init__(self, ckpt_dir: str, init_state: Callable[[], PyTree], *,
+                 ckpt_every: int = 50, keep: int = 3,
+                 shardings: Optional[PyTree] = None):
+        self.ckpt_dir = ckpt_dir
+        self.init_state = init_state
+        self.ckpt_every = ckpt_every
+        self.keep = keep
+        self.shardings = shardings
+        self.straggler = StragglerDetector()
+        self._last_t: Optional[float] = None
+        self._last_saved: Optional[int] = None
+
+    def restore_or_init(self) -> Tuple[PyTree, int]:
+        """(state, first step to run): latest committed step + 1, or 0."""
+        step = CKPT.latest_step(self.ckpt_dir)
+        if step is None:
+            return self.init_state(), 0
+        template = jax.eval_shape(self.init_state)
+        state, step = CKPT.restore(self.ckpt_dir, template,
+                                   shardings=self.shardings)
+        return state, step + 1
+
+    def after_step(self, step: int, state: PyTree) -> None:
+        now = time.perf_counter()
+        if self._last_t is not None:
+            self.straggler.observe(step, now - self._last_t)
+        self._last_t = now
+        if (step + 1) % self.ckpt_every == 0:
+            CKPT.save(self.ckpt_dir, step, state, keep=self.keep)
+            self._last_saved = step
+
+    def finalize(self, step: int, state: PyTree) -> None:
+        if step >= 0 and self._last_saved != step:
+            CKPT.save(self.ckpt_dir, step, state, keep=self.keep)
+            self._last_saved = step

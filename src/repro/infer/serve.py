@@ -8,11 +8,16 @@ calibration-free), then serve the INT series.  The engine:
 * groups equal-length requests into batches (exactness over padding
   heuristics: attention math is identical to the unbatched run);
 * runs jit'd prefill + donated-cache decode steps (in-place cache update);
+* fuses sampling and EOS tracking into the decode step ON DEVICE: the host
+  pulls exactly one (tokens, alive) pair per decode step — the seed engine
+  instead called ``int(tok[i, 0])`` twice per request per step, i.e.
+  ``2 * batch`` blocking host syncs per generated token;
 * continuous-batching-lite: a request queue is drained group by group, new
   groups admitted as slots free up.
 
 ``make_serve_step`` is the function the multi-pod dry-run lowers for the
-``decode_*`` cells.
+``decode_*`` cells; ``make_decode_sample_step`` is the fused
+decode+sample+EOS unit the engine actually steps.
 """
 from __future__ import annotations
 
@@ -44,12 +49,38 @@ class ServeConfig:
     seed: int = 0
 
 
+def _sample_logits(logits: jnp.ndarray, key, temperature: float) -> jnp.ndarray:
+    """(B, V) logits -> (B, 1) int32 tokens; greedy when temperature <= 0."""
+    if temperature <= 0.0:
+        return jnp.argmax(logits, axis=-1)[:, None].astype(jnp.int32)
+    tok = jax.random.categorical(key, logits / temperature, axis=-1)
+    return tok[:, None].astype(jnp.int32)
+
+
 def make_serve_step(cfg: ArchConfig, qc: QuantContext = FP):
     """serve_step(params, tokens (B,1), caches, cache_len) ->
     (logits (B,V), caches') — the unit the decode dry-run cells lower."""
     def serve_step(params, tokens, caches, cache_len):
         return M.decode_step(params, tokens, caches, cache_len, cfg, qc)
     return serve_step
+
+
+def make_decode_sample_step(cfg: ArchConfig, qc: QuantContext = FP):
+    """Fused decode + sample + EOS-mask step (all on device).
+
+    step(params, tok (B,1), caches, cache_len, key, alive (B,), eos_id ();
+         temperature static) -> (next_tok, caches', key', alive').
+
+    ``alive`` accumulates ``tok != eos`` so the engine's host loop needs a
+    single device transfer per step; ``eos_id`` is a dynamic operand so
+    reconfiguring it does not retrace."""
+    def step(params, tok, caches, cache_len, key, alive, eos_id, *, temperature):
+        logits, caches = M.decode_step(params, tok, caches, cache_len, cfg, qc)
+        key, sub = jax.random.split(key)
+        nxt = _sample_logits(logits, sub, temperature)
+        alive = jnp.logical_and(alive, nxt[:, 0] != eos_id)
+        return nxt, caches, key, alive
+    return step
 
 
 class Engine:
@@ -72,8 +103,8 @@ class Engine:
         self._prefill = jax.jit(
             lambda p, batch: M.prefill(p, batch, cfg, self.qc, s_max=self.sc.max_seq))
         self._decode = jax.jit(
-            lambda p, tok, caches, clen: M.decode_step(p, tok, caches, clen, cfg, self.qc),
-            donate_argnums=(2,))
+            make_decode_sample_step(cfg, self.qc),
+            donate_argnums=(2,), static_argnames=("temperature",))
 
     # ------------------------------------------------------------------
     def add_request(self, tokens: Sequence[int]) -> int:
@@ -96,35 +127,36 @@ class Engine:
         """Drain the queue; returns request id -> generated tokens."""
         out: Dict[int, List[int]] = {}
         key = jax.random.PRNGKey(self.sc.seed)
+        temperature = float(self.sc.temperature)
+        eos = jnp.int32(self.sc.eos_id)
         for group in self._form_groups():
             rids = [rid for rid, _ in group]
             prompts = np.array([t for _, t in group], np.int32)
             b, s = prompts.shape
             assert s + max_new_tokens <= self.sc.max_seq, "over decode capacity"
             logits, caches = self._prefill(self.params, {"tokens": jnp.asarray(prompts)})
-            gen = [[] for _ in rids]
-            alive = np.ones(b, bool)
-            clen = jnp.int32(s)
             tok = self._sample(logits, key)
+            alive = tok[:, 0] != eos                       # on-device EOS mask
+            gen = [[] for _ in rids]
+            alive_host = np.ones(b, bool)                  # aliveness BEFORE tok
+            clen = jnp.int32(s)
             for t in range(max_new_tokens):
+                # the ONE host transfer of this decode step
+                tok_host, alive_after = jax.device_get((tok, alive))
                 for i in range(b):
-                    if alive[i]:
-                        gen[i].append(int(tok[i, 0]))
-                        if int(tok[i, 0]) == self.sc.eos_id:
-                            alive[i] = False
-                if not alive.any() or t == max_new_tokens - 1:
+                    if alive_host[i]:
+                        gen[i].append(int(tok_host[i, 0]))
+                alive_host = np.asarray(alive_after)
+                if not alive_host.any() or t == max_new_tokens - 1:
                     break
-                logits, caches = self._decode(self.params, tok, caches, clen)
+                tok, caches, key, alive = self._decode(
+                    self.params, tok, caches, clen, key, alive, eos,
+                    temperature=temperature)
                 clen = clen + 1
-                key, sub = jax.random.split(key)
-                tok = self._sample(logits, sub)
             for rid, g in zip(rids, gen):
                 out[rid] = g
         self._queue.clear()
         return out
 
     def _sample(self, logits: jnp.ndarray, key) -> jnp.ndarray:
-        if self.sc.temperature <= 0.0:
-            return jnp.argmax(logits, axis=-1)[:, None].astype(jnp.int32)
-        tok = jax.random.categorical(key, logits / self.sc.temperature, axis=-1)
-        return tok[:, None].astype(jnp.int32)
+        return _sample_logits(logits, key, self.sc.temperature)

@@ -9,6 +9,14 @@ projects onto real TPUs.
 
 out = x @ (sum_j sw_j * unpack(W_packed_j))
 
+Single-pass pipeline (DESIGN.md §3): the ``tw`` unpacked planes are
+scale-summed in VMEM registers first, so each block issues exactly ONE MXU
+dot (the seed issued ``tw``); partials accumulate in a VMEM f32 scratch and
+the HBM output block is written once, at the last K step (the seed did an
+``o_ref[...] +=`` HBM read-modify-write per K step).  Summing the scaled
+planes before the dot also reproduces the oracle's association exactly, so
+the kernel is bit-exact vs ``kernels/ref.py`` whenever K fits one block.
+
 Grid: (M/bm, N/bn, K/bk) with K innermost for accumulation; the packed
 block is (tw, bk, bn//2).
 """
@@ -19,6 +27,7 @@ import functools
 import jax
 import jax.numpy as jnp
 from jax.experimental import pallas as pl
+from jax.experimental.pallas import tpu as pltpu
 
 
 def _unpack_int4_block(packed: jnp.ndarray) -> jnp.ndarray:
@@ -30,20 +39,25 @@ def _unpack_int4_block(packed: jnp.ndarray) -> jnp.ndarray:
     return jnp.stack([lo, hi], axis=-1).reshape(bk, half * 2).astype(jnp.int8)
 
 
-def _kernel(x_ref, wp_ref, ws_ref, o_ref, *, tw: int):
+def _kernel(x_ref, wp_ref, ws_ref, o_ref, acc_ref, *, tw: int):
     kk = pl.program_id(2)
+    nk = pl.num_programs(2)
 
     @pl.when(kk == 0)
-    def _init():
-        o_ref[...] = jnp.zeros_like(o_ref)
+    def _zero():
+        acc_ref[...] = jnp.zeros_like(acc_ref)
 
     x = x_ref[...].astype(jnp.float32)               # (bm, bk)
-    acc = jnp.zeros_like(o_ref)
-    for j in range(tw):                              # unpack + scale in VMEM
-        w_j = _unpack_int4_block(wp_ref[j]).astype(jnp.float32)   # (bk, bn)
-        w_j = w_j * ws_ref[j][None, :]               # per-channel scale fold
-        acc = acc + jnp.dot(x, w_j, preferred_element_type=jnp.float32)
-    o_ref[...] += acc
+    # unpack + scale-sum the tw planes in VMEM, then ONE MXU dot per block
+    w = jnp.zeros(x_ref.shape[1:] + ws_ref.shape[1:], jnp.float32)  # (bk, bn)
+    for j in range(tw):
+        w_j = _unpack_int4_block(wp_ref[j]).astype(jnp.float32)
+        w = w + ws_ref[j][None, :] * w_j             # per-channel scale fold
+    acc_ref[...] += jnp.dot(x, w, preferred_element_type=jnp.float32)
+
+    @pl.when(kk == nk - 1)
+    def _flush():
+        o_ref[...] = acc_ref[...]                    # single HBM write
 
 
 def dequant_matmul_pallas(
@@ -55,6 +69,7 @@ def dequant_matmul_pallas(
     block_n: int = 256,
     block_k: int = 512,
     interpret: bool = True,
+    dimension_semantics: tuple = ("parallel", "parallel", "arbitrary"),
 ) -> jnp.ndarray:
     m, k = x.shape
     tw, k2, n_half = w_packed.shape
@@ -72,5 +87,10 @@ def dequant_matmul_pallas(
             pl.BlockSpec((tw, block_n), lambda i, j, kk: (0, j)),
         ],
         out_specs=pl.BlockSpec((block_m, block_n), lambda i, j, kk: (i, j)),
+        scratch_shapes=[
+            pltpu.VMEM((block_m, block_n), jnp.float32),   # f32 accumulator
+        ],
+        compiler_params=pltpu.TPUCompilerParams(
+            dimension_semantics=dimension_semantics),
         interpret=interpret,
     )(x.astype(jnp.float32), w_packed, w_scales.astype(jnp.float32))

@@ -1,15 +1,26 @@
-"""jit'd public wrappers around the Pallas kernels, with padding + dispatch.
+"""jit'd public wrappers around the Pallas kernels: padding, autotuned block
+dispatch, and kernel-structure introspection.
 
 On this CPU container the kernels run under ``interpret=True`` (the kernel
 body executes in Python on CPU — bit-exact vs. the TPU lowering contract);
 on a real TPU the same calls compile to Mosaic.  Set ``REPRO_NO_PALLAS=1``
 to force the pure-jnp reference path (used to cross-check, and in
 distributed dry-runs where interpret-mode callbacks cannot be partitioned).
+
+Block sizes are selected by a shape-keyed autotune layer
+(:func:`select_block_config`): a table of known-good configurations for
+canonical shapes, falling back to a deterministic search over candidate
+tiles under a VMEM budget model (double-buffered input blocks + the series
+kernel's quantize-once plane scratch + the f32 accumulator).  Decisions are
+cached per ``(kind, M, K, N, ta, tw, backend)``; explicit ``block_*``
+arguments and ``REPRO_BLOCK_{M,N,K}`` env vars override it.
 """
 from __future__ import annotations
 
+import dataclasses
 import os
-from functools import partial
+from functools import lru_cache, partial
+from typing import Any, Dict, List, Optional, Tuple
 
 import jax
 import jax.numpy as jnp
@@ -41,13 +52,161 @@ def _pad_to(x: jnp.ndarray, mults, axes):
 
 
 def _pick_block(dim: int, pref: int, align: int = 8) -> int:
-    """Largest block <= pref that keeps padding overhead small; fall back to
-    the padded-to-align dim itself for small inputs."""
+    """Clamp an explicitly-requested block to the (padded) dim for small
+    inputs; explicit block_* args bypass the autotuner through this."""
     if dim >= pref:
         return pref
     return max(align, ((dim + align - 1) // align) * align)
 
 
+# ---------------------------------------------------------------------------
+# autotune / dispatch layer
+# ---------------------------------------------------------------------------
+@dataclasses.dataclass(frozen=True)
+class BlockConfig:
+    """One dispatch decision: tile sizes + Mosaic grid-dimension hints."""
+    block_m: int
+    block_n: int
+    block_k: int
+    dimension_semantics: Tuple[str, ...]
+
+    @property
+    def blocks(self) -> Tuple[int, int, int]:
+        return (self.block_m, self.block_n, self.block_k)
+
+
+# ~16 MB VMEM/core on v4/v5; leave headroom for Mosaic-internal buffers.
+VMEM_BUDGET_BYTES = int(os.environ.get("REPRO_VMEM_BUDGET", 12 << 20))
+
+# The quantize-once guard needs the N grid dim executed in order; K carries
+# the accumulator.  M tiles are independent.
+_SEMANTICS = {
+    "series": ("parallel", "arbitrary", "arbitrary"),
+    "dequant": ("parallel", "parallel", "arbitrary"),
+    "quant": ("parallel", "parallel"),
+}
+
+# Known-good tiles for canonical (kind, M, K, N) shapes — checked before the
+# budget search.  Entries come from BENCH_kernels.json sweeps; extend freely.
+_TUNE_TABLE: Dict[Tuple[str, int, int, int], Tuple[int, int, int]] = {
+    ("series", 1024, 4096, 4096): (256, 512, 1024),
+    ("series", 2048, 4096, 11008): (256, 512, 1024),
+    ("series", 256, 2048, 2048): (256, 256, 1024),
+    ("dequant", 1024, 4096, 4096): (256, 512, 2048),
+    ("dequant", 8, 4096, 4096): (8, 1024, 2048),
+}
+
+_PREFS_M = (512, 256, 128, 64, 32, 16, 8)
+_PREFS_N = (1024, 512, 256, 128, 64, 32, 16, 8)
+_PREFS_K = (2048, 1024, 512, 256, 128, 64, 32, 16, 8)
+
+
+def _align_up(v: int, a: int) -> int:
+    return -(-v // a) * a
+
+
+def _blk_options(dim: int, prefs: Tuple[int, ...], align: int = 8) -> List[int]:
+    """Candidate tile sizes for one dim: the preference ladder below the
+    padded dim, plus the padded dim itself (single-tile, zero grid overhead)
+    when it is not absurdly large."""
+    padded = max(align, _align_up(dim, align))
+    opts = {p for p in prefs if p < padded}
+    opts.add(min(padded, max(prefs)))
+    if padded <= 2 * max(prefs):
+        opts.add(padded)
+    return sorted(opts, reverse=True)
+
+
+def _vmem_bytes(kind: str, bm: int, bn: int, bk: int, k: int,
+                a_terms: int, w_terms: int) -> int:
+    """VMEM footprint model: x2 on streamed blocks for double buffering."""
+    if kind == "quant":
+        return 2 * bm * bn * 4 + 2 * a_terms * bm * bn
+    kpad = _align_up(max(k, 1), bk)
+    total = 2 * bm * bk * 4                      # activation block, f32
+    total += 2 * bm * bn * 4                     # output block, f32
+    total += bm * bn * 4                         # f32 accumulator scratch
+    if kind == "series":
+        total += 2 * w_terms * bk * bn           # int8 weight-plane block
+        total += 2 * w_terms * bn * 4            # per-channel scales
+        total += a_terms * bm * kpad             # quantize-once plane cache
+    else:  # dequant: packed int4 planes, half-width N
+        total += 2 * w_terms * bk * (bn // 2)
+        total += 2 * w_terms * bn * 4
+    return total
+
+
+@lru_cache(maxsize=4096)
+def select_block_config(kind: str, m: int, k: int, n: int,
+                        a_terms: int = 0, w_terms: int = 1,
+                        backend: str = "interpret") -> BlockConfig:
+    """Shape-keyed block-size selection, cached per (kind, M, K, N, ta, tw).
+
+    Order of precedence: ``REPRO_BLOCK_{M,N,K}`` env overrides, the
+    known-good table, then a deterministic search minimizing padding waste
+    and maximizing MXU tile fill under the VMEM budget."""
+    sem = _SEMANTICS[kind]
+    n_align = 16 if kind == "dequant" else 8     # even halves after packing
+    hit = _TUNE_TABLE.get((kind, m, k, n))
+    if hit is not None:
+        return BlockConfig(*hit, dimension_semantics=sem)
+
+    opts_m = _blk_options(m, _PREFS_M)
+    opts_n = _blk_options(n, _PREFS_N, n_align)
+    opts_k = _blk_options(k, _PREFS_K) if kind != "quant" else [1]
+    best, best_score = None, None
+    for bm in opts_m:
+        for bn in opts_n:
+            for bk in opts_k:
+                fits = _vmem_bytes(kind, bm, bn, bk, k, a_terms, w_terms) \
+                    <= VMEM_BUDGET_BYTES
+                waste = (_align_up(m, bm) * _align_up(n, bn)
+                         * (_align_up(k, bk) if kind != "quant" else 1)) \
+                    / max(m * n * (k if kind != "quant" else 1), 1)
+                fill = (min(bm, 128) * min(bn, 128)
+                        * (min(bk, 128) if kind != "quant" else 128))
+                # lexicographic: fit in VMEM, low padding waste, full MXU
+                # tiles, deep K blocks (fewer accumulator steps), big tiles
+                score = (not fits, round(waste, 2), -fill, -bk, -(bm * bn))
+                if best_score is None or score < best_score:
+                    best, best_score = (bm, bn, bk), score
+    bm, bn, bk = best
+    if kind == "quant":
+        return BlockConfig(bm, bn, 1, sem)
+    return BlockConfig(bm, bn, bk, sem)
+
+
+def _resolve_blocks(kind: str, m: int, k: int, n: int, a_terms: int,
+                    w_terms: int, block_m: Optional[int],
+                    block_n: Optional[int], block_k: Optional[int]) -> BlockConfig:
+    """Per-dim precedence: explicit argument > REPRO_BLOCK_{M,N,K} env var >
+    autotuned.  Env vars are read here (outside the block-config cache) so
+    each dim can be overridden independently; set them before the first call
+    for a given shape — jit traces are cached per shape."""
+    cfg = select_block_config(
+        kind, m, k, n, a_terms, w_terms,
+        backend="tpu" if _on_tpu() else "interpret")
+    n_align = 16 if kind == "dequant" else 8
+
+    def pick(dim, explicit, env_name, auto, align=8):
+        if explicit:
+            return _pick_block(dim, explicit, align)
+        env = os.environ.get(env_name)
+        if env:
+            return _pick_block(dim, int(env), align)
+        return auto
+
+    return BlockConfig(
+        pick(m, block_m, "REPRO_BLOCK_M", cfg.block_m),
+        pick(n, block_n, "REPRO_BLOCK_N", cfg.block_n, n_align),
+        pick(k, block_k, "REPRO_BLOCK_K", cfg.block_k),
+        cfg.dimension_semantics,
+    )
+
+
+# ---------------------------------------------------------------------------
+# public kernels
+# ---------------------------------------------------------------------------
 @partial(jax.jit, static_argnames=("bits", "terms", "use_kernel", "block_m", "block_n"))
 def residual_quantize(
     x: jnp.ndarray,
@@ -56,14 +215,15 @@ def residual_quantize(
     bits: int,
     terms: int,
     use_kernel: bool = True,
-    block_m: int = 256,
-    block_n: int = 256,
+    block_m: Optional[int] = None,
+    block_n: Optional[int] = None,
 ) -> jnp.ndarray:
     """(M, N) f32, () scale -> (terms, M, N) int8 planes."""
     if not (use_kernel and kernels_enabled()):
         return ref.residual_quantize_ref(x, scale1, bits, terms)
     m, n = x.shape
-    bm, bn = _pick_block(m, block_m), _pick_block(n, block_n)
+    cfg = _resolve_blocks("quant", m, 0, n, terms, 0, block_m, block_n, None)
+    bm, bn = cfg.block_m, cfg.block_n
     xp = _pad_to(x, (bm, bn), (0, 1))
     planes = residual_quantize_pallas(
         xp, scale1, bits=bits, terms=terms, block_m=bm, block_n=bn,
@@ -82,24 +242,30 @@ def series_matmul(
     a_bits: int,
     a_terms: int,
     use_kernel: bool = True,
-    block_m: int = 256,
-    block_n: int = 256,
-    block_k: int = 512,
+    block_m: Optional[int] = None,
+    block_n: Optional[int] = None,
+    block_k: Optional[int] = None,
 ) -> jnp.ndarray:
-    """Fused sum_{i,j} sa_i sw_j (A_i @ W_j).  x (M,K); w_planes (tw,K,N)."""
+    """Fused sum_{i,j} sa_i sw_j (A_i @ W_j).  x (M,K); w_planes (tw,K,N).
+
+    Single-pass pipeline: VMEM scratch accumulation (one HBM output write),
+    quantize-once activation-plane reuse across N blocks, and ta (not ta*tw)
+    MXU dispatches per block.  Blocks are autotuned unless given."""
     tw, k, n = w_planes.shape
     if w_scales.ndim == 1:  # canonicalize to per-channel
         w_scales = jnp.broadcast_to(w_scales[:, None], (tw, n))
     if not (use_kernel and kernels_enabled()):
         return ref.series_matmul_ref(x, a_scale1, w_planes, w_scales, a_bits=a_bits, a_terms=a_terms)
     m = x.shape[0]
-    bm, bn, bk = _pick_block(m, block_m), _pick_block(n, block_n), _pick_block(k, block_k)
+    cfg = _resolve_blocks("series", m, k, n, a_terms, tw, block_m, block_n, block_k)
+    bm, bn, bk = cfg.blocks
     xp = _pad_to(x, (bm, bk), (0, 1))
     wp = _pad_to(w_planes, (bk, bn), (1, 2))
     wsp = _pad_to(w_scales, (bn,), (1,))
     out = series_matmul_pallas(
         xp, a_scale1, wp, wsp, a_bits=a_bits, a_terms=a_terms,
         block_m=bm, block_n=bn, block_k=bk, interpret=not _on_tpu(),
+        dimension_semantics=cfg.dimension_semantics,
     )
     return out[:m, :n]
 
@@ -111,9 +277,9 @@ def packed_dequant_matmul(
     w_scales: jnp.ndarray,
     *,
     use_kernel: bool = True,
-    block_m: int = 256,
-    block_n: int = 256,
-    block_k: int = 512,
+    block_m: Optional[int] = None,
+    block_n: Optional[int] = None,
+    block_k: Optional[int] = None,
 ) -> jnp.ndarray:
     """Weight-only W4A16 GEMM over packed INT4 planes (kernels/dequant_matmul).
 
@@ -125,10 +291,121 @@ def packed_dequant_matmul(
     if not (use_kernel and kernels_enabled()):
         return ref.dequant_matmul_ref(x, unpack_int4(w_packed), w_scales)
     m = x.shape[0]
-    bm, bk = _pick_block(m, block_m), _pick_block(k, block_k)
-    bn = _pick_block(n, block_n, align=16)  # even halves after packing
+    cfg = _resolve_blocks("dequant", m, k, n, 0, tw, block_m, block_n, block_k)
+    bm, bn, bk = cfg.blocks
     xp = _pad_to(x, (bm, bk), (0, 1))
     wp = _pad_to(w_packed, (bk, bn // 2), (1, 2))
     wsp = _pad_to(w_scales, (bn,), (1,))
-    out = dequant_matmul_pallas(xp, wp, wsp, block_m=bm, block_n=bn, block_k=bk)
+    out = dequant_matmul_pallas(
+        xp, wp, wsp, block_m=bm, block_n=bn, block_k=bk,
+        interpret=not _on_tpu(),
+        dimension_semantics=cfg.dimension_semantics,
+    )
     return out[:m, :n]
+
+
+def dequant_matmul(x: jnp.ndarray, w_planes: jnp.ndarray,
+                   w_scales: jnp.ndarray) -> jnp.ndarray:
+    """Weight-only GEMM over UNPACKED int8 planes: out = x @ sum_j sw_j W_j.
+
+    The single dispatch point for the weight-only path (core/linear.py);
+    planes of arbitrary bit-width live in the int8 container, so this stays
+    on the jnp reference path (XLA fuses the plane sum into the GEMM).  The
+    packed-INT4 serving path is :func:`packed_dequant_matmul`."""
+    tw, k, n = w_planes.shape
+    if w_scales.ndim == 1:
+        w_scales = jnp.broadcast_to(w_scales[:, None], (tw, n))
+    return ref.dequant_matmul_ref(x, w_planes, w_scales)
+
+
+# ---------------------------------------------------------------------------
+# kernel-structure introspection (tests + BENCH_kernels.json)
+# ---------------------------------------------------------------------------
+def _subjaxprs(params) -> List[Any]:
+    out = []
+    for v in params.values():
+        vs = v if isinstance(v, (list, tuple)) else (v,)
+        for vv in vs:
+            core = getattr(vv, "jaxpr", None)
+            if core is None:
+                continue
+            out.append(core if hasattr(core, "eqns") else core.jaxpr)
+    return out
+
+
+def _count_prim(jaxpr, name: str) -> int:
+    total = 0
+    for e in jaxpr.eqns:
+        if e.primitive.name == name:
+            total += 1
+        for sub in _subjaxprs(e.params):
+            total += _count_prim(sub, name)
+    return total
+
+
+def _is_var(v) -> bool:
+    return not hasattr(v, "val")          # jaxpr Literals carry .val
+
+
+def _count_ref_reads(jaxpr, tainted) -> int:
+    """Reads (``get``) of any ref in ``tainted``, following refs positionally
+    through cond branches and nested calls."""
+    total = 0
+    for e in jaxpr.eqns:
+        if e.primitive.name == "get" and e.invars and _is_var(e.invars[0]) \
+                and e.invars[0] in tainted:
+            total += 1
+        if e.primitive.name == "cond":
+            ops = e.invars[1:]
+            for br in e.params["branches"]:
+                sub = br.jaxpr if hasattr(br, "jaxpr") else br
+                sub_taint = {bv for bv, ov in zip(sub.invars, ops)
+                             if _is_var(ov) and ov in tainted}
+                total += _count_ref_reads(sub, sub_taint)
+        elif e.primitive.name in ("closed_call", "pjit", "core_call"):
+            for sub in _subjaxprs(e.params):
+                sub_taint = {bv for bv, ov in zip(sub.invars, e.invars)
+                             if _is_var(ov) and ov in tainted}
+                total += _count_ref_reads(sub, sub_taint)
+    return total
+
+
+def kernel_structure(fn, *args, **kwargs) -> List[Dict[str, int]]:
+    """Trace ``fn(*args, **kwargs)`` and report, per Pallas kernel dispatched:
+
+    * ``dot_dispatches``      — MXU ``dot_general`` issues per grid block
+      (the acceptance metric: the series kernel must issue <= ta);
+    * ``out_ref_reads``       — reads of the HBM output ref inside the
+      kernel body (0 == no read-modify-write accumulation);
+    * ``quantize_rounds``     — total ``round`` ops in the body;
+    * ``unguarded_rounds``    — ``round`` ops at the kernel's top level,
+      i.e. NOT inside a ``pl.when`` guard (0 == quantize-once is guarded).
+    """
+    jaxpr = jax.make_jaxpr(partial(fn, **kwargs))(*args)
+    stats: List[Dict[str, int]] = []
+
+    def visit(jx):
+        for e in jx.eqns:
+            if e.primitive.name == "pallas_call":
+                inner = e.params["jaxpr"]
+                gm = e.params["grid_mapping"]
+                lo = gm.num_index_operands + gm.num_inputs
+                out_refs = set(inner.invars[lo:lo + gm.num_outputs])
+                top_rounds = sum(1 for q in inner.eqns if q.primitive.name == "round")
+                stats.append({
+                    "dot_dispatches": _count_prim(inner, "dot_general"),
+                    "out_ref_reads": _count_ref_reads(inner, out_refs),
+                    "quantize_rounds": _count_prim(inner, "round"),
+                    "unguarded_rounds": top_rounds,
+                })
+            for sub in _subjaxprs(e.params):
+                visit(sub)
+
+    visit(jaxpr.jaxpr)
+    return stats
+
+
+def gemm_dispatch_count(fn, *args, **kwargs) -> int:
+    """Total MXU dot dispatches per grid block across all Pallas kernels
+    dispatched by ``fn`` (0 when no kernel is dispatched)."""
+    return sum(s["dot_dispatches"] for s in kernel_structure(fn, *args, **kwargs))

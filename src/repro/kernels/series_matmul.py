@@ -5,18 +5,33 @@ Computes  out = sum_{i<ta, j<tw}  sa_i * sw_j[n] * (A_i @ W_j)
 where A_i are the residual INT-X planes of the activation tile — quantized
 *inside the kernel in VMEM*, never materialized to HBM — and W_j are the
 pre-expanded weight planes.  Each int8 x int8 dot hits the MXU with int32
-accumulation (v5e: 394 TOPS int8 = 2x bf16 peak); per-(i,j) partials are
-scale-folded into a single f32 accumulator held in the revisited output
-block.
+accumulation (v5e: 394 TOPS int8 = 2x bf16 peak).
 
-This fusion is the TPU-native adaptation of the paper's "parallel term
-computation": a naive implementation reads A from HBM ta times (once per
-term GEMM); here the activation tile is read once and re-quantized in
-registers, so the memory roofline term scales with 1 activation read + tw
-weight-plane reads instead of ta*(activation+weight) reads.
+Single-pass pipeline (DESIGN.md §3):
 
-Grid: (M/bm, N/bn, K/bk), K innermost ("arbitrary") for accumulation.
-Weight scales are canonicalized to per-channel (tw, N) by ops.py.
+* **Scratch accumulation.**  Partials accumulate in a VMEM f32 scratch
+  (``acc_ref``); the HBM output block is written exactly once, at the last
+  K step.  The seed kernel instead did ``o_ref[...] +=`` every K step — an
+  HBM read-modify-write of the f32 output block per (i, j, kk) grid cell,
+  2*nk*4*bm*bn bytes of avoidable traffic per output block.
+
+* **Quantize-once plane reuse.**  The residual planes of each (m, k)
+  activation tile are extracted exactly once — on the first N-grid step
+  (j == 0) — into an int8 VMEM scratch holding the full K strip
+  (``ta x bm x K`` bytes), then reused by every subsequent weight-column
+  block.  The seed kernel re-ran the round/clip residual chain for every
+  (j, kk) pair, multiplying the VPU quantization work by N/bn.
+
+* **Stacked-plane GEMM.**  The ``ta * tw`` tiny MXU GEMMs per block are
+  collapsed to ``ta`` dispatches: the ``tw`` weight planes ride along the
+  batch axis of a single ``dot_general`` (one MXU pass per plane, one
+  dispatch per activation plane), and the per-plane int32 partials are
+  scale-folded into the f32 accumulator in the same order as the oracle —
+  so results stay bit-exact vs ``kernels/ref.py`` whenever K fits one block.
+
+Grid: (M/bm, N/bn, K/bk) — K innermost ("arbitrary") for accumulation, N
+middle ("arbitrary": the quantize-once guard requires j in order), M
+parallel.  Weight scales are canonicalized to per-channel (tw, N) by ops.py.
 """
 from __future__ import annotations
 
@@ -25,6 +40,7 @@ import functools
 import jax
 import jax.numpy as jnp
 from jax.experimental import pallas as pl
+from jax.experimental.pallas import tpu as pltpu
 
 
 def _scale_ratio(bits: int) -> int:
@@ -40,30 +56,50 @@ def _plane_limits(bits: int, k: int):
     return -hi, hi
 
 
-def _kernel(x_ref, s_ref, w_ref, ws_ref, o_ref, *, a_bits: int, a_terms: int, tw: int):
+def _kernel(x_ref, s_ref, w_ref, ws_ref, o_ref, qa_ref, acc_ref,
+            *, a_bits: int, a_terms: int, tw: int, block_k: int):
+    j = pl.program_id(1)
     kk = pl.program_id(2)
+    nk = pl.num_programs(2)
 
     @pl.when(kk == 0)
-    def _init():
-        o_ref[...] = jnp.zeros_like(o_ref)
+    def _zero():
+        acc_ref[...] = jnp.zeros_like(acc_ref)
+
+    @pl.when(j == 0)
+    def _extract():
+        # quantize this (m, k) activation tile exactly once; every other
+        # N-grid step reads the cached int8 planes from VMEM scratch
+        sa1 = s_ref[0, 0]
+        r = x_ref[...].astype(jnp.float32)
+        for i in range(a_terms):             # static unroll, runs in VREGs
+            sa_i = sa1 / float(_scale_ratio(a_bits) ** i)
+            lo, hi = _plane_limits(a_bits, i)
+            q = jnp.clip(jnp.round(r / sa_i), lo, hi)
+            r = r - sa_i * q
+            qa_ref[i, :, pl.ds(kk * block_k, block_k)] = q.astype(jnp.int8)
 
     sa1 = s_ref[0, 0]
-    r = x_ref[...].astype(jnp.float32)           # (bm, bk) activation tile
-    acc = jnp.zeros_like(o_ref)
-    for i in range(a_terms):                     # sequential residual planes in VREGs
+    a = qa_ref[:, :, pl.ds(kk * block_k, block_k)]   # (ta, bm, bk) int8
+    w = w_ref[...]                                   # (tw, bk, bn) int8
+    ws = ws_ref[...]                                 # (tw, bn) f32
+    acc = acc_ref[...]
+    for i in range(a_terms):
         sa_i = sa1 / float(_scale_ratio(a_bits) ** i)
-        lo, hi = _plane_limits(a_bits, i)
-        q = jnp.clip(jnp.round(r / sa_i), lo, hi)
-        r = r - sa_i * q
-        a_i = q.astype(jnp.int8)
-        for j in range(tw):                      # int8 MXU GEMM per weight plane
-            p = jax.lax.dot_general(
-                a_i, w_ref[j],
-                (((1,), (0,)), ((), ())),
-                preferred_element_type=jnp.int32,
-            )
-            acc = acc + (sa_i * ws_ref[j]) * p.astype(jnp.float32)
-    o_ref[...] += acc
+        # one MXU dispatch per activation plane: the tw weight planes are
+        # stacked along the batch axis of a single dot_general
+        p = jax.lax.dot_general(
+            jnp.broadcast_to(a[i][None], w.shape[:1] + a[i].shape), w,
+            (((2,), (1,)), ((0,), (0,))),
+            preferred_element_type=jnp.int32,
+        )                                            # (tw, bm, bn) int32
+        for jj in range(tw):                         # per-plane scale fold of
+            acc = acc + (sa_i * ws[jj]) * p[jj].astype(jnp.float32)
+    acc_ref[...] = acc
+
+    @pl.when(kk == nk - 1)
+    def _flush():
+        o_ref[...] = acc_ref[...]                    # single HBM write
 
 
 def series_matmul_pallas(
@@ -78,6 +114,7 @@ def series_matmul_pallas(
     block_n: int = 256,
     block_k: int = 512,
     interpret: bool = True,
+    dimension_semantics: tuple = ("parallel", "arbitrary", "arbitrary"),
 ) -> jnp.ndarray:
     m, k = x.shape
     tw, k2, n = w_planes.shape
@@ -86,7 +123,8 @@ def series_matmul_pallas(
         (m, k, n), (block_m, block_k, block_n))
     grid = (m // block_m, n // block_n, k // block_k)
     return pl.pallas_call(
-        functools.partial(_kernel, a_bits=a_bits, a_terms=a_terms, tw=tw),
+        functools.partial(_kernel, a_bits=a_bits, a_terms=a_terms, tw=tw,
+                          block_k=block_k),
         out_shape=jax.ShapeDtypeStruct((m, n), jnp.float32),
         grid=grid,
         in_specs=[
@@ -96,6 +134,12 @@ def series_matmul_pallas(
             pl.BlockSpec((tw, block_n), lambda i, j, kk: (0, j)),
         ],
         out_specs=pl.BlockSpec((block_m, block_n), lambda i, j, kk: (i, j)),
+        scratch_shapes=[
+            pltpu.VMEM((a_terms, block_m, k), jnp.int8),   # cached act planes
+            pltpu.VMEM((block_m, block_n), jnp.float32),   # f32 accumulator
+        ],
+        compiler_params=pltpu.TPUCompilerParams(
+            dimension_semantics=dimension_semantics),
         interpret=interpret,
     )(
         x.astype(jnp.float32),

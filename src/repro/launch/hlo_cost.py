@@ -16,14 +16,25 @@ walking the computation call graph and multiplying by known trip counts
                    group sizes for ring-factor adjustment;
   * int_dot_flops — the subset of flops whose operands are integer (the
                    MXU int8 path: credited at 2x peak in the dtype-aware
-                   roofline).
+                   roofline);
+  * Pallas/Mosaic custom-calls — on a real TPU the fused kernels appear as
+                   opaque ``custom-call`` instructions whose internal dots
+                   XLA cannot see.  Their GEMM flops are re-derived from the
+                   operand shapes (the series kernel runs ta*tw int8 plane
+                   GEMMs internally; the W4A16 kernel one f32 GEMM over the
+                   scale-summed planes).  Their HBM bytes need no special
+                   casing: operand + output bytes IS the single-pass traffic
+                   (VMEM scratch accumulation, one output write — see
+                   kernels/series_matmul.py and DESIGN.md §3).
 
-Cross-checked against analytic FLOPs in benchmarks/roofline.py.
+Cross-checked against analytic FLOPs in benchmarks/roofline.py (which also
+carries the matching analytic traffic model for the kernels themselves).
 """
 from __future__ import annotations
 
 import dataclasses
 import json
+import os
 import re
 from typing import Any, Dict, List, Optional, Tuple
 
@@ -34,6 +45,11 @@ _DTYPE_BYTES = {"f64": 8, "f32": 4, "bf16": 2, "f16": 2, "s64": 8, "s32": 4,
 _INT_TYPES = {"s8", "u8", "s16", "u16", "s32", "u32"}
 _COLLECTIVES = ("all-gather", "all-reduce", "reduce-scatter", "all-to-all",
                 "collective-permute")
+_MOSAIC_TARGETS = ("tpu_custom_call", "mosaic", "Mosaic")
+# The series kernel quantizes activations *inside* the kernel, so the term
+# count ta is invisible in HLO operand shapes; default matches the W4A4 /
+# Fig-4b operating point and is overridable for other policies.
+A_TERMS_HINT = int(os.environ.get("REPRO_A_TERMS_HINT", "3"))
 _SKIP_BYTES_OPS = {"tuple", "get-tuple-element", "parameter", "constant",
                    "bitcast", "after-all", "partition-id", "replica-id",
                    "iota", "while", "conditional", "call",
@@ -61,6 +77,34 @@ def _shape_dims(type_str: str) -> Optional[Tuple[str, List[int]]]:
         return None
     dims = [int(d) for d in m.group(2).split(",") if d]
     return m.group(1), dims
+
+
+def _pallas_kernel_flops(operand_dims: List[Tuple[str, List[int]]],
+                         a_terms_hint: int = A_TERMS_HINT) -> Tuple[float, float]:
+    """(flops, int_dot_flops) for one Mosaic custom-call, from operand shapes.
+
+    Shape signatures (see kernels/*.py):
+      series_matmul   x f32(M,K), scale f32(1,1), planes s8(tw,K,N),
+                      scales f32(tw,N)            -> ta*tw int8 plane GEMMs
+      dequant_matmul  x f32(M,K), packed s8(tw,K,N/2), scales f32(tw,N)
+                      (N == 2 * packed N)         -> one f32 GEMM per block
+      residual_quantize  x f32(M,N), scale f32(1,1) -> elementwise, no dots
+    """
+    f32_2d = [d for t, d in operand_dims if t in ("f32", "bf16") and len(d) == 2]
+    s8_3d = [d for t, d in operand_dims if t == "s8" and len(d) == 3]
+    if not s8_3d:
+        return 0.0, 0.0                      # residual_quantize / unknown
+    planes = s8_3d[0]
+    tw, k_w, n_w = planes
+    acts = [d for d in f32_2d if d[1] == k_w and d != [1, 1]]
+    if not acts:
+        return 0.0, 0.0
+    m = acts[0][0]
+    scales = [d for d in f32_2d if d[0] == tw]
+    if scales and scales[0][1] == 2 * n_w:   # packed INT4 weight-only path
+        return 2.0 * m * (2 * n_w) * k_w, 0.0
+    f = 2.0 * m * n_w * k_w * tw * a_terms_hint
+    return f, f                              # int8 plane GEMMs on the MXU
 
 
 @dataclasses.dataclass
@@ -120,7 +164,10 @@ def parse_hlo(text: str) -> Tuple[Dict[str, CompStats], Dict[str, str], str]:
         s = cur_stats
         assert s is not None
         if op == "convert":
-            om = re.search(r"\(%?([\w.\-]+)\)", line[line.index("("):])
+            # first %name after the op's paren is the source operand (inline
+            # operand types carry no %; metadata parens like op_name="jit(f)"
+            # must not match)
+            om = re.search(r"%([\w.\-]+)", line[line.index("("):])
             if om:
                 convert_src[name] = om.group(1)
 
@@ -165,10 +212,14 @@ def parse_hlo(text: str) -> Tuple[Dict[str, CompStats], Dict[str, str], str]:
         # --- dot flops ---
         if op == "dot":
             out = _shape_dims(out_type)
-            lhs_m = re.search(r"\(%?([\w.\-]+)", line[line.index(op):])
+            # operands may print bare (%x) or with inline types
+            # (f32[..]{1,0} %x): take the first %name that is a known symbol
+            opnds = [om.group(1) for om in
+                     re.finditer(r"%([\w.\-]+)", line[line.index("("):])
+                     if om.group(1) in symbols]
             lc = re.search(r"lhs_contracting_dims=\{([\d,]*)\}", line)
-            if out and lhs_m and lc:
-                lhs_type = symbols.get(lhs_m.group(1), "")
+            if out and opnds and lc:
+                lhs_type = _resolve_type(opnds[0])
                 lhs = _shape_dims(lhs_type)
                 if lhs:
                     contract = 1
@@ -182,6 +233,16 @@ def parse_hlo(text: str) -> Tuple[Dict[str, CompStats], Dict[str, str], str]:
                     s.flops += f
                     if lhs[0] in _INT_TYPES:
                         s.int_dot_flops += f
+        if op == "custom-call" and any(t in line for t in _MOSAIC_TARGETS):
+            operand_dims = []
+            for om in re.finditer(r"%([\w.\-]+)", line[line.index("("):]):
+                if om.group(1) in symbols:
+                    d = _shape_dims(_resolve_type(om.group(1)))
+                    if d:
+                        operand_dims.append((d[0], d[1]))
+            f, fi = _pallas_kernel_flops(operand_dims)
+            s.flops += f
+            s.int_dot_flops += fi
         if op in ("exponential", "tanh", "log", "rsqrt", "power", "logistic"):
             out = _shape_dims(out_type)
             if out:

@@ -8,12 +8,21 @@ from typing import Tuple
 import jax
 
 
+def make_mesh_compat(shape: Tuple[int, ...], axes: Tuple[str, ...]):
+    """jax.make_mesh across jax versions: ``axis_types`` (Auto) exists only
+    on newer releases; older ones default to the same behavior."""
+    axis_type = getattr(jax.sharding, "AxisType", None)
+    if axis_type is not None:
+        return jax.make_mesh(shape, axes,
+                             axis_types=(axis_type.Auto,) * len(axes))
+    return jax.make_mesh(shape, axes)
+
+
 def make_production_mesh(*, multi_pod: bool = False):
     """16x16 = 256 chips per pod; 2 pods = 512 chips multi-pod."""
     shape = (2, 16, 16) if multi_pod else (16, 16)
     axes = ("pod", "data", "model") if multi_pod else ("data", "model")
-    return jax.make_mesh(shape, axes,
-                         axis_types=(jax.sharding.AxisType.Auto,) * len(axes))
+    return make_mesh_compat(shape, axes)
 
 
 def dp_axes(mesh) -> Tuple[str, ...]:
@@ -23,5 +32,4 @@ def dp_axes(mesh) -> Tuple[str, ...]:
 
 def make_host_mesh(shape: Tuple[int, ...], axes: Tuple[str, ...]):
     """Small mesh over the host's visible devices (tests/examples)."""
-    return jax.make_mesh(shape, axes,
-                         axis_types=(jax.sharding.AxisType.Auto,) * len(axes))
+    return make_mesh_compat(shape, axes)

@@ -64,8 +64,8 @@ def main(argv=None):
     shardings = None
     if args.mesh:
         d, m = (int(x) for x in args.mesh.split("x"))
-        mesh = jax.make_mesh((d, m), ("data", "model"),
-                             axis_types=(jax.sharding.AxisType.Auto,) * 2)
+        from repro.launch.mesh import make_host_mesh
+        mesh = make_host_mesh((d, m), ("data", "model"))
         rules = ShardingRules(mesh, ("data",))
         params_struct = jax.eval_shape(lambda: M.init_params(jax.random.PRNGKey(args.seed), cfg))
         p_specs = rules.param_specs(params_struct)

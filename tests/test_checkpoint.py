@@ -84,6 +84,29 @@ def test_async_overlapping_saves(tmp_path):
     assert CKPT.committed_steps(str(tmp_path)) == [0, 1, 2, 3]
 
 
+def test_gc_removes_crashed_tmp_dir(tmp_path):
+    """A save killed mid-write leaves step_*.tmp; gc (and thus the next
+    save) must clean it up instead of crashing on the name parse."""
+    CKPT.save(str(tmp_path), 1, _state(1))
+    os.makedirs(tmp_path / "step_000000002.tmp")
+    CKPT.save(str(tmp_path), 3, _state(3), keep=3)   # triggers gc_old
+    assert not os.path.exists(tmp_path / "step_000000002.tmp")
+    assert CKPT.committed_steps(str(tmp_path)) == [1, 3]
+
+
+def test_async_checkpointer_surfaces_write_errors(tmp_path):
+    """A failed background write must raise on wait(), not vanish."""
+    ck = CKPT.AsyncCheckpointer(str(tmp_path / "f"))
+    ck.save(0, {"x": jnp.zeros(())})
+    ck.wait()                                        # healthy write is fine
+    # a plain file where the checkpoint dir should be -> makedirs fails
+    (tmp_path / "g").write_text("")
+    broken = CKPT.AsyncCheckpointer(str(tmp_path / "g"))
+    broken.save(1, {"x": jnp.ones(())})
+    with pytest.raises(OSError):
+        broken.wait()
+
+
 def test_restore_with_shardings_device_put(tmp_path):
     """The elastic path: restore with explicit (here trivial) shardings."""
     st = _state(1)

@@ -21,8 +21,11 @@ def test_scan_trip_multiplication():
                     jax.ShapeDtypeStruct((64, 64), jnp.float32))
     costs = total_costs(comp.as_text())
     assert costs["flops"] == 12 * 2 * 8 * 64 * 64
-    # xla's own count sees the body once
-    assert comp.cost_analysis()["flops"] < costs["flops"]
+    # xla's own count sees the body once (cost_analysis returns a list of
+    # per-computation dicts on some jax versions)
+    ca = comp.cost_analysis()
+    ca = ca[0] if isinstance(ca, (list, tuple)) else ca
+    assert ca["flops"] < costs["flops"]
 
 
 def test_nested_scan_trips_multiply():

@@ -1,0 +1,200 @@
+"""Single-pass series-GEMM pipeline: fused kernels == ref == FP within the
+Theorem-1 bound, plus kernel-structure regressions (jaxpr inspection):
+
+* the stacked-plane GEMM issues <= ta MXU dot dispatches per block
+  (seed: ta*tw);
+* no read of the HBM output ref inside the kernel (accumulation lives in
+  VMEM scratch; the output block is written exactly once);
+* quantization (round) ops run only under the j==0 guard — each activation
+  tile is quantized exactly once per (m, k) grid cell and reused across all
+  weight-column blocks.
+"""
+import functools
+
+import jax
+import jax.numpy as jnp
+import numpy as np
+import pytest
+
+from repro.core import convergence as C
+from repro.core import expansion as E
+from repro.kernels import ops, ref
+from repro.kernels.series_matmul import series_matmul_pallas
+
+
+def _setup(rng, m, k, n, w_bits, tw, per_channel, pack_safe=False):
+    x = jnp.array(rng.normal(size=(m, k)).astype(np.float32))
+    w = jnp.array(rng.normal(size=(k, n)).astype(np.float32))
+    w_et = E.expand(w, w_bits, tw, per_channel=per_channel, saturating=False,
+                    pack_safe=pack_safe)
+    return x, w, w_et
+
+
+# ---------------------------------------------------------------------------
+# numerics: kernel == ref == FP within the Theorem-1 bound
+# ---------------------------------------------------------------------------
+@pytest.mark.parametrize("m,k,n", [(8, 16, 8), (33, 65, 17), (129, 257, 65),
+                                   (100, 120, 60), (1, 7, 5)])
+@pytest.mark.parametrize("ta,tw", [(1, 1), (2, 2), (3, 3), (3, 1), (1, 3)])
+def test_kernel_ref_fp_triangle(rng, m, k, n, ta, tw):
+    """Odd (non-block-multiple) shapes, ta, tw in {1..3}: the fused kernel
+    matches the oracle, and both are within the Theorem-1 residual bound of
+    the FP matmul."""
+    a_bits = w_bits = 4
+    x, w, w_et = _setup(rng, m, k, n, w_bits, tw, per_channel=False)
+    s1 = E.first_scale(jnp.max(jnp.abs(x)), a_bits)
+    kw = dict(a_bits=a_bits, a_terms=ta)
+    yk = ops.series_matmul(x, s1, w_et.planes, w_et.scales, use_kernel=True, **kw)
+    yr = ops.series_matmul(x, s1, w_et.planes, w_et.scales, use_kernel=False, **kw)
+    np.testing.assert_allclose(np.asarray(yk), np.asarray(yr), rtol=1e-5, atol=1e-5)
+
+    # Theorem-1 error budget for the GEMM:
+    # |y - x@w| <= |Q(x~)| @ |W-err| + |x-err| @ |w|  (triangle inequality),
+    # bounded via the per-element residual bounds scale_n/2 on each factor.
+    a_res = float(C.residual_bound(float(s1), a_bits, ta))
+    w_s1 = float(jnp.max(w_et.scales[0]))
+    w_res = float(C.residual_bound(w_s1, w_bits, tw))
+    bound = (k * a_res * float(jnp.max(jnp.abs(w)))
+             + k * w_res * float(jnp.max(jnp.abs(x)))
+             + k * a_res * w_res)
+    err = float(jnp.max(jnp.abs(yk - x @ w)))
+    assert err <= bound * (1 + 1e-3) + 1e-5, (err, bound)
+
+
+@pytest.mark.parametrize("per_channel", [False, True])
+@pytest.mark.parametrize("a_bits", [2, 4, 8])
+def test_per_tensor_vs_per_channel_scales(rng, per_channel, a_bits):
+    x, w, w_et = _setup(rng, 40, 72, 24, 4, 2, per_channel=per_channel)
+    s1 = E.first_scale(jnp.max(jnp.abs(x)), a_bits)
+    kw = dict(a_bits=a_bits, a_terms=2)
+    yk = ops.series_matmul(x, s1, w_et.planes, w_et.scales, use_kernel=True, **kw)
+    yr = ops.series_matmul(x, s1, w_et.planes, w_et.scales, use_kernel=False, **kw)
+    np.testing.assert_allclose(np.asarray(yk), np.asarray(yr), rtol=1e-5, atol=1e-5)
+
+
+def test_single_k_block_bit_exact(rng):
+    """When K fits one block the per-plane scale folding preserves the
+    oracle's f32 association — agreement is bit-exact, not just close."""
+    x, w, w_et = _setup(rng, 32, 48, 24, 4, 2, per_channel=True)
+    s1 = E.first_scale(jnp.max(jnp.abs(x)), 4)
+    kw = dict(a_bits=4, a_terms=3)
+    yk = ops.series_matmul(x, s1, w_et.planes, w_et.scales, use_kernel=True,
+                           block_m=32, block_n=24, block_k=48, **kw)
+    yr = ops.series_matmul(x, s1, w_et.planes, w_et.scales, use_kernel=False, **kw)
+    np.testing.assert_array_equal(np.asarray(yk), np.asarray(yr))
+
+
+def test_packed_dequant_single_block_bit_exact(rng):
+    from repro.kernels.pack import pack_int4
+    x = jnp.array(rng.normal(size=(16, 32)).astype(np.float32))
+    w = jnp.array(rng.normal(size=(32, 16)).astype(np.float32))
+    et = E.expand(w, 4, 2, per_channel=True, pack_safe=True)
+    packed = pack_int4(et.planes)
+    yk = ops.packed_dequant_matmul(x, packed, et.scales, use_kernel=True,
+                                   block_m=16, block_n=16, block_k=32)
+    yr = ops.packed_dequant_matmul(x, packed, et.scales, use_kernel=False)
+    np.testing.assert_array_equal(np.asarray(yk), np.asarray(yr))
+
+
+def test_quantize_once_reuse_across_n_blocks(rng):
+    """Force several N blocks per (m, k) cell: the cached-plane path must
+    agree with the oracle (catches stale/incorrect VMEM plane reuse)."""
+    x, w, w_et = _setup(rng, 16, 64, 128, 4, 2, per_channel=True)
+    s1 = E.first_scale(jnp.max(jnp.abs(x)), 4)
+    kw = dict(a_bits=4, a_terms=3)
+    yk = ops.series_matmul(x, s1, w_et.planes, w_et.scales, use_kernel=True,
+                           block_m=16, block_n=32, block_k=32, **kw)  # 4 N-blocks
+    yr = ops.series_matmul(x, s1, w_et.planes, w_et.scales, use_kernel=False, **kw)
+    np.testing.assert_allclose(np.asarray(yk), np.asarray(yr), rtol=1e-5, atol=1e-5)
+
+
+# ---------------------------------------------------------------------------
+# kernel structure (jaxpr inspection)
+# ---------------------------------------------------------------------------
+needs_kernels = pytest.mark.skipif(
+    not ops.kernels_enabled(),
+    reason="REPRO_NO_PALLAS=1: no Pallas kernel is dispatched to inspect")
+
+
+@needs_kernels
+@pytest.mark.parametrize("ta,tw", [(1, 1), (2, 2), (3, 2), (3, 3)])
+def test_stacked_plane_gemm_dispatch_count(rng, ta, tw):
+    """The acceptance metric: <= ta MXU dot dispatches per block (was ta*tw)."""
+    x, w, w_et = _setup(rng, 32, 64, 32, 4, tw, per_channel=True)
+    s1 = E.first_scale(jnp.max(jnp.abs(x)), 4)
+    stats = ops.kernel_structure(
+        ops.series_matmul, x, s1, w_et.planes, w_et.scales,
+        a_bits=4, a_terms=ta, use_kernel=True)
+    assert len(stats) == 1, stats
+    assert stats[0]["dot_dispatches"] <= ta, stats
+
+
+@needs_kernels
+def test_no_output_rmw_and_guarded_quantize(rng):
+    """Scratch accumulation: the kernel never reads the HBM output ref; the
+    residual-quantize chain runs only inside the j==0 guard."""
+    x, w, w_et = _setup(rng, 32, 64, 32, 4, 2, per_channel=True)
+    s1 = E.first_scale(jnp.max(jnp.abs(x)), 4)
+    stats = ops.kernel_structure(
+        ops.series_matmul, x, s1, w_et.planes, w_et.scales,
+        a_bits=4, a_terms=3, use_kernel=True)[0]
+    assert stats["out_ref_reads"] == 0, stats          # no o_ref[...] += RMW
+    assert stats["quantize_rounds"] == 3, stats        # one round per plane
+    assert stats["unguarded_rounds"] == 0, stats       # all under pl.when
+
+    stats_d = ops.kernel_structure(
+        ops.packed_dequant_matmul, x,
+        jnp.zeros((2, 64, 16), jnp.int8), jnp.ones((2, 32), jnp.float32),
+        use_kernel=True)[0]
+    assert stats_d["out_ref_reads"] == 0, stats_d
+    assert stats_d["dot_dispatches"] == 1, stats_d     # plane-summed GEMM
+
+
+def test_dispatch_count_raw_kernel_scales_with_ta_only(rng):
+    """Directly on the pallas_call (no jit wrapper): dispatches == ta for
+    every tw — the tw weight planes ride one batched dot."""
+    for ta, tw in ((1, 3), (2, 1), (3, 2)):
+        x = jnp.array(rng.normal(size=(16, 32)).astype(np.float32))
+        wp = jnp.zeros((tw, 32, 16), jnp.int8)
+        ws = jnp.ones((tw, 16), jnp.float32)
+        f = functools.partial(series_matmul_pallas, a_bits=4, a_terms=ta,
+                              block_m=16, block_n=16, block_k=32, interpret=True)
+        n = ops.gemm_dispatch_count(f, x, jnp.float32(0.1), wp, ws)
+        assert n == ta, (ta, tw, n)
+
+
+# ---------------------------------------------------------------------------
+# autotune / dispatch layer
+# ---------------------------------------------------------------------------
+def test_autotune_cache_and_shapes():
+    cfg1 = ops.select_block_config("series", 1024, 4096, 4096, 3, 2)
+    cfg2 = ops.select_block_config("series", 1024, 4096, 4096, 3, 2)
+    assert cfg1 is cfg2                                # lru-cached decision
+    assert cfg1.dimension_semantics == ("parallel", "arbitrary", "arbitrary")
+    bm, bn, bk = cfg1.blocks
+    assert bm % 8 == 0 and bn % 8 == 0 and bk % 8 == 0
+    # tiny shapes degrade to padded-dim blocks, never zero
+    tiny = ops.select_block_config("series", 1, 7, 5, 2, 1)
+    assert all(b >= 1 for b in tiny.blocks)
+    # dequant N blocks stay even (packed halves)
+    dq = ops.select_block_config("dequant", 64, 256, 200, 0, 2)
+    assert dq.block_n % 2 == 0
+
+
+def test_autotune_respects_vmem_budget():
+    cfg = ops.select_block_config("series", 8192, 16384, 16384, 3, 3)
+    used = ops._vmem_bytes("series", *cfg.blocks, 16384, 3, 3)
+    assert used <= ops.VMEM_BUDGET_BYTES, (cfg, used)
+
+
+def test_explicit_blocks_override_autotune(rng):
+    """Explicit block args bypass the autotuner but still clamp to dims."""
+    x, w, w_et = _setup(rng, 100, 120, 60, 4, 2, per_channel=True)
+    s1 = E.first_scale(jnp.max(jnp.abs(x)), 4)
+    outs = []
+    for bm, bn, bk in ((32, 32, 32), (64, 16, 64), (None, None, None)):
+        outs.append(np.asarray(ops.series_matmul(
+            x, s1, w_et.planes, w_et.scales, a_bits=4, a_terms=2,
+            use_kernel=True, block_m=bm, block_n=bn, block_k=bk)))
+    np.testing.assert_allclose(outs[0], outs[1], rtol=1e-4, atol=1e-5)
+    np.testing.assert_allclose(outs[0], outs[2], rtol=1e-4, atol=1e-5)

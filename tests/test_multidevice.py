@@ -90,8 +90,8 @@ def test_sharded_train_step_matches_single_device():
         batch = {k: jnp.asarray(v) for k, v in make_batch(cfg, 32, 8, 0).items()}
         p1, _, m1 = jax.jit(step)(params, opt_state, batch)
 
-        mesh = jax.make_mesh((2, 4), ("data", "model"),
-                             axis_types=(jax.sharding.AxisType.Auto,) * 2)
+        from repro.launch.mesh import make_host_mesh
+        mesh = make_host_mesh((2, 4), ("data", "model"))
         rules = ShardingRules(mesh, ("data",))
         p_specs = rules.param_specs(params)
         o_specs = rules.opt_state_specs("adamw", params, p_specs)
@@ -125,8 +125,8 @@ def test_sharded_serve_step_runs():
         serve_step = make_serve_step(cfg, qc)
         caches = M.init_cache(cfg, batch=8, s_max=32, dtype=jnp.float32)
         tokens = jnp.zeros((8, 1), jnp.int32)
-        mesh = jax.make_mesh((2, 4), ("data", "model"),
-                             axis_types=(jax.sharding.AxisType.Auto,) * 2)
+        from repro.launch.mesh import make_host_mesh
+        mesh = make_host_mesh((2, 4), ("data", "model"))
         rules = ShardingRules(mesh, ("data",))
         in_sh = (rules.param_specs(q), rules.batch_specs({"t": tokens})["t"],
                  rules.cache_specs(caches), rules.replicated())

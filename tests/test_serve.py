@@ -87,6 +87,23 @@ def test_eos_stops_early(setup):
     assert out[rid] == [first]
 
 
+def test_one_host_transfer_per_decode_step(setup, monkeypatch):
+    """The fused decode step keeps sampling + EOS tracking on device: the
+    engine performs exactly one device_get per decode step (the seed pulled
+    int(tok[i, 0]) twice per request per step)."""
+    cfg, params = setup
+    eng = Engine(cfg, params, serve_cfg=ServeConfig(max_seq=48, max_batch=4))
+    for p in _prompts(cfg, 4, 8):
+        eng.add_request(p)
+    calls = []
+    real = jax.device_get
+    monkeypatch.setattr(jax, "device_get", lambda x: calls.append(1) or real(x))
+    out = eng.run(max_new_tokens=5)
+    assert all(len(v) == 5 for v in out.values())
+    # one group of 4 requests, 5 decode steps -> 5 transfers (not 2*4*5)
+    assert len(calls) == 5, len(calls)
+
+
 def test_cache_accounting():
     cfg = get_arch("nemotron_4_340b")
     c = cache_bytes_per_token(cfg)
