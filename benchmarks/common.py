@@ -64,6 +64,23 @@ def eval_metrics(cfg, params, qc: QuantContext = FP, *, n_batches: int = 4,
             "ppl": float(np.exp(np.mean(losses)))}
 
 
+def eval_artifact(cfg, artifact, *, backend: str = "ref", n_batches: int = 4,
+                  seq: int = 64, batch: int = 8, seed_base: int = 1000) -> Dict[str, float]:
+    """Held-out metrics through the unified API: every method's artifact is
+    evaluated by the same Runtime.lm_loss code path (Tables 1-6 contract)."""
+    from repro.api import Runtime
+
+    rt = Runtime(artifact, backend=backend, cfg=cfg)
+    losses, accs = [], []
+    for i in range(n_batches):
+        b = make_batch(cfg, seq, batch, seed_base + i)
+        l, m = rt.lm_loss(b)
+        losses.append(float(l))
+        accs.append(float(m["accuracy"]))
+    return {"loss": float(np.mean(losses)), "accuracy": float(np.mean(accs)),
+            "ppl": float(np.exp(np.mean(losses)))}
+
+
 def time_fn(fn: Callable, *args, warmup: int = 1, iters: int = 3) -> float:
     """Wall-time a jax callable; returns microseconds per call."""
     for _ in range(warmup):

@@ -1,52 +1,34 @@
 """Table 1 proxy: accuracy of FP=xINT vs same-family baselines at
 W4A4 / W2A4 / W2A2 across model families.
 
-Methods (all calibration-free or one-shot, as in the paper's table):
+Methods (all calibration-free or one-shot, as in the paper's table), all
+through the unified Recipe -> Artifact -> Runtime path — one code path for
+every row:
+
   full        — FP reference
-  ours        — multi-term series (policy per bit setting)
-  rtn         — 1-term truncation of the same quantizer (= round-to-nearest)
-  gptq_lite   — error-propagating one-shot weight quantizer + dynamic A-RTN
+  ours        — multi-term series (``fpxint`` at the policy per bit setting)
+  1term       — 1-term truncation of the same quantizer (= round-to-nearest
+                in series form; isolates the win of the extra terms)
+  rtn         — registry ``rtn``: min-max RTN FP reconstruction
+  gptq_lite   — registry ``gptq_lite``: error-propagating one-shot weights
 
 Derived column: held-out top-1 accuracy (the ImageNet-accuracy stand-in).
 """
 from __future__ import annotations
 
-import jax
-import jax.numpy as jnp
+import dataclasses
 
-from benchmarks.common import Row, eval_metrics, time_fn, trained_model
+from benchmarks.common import Row, eval_artifact, eval_metrics, trained_model
+from repro.api import QuantRecipe, quantize
 from repro.core.policy import ExpansionPolicy, NAMED_POLICIES
-from repro.core.ptq import expand_params
-from repro.models.layers import FP, QuantContext
-from repro.quant.baselines import gptq_lite_quantize
-from repro.train.data import make_batch
 
 ARCHS = ("qwen2_1_5b", "granite_20b")
 SETTINGS = ("w4a4", "w2a4", "w2a2")
 
 
-def _rtn_policy(pol: ExpansionPolicy) -> ExpansionPolicy:
-    import dataclasses
+def _one_term(pol: ExpansionPolicy) -> ExpansionPolicy:
     return dataclasses.replace(pol, w_terms=1, a_terms=1, w_saturating=False,
                                first_last_terms=1)
-
-
-def _gptq_params(cfg, params):
-    """GPTQ-lite on every stacked GEMM weight (tiny calibration batch)."""
-    import numpy as np
-    r = np.random.default_rng(0)
-
-    def visit(path, leaf):
-        name = "/".join(str(getattr(p, "key", getattr(p, "idx", p))) for p in path)
-        if name.rsplit("/", 1)[-1] == "kernel" and leaf.ndim >= 2:
-            k = leaf.shape[-2]
-            x_cal = jnp.array(r.normal(size=(32, k)).astype("float32"))
-            flat = leaf.reshape(-1, *leaf.shape[-2:])
-            out = jnp.stack([gptq_lite_quantize(w, x_cal, 4) for w in flat])
-            return out.reshape(leaf.shape)
-        return leaf
-
-    return jax.tree_util.tree_map_with_path(visit, params)
 
 
 def run():
@@ -56,18 +38,23 @@ def run():
         Row.add(f"table1/{arch}/full_prec", 0.0, f"acc={base['accuracy']:.4f}")
         for setting in SETTINGS:
             pol = NAMED_POLICIES[setting]
-            q = expand_params(params, pol)
-            m = eval_metrics(cfg, q, QuantContext(policy=pol))
-            Row.add(f"table1/{arch}/{setting}/ours", 0.0, f"acc={m['accuracy']:.4f}")
-            rp = _rtn_policy(pol)
-            mr = eval_metrics(cfg, expand_params(params, rp), QuantContext(policy=rp))
-            Row.add(f"table1/{arch}/{setting}/rtn", 0.0, f"acc={mr['accuracy']:.4f}")
-        # gptq-lite: weight-only 4-bit one-shot + dynamic 4-bit activations
-        gp = _gptq_params(cfg, params)
-        act_pol = ExpansionPolicy(w_bits=4, a_bits=4, w_terms=1, a_terms=1,
-                                  w_saturating=False)
-        mg = eval_metrics(cfg, gp)
-        Row.add(f"table1/{arch}/w4/gptq_lite", 0.0, f"acc={mg['accuracy']:.4f}")
+            for label, recipe in (
+                ("ours", QuantRecipe(method="fpxint", policy=pol, arch=arch)),
+                ("1term", QuantRecipe(method="fpxint", policy=_one_term(pol),
+                                      arch=arch)),
+            ):
+                art = quantize(params, recipe)
+                m = eval_artifact(cfg, art)
+                Row.add(f"table1/{arch}/{setting}/{label}", 0.0,
+                        f"acc={m['accuracy']:.4f}")
+        # one-shot weight baselines (4-bit, FP activations) — same artifact
+        # type, same Runtime eval path as every other row
+        for method in ("rtn", "gptq_lite"):
+            art = quantize(params, QuantRecipe(
+                method=method, policy=NAMED_POLICIES["w4a4"], arch=arch))
+            m = eval_artifact(cfg, art)
+            Row.add(f"table1/{arch}/w4/{method}", 0.0,
+                    f"acc={m['accuracy']:.4f}")
 
 
 if __name__ == "__main__":

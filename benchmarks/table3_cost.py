@@ -1,13 +1,14 @@
 """Table 3 proxy: quantization cost & model size — no calibration data, no
 fine-tuning, seconds-scale quantization, size accounting incl. mixed
-precision.  us_per_call = quant wall time; derived = size + accuracy.
+precision.  All rows come from the artifact's provenance metadata
+(``quant_seconds``, ``expansion_stats``) — the unified API records the
+paper's Quant-Time as a side effect of quantizing.
 """
 from __future__ import annotations
 
-from benchmarks.common import Row, eval_metrics, trained_model
+from benchmarks.common import Row, eval_artifact, eval_metrics, trained_model
+from repro.api import QuantRecipe, quantize
 from repro.core.policy import ExpansionPolicy, W4A4
-from repro.core.ptq import expand_params_timed, expansion_stats
-from repro.models.layers import QuantContext
 
 MIX = ExpansionPolicy(w_bits=2, a_bits=4, w_terms=2, a_terms=3,
                       mixed=(("attn", (2, 4)), ("mlp", (4, 4))),
@@ -21,10 +22,11 @@ def run():
         Row.add(f"table3/{arch}/full", 0.0,
                 f"acc={base['accuracy']:.4f} size=1.00x data=0 ft=none")
         for name, pol in (("w4a4", W4A4), ("w2mix", MIX)):
-            q, seconds = expand_params_timed(params, pol)
-            st = expansion_stats(q)
-            m = eval_metrics(cfg, q, QuantContext(policy=pol))
-            Row.add(f"table3/{arch}/{name}", seconds * 1e6,
+            art = quantize(params, QuantRecipe(method="fpxint", policy=pol,
+                                               arch=arch))
+            st = art.meta["expansion_stats"]
+            m = eval_artifact(cfg, art)
+            Row.add(f"table3/{arch}/{name}", art.quant_seconds * 1e6,
                     f"acc={m['accuracy']:.4f} size={1/st['compression']:.2f}x "
                     f"data=0 ft=none")
 

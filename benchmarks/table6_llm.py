@@ -1,16 +1,20 @@
 """Table 6 proxy: W4A16 weight-only serving of the LM (the LLM/MMLU setting).
 
-Methods: full / ours (2-term W4 series, FP activations) / normal (1-term RTN
-W4 weight-only).  Derived: perplexity + accuracy on held-out stream.
+Methods: full / ours (2-term W4 series, FP activations) / normal (registry
+``rtn``: 1-term min-max RTN weight-only) — all through the unified
+Recipe -> Artifact -> Runtime path.  The ``ours`` row additionally
+round-trips the INT4-packed artifact (planes stored 2/byte on disk, the
+serving representation) to pin the packed format into the benchmark.
+Derived: perplexity + accuracy on held-out stream.
 """
 from __future__ import annotations
 
-import dataclasses
+import os
+import tempfile
 
-from benchmarks.common import Row, eval_metrics, trained_model
+from benchmarks.common import Row, eval_artifact, eval_metrics, trained_model
+from repro.api import QuantArtifact, QuantRecipe, quantize
 from repro.core.policy import W4A16
-from repro.core.ptq import expand_params
-from repro.models.layers import QuantContext
 
 
 def run():
@@ -19,13 +23,19 @@ def run():
         base = eval_metrics(cfg, params)
         Row.add(f"table6/{arch}/full", 0.0,
                 f"acc={base['accuracy']:.4f} ppl={base['ppl']:.3f}")
-        q = expand_params(params, W4A16)
-        m = eval_metrics(cfg, q, QuantContext(policy=W4A16))
+        # ours: packed W4A16 artifact, saved + reloaded (the deploy product)
+        art = quantize(params, QuantRecipe(method="fpxint", policy=W4A16,
+                                           pack=True, arch=arch))
+        path = os.path.join(tempfile.mkdtemp(), f"{arch}_w4a16")
+        art.save(path)
+        art = QuantArtifact.load(path)
+        m = eval_artifact(cfg, art)
         Row.add(f"table6/{arch}/ours_w4a16", 0.0,
-                f"acc={m['accuracy']:.4f} ppl={m['ppl']:.3f}")
-        rtn = dataclasses.replace(W4A16, w_terms=1, w_saturating=False,
-                                  first_last_terms=1)
-        mr = eval_metrics(cfg, expand_params(params, rtn), QuantContext(policy=rtn))
+                f"acc={m['accuracy']:.4f} ppl={m['ppl']:.3f} packed={art.packed}")
+        # normal: 1-term RTN weight-only (the paper's 'Normal' row)
+        art = quantize(params, QuantRecipe(method="rtn", policy=W4A16,
+                                           arch=arch))
+        mr = eval_artifact(cfg, art)
         Row.add(f"table6/{arch}/normal_w4a16", 0.0,
                 f"acc={mr['accuracy']:.4f} ppl={mr['ppl']:.3f}")
 

@@ -1,5 +1,7 @@
-"""The full PTQ lifecycle: train -> expand at several policies -> evaluate
--> pick the term count by the Fig. 4b rule -> compare against 1-term RTN.
+"""The full PTQ lifecycle through the unified API: train -> quantize at
+several recipes -> evaluate via Runtime -> pick the term count by the
+Fig. 4b rule -> compare against the baseline methods (same artifact type,
+same code path).
 
     PYTHONPATH=src python examples/ptq_pipeline.py
 """
@@ -8,18 +10,20 @@ import dataclasses
 import jax
 import jax.numpy as jnp
 
+from repro.api import QuantRecipe, Runtime, quantize
 from repro.configs.base import get_arch
 from repro.core import expansion as E
 from repro.core.policy import NAMED_POLICIES, W4A4
-from repro.core.ptq import expand_params, expand_params_timed, expansion_stats, max_weight_residual
+from repro.core.ptq import max_weight_residual
 from repro.models import model as M
-from repro.models.layers import FP, QuantContext
 from repro.train.data import make_batch
 from repro.train.train_step import TrainConfig, loss_fn, make_train_step
 
+ARCH = "qwen2_1_5b"
+
 
 def main():
-    cfg = get_arch("qwen2_1_5b", smoke=True)
+    cfg = get_arch(ARCH, smoke=True)
     params = M.init_params(jax.random.PRNGKey(0), cfg, dtype=jnp.float32)
     opt, step = make_train_step(cfg, TrainConfig(lr=3e-3, remat=False))
     opt_state = opt.init(params)
@@ -29,27 +33,35 @@ def main():
         b = {k: jnp.asarray(v) for k, v in make_batch(cfg, 64, 8, i).items()}
         params, opt_state, _ = step(params, opt_state, b)
 
-    def ev(p, qc=FP):
-        b = {k: jnp.asarray(v) for k, v in make_batch(cfg, 64, 8, 1234).items()}
-        l, m = loss_fn(p, b, cfg, qc)
+    eval_batch = {k: jnp.asarray(v) for k, v in make_batch(cfg, 64, 8, 1234).items()}
+
+    def ev_runtime(rt: Runtime):
+        l, m = rt.lm_loss(eval_batch)
         return float(l), float(m["accuracy"])
 
-    base = ev(params)
-    print(f"FP: loss={base[0]:.3f} acc={base[1]:.3f}\n")
-    print(f"{'policy':10s} {'loss':>7s} {'acc':>6s} {'size':>6s} {'quant_s':>8s} {'maxdiff':>9s}")
+    l, m = loss_fn(params, eval_batch, cfg)
+    print(f"FP: loss={float(l):.3f} acc={float(m['accuracy']):.3f}\n")
+    print(f"{'recipe':12s} {'loss':>7s} {'acc':>6s} {'size':>6s} {'quant_s':>8s} {'maxdiff':>9s}")
     for name in ("w8a8", "w4a4", "w2a4", "w3a3", "w2a2", "w4a16"):
-        pol = NAMED_POLICIES[name]
-        q, secs = expand_params_timed(params, pol)
-        l, a = ev(q, QuantContext(policy=pol))
-        st = expansion_stats(q)
-        md = float(max_weight_residual(params, q))
-        print(f"{name:10s} {l:7.3f} {a:6.3f} {1/st['compression']:5.2f}x {secs:8.2f} {md:9.2e}")
+        art = quantize(params, QuantRecipe(
+            method="fpxint", policy=NAMED_POLICIES[name], arch=ARCH))
+        loss, acc = ev_runtime(Runtime(art, backend="ref", cfg=cfg))
+        st = art.meta["expansion_stats"]
+        md = float(max_weight_residual(params, art.params))
+        print(f"{name:12s} {loss:7.3f} {acc:6.3f} {1/st['compression']:5.2f}x "
+              f"{art.quant_seconds:8.2f} {md:9.2e}")
 
-    # 1-term RTN comparison at W4A4
-    rtn = dataclasses.replace(W4A4, w_terms=1, a_terms=1, w_saturating=False)
-    q = expand_params(params, rtn)
-    l, a = ev(q, QuantContext(policy=rtn))
-    print(f"{'rtn_w4a4':10s} {l:7.3f} {a:6.3f}   (1-term truncation: the series terms are the win)")
+    # baseline methods: same recipe surface, same artifact type, same eval path
+    for method in ("rtn", "gptq_lite"):
+        art = quantize(params, QuantRecipe(method=method, policy=W4A4, arch=ARCH))
+        loss, acc = ev_runtime(Runtime(art, backend="ref", cfg=cfg))
+        print(f"{method:12s} {loss:7.3f} {acc:6.3f}   (FP-reconstruction baseline)")
+
+    # 1-term truncation of our own quantizer (the 'series terms are the win' row)
+    rtn_pol = dataclasses.replace(W4A4, w_terms=1, a_terms=1, w_saturating=False)
+    art = quantize(params, QuantRecipe(method="fpxint", policy=rtn_pol, arch=ARCH))
+    loss, acc = ev_runtime(Runtime(art, backend="ref", cfg=cfg))
+    print(f"{'1term_w4a4':12s} {loss:7.3f} {acc:6.3f}   (1-term truncation)")
 
     # Fig 4b stopping rule
     s1 = max(float(jnp.max(jnp.abs(leaf))) / 7.0

@@ -1,43 +1,72 @@
-"""Quickstart: FP=xINT series expansion in 60 lines.
+"""Quickstart: FP=xINT in three layers.
 
-Expands a tensor and a linear layer into low-bit series, shows the
-exponential convergence of Theorem 1, and the Abelian basis-model
-decomposition of Theorem 2.
+1. Theorem 1 — expand a tensor into a low-bit series (core layer);
+2. Recipe -> Artifact -> Runtime — the unified API: quantize a model,
+   save the artifact, load it back, run it bit-exactly;
+3. Theorem 2 — the model as an Abelian sum of low-bit basis models.
 
     PYTHONPATH=src python examples/quickstart.py
 """
+import os
+import tempfile
+
 import jax
 import jax.numpy as jnp
 import numpy as np
 
+from repro.api import QuantArtifact, QuantRecipe, Runtime, quantize
 from repro.core import abelian as A
 from repro.core import expansion as E
-from repro.core.linear import expand_weight, expanded_apply
 from repro.core.policy import W4A4
-from repro.core.ptq import expand_params
+from repro.models import model as M
+from repro.configs.base import get_arch
 
 rng = np.random.default_rng(0)
 
 # --- Theorem 1: tensor series expansion -----------------------------------
-M = jnp.array(rng.normal(size=(256, 256)).astype(np.float32))
-et = E.expand(M, bits=4, terms=4, saturating=True, per_channel=True)
+M_t = jnp.array(rng.normal(size=(256, 256)).astype(np.float32))
+et = E.expand(M_t, bits=4, terms=4, saturating=True, per_channel=True)
 print("tensor expansion: INT4 x", et.num_terms, "terms")
 for t in range(1, 5):
-    res = float(jnp.max(jnp.abs(E.residual(M, et, t))))
+    res = float(jnp.max(jnp.abs(E.residual(M_t, et, t))))
     print(f"  terms={t}: max|M - reconstruction| = {res:.3e}")
 print("  (each term shrinks the residual by 2^4 = 16x — exponential convergence)")
 
-# --- Eq. 3/4: layer expansion ----------------------------------------------
-x = jnp.array(rng.normal(size=(32, 256)).astype(np.float32))
-w_et = expand_weight(M, W4A4)
-y = expanded_apply(x, w_et, W4A4)          # sum of INT8-GEMM terms
-rel = float(jnp.linalg.norm(y - x @ M) / jnp.linalg.norm(x @ M))
-print(f"\nlayer expansion (W4A4, 2x3 terms): relative error = {rel:.4f}")
+# --- The unified API: Recipe -> Artifact -> Runtime ------------------------
+cfg = get_arch("qwen2_1_5b", smoke=True)
+params = M.init_params(jax.random.PRNGKey(0), cfg)
+recipe = QuantRecipe(method="fpxint", policy=W4A4, arch="qwen2_1_5b", smoke=True)
+art = quantize(params, recipe)                       # calibration-free, seconds
+st = art.meta["expansion_stats"]
+print(f"\nquantize(): {int(st['expanded_leaves'])} GEMM weights expanded in "
+      f"{art.quant_seconds:.2f}s, {st['compression']:.2f}x smaller")
+
+path = os.path.join(tempfile.mkdtemp(), "qwen2_w4a4")
+art.save(path)                                       # expand once ...
+loaded = QuantArtifact.load(path)                    # ... serve forever
+rt_mem = Runtime(art, backend="ref")
+rt_disk = Runtime(loaded, backend="ref")
+tokens = jnp.array(rng.integers(0, cfg.vocab_size, (2, 16)), jnp.int32)
+y_mem, y_disk = rt_mem.apply(tokens), rt_disk.apply(tokens)
+assert bool(jnp.all(y_mem == y_disk)), "save/load must be bit-exact"
+print(f"artifact round-trip: Runtime.apply bit-exact "
+      f"(max|logit| = {float(jnp.max(jnp.abs(y_disk))):.3f})")
+
+y_fp = jax.jit(lambda p, t: M.forward(p, {"tokens": t}, cfg))(params, tokens)
+rel = float(jnp.linalg.norm(y_disk - y_fp) / jnp.linalg.norm(y_fp))
+print(f"W4A4 vs FP logits: relative error = {rel:.4f}")
+
+# every registered method produces the same artifact type
+for method in ("rtn", "gptq_lite"):
+    a = quantize(params, QuantRecipe(method=method, policy=W4A4, arch="qwen2_1_5b"))
+    y = Runtime(a, backend="ref").apply(tokens)
+    rel = float(jnp.linalg.norm(y - y_fp) / jnp.linalg.norm(y_fp))
+    print(f"{method:10s} through the same path: relative error = {rel:.4f}")
 
 # --- Theorem 2: the model as an Abelian sum of low-bit basis models --------
-params = {"fc1": {"kernel": M}, "fc2": {"kernel": jnp.array(
+toy = {"fc1": {"kernel": M_t}, "fc2": {"kernel": jnp.array(
     rng.normal(size=(256, 64)).astype(np.float32))}}
-q = expand_params(params, W4A4)
+q = quantize(toy, QuantRecipe(method="fpxint", policy=W4A4)).params
 basis = A.basis_models(q)
 print(f"\nmodel expansion: {len(basis)} isomorphic basis models")
 total = A.abelian_sum(basis)               # AbelianAdd == AllReduce reduction

@@ -1,26 +1,32 @@
 """End-to-end serving driver (the paper's deployment story):
 
 1. train a small LM on the synthetic Markov task,
-2. series-expand it W4A4 — calibration-free, seconds,
-3. serve batched requests through the INT pipeline,
-4. report quantization time, accuracy preservation, throughput.
+2. quantize(params, recipe) — series-expand W4A4, calibration-free, seconds,
+3. artifact.save(...) then QuantArtifact.load(...) — the expand-once product,
+4. Runtime(artifact).serve(...) — batched requests through the INT pipeline
+   with no re-expansion at admission,
+5. report quantization time, accuracy preservation, throughput.
 
     PYTHONPATH=src python examples/serve_expanded.py [--requests 16]
 """
 import argparse
+import os
+import tempfile
 import time
 
 import jax
 import jax.numpy as jnp
 import numpy as np
 
+from repro.api import QuantArtifact, QuantRecipe, Runtime, quantize
 from repro.configs.base import get_arch
 from repro.core.policy import W4A4
-from repro.infer.serve import Engine, ServeConfig
+from repro.infer.serve import ServeConfig
 from repro.models import model as M
 from repro.train.data import make_batch
 from repro.train.train_step import TrainConfig, loss_fn, make_train_step
-from repro.models.layers import QuantContext
+
+ARCH = "qwen2_1_5b"
 
 
 def main():
@@ -28,9 +34,11 @@ def main():
     ap.add_argument("--requests", type=int, default=16)
     ap.add_argument("--train-steps", type=int, default=60)
     ap.add_argument("--max-new", type=int, default=24)
+    ap.add_argument("--artifact-dir", default=None,
+                    help="where to save the artifact (default: a temp dir)")
     args = ap.parse_args()
 
-    cfg = get_arch("qwen2_1_5b", smoke=True)
+    cfg = get_arch(ARCH, smoke=True)
     print(f"training a {cfg.param_count()/1e3:.0f}k-param {cfg.family} LM "
           f"for {args.train_steps} steps...")
     params = M.init_params(jax.random.PRNGKey(0), cfg, dtype=jnp.float32)
@@ -42,19 +50,26 @@ def main():
         params, opt_state, m = step(params, opt_state, b)
     print(f"  final train loss {float(m['loss']):.3f}")
 
-    def ev(p, qc=None):
-        from repro.models.layers import FP
-        b = {k: jnp.asarray(v) for k, v in make_batch(cfg, 64, 8, 999).items()}
-        l, met = loss_fn(p, b, cfg, qc or FP)
-        return float(l), float(met["accuracy"])
+    # quantize once; the artifact is the deployable product
+    art = quantize(params, QuantRecipe(method="fpxint", policy=W4A4,
+                                       arch=ARCH, smoke=True))
+    path = os.path.join(args.artifact_dir or tempfile.mkdtemp(), "qwen2_w4a4")
+    art.save(path)
+    print(f"\nFP=xINT W4A4 expansion: {art.quant_seconds:.2f}s, zero "
+          f"calibration data; artifact saved to {path}")
 
-    base_loss, base_acc = ev(params)
-    eng = Engine(cfg, params, policy=W4A4,
-                 serve_cfg=ServeConfig(max_seq=96, max_batch=8))
-    q_loss, q_acc = ev(eng.params, QuantContext(policy=W4A4))
-    print(f"\nFP=xINT W4A4 expansion: {eng.quant_seconds:.2f}s, zero calibration data")
-    print(f"  loss {base_loss:.3f} -> {q_loss:.3f};  acc {base_acc:.3f} -> {q_acc:.3f}")
+    # a fresh process would start exactly here
+    art = QuantArtifact.load(path)
+    rt = Runtime(art, backend="ref", cfg=cfg)
 
+    b = {k: jnp.asarray(v) for k, v in make_batch(cfg, 64, 8, 999).items()}
+    base_loss, base_m = loss_fn(params, b, cfg)
+    q_loss, q_m = rt.lm_loss(b)
+    print(f"  loss {float(base_loss):.3f} -> {float(q_loss):.3f};  "
+          f"acc {float(base_m['accuracy']):.3f} -> {float(q_m['accuracy']):.3f}")
+
+    eng = rt.serve(ServeConfig(max_seq=96, max_batch=8))
+    assert eng.quant_seconds == art.quant_seconds  # admission did not re-expand
     rng = np.random.default_rng(1)
     for _ in range(args.requests):
         eng.add_request(rng.integers(0, cfg.vocab_size, 16).tolist())

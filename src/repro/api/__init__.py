@@ -1,0 +1,28 @@
+"""The unified quantization API: Recipe -> Artifact -> Runtime.
+
+    from repro.api import QuantRecipe, Runtime, quantize
+    from repro.core.policy import W4A4
+
+    art = quantize(params, QuantRecipe(method="fpxint", policy=W4A4,
+                                       arch="qwen2_1_5b"))
+    art.save("artifacts/qwen2_w4a4")           # expand once ...
+    art = QuantArtifact.load("artifacts/qwen2_w4a4")
+    rt = Runtime(art, backend="ref")           # ... serve the INT series forever
+    logits = rt.apply(tokens)
+    engine = rt.serve()
+
+All registered methods (``fpxint`` series expansion, ``rtn``, ``gptq_lite``)
+produce the same artifact type; ``repro.core.*`` stays the stable low-level
+layer this package composes.
+"""
+from repro.api.artifact import QuantArtifact, quantize
+from repro.api.recipe import (QuantRecipe, Quantizer, get_quantizer,
+                              list_methods, named_recipe, recipe_from_dict,
+                              recipe_to_dict, register_quantizer)
+from repro.api.runtime import BACKENDS, Runtime
+
+__all__ = [
+    "QuantRecipe", "QuantArtifact", "Runtime", "Quantizer", "BACKENDS",
+    "quantize", "register_quantizer", "get_quantizer", "list_methods",
+    "named_recipe", "recipe_to_dict", "recipe_from_dict",
+]

@@ -1,0 +1,327 @@
+"""QuantArtifact: the portable product of quantization (expand once, serve
+forever).
+
+An artifact bundles the quantized parameter pytree (``ExpandedTensor``
+series leaves for ``fpxint``, plain FP reconstructions for the baselines),
+the :class:`~repro.api.recipe.QuantRecipe` that produced it, and provenance
+metadata (per-leaf bits/terms, quantization wall-time, size accounting).
+
+On-disk format (§8 of DESIGN.md), built on the atomic extension-dtype-safe
+npz machinery in ``dist/checkpoint.py``:
+
+    <path>/
+      artifact.npz     one entry per array, keyed "a<i>" (plain leaves) or
+                       "a<i>/planes|scales|bias|sat" (expanded leaves), each
+                       written through ``checkpoint.encode_array`` so bf16 &
+                       fp8 leaves survive npz;
+      manifest.json    format version, the recipe (JSON round-trip), meta,
+                       and an ordered leaf table: tree path + leaf kind +
+                       the ExpandedTensor statics (bits, per_channel,
+                       batch_dims, packed, pack_pad, has_bias, has_sat);
+      .DONE            commit marker, written last (a crash mid-save leaves
+                       an ignorable uncommitted directory).
+
+Saves stage into ``<path>.tmp`` and publish with a replace-rename
+(``checkpoint.atomic_commit_dir``), so readers never observe a torn
+artifact.  INT4-packed planes are stored packed — the disk artifact is the
+same 2-nibbles-per-byte representation the ``pallas-packed`` runtime serves.
+"""
+from __future__ import annotations
+
+import dataclasses
+import json
+import os
+import shutil
+from typing import Any, Dict, List, Optional, Tuple
+
+import jax
+import numpy as np
+
+from repro.api.recipe import QuantRecipe, recipe_from_dict, recipe_to_dict
+from repro.core import expansion as E
+from repro.core.expansion import ExpandedTensor
+from repro.dist import checkpoint as CKPT
+
+PyTree = Any
+
+FORMAT_VERSION = 1
+_NPZ = "artifact.npz"
+_MANIFEST = "manifest.json"
+_DONE = ".DONE"
+
+_ET_FIELDS = ("planes", "scales", "bias", "sat")
+
+
+# ---------------------------------------------------------------------------
+# pytree <-> ordered leaf table (dict/list/tuple nesting, ET-aware)
+# ---------------------------------------------------------------------------
+def _flatten(tree: PyTree, path: Tuple = ()) -> List[Tuple[Tuple, Any]]:
+    if isinstance(tree, ExpandedTensor) or not isinstance(tree, (dict, list, tuple)):
+        return [(path, tree)]
+    if not tree:  # empty container: keep as a structural leaf so the tree
+        return [(path, tree)]  # round-trips with identical pytree structure
+    out: List[Tuple[Tuple, Any]] = []
+    if isinstance(tree, dict):
+        for k in sorted(tree):
+            out.extend(_flatten(tree[k], path + (("k", k),)))
+    else:
+        tag = "t" if isinstance(tree, tuple) else "i"
+        for i, v in enumerate(tree):
+            out.extend(_flatten(v, path + ((tag, i),)))
+    return out
+
+
+def _unflatten(entries: List[Tuple[Tuple, Any]]) -> PyTree:
+    if len(entries) == 1 and entries[0][0] == ():
+        return entries[0][1]
+    root: Dict = {}
+    for path, leaf in entries:
+        node = root
+        for step in path[:-1]:
+            node = node.setdefault(tuple(step), {})
+        node[tuple(path[-1])] = leaf
+
+    def materialize(node):
+        if not isinstance(node, dict):
+            return node
+        keys = list(node)
+        if not keys:       # an empty-dict structural leaf, not an inner node
+            return {}      # (inner nodes always carry at least one child)
+        tag = keys[0][0]
+        if tag == "k":
+            return {k[1]: materialize(v) for k, v in node.items()}
+        seq = [materialize(node[(tag, i)]) for i in range(len(keys))]
+        return tuple(seq) if tag == "t" else seq
+
+    return materialize(root)
+
+
+def _path_str(path: Tuple) -> str:
+    return "/".join(str(p[1]) for p in path)
+
+
+# ---------------------------------------------------------------------------
+# the artifact
+# ---------------------------------------------------------------------------
+@dataclasses.dataclass
+class QuantArtifact:
+    """Quantized params + recipe + provenance; save/load round-trips
+    bit-exactly (tested contract)."""
+
+    params: PyTree
+    recipe: QuantRecipe
+    meta: Dict[str, Any] = dataclasses.field(default_factory=dict)
+
+    # -- introspection ------------------------------------------------------
+    @property
+    def method(self) -> str:
+        return self.recipe.method
+
+    @property
+    def policy(self):
+        return self.recipe.policy
+
+    @property
+    def arch(self) -> Optional[str]:
+        return self.recipe.arch
+
+    @property
+    def expanded(self) -> bool:
+        """True when params carry ExpandedTensor series leaves (fpxint)."""
+        return bool(self.meta.get("expanded", False))
+
+    @property
+    def packed(self) -> bool:
+        return any(isinstance(l, ExpandedTensor) and l.packed
+                   for l in jax.tree_util.tree_leaves(
+                       self.params, is_leaf=lambda l: isinstance(l, ExpandedTensor)))
+
+    @property
+    def quant_seconds(self) -> float:
+        return float(self.meta.get("quant_seconds", 0.0))
+
+    def leaf_table(self) -> Dict[str, Dict[str, Any]]:
+        """Per-leaf provenance: path -> {bits, terms, shape, packed} for every
+        expanded leaf (empty for baseline FP-reconstruction artifacts)."""
+        out: Dict[str, Dict[str, Any]] = {}
+        for path, leaf in _flatten(self.params):
+            if isinstance(leaf, ExpandedTensor):
+                out[_path_str(path)] = {
+                    "bits": leaf.bits, "terms": leaf.num_terms,
+                    "shape": list(leaf.orig_shape), "packed": leaf.packed,
+                    "batch_dims": leaf.batch_dims,
+                }
+        return out
+
+    def reconstructed(self) -> PyTree:
+        """FP view: every expanded leaf summed back to a dense tensor."""
+        return jax.tree_util.tree_map(
+            lambda l: E.reconstruct(l) if isinstance(l, ExpandedTensor) else l,
+            self.params, is_leaf=lambda l: isinstance(l, ExpandedTensor))
+
+    # -- runtime binding (used by Runtime and the serve engine) -------------
+    def quant_context(self, backend: str = "ref"):
+        """The QuantContext a backend serves this artifact under."""
+        from repro.models.layers import FP, QuantContext
+
+        if not self.expanded:
+            if backend != "ref":
+                raise ValueError(
+                    f"method {self.method!r} produces FP reconstructions; "
+                    f"only backend='ref' applies (got {backend!r})")
+            return FP
+        return QuantContext(policy=self.policy, use_kernel=backend != "ref")
+
+    def runtime_params(self, backend: str = "ref") -> PyTree:
+        """Params as the backend consumes them: ``pallas-packed`` serves the
+        INT4-packed planes in place; other backends unpack once at bind."""
+        if backend == "pallas-packed":
+            if not self.packed:
+                raise ValueError(
+                    "backend='pallas-packed' needs a packed artifact "
+                    "(quantize with QuantRecipe(pack=True))")
+            if self.policy.a_terms > 0 and self.policy.a_bits < 16:
+                # the series (activation-quantized) GEMM consumes unpacked
+                # planes, so binding packed params would re-unpack every
+                # weight inside the jitted forward on every call — use
+                # 'pallas' (unpack once at bind) for W_xA_y policies;
+                # pallas-packed is the weight-only (W4A16) serving backend
+                raise ValueError(
+                    "backend='pallas-packed' serves weight-only policies "
+                    f"(a_terms == 0 or a_bits >= 16); this artifact is "
+                    f"w{self.policy.w_bits}a{self.policy.a_bits} with "
+                    f"a_terms={self.policy.a_terms} — use backend='pallas'")
+            # odd-width (pad-nibble) leaves can't ride the packed GEMM;
+            # unpack those once here rather than per call inside the jit
+            return jax.tree_util.tree_map(
+                lambda l: (E.unpack(l) if isinstance(l, ExpandedTensor)
+                           and l.packed and l.pack_pad else l),
+                self.params, is_leaf=lambda l: isinstance(l, ExpandedTensor))
+        if not self.packed:
+            return self.params
+        return jax.tree_util.tree_map(
+            lambda l: E.unpack(l) if isinstance(l, ExpandedTensor) else l,
+            self.params, is_leaf=lambda l: isinstance(l, ExpandedTensor))
+
+    # -- persistence --------------------------------------------------------
+    def save(self, path: str) -> str:
+        """Write the artifact directory atomically; returns ``path``."""
+        parent = os.path.dirname(os.path.abspath(path))
+        os.makedirs(parent, exist_ok=True)
+        tmp = path.rstrip("/") + ".tmp"
+        if os.path.exists(tmp):
+            shutil.rmtree(tmp)
+        os.makedirs(tmp)
+
+        arrays: Dict[str, np.ndarray] = {}
+        leaves: List[Dict[str, Any]] = []
+        for idx, (path_t, leaf) in enumerate(_flatten(self.params)):
+            key = f"a{idx}"
+            entry: Dict[str, Any] = {"path": [list(p) for p in path_t]}
+            if isinstance(leaf, ExpandedTensor):
+                entry["kind"] = "expanded"
+                entry.update(bits=leaf.bits, per_channel=leaf.per_channel,
+                             batch_dims=leaf.batch_dims, packed=leaf.packed,
+                             pack_pad=leaf.pack_pad,
+                             has_bias=leaf.bias is not None,
+                             has_sat=leaf.sat is not None)
+                for f in _ET_FIELDS:
+                    v = getattr(leaf, f)
+                    if v is not None:
+                        CKPT.encode_array(f"{key}/{f}",
+                                          np.asarray(jax.device_get(v)), arrays)
+            elif leaf is None:
+                entry["kind"] = "none"
+            elif isinstance(leaf, (dict, list, tuple)):
+                assert not leaf  # _flatten only leaves empty containers whole
+                entry["kind"] = "empty"
+                entry["container"] = ("dict" if isinstance(leaf, dict)
+                                      else "tuple" if isinstance(leaf, tuple)
+                                      else "list")
+            else:
+                entry["kind"] = "array"
+                CKPT.encode_array(key, np.asarray(jax.device_get(leaf)), arrays)
+            leaves.append(entry)
+
+        manifest = {
+            "format_version": FORMAT_VERSION,
+            "recipe": recipe_to_dict(self.recipe),
+            "meta": self.meta,
+            "leaves": leaves,
+        }
+        CKPT.write_npz(os.path.join(tmp, _NPZ), arrays)
+        with open(os.path.join(tmp, _MANIFEST), "w") as f:
+            json.dump(manifest, f, indent=1, sort_keys=True)
+            f.flush()
+            os.fsync(f.fileno())
+        CKPT.atomic_commit_dir(tmp, path, _DONE)
+        return path
+
+    @classmethod
+    def load(cls, path: str) -> "QuantArtifact":
+        """Load a committed artifact; bit-exact inverse of :meth:`save`."""
+        if not os.path.exists(os.path.join(path, _DONE)):
+            raise FileNotFoundError(f"no committed artifact at {path}")
+        with open(os.path.join(path, _MANIFEST)) as f:
+            manifest = json.load(f)
+        version = manifest.get("format_version")
+        if version != FORMAT_VERSION:
+            raise ValueError(f"artifact format {version} != {FORMAT_VERSION}")
+        recipe = recipe_from_dict(manifest["recipe"])
+        entries: List[Tuple[Tuple, Any]] = []
+        with np.load(os.path.join(path, _NPZ)) as data:
+            for idx, entry in enumerate(manifest["leaves"]):
+                key = f"a{idx}"
+                path_t = tuple((p[0], p[1]) for p in entry["path"])
+                kind = entry["kind"]
+                if kind == "none":
+                    leaf = None
+                elif kind == "empty":
+                    leaf = {"dict": {}, "list": [], "tuple": ()}[entry["container"]]
+                elif kind == "array":
+                    leaf = jax.numpy.asarray(CKPT.decode_array(key, data))
+                else:
+                    fields = {f: (jax.numpy.asarray(CKPT.decode_array(f"{key}/{f}", data))
+                                  if f"{key}/{f}" in data.files else None)
+                              for f in _ET_FIELDS}
+                    leaf = ExpandedTensor(
+                        planes=fields["planes"], scales=fields["scales"],
+                        bias=fields["bias"], sat=fields["sat"],
+                        bits=int(entry["bits"]),
+                        per_channel=bool(entry["per_channel"]),
+                        batch_dims=int(entry["batch_dims"]),
+                        packed=bool(entry["packed"]),
+                        pack_pad=int(entry["pack_pad"]))
+                entries.append((path_t, leaf))
+        return cls(params=_unflatten(entries), recipe=recipe,
+                   meta=manifest["meta"])
+
+
+# ---------------------------------------------------------------------------
+# Recipe -> Artifact
+# ---------------------------------------------------------------------------
+def quantize(params: PyTree, recipe: QuantRecipe) -> QuantArtifact:
+    """The single quantization entry point: run the recipe's registered
+    method over ``params`` and package the result with provenance.
+
+    Wall-time of the method call is the paper's 'Quant-Time' (Tables 2/3);
+    size accounting comes from ``ptq.expansion_stats`` (Table 3)."""
+    import time
+
+    from repro.api.recipe import get_quantizer
+    from repro.core.ptq import expansion_stats
+
+    fn = get_quantizer(recipe.method)
+    t0 = time.perf_counter()
+    qparams, extra = fn(params, recipe)
+    seconds = time.perf_counter() - t0
+    # format_version and the per-leaf statics live in the manifest (save()
+    # writes them; leaf_table() derives them on demand) — meta holds only
+    # what the manifest does not already record
+    meta = {
+        "method": recipe.method,
+        "quant_seconds": seconds,
+        "expansion_stats": expansion_stats(qparams),
+        **extra,
+    }
+    return QuantArtifact(params=qparams, recipe=recipe, meta=meta)

@@ -1,0 +1,172 @@
+"""QuantRecipe: the declarative *what* of quantization (method + policy).
+
+The unified entry point is
+
+    artifact = quantize(params, QuantRecipe(method="fpxint", policy=W4A4))
+
+Every registered method — ``fpxint`` (the paper's series expansion), ``rtn``
+(round-to-nearest min-max PTQ) and ``gptq_lite`` (error-propagating one-shot
+PTQ) — consumes the same recipe and produces the same
+:class:`~repro.api.artifact.QuantArtifact`, so the Tables 1–6 comparisons
+all run through one code path.  Methods register via
+:func:`register_quantizer`; a :class:`Quantizer` maps
+``(params, recipe) -> (quantized params, provenance dict)``.
+
+Recipes are frozen/hashable and JSON round-trip (``recipe_to_dict`` /
+``recipe_from_dict``) so an artifact on disk records exactly how it was made.
+"""
+from __future__ import annotations
+
+import dataclasses
+from typing import Any, Callable, Dict, Optional, Protocol, Tuple
+
+from repro.core.policy import ExpansionPolicy, get_policy
+
+PyTree = Any
+
+
+@dataclasses.dataclass(frozen=True)
+class QuantRecipe:
+    """Declarative quantization request.
+
+    Attributes:
+      method: registry key (``fpxint`` | ``rtn`` | ``gptq_lite`` | plugins).
+      policy: the :class:`ExpansionPolicy` — ``fpxint`` uses all of it;
+              baseline methods read ``w_bits`` (their activation handling is
+              dynamic/FP by construction, matching the paper's tables).
+      pack:   INT4-pack the weight planes 2/byte (``fpxint`` with
+              ``w_bits <= 4`` leaves; forces pack-safe extraction so planes
+              stay on the packable grid).
+      arch:   optional ArchConfig id recorded for :class:`Runtime` model ops
+              (``apply`` / ``lm_loss`` / ``serve``); tensor-only use leaves
+              it None.
+      smoke:  whether ``arch`` refers to the smoke-scaled config.
+      calib_batch / calib_seed: synthetic-calibration knobs for the
+              calibrated-PTQ stand-in (``gptq_lite``).
+    """
+
+    method: str = "fpxint"
+    policy: ExpansionPolicy = ExpansionPolicy()
+    pack: bool = False
+    arch: Optional[str] = None
+    smoke: bool = True
+    calib_batch: int = 32
+    calib_seed: int = 0
+
+    def __post_init__(self):
+        if self.method not in QUANTIZERS:
+            raise KeyError(
+                f"unknown quantization method {self.method!r}; "
+                f"registered: {sorted(QUANTIZERS)}")
+        if self.pack:
+            if self.method != "fpxint":
+                raise ValueError(
+                    f"pack=True applies to series expansions only; method "
+                    f"{self.method!r} produces FP reconstructions")
+            if self.policy.w_bits > 4:
+                raise ValueError(
+                    f"pack=True needs w_bits <= 4 (got {self.policy.w_bits})")
+
+
+class Quantizer(Protocol):
+    """A registered quantization method: params -> (quantized params, extra
+    provenance merged into the artifact's ``meta``)."""
+
+    def __call__(self, params: PyTree, recipe: QuantRecipe
+                 ) -> Tuple[PyTree, Dict[str, Any]]: ...
+
+
+QUANTIZERS: Dict[str, Quantizer] = {}
+
+
+def register_quantizer(name: str) -> Callable[[Quantizer], Quantizer]:
+    """Decorator: add a method to the registry (last registration wins)."""
+    def deco(fn: Quantizer) -> Quantizer:
+        QUANTIZERS[name] = fn
+        return fn
+    return deco
+
+
+def get_quantizer(name: str) -> Quantizer:
+    try:
+        return QUANTIZERS[name]
+    except KeyError:
+        raise KeyError(f"unknown quantization method {name!r}; "
+                       f"registered: {sorted(QUANTIZERS)}") from None
+
+
+def list_methods() -> Tuple[str, ...]:
+    return tuple(sorted(QUANTIZERS))
+
+
+# ---------------------------------------------------------------------------
+# JSON round-trip (artifact manifest)
+# ---------------------------------------------------------------------------
+def recipe_to_dict(recipe: QuantRecipe) -> Dict[str, Any]:
+    d = dataclasses.asdict(recipe)
+    d["policy"] = dataclasses.asdict(recipe.policy)
+    return d
+
+
+def recipe_from_dict(d: Dict[str, Any]) -> QuantRecipe:
+    pd = dict(d["policy"])
+    if pd.get("mixed") is not None:
+        pd["mixed"] = tuple((str(k), tuple(int(b) for b in bits))
+                            for k, bits in pd["mixed"])
+    kw = {k: v for k, v in d.items() if k != "policy"}
+    return QuantRecipe(policy=ExpansionPolicy(**pd), **kw)
+
+
+def named_recipe(policy_name: str, method: str = "fpxint", **kw) -> QuantRecipe:
+    """Convenience: recipe from a canonical policy name (``w4a4`` etc.)."""
+    return QuantRecipe(method=method, policy=get_policy(policy_name), **kw)
+
+
+# ---------------------------------------------------------------------------
+# built-in methods
+# ---------------------------------------------------------------------------
+@register_quantizer("fpxint")
+def _fpxint(params: PyTree, recipe: QuantRecipe) -> Tuple[PyTree, Dict[str, Any]]:
+    """The paper's calibration-free series expansion (Theorems 1/2)."""
+    import jax
+
+    from repro.core import expansion as E
+    from repro.core import ptq as PTQ
+    from repro.core.expansion import ExpandedTensor
+
+    policy = recipe.policy
+    if recipe.pack and not policy.pack_safe:
+        policy = dataclasses.replace(policy, pack_safe=True)
+    q = jax.jit(lambda p: PTQ.expand_params(p, policy))(params)
+    q = jax.block_until_ready(q)
+    if recipe.pack:
+        q = jax.tree_util.tree_map(
+            lambda l: E.pack(l) if isinstance(l, ExpandedTensor) and l.bits <= 4 else l,
+            q, is_leaf=lambda l: isinstance(l, ExpandedTensor))
+    return q, {"expanded": True, "pack_safe": policy.pack_safe}
+
+
+@register_quantizer("rtn")
+def _rtn(params: PyTree, recipe: QuantRecipe) -> Tuple[PyTree, Dict[str, Any]]:
+    """Round-to-nearest min-max PTQ — Table 6's 'Normal' row.  Produces plain
+    FP reconstructions (weight-only), served through the FP apply path."""
+    import jax
+
+    from repro.quant.baselines import rtn_quantize_params
+
+    q = jax.block_until_ready(rtn_quantize_params(params, recipe.policy.w_bits))
+    return q, {"expanded": False, "weight_only": True}
+
+
+@register_quantizer("gptq_lite")
+def _gptq_lite(params: PyTree, recipe: QuantRecipe) -> Tuple[PyTree, Dict[str, Any]]:
+    """One-shot error-propagating PTQ (the calibrated-PTQ family stand-in)."""
+    import jax
+
+    from repro.quant.baselines import gptq_lite_quantize_params
+
+    q = jax.block_until_ready(gptq_lite_quantize_params(
+        params, recipe.policy.w_bits, calib_batch=recipe.calib_batch,
+        seed=recipe.calib_seed))
+    return q, {"expanded": False, "weight_only": True,
+               "calib_batch": recipe.calib_batch}

@@ -1,0 +1,90 @@
+"""Runtime: bind a QuantArtifact to an execution backend and run it.
+
+The backend names replace the ad-hoc ``QuantContext(use_kernel=...)``
+plumbing that previously leaked into every caller:
+
+  * ``ref``            pure-jnp reference path (XLA-fused; CPU-friendly);
+  * ``pallas``         the Pallas kernels (interpret on CPU, Mosaic on TPU);
+  * ``pallas-packed``  Pallas with INT4-packed weight planes served in place
+                       (requires an artifact built with ``pack=True``).
+
+A Runtime resolves the model config from the artifact's recorded ``arch``
+(or takes one explicitly), jits the forward once, and exposes
+
+  * ``apply(batch)``   full-sequence logits,
+  * ``lm_loss(batch)`` next-token loss + accuracy metrics,
+  * ``serve(...)``     a serving :class:`~repro.infer.serve.Engine` admitted
+                       by artifact — the model is expanded once per process
+                       (at quantize time), never re-expanded per engine.
+"""
+from __future__ import annotations
+
+from functools import cached_property
+from typing import Any, Dict, Optional, Tuple
+
+import jax
+import jax.numpy as jnp
+
+from repro.api.artifact import QuantArtifact
+from repro.configs.base import ArchConfig, get_arch
+
+PyTree = Any
+
+BACKENDS = ("ref", "pallas", "pallas-packed")
+
+
+class Runtime:
+    def __init__(self, artifact: QuantArtifact, backend: str = "ref",
+                 cfg: Optional[ArchConfig] = None):
+        if backend not in BACKENDS:
+            raise ValueError(f"unknown backend {backend!r}; one of {BACKENDS}")
+        self.artifact = artifact
+        self.backend = backend
+        self.qc = artifact.quant_context(backend)
+        self.params = artifact.runtime_params(backend)
+        if cfg is None and artifact.arch is not None:
+            cfg = get_arch(artifact.arch, smoke=artifact.recipe.smoke)
+        self.cfg = cfg
+
+    def _require_cfg(self) -> ArchConfig:
+        if self.cfg is None:
+            raise ValueError(
+                "this artifact records no model arch; pass cfg=ArchConfig to "
+                "Runtime (or set QuantRecipe(arch=...) at quantize time)")
+        return self.cfg
+
+    # -- execution ----------------------------------------------------------
+    @cached_property
+    def _forward(self):
+        from repro.models import model as M
+        cfg, qc = self._require_cfg(), self.qc
+        return jax.jit(lambda p, batch: M.forward(p, batch, cfg, qc))
+
+    @staticmethod
+    def _as_batch(batch) -> Dict[str, jnp.ndarray]:
+        if isinstance(batch, dict):
+            return {k: jnp.asarray(v) for k, v in batch.items()}
+        return {"tokens": jnp.asarray(batch)}
+
+    def apply(self, batch) -> jnp.ndarray:
+        """Full-sequence logits (B, S, V); ``batch`` is a dict or a raw
+        (B, S) token array."""
+        return self._forward(self.params, self._as_batch(batch))
+
+    def lm_loss(self, batch) -> Tuple[jnp.ndarray, Dict[str, jnp.ndarray]]:
+        """Next-token loss + metrics on a batch with ``labels``."""
+        from repro.train.train_step import loss_fn
+        return loss_fn(self.params, self._as_batch(batch),
+                       self._require_cfg(), self.qc)
+
+    def serve(self, serve_cfg=None, **engine_kw):
+        """A serving Engine admitted by this artifact (no re-expansion)."""
+        from repro.infer.serve import Engine, ServeConfig
+        return Engine(self._require_cfg(), artifact=self.artifact,
+                      backend=self.backend,
+                      serve_cfg=serve_cfg or ServeConfig(), **engine_kw)
+
+    def __repr__(self):
+        arch = self.cfg.name if self.cfg is not None else None
+        return (f"Runtime(method={self.artifact.method!r}, "
+                f"backend={self.backend!r}, arch={arch!r})")

@@ -49,7 +49,7 @@ def laplace_clip_multiplier(bits: int) -> float:
 @partial(
     jax.tree_util.register_dataclass,
     data_fields=["planes", "scales", "bias", "sat"],
-    meta_fields=["bits", "per_channel", "batch_dims"],
+    meta_fields=["bits", "per_channel", "batch_dims", "packed", "pack_pad"],
 )
 @dataclasses.dataclass
 class ExpandedTensor:
@@ -59,6 +59,8 @@ class ExpandedTensor:
       planes:  int8, shape (*B, t, *orig_shape).  INT-X values in an int8
                container.  ``B`` are optional leading batch axes (e.g. the
                expert axis of stacked MoE weights), see ``batch_dims``.
+               When ``packed``, the last axis holds 2 INT4 nibbles per byte
+               (kernels/pack.py) and is ``ceil(orig_shape[-1] / 2)`` wide.
       scales:  f32, shape (*B, t) (per-tensor) or (*B, t, C) with
                C = orig_shape[-1] (per-channel over the last axis).
       bias:    f32 (*B,) or (*B, C), the asymmetric zero offset
@@ -69,6 +71,10 @@ class ExpandedTensor:
       per_channel: whether scales carry a channel dim (static).
       batch_dims: number of leading batch axes (static); generic ops vmap
                themselves over these (``expand_batched`` produces them).
+      packed:  planes are INT4-packed 2/byte over the last axis (static).
+      pack_pad: zero nibbles appended at pack time for an odd last axis
+               (static; 0 or 1) — the artifact records it so unpacking can
+               strip the pad exactly.
     """
 
     planes: jnp.ndarray
@@ -78,6 +84,8 @@ class ExpandedTensor:
     bits: int
     per_channel: bool
     batch_dims: int = 0
+    packed: bool = False
+    pack_pad: int = 0
 
     @property
     def num_terms(self) -> int:
@@ -85,7 +93,10 @@ class ExpandedTensor:
 
     @property
     def orig_shape(self):
-        return self.planes.shape[self.batch_dims + 1:]
+        shape = self.planes.shape[self.batch_dims + 1:]
+        if self.packed:
+            shape = shape[:-1] + (shape[-1] * 2 - self.pack_pad,)
+        return shape
 
     def unbatched_view(self) -> "ExpandedTensor":
         """Static view with one batch axis peeled (for use inside jax.vmap)."""
@@ -97,7 +108,7 @@ class ExpandedTensor:
             f"ExpandedTensor(bits={self.bits}, terms={self.num_terms}, "
             f"shape={tuple(self.orig_shape)}, per_channel={self.per_channel}, "
             f"asym={self.bias is not None}, sat={self.sat is not None}, "
-            f"batch_dims={self.batch_dims})"
+            f"batch_dims={self.batch_dims}, packed={self.packed})"
         )
 
 
@@ -280,6 +291,8 @@ def expand_batched(
 
 def reconstruct(et: ExpandedTensor, terms: Optional[int] = None) -> jnp.ndarray:
     """Sum the series back to FP: M_sa + bias*M_nsy + sum_i scale_i * M~_i."""
+    if et.packed:
+        et = unpack(et)
     if et.batch_dims > 0:
         return jax.vmap(lambda e: reconstruct(e, terms))(et.unbatched_view())
     t = et.num_terms if terms is None else min(terms, et.num_terms)
@@ -329,3 +342,43 @@ def truncate(et: ExpandedTensor, terms: int) -> ExpandedTensor:
 def drop_sat(et: ExpandedTensor) -> ExpandedTensor:
     """Drop the saturation correction (paper §4: its loss influence is small)."""
     return dataclasses.replace(et, sat=None)
+
+
+def pack(et: ExpandedTensor) -> ExpandedTensor:
+    """INT4-pack the planes 2/byte over the last axis (kernels/pack.py).
+
+    Requires bits <= 4 with values on the true X-bit grid [-8, 7] (expand
+    with ``pack_safe=True``).  Odd last axes are padded by one zero nibble;
+    the pad is recorded in ``pack_pad`` so ``unpack`` strips it exactly."""
+    from repro.kernels.pack import pack_int4, pack_pad_nibbles
+
+    if et.packed:
+        return et
+    if et.bits > 4:
+        raise ValueError(f"cannot INT4-pack {et.bits}-bit planes")
+    # default (non-pack-safe) extraction lets residual planes reach +2^{X-1}
+    # (= +8 for X=4), which the nibble mask would silently wrap to -8 —
+    # refuse rather than corrupt (the check is skipped under tracing; the
+    # quantize-time callers pass concrete arrays)
+    if not isinstance(et.planes, jax.core.Tracer):
+        mx = int(jnp.max(et.planes)) if et.planes.size else 0
+        if mx > 7:
+            raise ValueError(
+                f"planes reach +{mx}, outside the packable nibble grid "
+                f"[-8, 7]; expand with pack_safe=True")
+    cols = et.planes.shape[-1]
+    return dataclasses.replace(
+        et, planes=pack_int4(et.planes), packed=True,
+        pack_pad=pack_pad_nibbles(cols))
+
+
+def unpack(et: ExpandedTensor) -> ExpandedTensor:
+    """Inverse of :func:`pack`: restore unpacked int8 planes (bit-exact)."""
+    from repro.kernels.pack import unpack_int4
+
+    if not et.packed:
+        return et
+    cols = et.planes.shape[-1] * 2 - et.pack_pad
+    return dataclasses.replace(
+        et, planes=unpack_int4(et.planes, orig_cols=cols), packed=False,
+        pack_pad=0)

@@ -43,6 +43,7 @@ def expand_weight(w: jnp.ndarray, policy: ExpansionPolicy, *, bits: Optional[int
         saturating=policy.w_saturating,
         per_channel=policy.w_per_channel,
         keep_sat=policy.keep_w_sat,
+        pack_safe=policy.pack_safe,
     )
 
 
@@ -98,10 +99,19 @@ def expanded_apply(
     lead = x.shape[:-1]
     x2d = x.reshape(-1, k).astype(jnp.float32)
 
-    if a_terms <= 0 or a_bits >= 16:
+    weight_only = a_terms <= 0 or a_bits >= 16
+    # packed INT4 planes serve the weight-only Pallas GEMM directly (no
+    # dequantized copy in HBM); every other path unpacks transparently
+    if w_et.packed and not (weight_only and use_kernel and w_et.pack_pad == 0):
+        w_et = E.unpack(w_et)
+
+    if weight_only:
         # weight-only quantization: exact FP activation x reconstructed weight
-        out = ops.dequant_matmul(
-            x2d, w_et.planes, w_et.scales if w_et.per_channel else w_et.scales[:, None] * jnp.ones((1, n)))
+        if w_et.packed:
+            out = ops.packed_dequant_matmul(x2d, w_et.planes, w_et.scales)
+        else:
+            out = ops.dequant_matmul(
+                x2d, w_et.planes, w_et.scales if w_et.per_channel else w_et.scales[:, None] * jnp.ones((1, n)))
         if w_et.bias is not None:
             out = out + jnp.sum(x2d, axis=-1, keepdims=True) * w_et.bias
         if w_et.sat is not None:

@@ -36,6 +36,10 @@ class ExpansionPolicy:
                                        # smoke LM) — beyond-paper default
     keep_w_sat: bool = True
     keep_a_sat: bool = False           # paper §4: A_sa influence is small
+    pack_safe: bool = False            # keep every plane on the true X-bit
+                                       # grid so INT4 planes pack 2/byte
+                                       # (kernels/pack.py); costs a 3x slack
+                                       # on the final-term residual bound
     # layer placement
     first_last_bits: int = 8           # §5.1: first & last layers at 8-bit
     first_last_terms: int = 1

@@ -78,11 +78,13 @@ def expand_params(
             return E.expand_batched(
                 leaf, bits, terms, batch_dims=bd,
                 symmetric=policy.w_symmetric, saturating=policy.w_saturating,
-                per_channel=policy.w_per_channel, keep_sat=policy.keep_w_sat)
+                per_channel=policy.w_per_channel, keep_sat=policy.keep_w_sat,
+                pack_safe=policy.pack_safe)
         return E.expand(
             leaf, bits, terms,
             symmetric=policy.w_symmetric, saturating=policy.w_saturating,
-            per_channel=policy.w_per_channel, keep_sat=policy.keep_w_sat)
+            per_channel=policy.w_per_channel, keep_sat=policy.keep_w_sat,
+            pack_safe=policy.pack_safe)
 
     return jax.tree_util.tree_map_with_path(visit, params)
 
@@ -108,8 +110,11 @@ def expansion_stats(params: PyTree) -> Dict[str, float]:
             orig = int(jnp.prod(jnp.array(leaf.orig_shape)))
             batch = int(jnp.prod(jnp.array(leaf.planes.shape[: leaf.batch_dims]))) if leaf.batch_dims else 1
             fp_bytes += 4 * orig * batch
-            # logical low-bit storage: bits/8 bytes per element per term
-            q_bytes += leaf.planes.size * leaf.bits // 8 + leaf.scales.size * 4
+            # logical low-bit storage: bits/8 bytes per element per term —
+            # counted from orig_shape so packed (2 nibbles/byte) and
+            # unpacked planes of the same series cost the same
+            q_bytes += orig * batch * leaf.num_terms * leaf.bits // 8 \
+                + leaf.scales.size * 4
             if leaf.bias is not None:
                 q_bytes += leaf.bias.size * 4
             if leaf.sat is not None:

@@ -36,12 +36,15 @@ def _flatten(tree: PyTree):
 
 # npz silently degrades extension dtypes (bfloat16, float8_*) to void — store
 # those as flat raw bytes plus "<key>::dtype" / "<key>::shape" sidecar
-# entries so the exact dtype round-trips.
+# entries so the exact dtype round-trips.  ``encode_array``/``decode_array``
+# and ``write_npz``/``atomic_commit_dir`` are the reusable substrate the
+# quantization-artifact format (repro.api.artifact) is built on.
 _DTYPE_KEY = "::dtype"
 _SHAPE_KEY = "::shape"
 
 
-def _encode_leaf(key: str, arr: np.ndarray, out: dict) -> None:
+def encode_array(key: str, arr: np.ndarray, out: dict) -> None:
+    """Add ``arr`` to the npz dict, extension-dtype-safe (bf16/fp8 survive)."""
     if arr.dtype.kind in "biufc":
         out[key] = arr
         return
@@ -50,7 +53,8 @@ def _encode_leaf(key: str, arr: np.ndarray, out: dict) -> None:
     out[key + _SHAPE_KEY] = np.array(arr.shape, np.int64)
 
 
-def _decode_leaf(key: str, data) -> np.ndarray:
+def decode_array(key: str, data) -> np.ndarray:
+    """Inverse of :func:`encode_array` against an open ``np.load`` handle."""
     arr = data[key]
     if key + _DTYPE_KEY not in data.files:
         return arr
@@ -60,15 +64,59 @@ def _decode_leaf(key: str, data) -> np.ndarray:
     return arr.view(dtype).reshape(shape)
 
 
+def is_sidecar_key(key: str) -> bool:
+    """True for the ``::dtype``/``::shape`` entries decode_array consumes."""
+    return key.endswith(_DTYPE_KEY) or key.endswith(_SHAPE_KEY)
+
+
+def write_npz(path: str, arrays: dict) -> None:
+    """np.savez + flush + fsync (durable before any commit marker)."""
+    with open(path, "wb") as f:
+        np.savez(f, **arrays)
+        f.flush()
+        os.fsync(f.fileno())
+
+
+def atomic_commit_dir(tmp: str, final: str, done_marker: str = _DONE) -> None:
+    """Atomically publish a fully-written ``tmp`` directory at ``final``:
+    rename into place, then write the commit marker readers key on LAST.
+
+    A pre-existing ``final`` is moved aside (rename, not delete) before the
+    swap and removed only after the new marker is durably written, so a
+    crash mid-commit never destroys the previously committed copy — it
+    survives at ``<final>.old`` (with its marker) for manual recovery."""
+    old = final + ".old"
+    if os.path.exists(final):
+        if os.path.exists(old):
+            shutil.rmtree(old)
+        os.replace(final, old)
+    os.replace(tmp, final)
+    with open(os.path.join(final, done_marker), "w") as f:
+        f.write("ok\n")
+        f.flush()
+        os.fsync(f.fileno())
+    shutil.rmtree(old, ignore_errors=True)
+
+
+# backwards-compatible private aliases (internal callers predate the api layer)
+_encode_leaf = encode_array
+_decode_leaf = decode_array
+
+
 def committed_steps(directory: str) -> List[int]:
     """Sorted steps with a commit marker (crashed saves are invisible)."""
     if not os.path.isdir(directory):
         return []
     out = []
     for name in os.listdir(directory):
-        if name.startswith(_STEP_PREFIX) and \
-                os.path.exists(os.path.join(directory, name, _DONE)):
-            out.append(int(name[len(_STEP_PREFIX):]))
+        if not name.startswith(_STEP_PREFIX):
+            continue
+        try:  # skip step_*.tmp / step_*.old leftovers of interrupted saves
+            step = int(name[len(_STEP_PREFIX):])
+        except ValueError:
+            continue
+        if os.path.exists(os.path.join(directory, name, _DONE)):
+            out.append(step)
     return sorted(out)
 
 
@@ -91,7 +139,13 @@ def gc_old(directory: str, keep: int) -> None:
         path = os.path.join(directory, name)
         try:
             step = int(name[len(_STEP_PREFIX):])
-        except ValueError:           # crashed save's step_*.tmp directory
+        except ValueError:
+            # a committed *.old copy is the survivor of a crashed re-commit
+            # (atomic_commit_dir) — preserve it for manual recovery; only
+            # markerless leftovers (step_*.tmp, torn moves) are garbage
+            if name.endswith(".old") and \
+                    os.path.exists(os.path.join(path, _DONE)):
+                continue
             shutil.rmtree(path, ignore_errors=True)
             continue
         if step in drop or not os.path.exists(os.path.join(path, _DONE)):
@@ -109,16 +163,9 @@ def save(directory: str, step: int, state: PyTree, keep: Optional[int] = None) -
     flat, _ = _flatten(state)
     arrays: dict = {}
     for key, leaf in flat:
-        _encode_leaf(key, np.asarray(jax.device_get(leaf)), arrays)
-    with open(os.path.join(tmp, _FILE), "wb") as f:
-        np.savez(f, **arrays)
-        f.flush()
-        os.fsync(f.fileno())
-    if os.path.exists(final):
-        shutil.rmtree(final)
-    os.replace(tmp, final)
-    with open(os.path.join(final, _DONE), "w") as f:
-        f.write("ok\n")
+        encode_array(key, np.asarray(jax.device_get(leaf)), arrays)
+    write_npz(os.path.join(tmp, _FILE), arrays)
+    atomic_commit_dir(tmp, final)
     if keep:
         gc_old(directory, keep)
 
@@ -143,7 +190,7 @@ def restore(directory: str, template: PyTree,
         for idx, (key, tmpl) in enumerate(flat):
             if key not in data.files:
                 raise KeyError(f"checkpoint at step {step} has no leaf {key}")
-            arr = _decode_leaf(key, data)
+            arr = decode_array(key, data)
             if tuple(arr.shape) != tuple(tmpl.shape):
                 raise ValueError(
                     f"shape mismatch at {key}: checkpoint {arr.shape} vs "

@@ -1,1 +1,1 @@
-from repro.infer.serve import Engine, ServeConfig, make_serve_step
+from repro.infer.serve import Engine, ServeConfig, make_decode_sample_step, make_serve_step

@@ -84,18 +84,38 @@ def make_decode_sample_step(cfg: ArchConfig, qc: QuantContext = FP):
 
 
 class Engine:
-    def __init__(self, cfg: ArchConfig, params: PyTree, *,
+    def __init__(self, cfg: ArchConfig, params: Optional[PyTree] = None, *,
                  policy: Optional[ExpansionPolicy] = None,
+                 artifact: Optional[Any] = None,
+                 backend: Optional[str] = None,
                  serve_cfg: ServeConfig = ServeConfig(),
                  use_kernel: bool = False):
+        """Admit a model either as raw FP ``params`` (optionally expanded
+        here when ``policy`` is given — the legacy per-engine path) or as a
+        pre-built ``artifact`` (:class:`repro.api.QuantArtifact`): the
+        quantized params are bound as-is, so a model is expanded once per
+        process (at ``quantize`` time), not once per engine.  ``backend``
+        picks the artifact execution path (``ref`` | ``pallas`` |
+        ``pallas-packed``; see :class:`repro.api.Runtime`)."""
         self.cfg = cfg
         self.sc = serve_cfg
-        self.qc = QuantContext(policy=policy, use_kernel=use_kernel) if policy else FP
-        t0 = time.perf_counter()
-        if policy is not None:
-            params = jax.jit(lambda p: PTQ.expand_params(p, policy))(params)
-            params = jax.block_until_ready(params)
-        self.quant_seconds = time.perf_counter() - t0
+        if artifact is not None:
+            if params is not None or policy is not None:
+                raise ValueError(
+                    "pass either artifact= or (params, policy), not both")
+            backend = backend or ("pallas" if use_kernel else "ref")
+            self.qc = artifact.quant_context(backend)
+            params = artifact.runtime_params(backend)
+            self.quant_seconds = artifact.quant_seconds  # paid once, upstream
+        else:
+            if params is None:
+                raise ValueError("Engine needs params or an artifact")
+            self.qc = QuantContext(policy=policy, use_kernel=use_kernel) if policy else FP
+            t0 = time.perf_counter()
+            if policy is not None:
+                params = jax.jit(lambda p: PTQ.expand_params(p, policy))(params)
+                params = jax.block_until_ready(params)
+            self.quant_seconds = time.perf_counter() - t0
         self.params = params
         self._queue: List[Tuple[int, List[int]]] = []
         self._next_id = 0

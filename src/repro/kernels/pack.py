@@ -7,33 +7,57 @@ two INT4 values per byte halves plane HBM traffic; the unpack is two shifts
 
 Packing applies to bits <= 4 planes (values in [-8, 7]).  The packed layout
 pairs adjacent elements of the LAST axis: packed[..., i] holds
-(plane[..., 2i] & 0xF) | (plane[..., 2i+1] << 4).
+(plane[..., 2i] & 0xF) | (plane[..., 2i+1] << 4).  An odd last axis is
+padded with one zero nibble; :func:`pack_pad_nibbles` reports the pad so
+artifacts can record it and ``unpack_int4(packed, orig_cols=...)`` can strip
+it on the way back.
 """
 from __future__ import annotations
+
+from typing import Optional
 
 import jax.numpy as jnp
 
 
+def pack_pad_nibbles(last_dim: int) -> int:
+    """Zero nibbles appended to make the last axis even (0 or 1)."""
+    return last_dim % 2
+
+
 def pack_int4(planes: jnp.ndarray) -> jnp.ndarray:
-    """int8 planes with values in [-8, 7], even last axis -> packed int8."""
-    assert planes.shape[-1] % 2 == 0, planes.shape
+    """int8 planes with values in [-8, 7] -> packed int8 (2 values/byte).
+
+    An odd last axis is zero-padded by one nibble; record
+    ``pack_pad_nibbles(planes.shape[-1])`` alongside the packed array (the
+    artifact's ``pack_pad``) and pass the original width to
+    :func:`unpack_int4` to round-trip exactly."""
+    pad = pack_pad_nibbles(planes.shape[-1])
+    if pad:
+        pads = [(0, 0)] * (planes.ndim - 1) + [(0, pad)]
+        planes = jnp.pad(planes, pads)
     lo = planes[..., 0::2].astype(jnp.int32) & 0xF
     hi = (planes[..., 1::2].astype(jnp.int32) & 0xF) << 4
     return (lo | hi).astype(jnp.int8)
 
 
-def unpack_int4(packed: jnp.ndarray) -> jnp.ndarray:
-    """packed int8 -> int8 planes (sign-extended 4-bit values)."""
+def unpack_int4(packed: jnp.ndarray, orig_cols: Optional[int] = None) -> jnp.ndarray:
+    """packed int8 -> int8 planes (sign-extended 4-bit values).
+
+    ``orig_cols`` strips the pad nibble recorded at pack time (odd widths)."""
     p = packed.astype(jnp.int32)
     lo = (p << 28) >> 28                      # sign-extend low nibble
     hi = (p << 24) >> 28                      # sign-extend high nibble
     out_shape = packed.shape[:-1] + (packed.shape[-1] * 2,)
     out = jnp.stack([lo, hi], axis=-1).reshape(out_shape)
+    if orig_cols is not None:
+        out = out[..., :orig_cols]
     return out.astype(jnp.int8)
 
 
 def packed_bytes(planes: jnp.ndarray, bits: int) -> int:
     """Storage bytes with packing (vs planes.size unpacked)."""
     if bits <= 4:
-        return planes.size // 2
+        cols = planes.shape[-1]
+        rows = planes.size // max(cols, 1)
+        return rows * ((cols + 1) // 2)
     return planes.size

@@ -1,6 +1,13 @@
-"""Serving launcher: expand a model per FP=xINT and serve batched requests.
+"""Serving launcher: quantize per recipe (or load a saved artifact) and
+serve batched requests through the unified Recipe -> Artifact -> Runtime API.
 
 ``python -m repro.launch.serve --arch qwen2_1_5b --smoke --policy w4a4``
+
+Artifact round-trip (expand once, serve forever):
+
+``... --save-artifact /tmp/qwen_w4a4``   quantize, save, then serve
+``... --artifact /tmp/qwen_w4a4``        load a pre-built artifact; no
+                                         re-expansion at admission
 
 Prints quantization time (the paper's Table 2/3 metric), per-request
 generations for a synthetic batch, and decode throughput.
@@ -13,6 +20,7 @@ import time
 import jax
 import numpy as np
 
+from repro.api import QuantArtifact, QuantRecipe, Runtime, list_methods
 from repro.configs.base import ARCH_IDS, get_arch
 from repro.core.policy import get_policy
 from repro.infer.serve import Engine, ServeConfig
@@ -24,7 +32,16 @@ def main(argv=None):
     ap.add_argument("--arch", choices=ARCH_IDS, required=True)
     ap.add_argument("--smoke", action="store_true")
     ap.add_argument("--policy", default="w4a4")
+    ap.add_argument("--method", default="fpxint", choices=list_methods())
+    ap.add_argument("--backend", default="ref",
+                    choices=("ref", "pallas", "pallas-packed"))
+    ap.add_argument("--pack", action="store_true",
+                    help="INT4-pack weight planes (w_bits <= 4)")
     ap.add_argument("--fp", action="store_true", help="serve unquantized")
+    ap.add_argument("--artifact", default=None,
+                    help="load a saved artifact instead of quantizing")
+    ap.add_argument("--save-artifact", default=None,
+                    help="save the quantized artifact here before serving")
     ap.add_argument("--requests", type=int, default=8)
     ap.add_argument("--prompt-len", type=int, default=16)
     ap.add_argument("--max-new", type=int, default=16)
@@ -34,12 +51,46 @@ def main(argv=None):
 
     cfg = get_arch(args.arch, smoke=args.smoke)
     assert not cfg.is_encoder, "encoder-only archs have no decode path"
-    params = M.init_params(jax.random.PRNGKey(args.seed), cfg)
-    policy = None if args.fp else get_policy(args.policy)
-    eng = Engine(cfg, params, policy=policy,
-                 serve_cfg=ServeConfig(max_seq=args.max_seq, max_batch=args.requests))
-    print(f"quantization time: {eng.quant_seconds:.3f}s "
-          f"(policy={'fp' if args.fp else args.policy})")
+    serve_cfg = ServeConfig(max_seq=args.max_seq, max_batch=args.requests)
+
+    if args.fp:
+        params = M.init_params(jax.random.PRNGKey(args.seed), cfg)
+        eng = Engine(cfg, params, serve_cfg=serve_cfg)
+        print("serving FP (no quantization)")
+    else:
+        if args.artifact:
+            if args.save_artifact or args.pack:
+                raise SystemExit(
+                    "--artifact loads a pre-built artifact; it cannot be "
+                    "combined with --save-artifact or --pack (re-quantize "
+                    "from params to produce a new artifact)")
+            art = QuantArtifact.load(args.artifact)
+            if art.arch is not None and art.arch != args.arch:
+                raise SystemExit(
+                    f"artifact was built for arch={art.arch!r} "
+                    f"(smoke={art.recipe.smoke}); got --arch {args.arch!r}")
+            if art.arch is not None and art.recipe.smoke != args.smoke:
+                raise SystemExit(
+                    f"artifact was built with smoke={art.recipe.smoke}; "
+                    f"pass {'--smoke' if art.recipe.smoke else 'no --smoke'}")
+            print(f"loaded artifact: method={art.method} "
+                  f"policy=w{art.policy.w_bits}a{art.policy.a_bits} "
+                  f"packed={art.packed} (admission does NOT re-expand)")
+        else:
+            params = M.init_params(jax.random.PRNGKey(args.seed), cfg)
+            recipe = QuantRecipe(method=args.method,
+                                 policy=get_policy(args.policy),
+                                 pack=args.pack, arch=args.arch,
+                                 smoke=args.smoke)
+            art = quantize_and_report(params, recipe)
+            if args.save_artifact:
+                art.save(args.save_artifact)
+                print(f"artifact saved to {args.save_artifact}")
+        eng = Runtime(art, backend=args.backend, cfg=cfg).serve(serve_cfg)
+        print(f"quantization time: {eng.quant_seconds:.3f}s "
+              f"(method={art.method}, "
+              f"policy=w{art.policy.w_bits}a{art.policy.a_bits}, "
+              f"backend={args.backend})")
 
     rng = np.random.default_rng(args.seed)
     for _ in range(args.requests):
@@ -52,6 +103,19 @@ def main(argv=None):
         print(f"req {rid}: {toks[:12]}{'...' if len(toks) > 12 else ''}")
     print(f"{n_tok} tokens in {dt:.2f}s = {n_tok/dt:.1f} tok/s (batched, incl. prefill)")
     return out
+
+
+def quantize_and_report(params, recipe: QuantRecipe):
+    from repro.api import quantize
+    art = quantize(params, recipe)
+    st = art.meta["expansion_stats"]
+    calib = art.meta.get("calib_batch")
+    data = (f"{calib} synthetic calibration samples" if calib
+            else "zero calibration data")
+    print(f"quantized: {int(st['expanded_leaves'])} leaves, "
+          f"{st['compression']:.2f}x compression, {art.quant_seconds:.2f}s, "
+          f"{data}")
+    return art
 
 
 if __name__ == "__main__":

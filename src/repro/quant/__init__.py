@@ -1,2 +1,3 @@
-from repro.quant.baselines import rtn_quantize_params, rtn_quantize_tensor, gptq_lite_quantize
+from repro.quant.baselines import (gptq_lite_quantize, gptq_lite_quantize_params,
+                                   rtn_quantize_params, rtn_quantize_tensor)
 from repro.quant.observers import MinMaxObserver, PercentileObserver, LaplaceObserver

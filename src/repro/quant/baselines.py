@@ -81,3 +81,27 @@ def gptq_lite_quantize(w: jnp.ndarray, x_cal: jnp.ndarray, bits: int) -> jnp.nda
 
     _, wq = jax.lax.scan(body, jnp.zeros((n,), jnp.float32), (w, h))
     return wq
+
+
+def gptq_lite_quantize_params(params: PyTree, bits: int, *, calib_batch: int = 32,
+                              seed: int = 0) -> PyTree:
+    """GPTQ-lite on every GEMM weight leaf (path ends in 'kernel').
+
+    One synthetic calibration batch is drawn per leaf and shared across the
+    slices of stacked (>2-dim expert/scanned) weights (the proxy benchmarks
+    have no real calibration set in the container — the method still exercises
+    the error-propagation machinery the calibrated-PTQ family relies on)."""
+    import numpy as np
+    r = np.random.default_rng(seed)
+
+    def visit(path, leaf):
+        name = "/".join(str(getattr(p, "key", getattr(p, "idx", p))) for p in path)
+        if name.rsplit("/", 1)[-1] == "kernel" and hasattr(leaf, "ndim") and leaf.ndim >= 2:
+            k = leaf.shape[-2]
+            x_cal = jnp.array(r.normal(size=(calib_batch, k)).astype("float32"))
+            flat = leaf.reshape(-1, *leaf.shape[-2:])
+            out = jnp.stack([gptq_lite_quantize(w, x_cal, bits) for w in flat])
+            return out.reshape(leaf.shape)
+        return leaf
+
+    return jax.tree_util.tree_map_with_path(visit, params)

@@ -1,0 +1,357 @@
+"""Unified quantization API: Recipe -> Artifact -> Runtime.
+
+Contracts under test:
+  * every registered method produces the same artifact type through
+    ``quantize`` and evaluates through the same Runtime path;
+  * ``save``/``load`` round-trips bit-exactly — planes/scales/bias/sat for
+    per-channel, batched (>2-dim expert/scanned) and packed-INT4 leaves;
+  * a loaded artifact's ``Runtime.apply`` matches the in-memory one
+    bit-exactly (the ISSUE acceptance criterion) for all three methods;
+  * serving admission by artifact does not re-expand;
+  * pack_int4 handles odd last axes via the recorded pad nibble.
+"""
+import dataclasses
+import os
+
+import jax
+import jax.numpy as jnp
+import numpy as np
+import pytest
+
+from repro.api import (QuantArtifact, QuantRecipe, Runtime, list_methods,
+                       named_recipe, quantize, recipe_from_dict,
+                       recipe_to_dict, register_quantizer)
+from repro.configs.base import get_arch
+from repro.core import expansion as E
+from repro.core.expansion import ExpandedTensor
+from repro.core.policy import ExpansionPolicy, W4A4, W4A16
+from repro.models import model as M
+
+METHODS = ("fpxint", "rtn", "gptq_lite")
+
+
+def _toy_params(rng):
+    r = np.random.default_rng(0)
+    return {
+        "embed": {"embedding": jnp.array(r.normal(size=(64, 16)).astype(np.float32))},
+        "stages": {"b0_attn": {"attn": {"q": {"kernel": jnp.array(
+            r.normal(size=(2, 16, 16)).astype(np.float32))}},
+            "ln": {"scale": jnp.ones((2, 16))}}},
+        "lm_head": {"kernel": jnp.array(r.normal(size=(16, 64)).astype(np.float32))},
+    }
+
+
+def _assert_trees_equal(a, b):
+    la = jax.tree_util.tree_leaves(a, is_leaf=lambda l: isinstance(l, ExpandedTensor))
+    lb = jax.tree_util.tree_leaves(b, is_leaf=lambda l: isinstance(l, ExpandedTensor))
+    assert len(la) == len(lb)
+    for x, y in zip(la, lb):
+        if isinstance(x, ExpandedTensor):
+            assert isinstance(y, ExpandedTensor)
+            assert (x.bits, x.per_channel, x.batch_dims, x.packed, x.pack_pad) \
+                == (y.bits, y.per_channel, y.batch_dims, y.packed, y.pack_pad)
+            for f in ("planes", "scales", "bias", "sat"):
+                xa, ya = getattr(x, f), getattr(y, f)
+                assert (xa is None) == (ya is None), f
+                if xa is not None:
+                    np.testing.assert_array_equal(np.asarray(xa), np.asarray(ya))
+                    assert xa.dtype == ya.dtype
+        else:
+            np.testing.assert_array_equal(np.asarray(x), np.asarray(y))
+
+
+# ---------------------------------------------------------------------------
+# registry / recipe
+# ---------------------------------------------------------------------------
+def test_registry_has_builtin_methods():
+    assert set(METHODS) <= set(list_methods())
+
+
+def test_unknown_method_raises():
+    with pytest.raises(KeyError):
+        QuantRecipe(method="nope")
+
+
+def test_pack_requires_low_bits():
+    with pytest.raises(ValueError):
+        QuantRecipe(method="fpxint", policy=ExpansionPolicy(w_bits=8), pack=True)
+
+
+def test_pack_requires_series_method():
+    """pack=True on an FP-reconstruction method is rejected up front (the
+    method would silently ignore it and pallas-packed would refuse later)."""
+    with pytest.raises(ValueError):
+        QuantRecipe(method="rtn", policy=W4A4, pack=True)
+
+
+def test_recipe_json_roundtrip():
+    pol = ExpansionPolicy(w_bits=2, mixed=(("attn", (2, 4)),))
+    r = QuantRecipe(method="fpxint", policy=pol, pack=True, arch="qwen2_1_5b")
+    r2 = recipe_from_dict(recipe_to_dict(r))
+    assert r2 == r
+    assert hash(r2) == hash(r)              # stays hashable (static jit arg)
+
+
+def test_named_recipe():
+    r = named_recipe("w4a16", method="fpxint")
+    assert r.policy == W4A16
+
+
+def test_register_custom_quantizer(rng):
+    @register_quantizer("identity_test")
+    def _identity(params, recipe):
+        return params, {"expanded": False}
+    try:
+        art = quantize(_toy_params(rng), QuantRecipe(method="identity_test"))
+        assert isinstance(art, QuantArtifact)
+        assert art.method == "identity_test"
+    finally:
+        from repro.api.recipe import QUANTIZERS
+        del QUANTIZERS["identity_test"]
+
+
+# ---------------------------------------------------------------------------
+# quantize: one artifact type for every method
+# ---------------------------------------------------------------------------
+@pytest.mark.parametrize("method", METHODS)
+def test_quantize_produces_artifact(rng, method):
+    art = quantize(_toy_params(rng), QuantRecipe(method=method, policy=W4A4))
+    assert isinstance(art, QuantArtifact)
+    assert art.quant_seconds > 0.0
+    assert "expansion_stats" in art.meta
+    if method == "fpxint":
+        assert art.expanded
+        assert art.leaf_table()              # per-leaf bits/terms provenance
+        entry = art.leaf_table()["lm_head/kernel"]
+        assert entry["bits"] == 8            # first/last protection recorded
+    else:
+        assert not art.expanded
+        # baselines reconstruct in FP: same tree structure as the input
+        assert isinstance(art.params["lm_head"]["kernel"], jnp.ndarray)
+
+
+def test_provenance_batched_leaf(rng):
+    art = quantize(_toy_params(rng), QuantRecipe(method="fpxint", policy=W4A4))
+    entry = art.leaf_table()["stages/b0_attn/attn/q/kernel"]
+    assert entry["batch_dims"] == 1 and entry["terms"] == 2
+
+
+# ---------------------------------------------------------------------------
+# save / load bit-exactness
+# ---------------------------------------------------------------------------
+@pytest.mark.parametrize("method", METHODS)
+def test_save_load_roundtrip(rng, tmp_path, method):
+    art = quantize(_toy_params(rng), QuantRecipe(method=method, policy=W4A4))
+    path = str(tmp_path / method)
+    art.save(path)
+    art2 = QuantArtifact.load(path)
+    assert art2.recipe == art.recipe
+    assert art2.meta["method"] == method
+    _assert_trees_equal(art.params, art2.params)
+
+
+def test_save_load_per_channel_bias_sat(rng, tmp_path):
+    """Asymmetric saturating per-channel expansion: bias and sat present."""
+    pol = ExpansionPolicy(w_bits=4, w_symmetric=False, w_saturating=True,
+                          keep_w_sat=True, w_per_channel=True)
+    art = quantize(_toy_params(rng), QuantRecipe(method="fpxint", policy=pol))
+    et = art.params["lm_head"]["kernel"]
+    assert et.bias is not None and et.sat is not None
+    art.save(str(tmp_path / "a"))
+    _assert_trees_equal(art.params, QuantArtifact.load(str(tmp_path / "a")).params)
+
+
+def test_save_load_packed(rng, tmp_path):
+    art = quantize(_toy_params(rng),
+                   QuantRecipe(method="fpxint", policy=W4A4, pack=True))
+    assert art.packed
+    et = art.params["stages"]["b0_attn"]["attn"]["q"]["kernel"]
+    assert et.packed and et.planes.shape[-1] == 8      # 16 cols -> 8 bytes
+    art.save(str(tmp_path / "p"))
+    art2 = QuantArtifact.load(str(tmp_path / "p"))
+    _assert_trees_equal(art.params, art2.params)
+    # unpacked view identical to an unpacked quantize of the same params
+    plain = quantize(_toy_params(rng), QuantRecipe(
+        method="fpxint", policy=dataclasses.replace(W4A4, pack_safe=True)))
+    _assert_trees_equal(art2.runtime_params("ref"), plain.params)
+
+
+def test_save_load_packed_odd_axis(tmp_path):
+    """Odd last axis: the pad nibble is recorded and stripped exactly."""
+    r = np.random.default_rng(3)
+    params = {"fc": {"kernel": jnp.array(r.normal(size=(16, 33)).astype(np.float32))}}
+    pol = ExpansionPolicy(w_bits=4, first_last_bits=4)   # no 8-bit protection
+    art = quantize(params, QuantRecipe(method="fpxint", policy=pol, pack=True))
+    et = art.params["fc"]["kernel"]
+    assert et.packed and et.pack_pad == 1 and et.planes.shape[-1] == 17
+    assert et.orig_shape == (16, 33)
+    art.save(str(tmp_path / "odd"))
+    art2 = QuantArtifact.load(str(tmp_path / "odd"))
+    _assert_trees_equal(art.params, art2.params)
+    up = art2.runtime_params("ref")["fc"]["kernel"]
+    assert up.planes.shape == (2, 16, 33)
+    np.testing.assert_array_equal(
+        np.asarray(E.reconstruct(art.params["fc"]["kernel"])),
+        np.asarray(E.reconstruct(up)))
+
+
+def test_save_load_empty_containers(tmp_path):
+    """Empty subtrees (parameterless modules) survive the round-trip with
+    identical pytree structure."""
+    r = np.random.default_rng(0)
+    params = {"a": {"kernel": jnp.array(r.normal(size=(8, 8)).astype(np.float32))},
+              "empty_mod": {}, "empty_list": []}
+    art = quantize(params, QuantRecipe(method="fpxint", policy=W4A4))
+    art.save(str(tmp_path / "e"))
+    loaded = QuantArtifact.load(str(tmp_path / "e")).params
+    assert loaded["empty_mod"] == {} and loaded["empty_list"] == []
+    assert (jax.tree_util.tree_structure(loaded)
+            == jax.tree_util.tree_structure(art.params))
+
+
+def test_load_uncommitted_raises(tmp_path):
+    os.makedirs(tmp_path / "torn")
+    with pytest.raises(FileNotFoundError):
+        QuantArtifact.load(str(tmp_path / "torn"))
+
+
+def test_save_is_atomic_replace(rng, tmp_path):
+    """Re-saving over an existing artifact replaces it committed-or-nothing."""
+    art = quantize(_toy_params(rng), QuantRecipe(method="fpxint", policy=W4A4))
+    path = str(tmp_path / "a")
+    art.save(path)
+    art.save(path)                                      # overwrite in place
+    assert os.path.exists(os.path.join(path, ".DONE"))
+    assert not os.path.exists(path + ".tmp")
+    assert not os.path.exists(path + ".old")            # staging cleaned up
+    _assert_trees_equal(art.params, QuantArtifact.load(path).params)
+
+
+# ---------------------------------------------------------------------------
+# Runtime: loaded artifact == in-memory artifact (model level)
+# ---------------------------------------------------------------------------
+@pytest.fixture(scope="module")
+def model_setup():
+    cfg = get_arch("qwen2_1_5b", smoke=True)
+    params = M.init_params(jax.random.PRNGKey(0), cfg)
+    tokens = jnp.array(np.random.default_rng(7).integers(
+        0, cfg.vocab_size, (2, 12)), jnp.int32)
+    return cfg, params, tokens
+
+
+@pytest.mark.parametrize("method", METHODS)
+def test_runtime_apply_bit_exact_after_load(model_setup, tmp_path, method):
+    cfg, params, tokens = model_setup
+    art = quantize(params, QuantRecipe(method=method, policy=W4A4,
+                                       arch="qwen2_1_5b", smoke=True))
+    y_mem = Runtime(art, backend="ref", cfg=cfg).apply(tokens)
+    art.save(str(tmp_path / method))
+    y_disk = Runtime(QuantArtifact.load(str(tmp_path / method)),
+                     backend="ref").apply(tokens)      # cfg from the recipe
+    np.testing.assert_array_equal(np.asarray(y_mem), np.asarray(y_disk))
+
+
+def test_runtime_lm_loss(model_setup):
+    cfg, params, _ = model_setup
+    from repro.train.data import make_batch
+    art = quantize(params, QuantRecipe(method="fpxint", policy=W4A4,
+                                       arch="qwen2_1_5b"))
+    l, m = Runtime(art, backend="ref", cfg=cfg).lm_loss(make_batch(cfg, 32, 2, 0))
+    assert np.isfinite(float(l)) and 0.0 <= float(m["accuracy"]) <= 1.0
+
+
+def test_runtime_backend_validation(rng):
+    art = quantize(_toy_params(rng), QuantRecipe(method="rtn", policy=W4A4))
+    with pytest.raises(ValueError):
+        Runtime(art, backend="pallas")        # FP reconstruction: ref only
+    with pytest.raises(ValueError):
+        Runtime(art, backend="bogus")
+    art_fp = quantize(_toy_params(rng), QuantRecipe(method="fpxint", policy=W4A4))
+    with pytest.raises(ValueError):
+        art_fp.runtime_params("pallas-packed")  # needs pack=True at quantize
+    # packed W4A4 (activation-quantized): packed storage is fine, but the
+    # packed *backend* is weight-only — the series GEMM would re-unpack
+    # in-graph per call
+    art_pk = quantize(_toy_params(rng),
+                      QuantRecipe(method="fpxint", policy=W4A4, pack=True))
+    with pytest.raises(ValueError, match="weight-only"):
+        art_pk.runtime_params("pallas-packed")
+
+
+def test_runtime_without_arch_raises(rng):
+    art = quantize(_toy_params(rng), QuantRecipe(method="fpxint", policy=W4A4))
+    rt = Runtime(art, backend="ref")
+    with pytest.raises(ValueError):
+        rt.apply(jnp.zeros((1, 4), jnp.int32))
+
+
+def test_runtime_packed_weight_only(model_setup, tmp_path):
+    """W4A16 packed artifact: pallas-packed serves planes 2/byte in place and
+    agrees with the ref backend at f32-accumulation tolerance."""
+    cfg, params, tokens = model_setup
+    art = quantize(params, QuantRecipe(method="fpxint", policy=W4A16,
+                                       pack=True, arch="qwen2_1_5b"))
+    art.save(str(tmp_path / "packed"))
+    art = QuantArtifact.load(str(tmp_path / "packed"))
+    y_ref = Runtime(art, backend="ref", cfg=cfg).apply(tokens)
+    rt_packed = Runtime(art, backend="pallas-packed", cfg=cfg)
+    # the packed runtime binds the packed planes themselves
+    leaf = rt_packed.params["stages"]["b0_attn"]["attn"]["q"]["kernel"]
+    assert leaf.packed
+    y_packed = rt_packed.apply(tokens)
+    np.testing.assert_allclose(np.asarray(y_packed), np.asarray(y_ref),
+                               rtol=2e-4, atol=2e-4)
+
+
+# ---------------------------------------------------------------------------
+# serving admission by artifact
+# ---------------------------------------------------------------------------
+def test_engine_admits_artifact_without_reexpansion(model_setup, tmp_path, monkeypatch):
+    cfg, params, _ = model_setup
+    art = quantize(params, QuantRecipe(method="fpxint", policy=W4A4,
+                                       arch="qwen2_1_5b", smoke=True))
+    art.save(str(tmp_path / "srv"))
+    loaded = QuantArtifact.load(str(tmp_path / "srv"))
+
+    from repro.core import ptq as PTQ
+    def boom(*a, **k):
+        raise AssertionError("admission must not re-expand")
+    monkeypatch.setattr(PTQ, "expand_params", boom)
+
+    from repro.infer.serve import Engine, ServeConfig
+    eng = Engine(cfg, artifact=loaded, backend="ref",
+                 serve_cfg=ServeConfig(max_seq=32, max_batch=2))
+    assert eng.quant_seconds == loaded.quant_seconds
+    rid = eng.add_request(list(range(8)))
+    out = eng.run(max_new_tokens=3)
+    assert len(out[rid]) == 3
+
+
+def test_engine_rejects_ambiguous_admission(model_setup):
+    cfg, params, _ = model_setup
+    art = quantize(params, QuantRecipe(method="fpxint", policy=W4A4,
+                                       arch="qwen2_1_5b"))
+    from repro.infer.serve import Engine
+    with pytest.raises(ValueError):
+        Engine(cfg, params, artifact=art)
+
+
+def test_runtime_serve_matches_legacy_engine(model_setup):
+    """Artifact-admitted serving generates exactly what the legacy
+    expand-at-admission engine generates (greedy)."""
+    cfg, params, _ = model_setup
+    from repro.infer.serve import Engine, ServeConfig
+    sc = ServeConfig(max_seq=32, max_batch=2)
+    prompts = [list(range(8)), list(range(3, 11))]
+
+    legacy = Engine(cfg, params, policy=W4A4, serve_cfg=sc)
+    ids_l = [legacy.add_request(p) for p in prompts]
+    out_l = legacy.run(max_new_tokens=4)
+
+    art = quantize(params, QuantRecipe(method="fpxint", policy=W4A4,
+                                       arch="qwen2_1_5b", smoke=True))
+    eng = Runtime(art, backend="ref", cfg=cfg).serve(sc)
+    ids_a = [eng.add_request(p) for p in prompts]
+    out_a = eng.run(max_new_tokens=4)
+    for a, b in zip(ids_l, ids_a):
+        assert out_l[a] == out_a[b]

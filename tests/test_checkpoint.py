@@ -94,6 +94,34 @@ def test_gc_removes_crashed_tmp_dir(tmp_path):
     assert CKPT.committed_steps(str(tmp_path)) == [1, 3]
 
 
+def test_gc_preserves_committed_old_copy(tmp_path):
+    """A re-commit crash leaves the previous committed copy at step_*.old
+    (atomic_commit_dir's recovery guarantee); gc must not destroy it, while
+    a markerless .old (torn move) is cleaned like any crashed leftover."""
+    CKPT.save(str(tmp_path), 1, _state(1))
+    old = tmp_path / "step_000000002.old"
+    os.makedirs(old)
+    with open(old / ".DONE", "w") as f:
+        f.write("ok\n")
+    os.makedirs(tmp_path / "step_000000004.old")     # no marker: garbage
+    CKPT.save(str(tmp_path), 3, _state(3), keep=3)   # triggers gc_old
+    assert os.path.exists(old)                       # recovery copy survives
+    assert not os.path.exists(tmp_path / "step_000000004.old")
+    assert CKPT.committed_steps(str(tmp_path)) == [1, 3]
+
+
+def test_recommit_replaces_in_place(tmp_path):
+    """Re-saving an existing step commits the new copy and leaves no
+    .tmp/.old staging behind."""
+    CKPT.save(str(tmp_path), 5, _state(1))
+    CKPT.save(str(tmp_path), 5, _state(2))
+    restored, step = CKPT.restore(str(tmp_path), jax.eval_shape(lambda: _state(2)))
+    assert step == 5 and int(restored["step"]) == 2
+    leftovers = [n for n in os.listdir(tmp_path)
+                 if n.endswith(".tmp") or n.endswith(".old")]
+    assert leftovers == []
+
+
 def test_async_checkpointer_surfaces_write_errors(tmp_path):
     """A failed background write must raise on wait(), not vanish."""
     ck = CKPT.AsyncCheckpointer(str(tmp_path / "f"))

@@ -57,6 +57,45 @@ def test_property_pack_roundtrip(seed, rows, cols):
         np.asarray(unpack_int4(pack_int4(planes))), np.asarray(planes))
 
 
+@settings(max_examples=25, deadline=None)
+@given(seed=st.integers(0, 2**31 - 1), rows=st.integers(1, 16),
+       cols=st.integers(1, 31))
+def test_property_pack_roundtrip_any_width(seed, rows, cols):
+    """Odd last axes pack via one pad nibble; unpack strips it exactly."""
+    from repro.kernels.pack import pack_pad_nibbles
+    r = np.random.default_rng(seed)
+    planes = jnp.array(r.integers(-8, 8, (rows, cols)), jnp.int8)
+    packed = pack_int4(planes)
+    assert packed.shape[-1] == (cols + 1) // 2
+    assert pack_pad_nibbles(cols) == cols % 2
+    np.testing.assert_array_equal(
+        np.asarray(unpack_int4(packed, orig_cols=cols)), np.asarray(planes))
+
+
+def test_expanded_pack_unpack_helpers(rng):
+    """E.pack/E.unpack round-trip an ExpandedTensor incl. odd widths, and
+    reconstruct() reads packed tensors transparently."""
+    for n in (32, 33):
+        w = jnp.array(rng.normal(size=(16, n)).astype(np.float32))
+        et = E.expand(w, 4, 2, per_channel=True, pack_safe=True)
+        pe = E.pack(et)
+        assert pe.packed and pe.orig_shape == (16, n)
+        assert pe.pack_pad == n % 2
+        np.testing.assert_array_equal(
+            np.asarray(E.reconstruct(pe)), np.asarray(E.reconstruct(et)))
+        ue = E.unpack(pe)
+        np.testing.assert_array_equal(np.asarray(ue.planes), np.asarray(et.planes))
+    import pytest
+    with pytest.raises(ValueError):
+        E.pack(E.expand(w, 8, 1))             # 8-bit planes don't pack
+    # non-pack-safe extraction can reach +8, which the nibble mask would
+    # wrap to -8 — pack() must refuse rather than corrupt
+    import dataclasses
+    et8 = dataclasses.replace(et, planes=jnp.full_like(et.planes, 8))
+    with pytest.raises(ValueError):
+        E.pack(et8)
+
+
 def test_packed_dequant_matmul_kernel(rng):
     """Pallas packed-INT4 GEMM == unpacked jnp oracle across shapes."""
     from repro.kernels import ops
