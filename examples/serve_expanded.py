@@ -3,9 +3,11 @@
 1. train a small LM on the synthetic Markov task,
 2. quantize(params, recipe) — series-expand W4A4, calibration-free, seconds,
 3. artifact.save(...) then QuantArtifact.load(...) — the expand-once product,
-4. Runtime(artifact).serve(...) — batched requests through the INT pipeline
-   with no re-expansion at admission,
-5. report quantization time, accuracy preservation, throughput.
+4. Runtime(artifact).serve(...) — continuous slot-batched requests through
+   the INT pipeline with no re-expansion at admission (mixed-length
+   prompts, per-request token budgets, slot recycling),
+5. report quantization time, accuracy preservation, throughput, TTFT and
+   slot occupancy.
 
     PYTHONPATH=src python examples/serve_expanded.py [--requests 16]
 """
@@ -68,17 +70,27 @@ def main():
     print(f"  loss {float(base_loss):.3f} -> {float(q_loss):.3f};  "
           f"acc {float(base_m['accuracy']):.3f} -> {float(q_m['accuracy']):.3f}")
 
-    eng = rt.serve(ServeConfig(max_seq=96, max_batch=8))
+    # continuous batching: a 4-slot pool serves mixed-length prompts, and
+    # slots freed by per-request token budgets are recycled mid-stream
+    eng = rt.serve(ServeConfig(max_seq=96, max_batch=8, max_slots=4))
     assert eng.quant_seconds == art.quant_seconds  # admission did not re-expand
     rng = np.random.default_rng(1)
-    for _ in range(args.requests):
-        eng.add_request(rng.integers(0, cfg.vocab_size, 16).tolist())
+    for i in range(args.requests):
+        length = int(rng.integers(6, 24))
+        eng.add_request(rng.integers(0, cfg.vocab_size, length).tolist(),
+                        max_new_tokens=int(rng.integers(4, args.max_new + 1)))
     t0 = time.perf_counter()
     out = eng.run(max_new_tokens=args.max_new)
     dt = time.perf_counter() - t0
     n_tok = sum(len(v) for v in out.values())
+    st = eng.last_run_stats
     print(f"\nserved {len(out)} requests, {n_tok} tokens in {dt:.2f}s "
           f"({n_tok/dt:.1f} tok/s batched on CPU)")
+    print(f"continuous batching: {st['n_slots']} slots, "
+          f"occupancy {st['occupancy']:.2f}, "
+          f"decode {st['decode_tokens_per_sec']:.1f} tok/s")
+    ttfts = [m["ttft_s"] for m in eng.last_request_metrics.values()]
+    print(f"ttft mean {np.mean(ttfts)*1e3:.0f}ms / max {np.max(ttfts)*1e3:.0f}ms")
     print("sample generation:", out[0][:16])
 
 

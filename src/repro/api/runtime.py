@@ -16,6 +16,11 @@ A Runtime resolves the model config from the artifact's recorded ``arch``
   * ``serve(...)``     a serving :class:`~repro.infer.serve.Engine` admitted
                        by artifact — the model is expanded once per process
                        (at quantize time), never re-expanded per engine.
+                       Serves with slot-based continuous batching by default
+                       (``ServeConfig(scheduler="slots")``): variable-length
+                       prompts prefill into free decode slots, EOS recycles
+                       slots mid-stream; ``scheduler="grouped"`` keeps the
+                       legacy group-drain path for bit-exactness baselines.
 """
 from __future__ import annotations
 
@@ -78,7 +83,10 @@ class Runtime:
                        self._require_cfg(), self.qc)
 
     def serve(self, serve_cfg=None, **engine_kw):
-        """A serving Engine admitted by this artifact (no re-expansion)."""
+        """A serving Engine admitted by this artifact (no re-expansion).
+        ``serve_cfg`` selects the scheduler: ``"slots"`` (default,
+        continuous batching with per-slot cache lengths) or ``"grouped"``
+        (legacy group-drain)."""
         from repro.infer.serve import Engine, ServeConfig
         return Engine(self._require_cfg(), artifact=self.artifact,
                       backend=self.backend,

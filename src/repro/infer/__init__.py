@@ -1,1 +1,2 @@
+from repro.infer.scheduler import Request, SlotScheduler
 from repro.infer.serve import Engine, ServeConfig, make_decode_sample_step, make_serve_step

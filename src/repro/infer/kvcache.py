@@ -46,3 +46,14 @@ def max_batch_for_hbm(cfg: ArchConfig, s_max: int, hbm_bytes: float,
     per_seq = total_cache_bytes(cfg, 1, s_max, dtype_bytes)
     free = hbm_bytes - param_bytes
     return max(0, int(np.floor(free / max(per_seq, 1.0))))
+
+
+def param_bytes(params) -> float:
+    """Total bytes of a (possibly expanded) parameter pytree.
+
+    ``ExpandedTensor`` leaves flatten to their component arrays, so INT
+    planes + FP scales are counted at their stored widths."""
+    import jax
+
+    return float(sum(leaf.size * leaf.dtype.itemsize
+                     for leaf in jax.tree_util.tree_leaves(params)))

@@ -1,0 +1,229 @@
+"""Slot-based continuous-batching scheduler.
+
+The legacy engine drains equal-length request *groups* to completion: one
+long prompt stalls the whole batch, and slots freed by EOS sit idle until
+the group ends.  This module replaces group-drain with true continuous
+batching over a fixed pool of decode *slots*:
+
+* **FCFS admission**, gated by :func:`repro.infer.kvcache.max_batch_for_hbm`
+  when an HBM budget is configured: the slot pool never outgrows what the
+  caches + params fit in;
+* **padded prefill-into-slot**: each admitted prompt is right-padded to a
+  bucketed length (bounding jit retraces), prefilled with a per-row length
+  mask, and its cache scattered into a free row of the live decode cache
+  (:func:`repro.models.model.scatter_cache_into_slot`);
+* **per-slot decode**: one fused decode+sample+EOS step serves every
+  occupied slot at its own sequence position (vector ``cache_len``);
+* **slot recycling**: EOS or per-request token budgets free a slot
+  mid-stream, and the next queued request is admitted into it between
+  decode steps (interleaved prefill/decode);
+* **one host transfer per decode step**: the ``(tokens, alive)`` pair — the
+  same contract the legacy engine established.
+
+Per-request metrics (time-to-first-token, decode tokens/sec) and run-level
+stats (slot occupancy, decode throughput) are collected on every run; the
+serving benchmark reads them for ``BENCH_serving.json``.
+"""
+from __future__ import annotations
+
+import dataclasses
+import time
+from collections import deque
+from typing import Any, Dict, List, Optional
+
+import jax
+import jax.numpy as jnp
+import numpy as np
+
+from repro.infer import kvcache
+from repro.models import model as M
+
+PyTree = Any
+
+
+@dataclasses.dataclass
+class Request:
+    """One queued generation request (FCFS order = rid order)."""
+    rid: int
+    tokens: List[int]
+    max_new_tokens: Optional[int] = None   # None -> the run()-level default
+    t_enqueue: float = 0.0
+    # filled in by the scheduler:
+    t_admitted: float = 0.0
+    t_first_token: float = 0.0
+    t_done: float = 0.0
+    new_tokens: int = 0
+
+    @property
+    def ttft_seconds(self) -> float:
+        """Enqueue -> first generated token (includes queue wait)."""
+        return max(0.0, self.t_first_token - self.t_enqueue)
+
+    @property
+    def tokens_per_sec(self) -> float:
+        dt = self.t_done - self.t_admitted
+        return self.new_tokens / dt if dt > 0 else 0.0
+
+    def metrics(self) -> Dict[str, float]:
+        return {"rid": self.rid, "prompt_len": len(self.tokens),
+                "new_tokens": self.new_tokens,
+                "ttft_s": self.ttft_seconds,
+                "tokens_per_sec": self.tokens_per_sec,
+                "queue_s": max(0.0, self.t_admitted - self.t_enqueue)}
+
+
+def plan_slots(cfg, serve_cfg, params) -> int:
+    """Size the decode-slot pool: the configured ``max_slots`` (or
+    ``max_batch``), capped by HBM admission control when a budget is set."""
+    n = serve_cfg.max_slots or serve_cfg.max_batch
+    if serve_cfg.hbm_budget_bytes > 0:
+        pbytes = kvcache.param_bytes(params)
+        cap = kvcache.max_batch_for_hbm(cfg, serve_cfg.max_seq,
+                                        serve_cfg.hbm_budget_bytes, pbytes)
+        if cap < 1:
+            raise ValueError(
+                f"hbm_budget_bytes={serve_cfg.hbm_budget_bytes:.3g} cannot fit "
+                f"params ({pbytes:.3g} B) plus one sequence of "
+                f"max_seq={serve_cfg.max_seq} cache")
+        n = min(n, cap)
+    return max(1, n)
+
+
+def bucket_length(l: int, bucket: int, max_seq: int) -> int:
+    """Pad a prompt length up to a bucket multiple (bounds the number of
+    distinct prefill shapes, hence jit compilations), capped at capacity."""
+    b = max(1, bucket)
+    return min(-(-l // b) * b, max_seq)
+
+
+class SlotScheduler:
+    """Continuous-batching executor behind ``ServeConfig(scheduler="slots")``.
+
+    Owns no model state of its own: it drives the parent engine's jitted
+    prefill / scatter / fused-decode callables (so jit caches persist across
+    runs) and reads dynamic knobs (eos, temperature) from ``engine.sc`` at
+    run time — both are dynamic operands of the decode step, so changing
+    them never retraces.
+    """
+
+    def __init__(self, engine):
+        self.eng = engine
+        self.n_slots = plan_slots(engine.cfg, engine.sc, engine.params)
+        self.last_run_stats: Dict[str, Any] = {}
+        self.last_request_metrics: Dict[int, Dict[str, float]] = {}
+
+    # ------------------------------------------------------------------
+    def run(self, requests: List[Request], max_new_tokens: int = 16
+            ) -> Dict[int, List[int]]:
+        eng, sc = self.eng, self.eng.sc
+        n = self.n_slots
+        # validate the whole batch up front (no partial-run surprises)
+        for req in requests:
+            m = req.max_new_tokens if req.max_new_tokens is not None else max_new_tokens
+            if len(req.tokens) + m > sc.max_seq:
+                raise ValueError(
+                    f"request {req.rid}: prompt len {len(req.tokens)} + "
+                    f"max_new_tokens {m} exceeds ServeConfig.max_seq={sc.max_seq}")
+
+        queue = deque(requests)
+        out: Dict[int, List[int]] = {}
+        eos = jnp.int32(sc.eos_id)
+        temperature = jnp.float32(sc.temperature)
+        key = jax.random.PRNGKey(sc.seed)
+
+        live = M.init_cache(eng.cfg, n, sc.max_seq, int8_kv=eng.qc.int8_kv)
+        clen = np.zeros(n, np.int32)           # per-slot cache length (host)
+        active = np.zeros(n, bool)             # slot occupied (host)
+        budget = np.zeros(n, np.int64)         # remaining tokens per slot
+        slot_req: List[Optional[Request]] = [None] * n
+        tok = jnp.zeros((n, 1), jnp.int32)     # next token per slot (device)
+        alive = jnp.zeros((n,), bool)          # EOS mask (device)
+
+        steps = 0
+        occupied_steps = 0.0
+        gen_tokens = 0
+        t_run0 = time.perf_counter()
+        prefill_s = 0.0
+
+        def admit():
+            """FCFS: prefill queued requests into free slots (padded prompt,
+            length-masked), scatter their caches into the live decode cache,
+            and seed each slot with its first sampled token — all device-side
+            (no host sync)."""
+            nonlocal live, tok, alive, key, prefill_s
+            t0 = time.perf_counter()
+            while queue and not active.all():
+                req = queue.popleft()
+                slot = int(np.flatnonzero(~active)[0])
+                l = len(req.tokens)
+                p_len = bucket_length(l, sc.prefill_bucket, sc.max_seq)
+                padded = np.zeros((1, p_len), np.int32)
+                padded[0, :l] = req.tokens
+                logits, pcache = eng._prefill_slot(
+                    eng.params, {"tokens": jnp.asarray(padded)},
+                    jnp.asarray([l], jnp.int32))
+                live = eng._scatter(live, pcache, slot)
+                key, sub = jax.random.split(key)
+                first = eng._sample(logits, sub)           # (1, 1) on device
+                tok = tok.at[slot, 0].set(first[0, 0])
+                alive = alive.at[slot].set(first[0, 0] != eos)
+                clen[slot] = l
+                active[slot] = True
+                m = (req.max_new_tokens if req.max_new_tokens is not None
+                     else max_new_tokens)
+                budget[slot] = m
+                slot_req[slot] = req
+                req.t_admitted = time.perf_counter()
+                out[req.rid] = []
+            prefill_s += time.perf_counter() - t0
+
+        while queue or active.any():
+            # interleaved prefill: fill any free slot BEFORE the fetch, so a
+            # newly admitted slot's first (prefill-sampled) token is read by
+            # this iteration's transfer and only then consumed by decode —
+            # admitting between fetch and decode would overwrite it unread
+            if queue and not active.all():
+                admit()
+            steps += 1
+            occupied_steps += float(active.sum()) / n
+            # the ONE host transfer of this decode step
+            tok_host, alive_host = jax.device_get((tok, alive))
+            now = time.perf_counter()
+            for i in np.flatnonzero(active):
+                req = slot_req[i]
+                out[req.rid].append(int(tok_host[i, 0]))
+                gen_tokens += 1
+                if req.t_first_token == 0.0:
+                    req.t_first_token = now
+                budget[i] -= 1
+                if not bool(alive_host[i]) or budget[i] <= 0:
+                    req.t_done = now
+                    req.new_tokens = len(out[req.rid])
+                    active[i] = False
+                    slot_req[i] = None              # slot freed -> recyclable
+            if not active.any():
+                continue                            # admit or exit at the top
+            # snapshot clen: the host mutates it below, and numpy->device
+            # transfers may alias the host buffer (CPU zero-copy)
+            tok, live, key, alive = eng._decode(
+                eng.params, tok, live, jnp.asarray(clen.copy()), key, alive,
+                eos, temperature)
+            clen[active] += 1
+        wall = time.perf_counter() - t_run0
+
+        decode_s = max(wall - prefill_s, 1e-9)
+        self.last_request_metrics = {r.rid: r.metrics() for r in requests}
+        self.last_run_stats = {
+            "scheduler": "slots",
+            "n_slots": n,
+            "requests": len(requests),
+            "generated_tokens": gen_tokens,
+            "decode_steps": steps,
+            "occupancy": occupied_steps / steps if steps else 0.0,
+            "wall_seconds": wall,
+            "prefill_seconds": prefill_s,
+            "decode_seconds": decode_s,
+            "decode_tokens_per_sec": gen_tokens / decode_s,
+            "tokens_per_sec": gen_tokens / wall if wall > 0 else 0.0,
+        }
+        return out

@@ -4,16 +4,21 @@ The PTQ paper's deployment story: expand a trained FP model once (seconds,
 calibration-free), then serve the INT series.  The engine:
 
 * expands params at admission (``policy`` given) — the quantization step
-  the paper times in Table 2/3;
-* groups equal-length requests into batches (exactness over padding
-  heuristics: attention math is identical to the unbatched run);
-* runs jit'd prefill + donated-cache decode steps (in-place cache update);
+  the paper times in Table 2/3 — or binds a pre-built artifact as-is;
+* serves with **slot-based continuous batching** by default
+  (``ServeConfig(scheduler="slots")``, :mod:`repro.infer.scheduler`):
+  variable-length prompts are padded-prefilled into free slots of a live
+  decode cache, one fused decode step serves every slot at its own
+  sequence position (vector ``cache_len``), and slots freed by EOS or
+  token budgets are recycled for queued requests mid-stream;
+* keeps the legacy **group-drain** path behind
+  ``ServeConfig(scheduler="grouped")``: equal-length requests batched and
+  drained to completion — the bit-exactness baseline the slots path is
+  compared against;
 * fuses sampling and EOS tracking into the decode step ON DEVICE: the host
-  pulls exactly one (tokens, alive) pair per decode step — the seed engine
-  instead called ``int(tok[i, 0])`` twice per request per step, i.e.
-  ``2 * batch`` blocking host syncs per generated token;
-* continuous-batching-lite: a request queue is drained group by group, new
-  groups admitted as slots free up.
+  pulls exactly one (tokens, alive) pair per decode step;
+* treats ``eos_id`` AND ``temperature`` as dynamic operands of the fused
+  step, so reconfiguring either never retraces the decode kernel.
 
 ``make_serve_step`` is the function the multi-pod dry-run lowers for the
 ``decode_*`` cells; ``make_decode_sample_step`` is the fused
@@ -24,7 +29,6 @@ from __future__ import annotations
 import dataclasses
 import time
 from collections import defaultdict
-from functools import partial
 from typing import Any, Dict, List, Optional, Sequence, Tuple
 
 import jax
@@ -34,32 +38,53 @@ import numpy as np
 from repro.configs.base import ArchConfig
 from repro.core import ptq as PTQ
 from repro.core.policy import ExpansionPolicy
+from repro.infer.scheduler import Request, SlotScheduler
 from repro.models import model as M
 from repro.models.layers import FP, QuantContext
 
 PyTree = Any
 
+SCHEDULERS = ("slots", "grouped")
+
 
 @dataclasses.dataclass(frozen=True)
 class ServeConfig:
     max_seq: int = 512            # decode capacity (cache size)
-    max_batch: int = 8
-    temperature: float = 0.0      # 0 = greedy
-    eos_id: int = -1              # -1 = never stop early
+    max_batch: int = 8            # grouped batch size / default slot count
+    temperature: float = 0.0      # 0 = greedy (dynamic: no retrace on change)
+    eos_id: int = -1              # -1 = never stop early (dynamic operand)
     seed: int = 0
+    scheduler: str = "slots"      # "slots" (continuous) | "grouped" (legacy)
+    max_slots: int = 0            # 0 -> max_batch decode slots
+    hbm_budget_bytes: float = 0.0  # >0: cap slots via kvcache.max_batch_for_hbm
+    prefill_bucket: int = 16      # pad prompts to a multiple (bounds retraces)
 
 
 def _sample_logits(logits: jnp.ndarray, key, temperature: float) -> jnp.ndarray:
-    """(B, V) logits -> (B, 1) int32 tokens; greedy when temperature <= 0."""
+    """(B, V) logits -> (B, 1) int32 tokens; greedy when temperature <= 0.
+    Host-side helper (``temperature`` is a python float)."""
     if temperature <= 0.0:
         return jnp.argmax(logits, axis=-1)[:, None].astype(jnp.int32)
     tok = jax.random.categorical(key, logits / temperature, axis=-1)
     return tok[:, None].astype(jnp.int32)
 
 
+def sample_logits_dynamic(logits: jnp.ndarray, key,
+                          temperature: jnp.ndarray) -> jnp.ndarray:
+    """Trace-safe sampling with ``temperature`` as a dynamic operand: the
+    greedy/categorical choice is a ``where``, not a python branch, so
+    changing temperature does not retrace/recompile the fused decode step."""
+    greedy = jnp.argmax(logits, axis=-1)
+    t = jnp.maximum(jnp.asarray(temperature, logits.dtype), 1e-6)
+    sampled = jax.random.categorical(key, logits / t, axis=-1)
+    tok = jnp.where(jnp.asarray(temperature) > 0, sampled, greedy)
+    return tok[:, None].astype(jnp.int32)
+
+
 def make_serve_step(cfg: ArchConfig, qc: QuantContext = FP):
     """serve_step(params, tokens (B,1), caches, cache_len) ->
-    (logits (B,V), caches') — the unit the decode dry-run cells lower."""
+    (logits (B,V), caches') — the unit the decode dry-run cells lower.
+    ``cache_len`` may be () or (B,) (per-slot positions)."""
     def serve_step(params, tokens, caches, cache_len):
         return M.decode_step(params, tokens, caches, cache_len, cfg, qc)
     return serve_step
@@ -68,16 +93,16 @@ def make_serve_step(cfg: ArchConfig, qc: QuantContext = FP):
 def make_decode_sample_step(cfg: ArchConfig, qc: QuantContext = FP):
     """Fused decode + sample + EOS-mask step (all on device).
 
-    step(params, tok (B,1), caches, cache_len, key, alive (B,), eos_id ();
-         temperature static) -> (next_tok, caches', key', alive').
+    step(params, tok (B,1), caches, cache_len () or (B,), key, alive (B,),
+         eos_id (), temperature ()) -> (next_tok, caches', key', alive').
 
     ``alive`` accumulates ``tok != eos`` so the engine's host loop needs a
-    single device transfer per step; ``eos_id`` is a dynamic operand so
-    reconfiguring it does not retrace."""
-    def step(params, tok, caches, cache_len, key, alive, eos_id, *, temperature):
+    single device transfer per step; ``eos_id`` and ``temperature`` are
+    dynamic operands so reconfiguring either does not retrace."""
+    def step(params, tok, caches, cache_len, key, alive, eos_id, temperature):
         logits, caches = M.decode_step(params, tok, caches, cache_len, cfg, qc)
         key, sub = jax.random.split(key)
-        nxt = _sample_logits(logits, sub, temperature)
+        nxt = sample_logits_dynamic(logits, sub, temperature)
         alive = jnp.logical_and(alive, nxt[:, 0] != eos_id)
         return nxt, caches, key, alive
     return step
@@ -96,9 +121,17 @@ class Engine:
         quantized params are bound as-is, so a model is expanded once per
         process (at ``quantize`` time), not once per engine.  ``backend``
         picks the artifact execution path (``ref`` | ``pallas`` |
-        ``pallas-packed``; see :class:`repro.api.Runtime`)."""
+        ``pallas-packed``; see :class:`repro.api.Runtime`).
+
+        Capacity knobs (``max_seq``, ``max_batch``, ``max_slots``,
+        ``hbm_budget_bytes``, ``prefill_bucket``) are fixed at construction;
+        ``temperature`` and ``eos_id`` are dynamic and may be swapped via
+        ``engine.sc`` between runs without retracing."""
         self.cfg = cfg
         self.sc = serve_cfg
+        if serve_cfg.scheduler not in SCHEDULERS:
+            raise ValueError(f"unknown scheduler {serve_cfg.scheduler!r}; "
+                             f"one of {SCHEDULERS}")
         if artifact is not None:
             if params is not None or policy is not None:
                 raise ValueError(
@@ -117,64 +150,153 @@ class Engine:
                 params = jax.block_until_ready(params)
             self.quant_seconds = time.perf_counter() - t0
         self.params = params
-        self._queue: List[Tuple[int, List[int]]] = []
+        self._queue: List[Request] = []
         self._next_id = 0
+        self.last_run_stats: Dict[str, Any] = {}
+        self.last_request_metrics: Dict[int, Dict[str, float]] = {}
 
+        s_max = serve_cfg.max_seq  # frozen at construction (jit closure)
         self._prefill = jax.jit(
-            lambda p, batch: M.prefill(p, batch, cfg, self.qc, s_max=self.sc.max_seq))
+            lambda p, batch: M.prefill(p, batch, cfg, self.qc, s_max=s_max))
+        self._prefill_slot = jax.jit(
+            lambda p, batch, lengths: M.prefill(p, batch, cfg, self.qc,
+                                                s_max=s_max, lengths=lengths))
+        self._scatter = jax.jit(M.scatter_cache_into_slot, donate_argnums=(0,))
         self._decode = jax.jit(
-            make_decode_sample_step(cfg, self.qc),
-            donate_argnums=(2,), static_argnames=("temperature",))
+            make_decode_sample_step(cfg, self.qc), donate_argnums=(2,))
+        self._slots: Optional[SlotScheduler] = None
 
     # ------------------------------------------------------------------
-    def add_request(self, tokens: Sequence[int]) -> int:
+    def add_request(self, tokens: Sequence[int],
+                    max_new_tokens: Optional[int] = None) -> int:
+        """Queue a prompt; returns the request id.
+
+        Validates capacity here (a proper error, not an ``assert`` that
+        vanishes under ``python -O``): the prompt plus its token budget —
+        ``max_new_tokens`` if given, else at least one generated token —
+        must fit ``ServeConfig.max_seq``.  A request without its own budget
+        is re-checked against the run-level ``max_new_tokens`` at run time."""
+        toks = [int(t) for t in tokens]
+        if not toks:
+            raise ValueError("empty prompt")
+        need = len(toks) + (max_new_tokens if max_new_tokens is not None else 1)
+        if max_new_tokens is not None and max_new_tokens < 1:
+            raise ValueError(f"max_new_tokens must be >= 1, got {max_new_tokens}")
+        if need > self.sc.max_seq:
+            raise ValueError(
+                f"request rejected: prompt len {len(toks)} + max_new_tokens "
+                f"{max_new_tokens if max_new_tokens is not None else 1} exceeds "
+                f"ServeConfig.max_seq={self.sc.max_seq}")
         rid = self._next_id
         self._next_id += 1
-        self._queue.append((rid, list(tokens)))
+        self._queue.append(Request(rid=rid, tokens=toks,
+                                   max_new_tokens=max_new_tokens,
+                                   t_enqueue=time.perf_counter()))
         return rid
 
-    def _form_groups(self) -> List[List[Tuple[int, List[int]]]]:
-        by_len: Dict[int, List] = defaultdict(list)
-        for rid, toks in self._queue:
-            by_len[len(toks)].append((rid, toks))
+    def run(self, max_new_tokens: int = 16) -> Dict[int, List[int]]:
+        """Drain the queue; returns request id -> generated tokens.
+
+        Validation failures (a queued request whose run-level budget
+        overflows ``max_seq``) raise *before any work* and leave the queue
+        intact, so the caller can retry with a smaller budget."""
+        if max_new_tokens < 1:
+            raise ValueError(f"max_new_tokens must be >= 1, got {max_new_tokens}")
+        if self.sc.scheduler == "grouped":
+            return self._run_grouped(max_new_tokens)
+        if self._slots is None:
+            self._slots = SlotScheduler(self)
+        try:
+            out = self._slots.run(self._queue, max_new_tokens)
+            self._queue = []
+        finally:
+            self.last_run_stats = self._slots.last_run_stats
+            self.last_request_metrics = self._slots.last_request_metrics
+        return out
+
+    # -- legacy group-drain path (bit-exactness baseline) ----------------
+    def _form_groups(self) -> List[List[Request]]:
+        by_len: Dict[int, List[Request]] = defaultdict(list)
+        for req in self._queue:
+            by_len[len(req.tokens)].append(req)
         groups = []
         for _, reqs in sorted(by_len.items()):
             for i in range(0, len(reqs), self.sc.max_batch):
                 groups.append(reqs[i:i + self.sc.max_batch])
         return groups
 
-    def run(self, max_new_tokens: int = 16) -> Dict[int, List[int]]:
-        """Drain the queue; returns request id -> generated tokens."""
+    def _run_grouped(self, max_new_tokens: int) -> Dict[int, List[int]]:
+        groups = self._form_groups()
+        for group in groups:             # validate everything before any work
+            budgets = [req.max_new_tokens if req.max_new_tokens is not None
+                       else max_new_tokens for req in group]
+            s = len(group[0].tokens)
+            if s + max(budgets) > self.sc.max_seq:
+                raise ValueError(
+                    f"requests {[r.rid for r in group]}: prompt len {s} + "
+                    f"max_new_tokens {max(budgets)} exceeds "
+                    f"ServeConfig.max_seq={self.sc.max_seq}")
         out: Dict[int, List[int]] = {}
         key = jax.random.PRNGKey(self.sc.seed)
-        temperature = float(self.sc.temperature)
+        temperature = jnp.float32(self.sc.temperature)
         eos = jnp.int32(self.sc.eos_id)
-        for group in self._form_groups():
-            rids = [rid for rid, _ in group]
-            prompts = np.array([t for _, t in group], np.int32)
+        steps_total = 0
+        gen_tokens = 0
+        prefill_s = 0.0
+        t_run0 = time.perf_counter()
+        for group in groups:
+            prompts = np.array([req.tokens for req in group], np.int32)
             b, s = prompts.shape
-            assert s + max_new_tokens <= self.sc.max_seq, "over decode capacity"
+            budgets = np.array([req.max_new_tokens if req.max_new_tokens is not None
+                                else max_new_tokens for req in group])
+            t_admit = time.perf_counter()
             logits, caches = self._prefill(self.params, {"tokens": jnp.asarray(prompts)})
-            tok = self._sample(logits, key)
-            alive = tok[:, 0] != eos                       # on-device EOS mask
-            gen = [[] for _ in rids]
-            alive_host = np.ones(b, bool)                  # aliveness BEFORE tok
+            key, sub = jax.random.split(key)        # fresh key per prefill:
+            tok = self._sample(logits, sub)         # groups sample independently
+            alive = tok[:, 0] != eos                # on-device EOS mask
+            prefill_s += time.perf_counter() - t_admit
+            gen = [[] for _ in group]
+            alive_host = np.ones(b, bool)           # aliveness BEFORE tok
             clen = jnp.int32(s)
-            for t in range(max_new_tokens):
+            for t in range(int(budgets.max())):
+                steps_total += 1
                 # the ONE host transfer of this decode step
                 tok_host, alive_after = jax.device_get((tok, alive))
                 for i in range(b):
                     if alive_host[i]:
                         gen[i].append(int(tok_host[i, 0]))
-                alive_host = np.asarray(alive_after)
-                if not alive_host.any() or t == max_new_tokens - 1:
+                        gen_tokens += 1
+                # per-request budgets cap the drain alongside the EOS mask
+                budget_ok = np.array([len(g) < m for g, m in zip(gen, budgets)])
+                alive_host = np.asarray(alive_after) & budget_ok
+                if not alive_host.any():
                     break
                 tok, caches, key, alive = self._decode(
-                    self.params, tok, caches, clen, key, alive, eos,
-                    temperature=temperature)
+                    self.params, tok, caches, clen, key, alive, eos, temperature)
                 clen = clen + 1
-            for rid, g in zip(rids, gen):
-                out[rid] = g
+            t_done = time.perf_counter()
+            for req, g in zip(group, gen):
+                out[req.rid] = g
+                req.t_admitted, req.t_first_token = t_admit, t_admit
+                req.t_done, req.new_tokens = t_done, len(g)
+        wall = time.perf_counter() - t_run0
+        decode_s = max(wall - prefill_s, 1e-9)  # same accounting as slots
+        capacity = self.sc.max_batch
+        self.last_request_metrics = {req.rid: req.metrics() for req in self._queue}
+        self.last_run_stats = {
+            "scheduler": "grouped",
+            "n_slots": capacity,
+            "requests": len(self._queue),
+            "generated_tokens": gen_tokens,
+            "decode_steps": steps_total,
+            "occupancy": (gen_tokens / (steps_total * capacity)
+                          if steps_total else 0.0),
+            "wall_seconds": wall,
+            "prefill_seconds": prefill_s,
+            "decode_seconds": decode_s,
+            "decode_tokens_per_sec": gen_tokens / decode_s,
+            "tokens_per_sec": gen_tokens / wall if wall > 0 else 0.0,
+        }
         self._queue.clear()
         return out
 

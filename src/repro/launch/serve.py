@@ -11,6 +11,12 @@ Artifact round-trip (expand once, serve forever):
 
 Prints quantization time (the paper's Table 2/3 metric), per-request
 generations for a synthetic batch, and decode throughput.
+
+Scheduling: ``--scheduler slots`` (default) serves with slot-based
+continuous batching — ``--max-slots`` sizes the decode pool and
+``--hbm-budget`` caps it by admission control; ``--scheduler grouped``
+keeps the legacy equal-length group-drain path.  ``--mixed-lengths``
+draws variable prompt lengths to exercise prefill-into-slot.
 """
 from __future__ import annotations
 
@@ -44,14 +50,28 @@ def main(argv=None):
                     help="save the quantized artifact here before serving")
     ap.add_argument("--requests", type=int, default=8)
     ap.add_argument("--prompt-len", type=int, default=16)
+    ap.add_argument("--mixed-lengths", action="store_true",
+                    help="draw prompt lengths in [4, --prompt-len] instead of "
+                         "a fixed length (exercises continuous batching)")
     ap.add_argument("--max-new", type=int, default=16)
     ap.add_argument("--max-seq", type=int, default=64)
+    ap.add_argument("--scheduler", default="slots", choices=("slots", "grouped"),
+                    help="slots = continuous batching (per-slot cache lengths, "
+                         "prefill-into-slot); grouped = legacy group-drain")
+    ap.add_argument("--max-slots", type=int, default=0,
+                    help="decode slot pool size (0 = --requests, capped at "
+                         "--hbm-budget admission control)")
+    ap.add_argument("--hbm-budget", type=float, default=0.0,
+                    help="HBM bytes available for params + KV caches; >0 caps "
+                         "the slot pool via kvcache.max_batch_for_hbm")
     ap.add_argument("--seed", type=int, default=0)
     args = ap.parse_args(argv)
 
     cfg = get_arch(args.arch, smoke=args.smoke)
     assert not cfg.is_encoder, "encoder-only archs have no decode path"
-    serve_cfg = ServeConfig(max_seq=args.max_seq, max_batch=args.requests)
+    serve_cfg = ServeConfig(max_seq=args.max_seq, max_batch=args.requests,
+                            scheduler=args.scheduler, max_slots=args.max_slots,
+                            hbm_budget_bytes=args.hbm_budget)
 
     if args.fp:
         params = M.init_params(jax.random.PRNGKey(args.seed), cfg)
@@ -94,7 +114,9 @@ def main(argv=None):
 
     rng = np.random.default_rng(args.seed)
     for _ in range(args.requests):
-        eng.add_request(rng.integers(0, cfg.vocab_size, args.prompt_len).tolist())
+        length = (int(rng.integers(4, args.prompt_len + 1))
+                  if args.mixed_lengths else args.prompt_len)
+        eng.add_request(rng.integers(0, cfg.vocab_size, length).tolist())
     t0 = time.perf_counter()
     out = eng.run(max_new_tokens=args.max_new)
     dt = time.perf_counter() - t0
@@ -102,6 +124,15 @@ def main(argv=None):
     for rid, toks in sorted(out.items()):
         print(f"req {rid}: {toks[:12]}{'...' if len(toks) > 12 else ''}")
     print(f"{n_tok} tokens in {dt:.2f}s = {n_tok/dt:.1f} tok/s (batched, incl. prefill)")
+    st = eng.last_run_stats
+    if st:
+        print(f"scheduler={st['scheduler']} slots={st['n_slots']} "
+              f"occupancy={st['occupancy']:.2f} "
+              f"decode={st['decode_tokens_per_sec']:.1f} tok/s")
+        ttfts = [m["ttft_s"] for m in eng.last_request_metrics.values()]
+        if ttfts:
+            print(f"ttft mean={np.mean(ttfts)*1e3:.1f}ms "
+                  f"p max={np.max(ttfts)*1e3:.1f}ms")
     return out
 
 

@@ -5,10 +5,15 @@ signature so ``model.py`` can scan heterogeneous stage patterns.  Forward
 returns ``(x, cache)`` where cache feeds the decode path:
 
   attn/moe_attn : {"k","v"} full KV           (B, S_max, G, Dh)
-  local         : {"k","v","slot_pos"} ring   (B, W, G, Dh) sliding window
+  local         : {"k","v","slot_pos"} ring   (B, W, G, Dh) sliding window,
+                                              slot_pos (B, W) per slot
   cross         : {"k","v"} static image KV   (B, T_img, G, Dh)
   rglru         : {"conv","h"}                O(1) recurrent state
   ssm           : {"conv","ssm"}              O(1) SSD state
+
+Decode accepts ``cache_len`` as a scalar (lock-step batch) or a (B,) vector
+(continuous batching: every slot at its own sequence position), and forward
+accepts per-row ``lengths`` for right-padded prompts (prefill-into-slot).
 """
 from __future__ import annotations
 
@@ -89,7 +94,12 @@ def _mlp_part(qc, kind, p, x, cfg):
 # ---------------------------------------------------------------------------
 def block_forward(qc: QuantContext, kind: str, p: Dict, x: jnp.ndarray, cfg, *,
                   positions: jnp.ndarray, side: Optional[Dict] = None,
-                  s_max: int = 0) -> Tuple[jnp.ndarray, Dict]:
+                  s_max: int = 0, lengths: Optional[jnp.ndarray] = None
+                  ) -> Tuple[jnp.ndarray, Dict]:
+    """``lengths`` (B,) marks right-padded prompt rows (padded prefill-into-
+    slot): causal attention keeps valid positions exact under right padding,
+    so only the *caches* need per-row handling — the local ring is gathered
+    from each row's true window and recurrent state is carried through pad."""
     b = x.shape[0]
     if kind in ("attn", "local", "moe_attn"):
         h = L.apply_norm(cfg.norm, p["ln"], x)
@@ -104,8 +114,24 @@ def block_forward(qc: QuantContext, kind: str, p: Dict, x: jnp.ndarray, cfg, *,
         x = _mlp_part(qc, kind, p, x, cfg)
         if kind == "local":
             w = min(cfg.window, k.shape[1])
-            cache = {"k": k[:, -w:], "v": v[:, -w:],
-                     "slot_pos": positions[-w:] if positions.ndim == 1 else positions[0, -w:]}
+            if lengths is None:
+                pos_tail = positions[-w:] if positions.ndim == 1 else positions[0, -w:]
+                cache = {"k": k[:, -w:], "v": v[:, -w:],
+                         "slot_pos": jnp.broadcast_to(
+                             pos_tail.astype(jnp.int32), (b, w))}
+            else:
+                # per-row decode-invariant ring: slot j holds the largest
+                # position p < length with p % w == j (or -1 when none)
+                j = jnp.arange(w)[None, :]
+                last = lengths[:, None] - 1                           # (B,1)
+                ring_pos = last - jnp.mod(last - j, w)                # (B,w)
+                ok = ring_pos >= 0
+                idx = jnp.clip(ring_pos, 0, k.shape[1] - 1)
+                gk = jnp.take_along_axis(k, idx[:, :, None, None], axis=1)
+                gv = jnp.take_along_axis(v, idx[:, :, None, None], axis=1)
+                cache = {"k": jnp.where(ok[:, :, None, None], gk, 0).astype(k.dtype),
+                         "v": jnp.where(ok[:, :, None, None], gv, 0).astype(v.dtype),
+                         "slot_pos": jnp.where(ok, ring_pos, -1).astype(jnp.int32)}
         elif qc.int8_kv:
             kq, ks = ATT.quantize_kv(k)
             vq, vs = ATT.quantize_kv(v)
@@ -129,13 +155,13 @@ def block_forward(qc: QuantContext, kind: str, p: Dict, x: jnp.ndarray, cfg, *,
         return x, {"k": k_img, "v": v_img}
     if kind == "rglru":
         h = L.apply_norm(cfg.norm, p["ln"], x)
-        y, cache = RG.rglru_apply(qc, p["rec"], h, cfg)
+        y, cache = RG.rglru_apply(qc, p["rec"], h, cfg, lengths=lengths)
         x = x + y
         x = _mlp_part(qc, kind, p, x, cfg)
         return x, cache
     if kind == "ssm":
         h = L.apply_norm(cfg.norm, p["ln"], x)
-        y, cache = SSM.ssm_apply(qc, p["mixer"], h, cfg)
+        y, cache = SSM.ssm_apply(qc, p["mixer"], h, cfg, lengths=lengths)
         return x + y, cache
     raise ValueError(kind)
 
@@ -155,29 +181,33 @@ def make_image_kv(qc: QuantContext, p: Dict, image_emb: jnp.ndarray, cfg):
 # ---------------------------------------------------------------------------
 def block_decode(qc: QuantContext, kind: str, p: Dict, x: jnp.ndarray, cache: Dict,
                  cfg, *, cache_len: jnp.ndarray) -> Tuple[jnp.ndarray, Dict]:
-    """x: (B, 1, D); cache_len: () — tokens already in cache (new token at
-    position cache_len)."""
+    """x: (B, 1, D); cache_len: () or (B,) — tokens already in each row's
+    cache (the new token lands at position cache_len[b]).  A scalar serves
+    the lock-step legacy path; a vector serves slots at different sequence
+    positions in one step (continuous batching)."""
     b = x.shape[0]
-    pos = jnp.full((b, 1), cache_len, jnp.int32)
+    clen = jnp.broadcast_to(jnp.asarray(cache_len, jnp.int32), (b,))
+    pos = clen[:, None]                                        # per-slot rope
+    rows = jnp.arange(b)
     if kind in ("attn", "moe_attn"):
         h = L.apply_norm(cfg.norm, p["ln"], x)
         q, k, v = _qkv(qc, p["attn"], h, cfg, pos, rope=True)
         if qc.int8_kv:
             att = ATT.decode_attention_int8(
                 q, cache["k"], cache["ks"], cache["v"], cache["vs"], k, v,
-                cache_len, softcap=cfg.attn_softcap)
+                clen, softcap=cfg.attn_softcap)
             kq, ks = ATT.quantize_kv(k)
             vq, vs = ATT.quantize_kv(v)
             new_cache = {
-                "k": jax.lax.dynamic_update_slice_in_dim(cache["k"], kq, cache_len, axis=1),
-                "ks": jax.lax.dynamic_update_slice_in_dim(cache["ks"], ks, cache_len, axis=1),
-                "v": jax.lax.dynamic_update_slice_in_dim(cache["v"], vq, cache_len, axis=1),
-                "vs": jax.lax.dynamic_update_slice_in_dim(cache["vs"], vs, cache_len, axis=1),
+                "k": cache["k"].at[rows, clen].set(kq[:, 0]),
+                "ks": cache["ks"].at[rows, clen].set(ks[:, 0]),
+                "v": cache["v"].at[rows, clen].set(vq[:, 0]),
+                "vs": cache["vs"].at[rows, clen].set(vs[:, 0]),
             }
         else:
-            kc = jax.lax.dynamic_update_slice_in_dim(cache["k"], k, cache_len, axis=1)
-            vc = jax.lax.dynamic_update_slice_in_dim(cache["v"], v, cache_len, axis=1)
-            att = ATT.decode_attention(q, kc, vc, cache_len + 1,
+            kc = cache["k"].at[rows, clen].set(k[:, 0].astype(cache["k"].dtype))
+            vc = cache["v"].at[rows, clen].set(v[:, 0].astype(cache["v"].dtype))
+            att = ATT.decode_attention(q, kc, vc, clen + 1,
                                        softcap=cfg.attn_softcap)
             new_cache = {"k": kc, "v": vc}
         x = x + L.dense(qc, att.reshape(b, 1, -1), p["attn"]["o"])
@@ -187,16 +217,16 @@ def block_decode(qc: QuantContext, kind: str, p: Dict, x: jnp.ndarray, cache: Di
         h = L.apply_norm(cfg.norm, p["ln"], x)
         q, k, v = _qkv(qc, p["attn"], h, cfg, pos, rope=True)
         w = cache["k"].shape[1]
-        slot = jnp.mod(cache_len, w)
-        kc = jax.lax.dynamic_update_slice_in_dim(cache["k"], k, slot, axis=1)
-        vc = jax.lax.dynamic_update_slice_in_dim(cache["v"], v, slot, axis=1)
-        slot_pos = jax.lax.dynamic_update_slice_in_dim(
-            cache["slot_pos"], pos[0].astype(cache["slot_pos"].dtype), slot, axis=0)
+        slot = jnp.mod(clen, w)                                # (B,)
+        kc = cache["k"].at[rows, slot].set(k[:, 0].astype(cache["k"].dtype))
+        vc = cache["v"].at[rows, slot].set(v[:, 0].astype(cache["v"].dtype))
+        slot_pos = cache["slot_pos"].at[rows, slot].set(
+            clen.astype(cache["slot_pos"].dtype))              # (B, w)
         # ring attention: mask slots outside (cache_len - window, cache_len]
-        valid = (slot_pos >= 0) & (slot_pos > cache_len - cfg.window) & (slot_pos <= cache_len)
+        valid = (slot_pos >= 0) & (slot_pos > pos - cfg.window) & (slot_pos <= pos)
         sc_q = q.reshape(b, cfg.num_kv_heads, cfg.num_heads // cfg.num_kv_heads, -1)
         sc = jnp.einsum("bgrd,bkgd->bgrk", sc_q * (cfg.head_dim ** -0.5), kc)
-        sc = jnp.where(valid[None, None, None, :], sc, ATT.NEG_INF)
+        sc = jnp.where(valid[:, None, None, :], sc, ATT.NEG_INF)
         att = jnp.einsum("bgrk,bkgd->bgrd", jax.nn.softmax(sc, axis=-1), vc)
         x = x + L.dense(qc, att.reshape(b, 1, -1), p["attn"]["o"])
         x = _mlp_part(qc, kind, p, x, cfg)
@@ -233,23 +263,25 @@ def block_decode_delta(qc: QuantContext, kind: str, p: Dict, x: jnp.ndarray,
                        cache: Dict, cfg, *, cache_len: jnp.ndarray
                        ) -> Tuple[jnp.ndarray, Dict]:
     """Returns (x, delta).  delta keys mirror the cache; values are either
-    one-token slices (attn k/v, local k/v/slot_pos), full small states
-    (rglru/ssm), or None (cross: static)."""
+    one-token slices (attn k/v, local k/v), per-row slot positions
+    (local slot_pos: (B,)), full small states (rglru/ssm), or None (cross:
+    static).  ``cache_len`` may be () or (B,) — per-slot decode."""
     b = x.shape[0]
-    pos = jnp.full((b, 1), cache_len, jnp.int32)
+    clen = jnp.broadcast_to(jnp.asarray(cache_len, jnp.int32), (b,))
+    pos = clen[:, None]
     if kind in ("attn", "moe_attn"):
         h = L.apply_norm(cfg.norm, p["ln"], x)
         q, k, v = _qkv(qc, p["attn"], h, cfg, pos, rope=True)
         if qc.int8_kv:
             att = ATT.decode_attention_int8(
                 q, cache["k"], cache["ks"], cache["v"], cache["vs"], k, v,
-                cache_len, softcap=cfg.attn_softcap)
+                clen, softcap=cfg.attn_softcap)
             kq, ks = ATT.quantize_kv(k)
             vq, vs = ATT.quantize_kv(v)
             delta = {"k": kq, "ks": ks, "v": vq, "vs": vs}
         else:
             att = ATT.decode_attention_appended(q, cache["k"], cache["v"], k, v,
-                                                cache_len, softcap=cfg.attn_softcap)
+                                                clen, softcap=cfg.attn_softcap)
             delta = {"k": k, "v": v}
         x = x + L.dense(qc, att.reshape(b, 1, -1), p["attn"]["o"])
         x = _mlp_part(qc, kind, p, x, cfg)
@@ -257,18 +289,15 @@ def block_decode_delta(qc: QuantContext, kind: str, p: Dict, x: jnp.ndarray,
     if kind == "local":
         h = L.apply_norm(cfg.norm, p["ln"], x)
         q, k, v = _qkv(qc, p["attn"], h, cfg, pos, rope=True)
-        w = cache["k"].shape[1]
-        slot = jnp.mod(cache_len, w)
-        sp = cache["slot_pos"]
+        sp = cache["slot_pos"]                                  # (B, w)
         # mask out the slot we are about to overwrite plus out-of-window slots
-        valid = (sp >= 0) & (sp > cache_len - cfg.window) & (sp < cache_len)
+        valid = (sp >= 0) & (sp > pos - cfg.window) & (sp < pos)
         att = ATT.decode_attention_appended(q, cache["k"], cache["v"], k, v,
-                                            cache_len, valid_mask=valid,
+                                            clen, valid_mask=valid,
                                             softcap=cfg.attn_softcap)
         x = x + L.dense(qc, att.reshape(b, 1, -1), p["attn"]["o"])
         x = _mlp_part(qc, kind, p, x, cfg)
-        return x, {"k": k, "v": v,
-                   "slot_pos": pos[0].astype(sp.dtype)}
+        return x, {"k": k, "v": v, "slot_pos": clen.astype(sp.dtype)}
     if kind == "cross":
         x, _ = block_decode(qc, kind, p, x, cache, cfg, cache_len=cache_len)
         return x, {"k": None, "v": None}
@@ -294,7 +323,7 @@ def init_block_cache(kind: str, cfg, batch: int, s_max: int, dtype=jnp.bfloat16,
         w = min(cfg.window, s_max)
         shape = (batch, w, g, hd)
         return {"k": jnp.zeros(shape, dtype), "v": jnp.zeros(shape, dtype),
-                "slot_pos": jnp.full((w,), -1, jnp.int32)}
+                "slot_pos": jnp.full((batch, w), -1, jnp.int32)}
     if kind == "cross":
         t = cfg.num_image_tokens
         return {"k": jnp.zeros((batch, t, g, hd), dtype),

@@ -180,3 +180,16 @@ def causal_conv1d_step(params: Dict, conv_state: jnp.ndarray, x_t: jnp.ndarray):
     window = jnp.concatenate([conv_state, x_t[:, None, :]], axis=1)  # (B, K, C)
     out = jnp.einsum("bkc,kc->bc", window, w) + params["b"]
     return out, window[:, 1:, :]
+
+
+def gather_tail(x: jnp.ndarray, lengths: jnp.ndarray, k: int) -> jnp.ndarray:
+    """Per-row tail of a right-padded sequence: the last ``k`` *valid*
+    positions of each row.  x: (B, L, C); lengths: (B,) -> (B, k, C).
+    Rows shorter than ``k`` are left-zero-filled (matches the zero left-pad
+    the unpadded path applies when a prompt is shorter than the window)."""
+    if k <= 0:
+        return x[:, :0, :]
+    idx = lengths[:, None] - k + jnp.arange(k)[None, :]        # (B, k)
+    ok = idx >= 0
+    g = jnp.take_along_axis(x, jnp.clip(idx, 0, x.shape[1] - 1)[:, :, None], axis=1)
+    return jnp.where(ok[:, :, None], g, 0).astype(x.dtype)

@@ -99,7 +99,7 @@ def _embed(qc, params, batch, cfg) -> Tuple[jnp.ndarray, Optional[Dict]]:
 # forward (train) / prefill
 # ---------------------------------------------------------------------------
 def _run_stack(qc, params, x, cfg, *, positions, side, remat: bool, collect_cache: bool,
-               act_constraint=None):
+               act_constraint=None, lengths=None):
     names = _stage_block_names(cfg)
 
     def stage_fn(x, stage_params):
@@ -107,7 +107,8 @@ def _run_stack(qc, params, x, cfg, *, positions, side, remat: bool, collect_cach
         caches = {}
         for name, kind in zip(names, cfg.stage_pattern):
             x, c = B.block_forward(qc, kind, stage_params[name], x, cfg,
-                                   positions=positions, side=side)
+                                   positions=positions, side=side,
+                                   lengths=lengths)
             caches[name] = c if collect_cache else None
         if act_constraint is not None:  # e.g. sequence-parallel residual stream
             x = act_constraint(x)
@@ -121,7 +122,8 @@ def _run_stack(qc, params, x, cfg, *, positions, side, remat: bool, collect_cach
         for i, kind in enumerate(cfg.tail_pattern):
             name = f"t{i}_{kind}"
             x, c = B.block_forward(qc, kind, params["tail"][name], x, cfg,
-                                   positions=positions, side=side)
+                                   positions=positions, side=side,
+                                   lengths=lengths)
             tail_caches[name] = c if collect_cache else None
     return x, stage_caches, tail_caches
 
@@ -141,32 +143,55 @@ def forward(params: PyTree, batch: Dict, cfg: ArchConfig, qc: QuantContext = FP,
 
 
 def prefill(params: PyTree, batch: Dict, cfg: ArchConfig, qc: QuantContext = FP,
-            *, s_max: int = 0, act_constraint=None) -> Tuple[jnp.ndarray, PyTree]:
+            *, s_max: int = 0, act_constraint=None, lengths=None
+            ) -> Tuple[jnp.ndarray, PyTree]:
     """Process a prompt; returns (last-position logits (B, V), caches).
 
-    attn caches are padded to ``s_max`` (decode capacity) when given."""
+    attn caches are padded to ``s_max`` (decode capacity) when given.
+
+    ``lengths`` (B,) enables *padded prefill*: rows are right-padded to the
+    common sequence length and each row's true prompt length is given here.
+    Causal attention keeps valid positions exact under right padding; the
+    returned logits are gathered at each row's last valid position, local
+    rings are built per row in decode-invariant slot order, and recurrent
+    state is carried through the pad — so the caches can be scattered
+    straight into a live decode cache (``scatter_cache_into_slot``)."""
     x, side = _embed(qc, params, batch, cfg)
     s = x.shape[1]
     positions = jnp.arange(s)
+    if lengths is not None:
+        lengths = jnp.asarray(lengths, jnp.int32)
     x, stage_caches, tail_caches = _run_stack(
         qc, params, x, cfg, positions=positions, side=side, remat=False,
-        collect_cache=True, act_constraint=act_constraint)
-    x = L.apply_norm(cfg.norm, params["final_norm"], x[:, -1:, :])
+        collect_cache=True, act_constraint=act_constraint, lengths=lengths)
+    if lengths is None:
+        x_last = x[:, -1:, :]
+    else:
+        idx = jnp.clip(lengths - 1, 0, s - 1)
+        x_last = jnp.take_along_axis(x, idx[:, None, None], axis=1)
+    x = L.apply_norm(cfg.norm, params["final_norm"], x_last)
     logits = L.logits_apply(qc, params, x, tie_embeddings=cfg.tie_embeddings,
                             softcap=cfg.logit_softcap)
     caches = {"stages": stage_caches, "tail": tail_caches}
     if s_max:
-        caches = fit_caches_for_decode(caches, cfg, s, s_max)
+        caches = fit_caches_for_decode(caches, cfg, s, s_max,
+                                       ring_invariant=lengths is not None)
     return logits[:, 0, :], caches
 
 
-def fit_caches_for_decode(caches: PyTree, cfg: ArchConfig, s: int, s_max: int) -> PyTree:
+def fit_caches_for_decode(caches: PyTree, cfg: ArchConfig, s: int, s_max: int,
+                          *, ring_invariant: bool = False) -> PyTree:
     """Resize prefill caches to decode capacity ``s_max``:
 
     * attn/moe KV: zero-pad the time axis from ``s`` to ``s_max``;
     * local (ring buffer): roll entries so slot ``j`` holds position ``p``
       with ``p % w == j`` (the decode-write invariant), pad if ``s < w``;
     * cross / recurrent caches: already fixed-size — untouched.
+
+    ``ring_invariant=True`` (padded-prefill path) asserts the local rings
+    are *already* in decode-invariant slot order per row — they are only
+    padded to the target window, never rolled (a roll keyed on the padded
+    scalar ``s`` would corrupt per-row rings).
     """
     def visit(path, leaf):
         if leaf is None:
@@ -186,7 +211,13 @@ def fit_caches_for_decode(caches: PyTree, cfg: ArchConfig, s: int, s_max: int) -
         cur = leaf.shape[t_ax]
         if is_local:
             w_target = min(cfg.window, s_max)
-            if cur >= w_target and s >= w_target:
+            if ring_invariant:
+                if cur >= w_target:
+                    return leaf
+                # padded-prefill rings only grow when window >= padded length,
+                # in which case slots hold identity positions (p == j) and a
+                # tail pad preserves the decode-write invariant
+            elif cur >= w_target and s >= w_target:
                 shift = (s - cur) % w_target
                 return jnp.roll(leaf, shift, axis=t_ax)
             pads = [(0, 0)] * leaf.ndim
@@ -202,10 +233,35 @@ def fit_caches_for_decode(caches: PyTree, cfg: ArchConfig, s: int, s_max: int) -
     return jax.tree_util.tree_map_with_path(visit, caches)
 
 
+def scatter_cache_into_slot(live: PyTree, pref: PyTree, slot) -> PyTree:
+    """Write a one-request prefill cache into batch row ``slot`` of a live
+    multi-slot decode cache (continuous batching admission).
+
+    ``pref`` must come from :func:`prefill` with ``s_max`` equal to the live
+    cache's decode capacity and batch 1, so every leaf matches the live leaf
+    except along the batch axis (stacked stage leaves: axis 1 after the
+    ``num_stages`` axis; tail leaves: axis 0).  Stale rows left by a
+    previous occupant are fully overwritten.  jit-friendly (``slot`` is a
+    dynamic operand) and donation-safe for ``live``."""
+    slot = jnp.asarray(slot, jnp.int32)
+
+    def put(axis):
+        return lambda lv, pv: jax.lax.dynamic_update_slice_in_dim(
+            lv, pv.astype(lv.dtype), slot, axis=axis)
+
+    return {"stages": jax.tree_util.tree_map(put(1), live["stages"], pref["stages"]),
+            "tail": jax.tree_util.tree_map(put(0), live["tail"], pref["tail"])}
+
+
 def decode_step(params: PyTree, tokens: jnp.ndarray, caches: PyTree,
                 cache_len: jnp.ndarray, cfg: ArchConfig, qc: QuantContext = FP,
                 *, inplace: bool = False) -> Tuple[jnp.ndarray, PyTree]:
     """One token step: tokens (B, 1) -> (logits (B, V), updated caches).
+
+    ``cache_len`` is a scalar () for the lock-step path or a (B,) vector for
+    continuous batching: each batch row (slot) sits at its own sequence
+    position — attention masks, rotary offsets, and local-ring slots are all
+    indexed per row.
 
     ``inplace=True`` runs the layer loop as a fori_loop whose carry holds
     the *stacked* caches and writes only the new token's slice — the
@@ -217,30 +273,28 @@ def decode_step(params: PyTree, tokens: jnp.ndarray, caches: PyTree,
     batch = {"tokens": tokens}
     x, _ = _embed(qc, params, batch, cfg)
     names = _stage_block_names(cfg)
+    b = tokens.shape[0]
+    clen = jnp.broadcast_to(jnp.asarray(cache_len, jnp.int32), (b,))
+    rows = jnp.arange(b)
 
     if inplace:
         def write_delta(kind, stacked, delta, i):
-            """Write the one-token delta into the stacked (L, ...) buffers."""
+            """Write the one-token delta into the stacked (L, B, ...) buffers
+            at each row's own position (per-slot scatter)."""
             out = {}
             for key, val in delta.items():
                 buf = stacked[key]
                 if val is None:
                     out[key] = buf
                     continue
-                if kind in ("attn", "moe_attn") and key in ("k", "v"):
-                    out[key] = jax.lax.dynamic_update_slice(
-                        buf, val[None].astype(buf.dtype), (i, 0, cache_len, 0, 0))
-                elif kind in ("attn", "moe_attn") and key in ("ks", "vs"):
-                    out[key] = jax.lax.dynamic_update_slice(
-                        buf, val[None].astype(buf.dtype), (i, 0, cache_len, 0))
+                if kind in ("attn", "moe_attn") and key in ("k", "v", "ks", "vs"):
+                    out[key] = buf.at[i, rows, clen].set(val[:, 0].astype(buf.dtype))
                 elif kind == "local" and key in ("k", "v"):
-                    slot = jnp.mod(cache_len, buf.shape[2])
-                    out[key] = jax.lax.dynamic_update_slice(
-                        buf, val[None].astype(buf.dtype), (i, 0, slot, 0, 0))
+                    slot = jnp.mod(clen, buf.shape[2])
+                    out[key] = buf.at[i, rows, slot].set(val[:, 0].astype(buf.dtype))
                 elif kind == "local" and key == "slot_pos":
-                    slot = jnp.mod(cache_len, buf.shape[1])
-                    out[key] = jax.lax.dynamic_update_slice(
-                        buf, val[None].astype(buf.dtype), (i, slot))
+                    slot = jnp.mod(clen, buf.shape[2])
+                    out[key] = buf.at[i, rows, slot].set(val.astype(buf.dtype))
                 else:  # full small recurrent state (rglru/ssm)
                     out[key] = jax.lax.dynamic_update_index_in_dim(
                         buf, val.astype(buf.dtype), i, 0)
@@ -258,7 +312,7 @@ def decode_step(params: PyTree, tokens: jnp.ndarray, caches: PyTree,
                     lambda a: jax.lax.dynamic_index_in_dim(a, i, 0, keepdims=False),
                     stage_caches[name])
                 xi, delta = B.block_decode_delta(qc, kind, stage_params[name], xi,
-                                                 layer_cache, cfg, cache_len=cache_len)
+                                                 layer_cache, cfg, cache_len=clen)
                 new_caches[name] = delta
             stage_caches = {
                 name: write_delta(kind, stage_caches[name], new_caches[name], i)
@@ -274,7 +328,7 @@ def decode_step(params: PyTree, tokens: jnp.ndarray, caches: PyTree,
             new_caches = {}
             for name, kind in zip(names, cfg.stage_pattern):
                 x, c = B.block_decode(qc, kind, stage_params[name], x, stage_cache[name],
-                                      cfg, cache_len=cache_len)
+                                      cfg, cache_len=clen)
                 new_caches[name] = c
             return x, new_caches
 
@@ -285,7 +339,7 @@ def decode_step(params: PyTree, tokens: jnp.ndarray, caches: PyTree,
         for i, kind in enumerate(cfg.tail_pattern):
             name = f"t{i}_{kind}"
             x, c = B.block_decode(qc, kind, params["tail"][name], x,
-                                  caches["tail"][name], cfg, cache_len=cache_len)
+                                  caches["tail"][name], cfg, cache_len=clen)
             tail_caches[name] = c
 
     x = L.apply_norm(cfg.norm, params["final_norm"], x)

@@ -48,12 +48,21 @@ def _gates(qc, params, xr):
 
 
 def rglru_apply(qc: QuantContext, params: Dict, x_in: jnp.ndarray,
-                cfg) -> Tuple[jnp.ndarray, Dict]:
-    """x_in: (B,L,D) -> (out (B,L,D), cache {'conv', 'h'})."""
+                cfg, *, lengths=None) -> Tuple[jnp.ndarray, Dict]:
+    """x_in: (B,L,D) -> (out (B,L,D), cache {'conv', 'h'}).
+
+    ``lengths`` (B,) marks right-padded rows: padded positions run the
+    recurrence as identity (a=1, b=0), so the final state ``h[:, -1]`` is
+    exactly the state at each row's true length, and the conv cache is
+    gathered from the last valid inputs per row (padded prefill-into-slot)."""
     xr_raw = L.dense(qc, x_in, params["in_x"])                # (B,L,Dr)
     gate = jax.nn.gelu(L.dense(qc, x_in, params["in_gate"]))
     xr = L.causal_conv1d(params["conv"], xr_raw)
     a, b = _gates(qc, params, xr)
+    if lengths is not None:
+        valid = (jnp.arange(x_in.shape[1])[None, :] < lengths[:, None])[..., None]
+        a = jnp.where(valid, a, 1.0)                          # carry h through pad
+        b = jnp.where(valid, b, 0.0)
 
     def combine(e1, e2):
         a1, b1 = e1
@@ -64,8 +73,11 @@ def rglru_apply(qc: QuantContext, params: Dict, x_in: jnp.ndarray,
     out = L.dense(qc, h * gate, params["out"])
     k = params["conv"]["w"].shape[0]
     l_ = x_in.shape[1]
-    conv_state = xr_raw[:, -(k - 1):, :] if l_ >= k - 1 else jnp.pad(
-        xr_raw, ((0, 0), (k - 1 - l_, 0), (0, 0)))
+    if lengths is not None:
+        conv_state = L.gather_tail(xr_raw, lengths, k - 1)
+    else:
+        conv_state = xr_raw[:, -(k - 1):, :] if l_ >= k - 1 else jnp.pad(
+            xr_raw, ((0, 0), (k - 1 - l_, 0), (0, 0)))
     return out, {"conv": conv_state, "h": h[:, -1, :]}
 
 

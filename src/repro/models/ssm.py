@@ -106,14 +106,22 @@ def ssd_chunked(x, dt, a, bv, cv, *, chunk: int):
 
 
 def ssm_apply(qc: QuantContext, params: Dict, x_in: jnp.ndarray, cfg,
-              *, chunk: int = 256) -> Tuple[jnp.ndarray, Dict]:
-    """Full-sequence mixer.  x_in: (B,L,D).  Returns (out, final_cache)."""
+              *, chunk: int = 256, lengths=None) -> Tuple[jnp.ndarray, Dict]:
+    """Full-sequence mixer.  x_in: (B,L,D).  Returns (out, final_cache).
+
+    ``lengths`` (B,) marks right-padded rows: padded positions get dt=0,
+    which zeroes their state contribution AND their decay (exp(0)=1), so the
+    final SSD state equals the state at each row's true length; the conv
+    cache is gathered from the last valid inputs per row."""
     d = ssm_dims(cfg)
     zxbcdt = L.dense(qc, x_in, params["in_proj"])
     z, xbc, dt = _split_zxbcdt(zxbcdt, d)
     xbc = jax.nn.silu(L.causal_conv1d(params["conv"], xbc))
     xs, bv, cv = _split_xbc(xbc, d)
     dt = jax.nn.softplus(dt + params["dt_bias"])            # (B,L,H)
+    if lengths is not None:
+        valid = jnp.arange(x_in.shape[1])[None, :] < lengths[:, None]
+        dt = jnp.where(valid[..., None], dt, 0.0)
     a = -jnp.exp(params["a_log"])
     b_, l_ = x_in.shape[0], x_in.shape[1]
     xh = xs.reshape(b_, l_, d["heads"], d["p"])
@@ -125,8 +133,11 @@ def ssm_apply(qc: QuantContext, params: Dict, x_in: jnp.ndarray, cfg,
     # conv cache = last K-1 pre-activation conv inputs
     k = cfg.ssm_conv
     xbc_raw = _split_zxbcdt(zxbcdt, d)[1]
-    conv_state = xbc_raw[:, -(k - 1):, :] if l_ >= k - 1 else jnp.pad(
-        xbc_raw, ((0, 0), (k - 1 - l_, 0), (0, 0)))
+    if lengths is not None:
+        conv_state = L.gather_tail(xbc_raw, lengths, k - 1)
+    else:
+        conv_state = xbc_raw[:, -(k - 1):, :] if l_ >= k - 1 else jnp.pad(
+            xbc_raw, ((0, 0), (k - 1 - l_, 0), (0, 0)))
     return out, {"conv": conv_state, "ssm": s_final}
 
 
