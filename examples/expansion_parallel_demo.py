@@ -1,7 +1,11 @@
 """The paper's AllReduce execution model, live on 4 (fake) devices:
 
-series terms shard over an 'expand' mesh axis, every device computes its
-basis-model partial, one psum (= AbelianAdd) reconstructs the layer output.
+series terms shard over an 'expand' mesh axis, every device computes the
+INT32 accumulators of its basis-model partial, and one *integer* psum
+(= AbelianAdd, exact in Z) reconstructs the layer output — so the
+distributed result matches the local fused GEMM exactly (DESIGN.md §9).
+The production serving path wires the same executor through
+Runtime(mesh=..., placement="term"); see README "Multi-device serving".
 
     python examples/expansion_parallel_demo.py     # sets its own XLA_FLAGS
 """

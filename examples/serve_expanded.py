@@ -23,7 +23,8 @@ import numpy as np
 from repro.api import QuantArtifact, QuantRecipe, Runtime, quantize
 from repro.configs.base import get_arch
 from repro.core.policy import W4A4
-from repro.infer.serve import ServeConfig
+from repro.launch.common import (add_serve_args, mesh_from_args,
+                                 serve_config_from_args)
 from repro.models import model as M
 from repro.train.data import make_batch
 from repro.train.train_step import TrainConfig, loss_fn, make_train_step
@@ -35,9 +36,12 @@ def main():
     ap = argparse.ArgumentParser()
     ap.add_argument("--requests", type=int, default=16)
     ap.add_argument("--train-steps", type=int, default=60)
-    ap.add_argument("--max-new", type=int, default=24)
     ap.add_argument("--artifact-dir", default=None,
                     help="where to save the artifact (default: a temp dir)")
+    # the shared serving flag set (launch/common.py, documented in
+    # docs/api.md) — identical to `python -m repro.launch.serve`
+    add_serve_args(ap, max_batch_default=8)
+    ap.set_defaults(max_new=24, max_seq=96, max_slots=4)
     args = ap.parse_args()
 
     cfg = get_arch(ARCH, smoke=True)
@@ -60,9 +64,11 @@ def main():
     print(f"\nFP=xINT W4A4 expansion: {art.quant_seconds:.2f}s, zero "
           f"calibration data; artifact saved to {path}")
 
-    # a fresh process would start exactly here
+    # a fresh process would start exactly here; --placement term --mesh N
+    # serves the artifact with its series terms scattered over N devices
     art = QuantArtifact.load(path)
-    rt = Runtime(art, backend="ref", cfg=cfg)
+    mesh, placement = mesh_from_args(args)
+    rt = Runtime(art, backend="ref", cfg=cfg, mesh=mesh, placement=placement)
 
     b = {k: jnp.asarray(v) for k, v in make_batch(cfg, 64, 8, 999).items()}
     base_loss, base_m = loss_fn(params, b, cfg)
@@ -72,7 +78,7 @@ def main():
 
     # continuous batching: a 4-slot pool serves mixed-length prompts, and
     # slots freed by per-request token budgets are recycled mid-stream
-    eng = rt.serve(ServeConfig(max_seq=96, max_batch=8, max_slots=4))
+    eng = rt.serve(serve_config_from_args(args))
     assert eng.quant_seconds == art.quant_seconds  # admission did not re-expand
     rng = np.random.default_rng(1)
     for i in range(args.requests):
@@ -87,6 +93,7 @@ def main():
     print(f"\nserved {len(out)} requests, {n_tok} tokens in {dt:.2f}s "
           f"({n_tok/dt:.1f} tok/s batched on CPU)")
     print(f"continuous batching: {st['n_slots']} slots, "
+          f"placement {st['placement']} x{st['mesh_devices']} devices, "
           f"occupancy {st['occupancy']:.2f}, "
           f"decode {st['decode_tokens_per_sec']:.1f} tok/s")
     ttfts = [m["ttft_s"] for m in eng.last_request_metrics.values()]

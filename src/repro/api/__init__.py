@@ -14,6 +14,10 @@
 All registered methods (``fpxint`` series expansion, ``rtn``, ``gptq_lite``)
 produce the same artifact type; ``repro.core.*`` stays the stable low-level
 layer this package composes.
+
+Multi-device serving: ``Runtime(art, mesh=make_serve_mesh(n, placement),
+placement="term"|"tensor")`` binds the artifact scattered over a 1-D
+device mesh (DESIGN.md §9; ``repro.dist.placement``).
 """
 from repro.api.artifact import QuantArtifact, quantize
 from repro.api.recipe import (QuantRecipe, Quantizer, get_quantizer,

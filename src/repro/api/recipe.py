@@ -41,6 +41,10 @@ class QuantRecipe:
               (``apply`` / ``lm_loss`` / ``serve``); tensor-only use leaves
               it None.
       smoke:  whether ``arch`` refers to the smoke-scaled config.
+      placement: default multi-device placement a Runtime binds this
+              artifact under (``replicated`` | ``term`` | ``tensor``, see
+              DESIGN.md §9) — recorded intent; ``Runtime(placement=...)``
+              overrides it per deployment.
       calib_batch / calib_seed: synthetic-calibration knobs for the
               calibrated-PTQ stand-in (``gptq_lite``).
     """
@@ -50,6 +54,7 @@ class QuantRecipe:
     pack: bool = False
     arch: Optional[str] = None
     smoke: bool = True
+    placement: str = "replicated"
     calib_batch: int = 32
     calib_seed: int = 0
 
@@ -58,6 +63,13 @@ class QuantRecipe:
             raise KeyError(
                 f"unknown quantization method {self.method!r}; "
                 f"registered: {sorted(QUANTIZERS)}")
+        from repro.dist.placement import check_placement
+        check_placement(self.placement)
+        if self.placement == "term" and self.method != "fpxint":
+            raise ValueError(
+                f"placement='term' distributes series terms; method "
+                f"{self.method!r} produces plain FP reconstructions with no "
+                f"term axis (use placement='tensor' or 'replicated')")
         if self.pack:
             if self.method != "fpxint":
                 raise ValueError(

@@ -21,9 +21,18 @@ A Runtime resolves the model config from the artifact's recorded ``arch``
                        prompts prefill into free decode slots, EOS recycles
                        slots mid-stream; ``scheduler="grouped"`` keeps the
                        legacy group-drain path for bit-exactness baselines.
+
+Multi-device serving (DESIGN.md §9): ``Runtime(artifact, mesh=...,
+placement=...)`` binds the artifact *placed* over a 1-D device mesh —
+``"term"`` scatters series terms (Theorem-2 expansion parallelism, one psum
+per expanded GEMM), ``"tensor"`` shards output-feature columns, and
+``"replicated"`` (the default) keeps the single-device layout.  The
+placement defaults from ``recipe.placement``; ``apply``/``lm_loss``/
+``serve`` all run under it.
 """
 from __future__ import annotations
 
+import dataclasses
 from functools import cached_property
 from typing import Any, Dict, Optional, Tuple
 
@@ -32,6 +41,7 @@ import jax.numpy as jnp
 
 from repro.api.artifact import QuantArtifact
 from repro.configs.base import ArchConfig, get_arch
+from repro.dist.placement import check_placement, make_serve_mesh, place_params
 
 PyTree = Any
 
@@ -40,13 +50,38 @@ BACKENDS = ("ref", "pallas", "pallas-packed")
 
 class Runtime:
     def __init__(self, artifact: QuantArtifact, backend: str = "ref",
-                 cfg: Optional[ArchConfig] = None):
+                 cfg: Optional[ArchConfig] = None, *,
+                 mesh: Optional[Any] = None,
+                 placement: Optional[str] = None):
         if backend not in BACKENDS:
             raise ValueError(f"unknown backend {backend!r}; one of {BACKENDS}")
+        placement = check_placement(
+            placement if placement is not None else artifact.recipe.placement)
+        if placement != "replicated":
+            if backend != "ref":
+                # Pallas interpret-mode callbacks cannot be partitioned (and
+                # term scattering unpacks nibble planes anyway) — the sharded
+                # placements serve the pure-jnp path; on real TPUs the Mosaic
+                # kernels can lift this restriction per-shard
+                raise ValueError(
+                    f"placement={placement!r} serves backend='ref' only "
+                    f"(got {backend!r}); see DESIGN.md §9")
+            if placement == "term" and not artifact.expanded:
+                raise ValueError(
+                    f"placement='term' distributes series terms; method "
+                    f"{artifact.method!r} has no term axis — use 'tensor'")
+            if mesh is None:
+                mesh = make_serve_mesh(0, placement)
         self.artifact = artifact
         self.backend = backend
-        self.qc = artifact.quant_context(backend)
-        self.params = artifact.runtime_params(backend)
+        self.mesh = mesh
+        self.placement = placement
+        qc = artifact.quant_context(backend)
+        if placement == "term":
+            qc = dataclasses.replace(qc, mesh=mesh, placement="term")
+        self.qc = qc
+        self.params = place_params(artifact.runtime_params(backend), mesh,
+                                   placement)
         if cfg is None and artifact.arch is not None:
             cfg = get_arch(artifact.arch, smoke=artifact.recipe.smoke)
         self.cfg = cfg
@@ -83,16 +118,19 @@ class Runtime:
                        self._require_cfg(), self.qc)
 
     def serve(self, serve_cfg=None, **engine_kw):
-        """A serving Engine admitted by this artifact (no re-expansion).
-        ``serve_cfg`` selects the scheduler: ``"slots"`` (default,
-        continuous batching with per-slot cache lengths) or ``"grouped"``
-        (legacy group-drain)."""
+        """A serving Engine admitted by this artifact (no re-expansion),
+        under this Runtime's mesh/placement.  ``serve_cfg`` selects the
+        scheduler: ``"slots"`` (default, continuous batching with per-slot
+        cache lengths) or ``"grouped"`` (legacy group-drain)."""
         from repro.infer.serve import Engine, ServeConfig
         return Engine(self._require_cfg(), artifact=self.artifact,
-                      backend=self.backend,
-                      serve_cfg=serve_cfg or ServeConfig(), **engine_kw)
+                      backend=self.backend, mesh=self.mesh,
+                      placement=self.placement,
+                      serve_cfg=serve_cfg or ServeConfig(),
+                      _bound_params=self.params, **engine_kw)
 
     def __repr__(self):
         arch = self.cfg.name if self.cfg is not None else None
         return (f"Runtime(method={self.artifact.method!r}, "
-                f"backend={self.backend!r}, arch={arch!r})")
+                f"backend={self.backend!r}, arch={arch!r}, "
+                f"placement={self.placement!r})")

@@ -1,2 +1,9 @@
 """Distributed-systems substrate: checkpointing, fault handling, sharding
-rules, gradient compression, and the Theorem-2 term-parallel executors."""
+rules, gradient compression, the Theorem-2 term-parallel executors, and the
+serving placement layer (``placement.py``) that wires them into the
+Runtime/Engine path (DESIGN.md §9)."""
+from repro.dist.placement import (  # noqa: F401
+    PLACEMENTS,
+    make_serve_mesh,
+    place_params,
+)

@@ -9,16 +9,28 @@ adds computed replicated, outside the parallel region.
 
 Term counts that do not divide the axis are zero-plane padded: a plane of
 zeros with zero scale contributes nothing to the psum.
+
+Two entry layers (DESIGN.md §9):
+
+* :func:`term_parallel_apply` — the distributed twin of
+  ``core.linear.expanded_apply`` for one GEMM (used directly by demos, and
+  by ``models/layers.dense`` when a ``QuantContext`` carries
+  ``placement="term"``);
+* :func:`shard_expanded_params` — the artifact-bind step: pad every
+  ``ExpandedTensor``'s term axis to a mesh-axis multiple and ``device_put``
+  the planes/scales scattered over the ``"expand"`` axis, so serving jits
+  see pre-placed weights and insert no resharding collectives.
 """
 from __future__ import annotations
 
+import dataclasses
 from functools import partial
-from typing import List
+from typing import Any, List
 
 import jax
 import jax.numpy as jnp
 from jax.experimental.shard_map import shard_map
-from jax.sharding import Mesh, PartitionSpec as P
+from jax.sharding import Mesh, NamedSharding, PartitionSpec as P
 
 from repro.core import expansion as E
 from repro.core import linear as LIN
@@ -28,12 +40,70 @@ from repro.kernels import ref
 
 AXIS = "expand"
 
+PyTree = Any
+
 
 def make_expand_mesh(n_devices: int) -> Mesh:
-    """1-D mesh over the first ``n_devices`` devices, axis name "expand"."""
-    import numpy as np
-    devs = np.array(jax.devices()[:n_devices])
-    return Mesh(devs, (AXIS,))
+    """1-D mesh over the first ``n_devices`` devices, axis name "expand"
+    (the serving entry is ``dist.placement.make_serve_mesh``, which this
+    delegates to so device-count validation lives in one place)."""
+    from repro.dist.placement import make_serve_mesh
+    return make_serve_mesh(n_devices, "term")
+
+
+# ---------------------------------------------------------------------------
+# artifact-bind placement: zero-pad the term axis and scatter it over AXIS
+# ---------------------------------------------------------------------------
+def pad_terms(et: ExpandedTensor, multiple: int) -> ExpandedTensor:
+    """Zero-plane-pad the term axis up to a ``multiple`` (Theorem 2 padding:
+    a zero plane with zero scale is the Abelian identity, so padded terms
+    contribute exactly +0.0 to every partial sum and to the psum)."""
+    if et.packed:
+        et = E.unpack(et)  # nibble-packed planes cannot be term-scattered
+    bd = et.batch_dims
+    pad = (-et.num_terms) % max(1, multiple)
+    if not pad:
+        return et
+    p_pads = [(0, 0)] * et.planes.ndim
+    p_pads[bd] = (0, pad)
+    s_pads = [(0, 0)] * et.scales.ndim
+    s_pads[bd] = (0, pad)
+    return dataclasses.replace(
+        et, planes=jnp.pad(et.planes, p_pads), scales=jnp.pad(et.scales, s_pads))
+
+
+def term_sharding_spec(et: ExpandedTensor, mesh: Mesh) -> ExpandedTensor:
+    """Per-component NamedShardings for one expanded leaf, shaped like the
+    leaf itself (an ``ExpandedTensor`` whose data fields hold shardings, so
+    it can be handed to ``jax.device_put`` as a matching pytree): planes and
+    scales scatter their term axis over ``AXIS``; bias/sat replicate."""
+    bd = et.batch_dims
+    rep = NamedSharding(mesh, P())
+    planes_sh = NamedSharding(
+        mesh, P(*([None] * bd + [AXIS] + [None] * (et.planes.ndim - bd - 1))))
+    scales_sh = NamedSharding(
+        mesh, P(*([None] * bd + [AXIS] + [None] * (et.scales.ndim - bd - 1))))
+    return dataclasses.replace(
+        et, planes=planes_sh, scales=scales_sh,
+        bias=None if et.bias is None else rep,
+        sat=None if et.sat is None else rep)
+
+
+def shard_expanded_params(params: PyTree, mesh: Mesh) -> PyTree:
+    """Artifact-bind placement for ``placement="term"`` serving: every
+    ``ExpandedTensor`` leaf is zero-plane padded so its term count divides
+    ``mesh.shape[AXIS]`` and its planes/scales are scattered over the mesh
+    axis; plain leaves (embeddings, norms, biases) replicate.  Packed
+    (INT4-nibble) leaves are unpacked first — the term axis, not the byte
+    axis, is the distribution unit."""
+    n = mesh.shape[AXIS]
+    is_et = lambda l: isinstance(l, ExpandedTensor)
+    padded = jax.tree_util.tree_map(
+        lambda l: pad_terms(l, n) if is_et(l) else l, params, is_leaf=is_et)
+    specs = jax.tree_util.tree_map(
+        lambda l: (term_sharding_spec(l, mesh) if is_et(l)
+                   else NamedSharding(mesh, P())), padded, is_leaf=is_et)
+    return jax.device_put(padded, specs)
 
 
 def _padded_terms(w_et: ExpandedTensor, n_shards: int):
@@ -53,27 +123,91 @@ def _padded_terms(w_et: ExpandedTensor, n_shards: int):
 
 def term_parallel_apply(x: jnp.ndarray, w_et: ExpandedTensor,
                         policy: ExpansionPolicy, mesh: Mesh) -> jnp.ndarray:
-    """Distributed twin of core.linear.expanded_apply (weight-term sharding).
+    """Distributed twin of ``core.linear.expanded_apply`` (weight-term
+    sharding): each device computes the series GEMM over its local weight
+    terms, one ``psum`` (the Abelian reduction of Theorem 2) combines them,
+    and the Eq. 4 affine epilogue is added replicated.
 
     x: (..., K); returns (..., N) f32 — matches the local fused result up to
-    psum reassociation."""
+    psum reassociation (greedy served *tokens* are identical; logits agree
+    to f32 reduction order, see DESIGN.md §9).  Weight-only policies
+    (``a_terms == 0`` or ``a_bits >= 16``) take a per-term dequant-GEMM with
+    the same single-psum contract.  Batched (e.g. per-expert MoE) leaves are
+    not routed here — they keep the replicated apply."""
+    if w_et.batch_dims > 0:
+        raise NotImplementedError(
+            "term_parallel_apply serves unbatched weights; peel batch axes "
+            "(stage scan / expert vmap) before routing")
+    if w_et.packed:
+        w_et = E.unpack(w_et)
     a_bits, a_terms = policy.a_bits, policy.a_terms
     k, n = w_et.orig_shape[-2], w_et.orig_shape[-1]
     lead = x.shape[:-1]
     x2d = x.reshape(-1, k).astype(jnp.float32)
-    xt, bias_a, sigma, a_scale1 = LIN._dynamic_act_params(x2d, policy, a_bits)
 
     n_shards = mesh.shape[AXIS]
     planes, scales = _padded_terms(w_et, n_shards)
+    tw_pad = planes.shape[0]
+    loc = tw_pad // n_shards
+    m = x2d.shape[0]
 
-    @partial(shard_map, mesh=mesh,
-             in_specs=(P(), P(), P(AXIS), P(AXIS)), out_specs=P())
-    def _series(xt_r, s1_r, planes_l, scales_l):
-        part = ref.series_matmul_ref(xt_r, s1_r, planes_l, scales_l,
-                                     a_bits=a_bits, a_terms=a_terms)
-        return jax.lax.psum(part, AXIS)
+    if a_terms <= 0 or a_bits >= 16:
+        # weight-only (e.g. W4A16): exact FP activation against each local
+        # partial reconstruction, psum over term shards.  The activation is
+        # FP here, so the partials are FP and the psum may reassociate their
+        # sum — without the activation-requantization amplifier of the
+        # series path the deviation stays at ulp level (DESIGN.md §9).
+        @partial(shard_map, mesh=mesh,
+                 in_specs=(P(), P(AXIS), P(AXIS)), out_specs=P())
+        def _dequant(x_r, planes_l, scales_l):
+            part = ref.dequant_matmul_ref(x_r, planes_l, scales_l)
+            return jax.lax.psum(part, AXIS)
 
-    out = _series(xt, a_scale1, planes, scales)
+        out = _dequant(x2d, planes, scales)
+        if w_et.bias is not None:
+            out = out + jnp.sum(x2d, axis=-1, keepdims=True) * w_et.bias
+        if w_et.sat is not None:
+            out = out + x2d @ w_et.sat
+        return out.reshape(*lead, n)
+
+    xt, bias_a, sigma, a_scale1 = LIN._dynamic_act_params(x2d, policy, a_bits)
+
+    # The distributed portion is kept EXACT: each device computes the
+    # INT8xINT8->INT32 accumulators of its local weight terms and the one
+    # psum reduces *integers* — the Abelian group of Theorem 2 realized in
+    # Z, where the reduction truly is order-independent (f32 partial sums
+    # would make the psum association device-count-dependent).  All f32
+    # arithmetic — the activation quantization before, the dyadic
+    # scale-and-accumulate epilogue after (same i-outer/j-inner order as
+    # the local oracle) — runs replicated, identically on every device.
+    a_planes = ref.residual_quantize_ref(xt, a_scale1, a_bits, a_terms)
+
+    @partial(shard_map, mesh=mesh, in_specs=(P(), P(AXIS)), out_specs=P())
+    def _int_accs(aplanes_r, planes_l):
+        acc_l = jnp.stack([
+            jax.lax.dot_general(aplanes_r[i], planes_l[j],
+                                (((1,), (0,)), ((), ())),
+                                preferred_element_type=jnp.int32)
+            for j in range(loc) for i in range(a_terms)])
+        acc_l = acc_l.reshape(loc, a_terms, m, n)
+        buf = jnp.zeros((tw_pad, a_terms, m, n), jnp.int32)
+        start = jax.lax.axis_index(AXIS) * loc
+        buf = jax.lax.dynamic_update_slice(buf, acc_l, (start, 0, 0, 0))
+        # exact: integer AbelianAdd.  Each global slot is written by exactly
+        # one device (zeros — the group identity — elsewhere), so a tiled
+        # all_gather of acc_l is bit-identical and moves 1/n_shards of the
+        # bytes; the psum form is kept as the paper's AllReduce contract —
+        # swap to all_gather when chasing interconnect bandwidth on real
+        # meshes.
+        return jax.lax.psum(buf, AXIS)
+
+    accs = _int_accs(a_planes, planes)      # (tw_pad, ta, M, N), replicated
+    ratio = float(ref._scale_ratio(a_bits))
+    out = jnp.zeros((m, n), jnp.float32)
+    for i in range(a_terms):                # canonical oracle order
+        sa_i = a_scale1 / (ratio ** i)
+        for j in range(tw_pad):
+            out = out + (sa_i * scales[j]) * accs[j, i].astype(jnp.float32)
 
     # affine corrections — identical to expanded_apply's epilogue
     if w_et.bias is not None:

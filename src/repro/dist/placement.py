@@ -1,0 +1,91 @@
+"""Serving placement: how one model instance spreads over a device mesh.
+
+The deployment axis the Runtime/Engine expose (DESIGN.md §9):
+
+* ``"replicated"`` — every device holds the full model; the single-device
+  behavior (and the bit-exactness baseline the sharded placements are
+  measured against);
+* ``"term"``       — Theorem-2 expansion parallelism: ``ExpandedTensor``
+  weight terms scatter over a 1-D ``"expand"`` mesh axis at artifact-bind
+  time and every expanded GEMM runs as ``shard_map`` + one ``psum``
+  (``dist/expansion_parallel.py``).  Per-device weight memory shrinks by
+  ~the device count; activations and KV caches replicate;
+* ``"tensor"``     — column-parallel over a ``"model"`` axis
+  (``dist/sharding.py``): each device owns a slice of every GEMM's output
+  features.  Works for expanded *and* plain-FP params; contractions are
+  never reassociated, so logits are exact.
+
+This module is the small dispatcher the serving stack wires through:
+:func:`make_serve_mesh` builds the 1-D mesh with the axis name the
+placement's collectives expect, and :func:`place_params` applies the
+placement to a parameter pytree.
+"""
+from __future__ import annotations
+
+from typing import Any, Optional
+
+import jax
+from jax.sharding import Mesh, NamedSharding, PartitionSpec as P
+
+PyTree = Any
+
+PLACEMENTS = ("replicated", "term", "tensor")
+
+#: mesh axis name each placement's collectives are written against
+PLACEMENT_AXIS = {"term": "expand", "tensor": "model"}
+
+
+def check_placement(placement: str) -> str:
+    if placement not in PLACEMENTS:
+        raise ValueError(
+            f"unknown placement {placement!r}; one of {PLACEMENTS}")
+    return placement
+
+
+def make_serve_mesh(n_devices: int = 0, placement: str = "term") -> Mesh:
+    """1-D serving mesh over the first ``n_devices`` local devices (0 = all),
+    named for the placement: ``"expand"`` for term parallelism, ``"model"``
+    for column-parallel."""
+    import numpy as np
+
+    check_placement(placement)
+    axis = PLACEMENT_AXIS.get(placement, "expand")
+    n = n_devices or jax.device_count()
+    if n > jax.device_count():
+        raise ValueError(
+            f"mesh wants {n} devices; only {jax.device_count()} visible "
+            f"(set XLA_FLAGS=--xla_force_host_platform_device_count={n} "
+            f"for a fake-device mesh)")
+    return Mesh(np.array(jax.devices()[:n]), (axis,))
+
+
+def place_params(params: PyTree, mesh: Optional[Mesh],
+                 placement: str = "replicated") -> PyTree:
+    """Apply a serving placement to a parameter pytree (artifact-bind step).
+
+    ``"term"`` pads every expanded leaf's term axis to a mesh-axis multiple
+    (zero planes — the Abelian identity) and scatters planes/scales;
+    ``"tensor"`` shards output-feature columns; ``"replicated"`` (or no
+    mesh) broadcasts everything so sharded and unsharded engines see the
+    same committed-device layout."""
+    check_placement(placement)
+    if mesh is None:
+        if placement != "replicated":
+            raise ValueError(f"placement={placement!r} needs a mesh "
+                             f"(make_serve_mesh)")
+        return params
+    if placement == "term":
+        from repro.dist.expansion_parallel import AXIS, shard_expanded_params
+        if AXIS not in mesh.shape:
+            raise ValueError(
+                f"placement='term' needs a mesh with an {AXIS!r} axis; got "
+                f"{tuple(mesh.shape)} (use make_serve_mesh(n, 'term'))")
+        return shard_expanded_params(params, mesh)
+    if placement == "tensor":
+        from repro.dist.sharding import shard_params_column_parallel
+        if "model" not in mesh.shape:
+            raise ValueError(
+                f"placement='tensor' needs a mesh with a 'model' axis; got "
+                f"{tuple(mesh.shape)} (use make_serve_mesh(n, 'tensor'))")
+        return shard_params_column_parallel(params, mesh)
+    return jax.device_put(params, NamedSharding(mesh, P()))

@@ -18,11 +18,13 @@ smoke models on 8 fake hosts and the 256-chip dry-run cells:
 """
 from __future__ import annotations
 
+import dataclasses
 from typing import Any, Sequence, Tuple
 
 import jax
 from jax.sharding import Mesh, NamedSharding, PartitionSpec as P
 
+from repro.core.expansion import ExpandedTensor
 from repro.train.optimizer import get_optimizer
 
 PyTree = Any
@@ -115,3 +117,56 @@ class ShardingRules:
 
     def cache_specs(self, cache_struct: PyTree) -> PyTree:
         return jax.tree_util.tree_map(self._cache_spec, cache_struct)
+
+
+# ---------------------------------------------------------------------------
+# serving column-parallel placement (``placement="tensor"``, DESIGN.md §9)
+# ---------------------------------------------------------------------------
+def _column_spec(leaf, mesh: Mesh, axis: str) -> NamedSharding:
+    """Shard the last (output-feature) axis when it divides the mesh axis;
+    1-D leaves (norm scales, biases) and non-dividing shapes replicate.
+    Column-parallel keeps each output feature's full-K contraction on one
+    device, so no dot product is reassociated — logits stay exact."""
+    dims = tuple(getattr(leaf, "shape", ()))
+    msize = mesh.shape[axis]
+    if len(dims) >= 2 and dims[-1] % msize == 0 and dims[-1] >= msize:
+        return NamedSharding(mesh, P(*([None] * (len(dims) - 1) + [axis])))
+    return NamedSharding(mesh, P())
+
+
+def column_parallel_specs(params: PyTree, mesh: Mesh, *,
+                          axis: str = "model") -> PyTree:
+    """NamedShardings for serving a parameter pytree column-parallel.
+
+    ``ExpandedTensor`` leaves shard every per-output-channel component along
+    its last axis — planes (…, t, K, N), per-channel scales (…, t, N), bias
+    (…, N) and sat (…, K, N) all split on N, so one device owns every series
+    component of its output columns; per-tensor (scalar-scale) components
+    replicate.  The returned tree nests shardings *inside* ExpandedTensor
+    spec leaves, matching the params pytree for ``jax.device_put``."""
+    rep = NamedSharding(mesh, P())
+
+    def et_spec(et: ExpandedTensor) -> ExpandedTensor:
+        n = et.planes.shape[-1]  # packed width when packed — still the unit
+        msize = mesh.shape[axis]
+        ok = n % msize == 0 and n >= msize
+        col = lambda v: NamedSharding(
+            mesh, P(*([None] * (v.ndim - 1) + [axis]))) if ok else rep
+        return dataclasses.replace(
+            et, planes=col(et.planes),
+            scales=col(et.scales) if et.per_channel else rep,
+            bias=None if et.bias is None else (col(et.bias) if et.per_channel
+                                               else rep),
+            sat=None if et.sat is None else col(et.sat))
+
+    is_et = lambda l: isinstance(l, ExpandedTensor)
+    return jax.tree_util.tree_map(
+        lambda l: et_spec(l) if is_et(l) else _column_spec(l, mesh, axis),
+        params, is_leaf=is_et)
+
+
+def shard_params_column_parallel(params: PyTree, mesh: Mesh, *,
+                                 axis: str = "model") -> PyTree:
+    """Place serving params column-parallel over ``mesh`` (GSPMD consumes
+    the shardings inside jit; no manual collectives)."""
+    return jax.device_put(params, column_parallel_specs(params, mesh, axis=axis))

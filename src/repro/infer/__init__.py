@@ -1,2 +1,5 @@
+"""Serving layer: the slot-scheduler Engine (continuous batching,
+device-fused sampling, artifact admission, mesh placements) and the
+KV/state-cache size model behind per-device HBM admission control."""
 from repro.infer.scheduler import Request, SlotScheduler
 from repro.infer.serve import Engine, ServeConfig, make_decode_sample_step, make_serve_step

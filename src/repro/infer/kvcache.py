@@ -49,11 +49,35 @@ def max_batch_for_hbm(cfg: ArchConfig, s_max: int, hbm_bytes: float,
 
 
 def param_bytes(params) -> float:
-    """Total bytes of a (possibly expanded) parameter pytree.
+    """Total *logical* bytes of a (possibly expanded) parameter pytree.
 
     ``ExpandedTensor`` leaves flatten to their component arrays, so INT
-    planes + FP scales are counted at their stored widths."""
+    planes + FP scales are counted at their stored widths.  For a pytree
+    sharded over a mesh this is the global footprint summed over all
+    devices; per-device admission control uses
+    :func:`param_bytes_per_device`."""
     import jax
 
     return float(sum(leaf.size * leaf.dtype.itemsize
                      for leaf in jax.tree_util.tree_leaves(params)))
+
+
+def param_bytes_per_device(params) -> float:
+    """Bytes of the parameter pytree resident on ONE device.
+
+    Mesh-aware: a leaf carrying a ``jax.sharding`` (e.g. series planes
+    scattered over the ``"expand"`` axis by ``placement="term"``, or
+    column-sharded ``"tensor"`` leaves) is counted at its shard size;
+    replicated / host leaves count in full.  Equals :func:`param_bytes` for
+    an unsharded tree, so the serving engine uses this unconditionally for
+    HBM admission control."""
+    import jax
+
+    total = 0.0
+    for leaf in jax.tree_util.tree_leaves(params):
+        n = leaf.size
+        sharding = getattr(leaf, "sharding", None)
+        if sharding is not None and hasattr(sharding, "shard_shape"):
+            n = int(np.prod(sharding.shard_shape(leaf.shape), dtype=np.int64))
+        total += float(n) * leaf.dtype.itemsize
+    return total

@@ -7,7 +7,10 @@ batching over a fixed pool of decode *slots*:
 
 * **FCFS admission**, gated by :func:`repro.infer.kvcache.max_batch_for_hbm`
   when an HBM budget is configured: the slot pool never outgrows what the
-  caches + params fit in;
+  caches + params fit in.  The accounting is mesh-aware and *per device*
+  (``kvcache.param_bytes_per_device``): params scattered by
+  ``placement="term"``/``"tensor"`` leave more per-device HBM for caches,
+  so a sharded engine admits a larger slot pool under the same budget;
 * **padded prefill-into-slot**: each admitted prompt is right-padded to a
   bucketed length (bounding jit retraces), prefilled with a per-row length
   mask, and its cache scattered into a free row of the live decode cache
@@ -74,16 +77,21 @@ class Request:
 
 def plan_slots(cfg, serve_cfg, params) -> int:
     """Size the decode-slot pool: the configured ``max_slots`` (or
-    ``max_batch``), capped by HBM admission control when a budget is set."""
+    ``max_batch``), capped by HBM admission control when a budget is set.
+
+    ``hbm_budget_bytes`` is the budget of ONE device; params are counted at
+    their per-device resident size (``kvcache.param_bytes_per_device``), so
+    scattering weights over a mesh frees budget for additional slots while
+    the replicated caches are charged in full on every device."""
     n = serve_cfg.max_slots or serve_cfg.max_batch
     if serve_cfg.hbm_budget_bytes > 0:
-        pbytes = kvcache.param_bytes(params)
+        pbytes = kvcache.param_bytes_per_device(params)
         cap = kvcache.max_batch_for_hbm(cfg, serve_cfg.max_seq,
                                         serve_cfg.hbm_budget_bytes, pbytes)
         if cap < 1:
             raise ValueError(
                 f"hbm_budget_bytes={serve_cfg.hbm_budget_bytes:.3g} cannot fit "
-                f"params ({pbytes:.3g} B) plus one sequence of "
+                f"params ({pbytes:.3g} B per device) plus one sequence of "
                 f"max_seq={serve_cfg.max_seq} cache")
         n = min(n, cap)
     return max(1, n)
@@ -131,7 +139,10 @@ class SlotScheduler:
         temperature = jnp.float32(sc.temperature)
         key = jax.random.PRNGKey(sc.seed)
 
-        live = M.init_cache(eng.cfg, n, sc.max_seq, int8_kv=eng.qc.int8_kv)
+        # the decode cache replicates across the mesh (per-slot KV rows are
+        # identical on every device; only the weights are scattered)
+        live = M.init_cache(eng.cfg, n, sc.max_seq, int8_kv=eng.qc.int8_kv,
+                            mesh=eng.mesh)
         clen = np.zeros(n, np.int32)           # per-slot cache length (host)
         active = np.zeros(n, bool)             # slot occupied (host)
         budget = np.zeros(n, np.int64)         # remaining tokens per slot
@@ -215,6 +226,8 @@ class SlotScheduler:
         self.last_request_metrics = {r.rid: r.metrics() for r in requests}
         self.last_run_stats = {
             "scheduler": "slots",
+            "placement": eng.placement,
+            "mesh_devices": eng.mesh_devices,
             "n_slots": n,
             "requests": len(requests),
             "generated_tokens": gen_tokens,

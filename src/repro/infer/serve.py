@@ -18,7 +18,14 @@ calibration-free), then serve the INT series.  The engine:
 * fuses sampling and EOS tracking into the decode step ON DEVICE: the host
   pulls exactly one (tokens, alive) pair per decode step;
 * treats ``eos_id`` AND ``temperature`` as dynamic operands of the fused
-  step, so reconfiguring either never retraces the decode kernel.
+  step, so reconfiguring either never retraces the decode kernel;
+* serves **multi-device placements** (DESIGN.md §9): with ``mesh`` +
+  ``placement="term"`` the expanded weights live scattered over the mesh's
+  ``"expand"`` axis and every expanded GEMM of prefill-into-slot and the
+  fused decode step runs as shard_map + one psum; ``placement="tensor"``
+  is column-parallel via parameter shardings (GSPMD).  Caches, tokens and
+  the scheduler state replicate, so the slot scheduler drives a sharded
+  engine identically to a replicated one.
 
 ``make_serve_step`` is the function the multi-pod dry-run lowers for the
 ``decode_*`` cells; ``make_decode_sample_step`` is the fused
@@ -114,7 +121,10 @@ class Engine:
                  artifact: Optional[Any] = None,
                  backend: Optional[str] = None,
                  serve_cfg: ServeConfig = ServeConfig(),
-                 use_kernel: bool = False):
+                 use_kernel: bool = False,
+                 mesh: Optional[Any] = None,
+                 placement: str = "replicated",
+                 _bound_params: Optional[PyTree] = None):
         """Admit a model either as raw FP ``params`` (optionally expanded
         here when ``policy`` is given — the legacy per-engine path) or as a
         pre-built ``artifact`` (:class:`repro.api.QuantArtifact`): the
@@ -123,12 +133,22 @@ class Engine:
         picks the artifact execution path (``ref`` | ``pallas`` |
         ``pallas-packed``; see :class:`repro.api.Runtime`).
 
+        ``mesh`` + ``placement`` serve the model multi-device (DESIGN.md
+        §9): ``"term"`` scatters series terms over the mesh at admission
+        (zero-plane padded when terms don't divide the axis) and runs every
+        expanded GEMM as shard_map + one psum; ``"tensor"`` shards output
+        columns.  Both serve the exact slot-scheduler workload of the
+        replicated engine — same admitted requests, same generated tokens.
+
         Capacity knobs (``max_seq``, ``max_batch``, ``max_slots``,
         ``hbm_budget_bytes``, ``prefill_bucket``) are fixed at construction;
         ``temperature`` and ``eos_id`` are dynamic and may be swapped via
         ``engine.sc`` between runs without retracing."""
+        from repro.dist.placement import check_placement, place_params
         self.cfg = cfg
         self.sc = serve_cfg
+        self.mesh = mesh
+        self.placement = check_placement(placement)
         if serve_cfg.scheduler not in SCHEDULERS:
             raise ValueError(f"unknown scheduler {serve_cfg.scheduler!r}; "
                              f"one of {SCHEDULERS}")
@@ -138,7 +158,11 @@ class Engine:
                     "pass either artifact= or (params, policy), not both")
             backend = backend or ("pallas" if use_kernel else "ref")
             self.qc = artifact.quant_context(backend)
-            params = artifact.runtime_params(backend)
+            # _bound_params: a Runtime hands over its already backend-bound
+            # (and mesh-placed) tree, so serve() does not re-derive and
+            # re-place a second resident copy of the weights
+            params = (_bound_params if _bound_params is not None
+                      else artifact.runtime_params(backend))
             self.quant_seconds = artifact.quant_seconds  # paid once, upstream
         else:
             if params is None:
@@ -149,6 +173,32 @@ class Engine:
                 params = jax.jit(lambda p: PTQ.expand_params(p, policy))(params)
                 params = jax.block_until_ready(params)
             self.quant_seconds = time.perf_counter() - t0
+        if self.placement != "replicated":
+            if self.qc.use_kernel:
+                raise ValueError(
+                    f"placement={self.placement!r} serves the reference "
+                    f"path only (interpret-mode Pallas callbacks cannot be "
+                    f"partitioned); use backend='ref'")
+            if self.placement == "term":
+                from repro.core.expansion import ExpandedTensor
+                if not any(isinstance(l, ExpandedTensor)
+                           for l in jax.tree_util.tree_leaves(
+                               params,
+                               is_leaf=lambda l: isinstance(l, ExpandedTensor))):
+                    raise ValueError(
+                        "placement='term' distributes series terms, but these "
+                        "params carry no ExpandedTensor leaves (FP or "
+                        "baseline-PTQ model) — use placement='tensor' or "
+                        "'replicated'")
+            # params may arrive pre-placed from Runtime — place_params is
+            # idempotent there (padding an already-padded tree and device_put
+            # onto an identical sharding are no-ops), so re-placing keeps the
+            # direct Engine(..., mesh=..., placement=...) entry equivalent
+            # without duplicating a Runtime's placed weights
+            params = place_params(params, mesh, self.placement)
+            if self.placement == "term":
+                self.qc = dataclasses.replace(self.qc, mesh=mesh,
+                                              placement="term")
         self.params = params
         self._queue: List[Request] = []
         self._next_id = 0
@@ -285,6 +335,8 @@ class Engine:
         self.last_request_metrics = {req.rid: req.metrics() for req in self._queue}
         self.last_run_stats = {
             "scheduler": "grouped",
+            "placement": self.placement,
+            "mesh_devices": self.mesh_devices,
             "n_slots": capacity,
             "requests": len(self._queue),
             "generated_tokens": gen_tokens,
@@ -299,6 +351,11 @@ class Engine:
         }
         self._queue.clear()
         return out
+
+    @property
+    def mesh_devices(self) -> int:
+        """Devices this engine's placement spans (1 when replicated)."""
+        return self.mesh.size if self.mesh is not None else 1
 
     def _sample(self, logits: jnp.ndarray, key) -> jnp.ndarray:
         return _sample_logits(logits, key, self.sc.temperature)

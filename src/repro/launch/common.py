@@ -1,0 +1,78 @@
+"""Shared serving-launcher plumbing.
+
+``launch/serve.py`` and the doc examples (``examples/serve_expanded.py``)
+previously each hand-rolled the same argparse → :class:`ServeConfig` →
+mesh wiring; this module is the single builder both use (and the one place
+the flags are defined — documented in ``docs/api.md``):
+
+* :func:`add_serve_args` — the scheduler/capacity/mesh flag set;
+* :func:`serve_config_from_args` — flags → ``ServeConfig``;
+* :func:`mesh_from_args` — ``--mesh``/``--placement`` → a 1-D serving mesh
+  (or ``(None, "replicated")``), validating fake-device counts early with
+  an actionable ``XLA_FLAGS`` hint.
+"""
+from __future__ import annotations
+
+import argparse
+from typing import Optional, Tuple
+
+
+def add_serve_args(ap: argparse.ArgumentParser, *,
+                   max_batch_default: int = 8) -> argparse.ArgumentParser:
+    """Register the shared serving flags on ``ap`` (see docs/api.md)."""
+    ap.add_argument("--max-new", type=int, default=16,
+                    help="run-level generation budget per request")
+    ap.add_argument("--max-seq", type=int, default=64,
+                    help="decode capacity (KV cache length)")
+    ap.add_argument("--scheduler", default="slots", choices=("slots", "grouped"),
+                    help="slots = continuous batching (per-slot cache lengths, "
+                         "prefill-into-slot); grouped = legacy group-drain")
+    ap.add_argument("--max-batch", type=int, default=max_batch_default,
+                    help="grouped batch size / default slot-pool size")
+    ap.add_argument("--max-slots", type=int, default=0,
+                    help="decode slot pool size (0 = --max-batch), capped by "
+                         "--hbm-budget admission control")
+    ap.add_argument("--hbm-budget", type=float, default=0.0,
+                    help="per-device HBM bytes for params + KV caches; >0 "
+                         "caps the slot pool via kvcache.max_batch_for_hbm")
+    ap.add_argument("--temperature", type=float, default=0.0,
+                    help="0 = greedy (a dynamic operand: changing it never "
+                         "retraces the decode step)")
+    ap.add_argument("--mesh", type=int, default=0,
+                    help="serve over the first N local devices (0 = single "
+                         "device unless --placement is sharded, then all)")
+    ap.add_argument("--placement", default="replicated",
+                    choices=("replicated", "term", "tensor"),
+                    help="multi-device placement (DESIGN.md §9): term = "
+                         "Theorem-2 series-term scattering (shard_map + one "
+                         "psum per expanded GEMM); tensor = column-parallel; "
+                         "replicated = single-device behavior")
+    return ap
+
+
+def serve_config_from_args(args):
+    """Build the :class:`repro.infer.serve.ServeConfig` the shared flags
+    describe (capacity knobs are fixed at engine construction)."""
+    from repro.infer.serve import ServeConfig
+
+    return ServeConfig(
+        max_seq=args.max_seq,
+        max_batch=args.max_batch,
+        temperature=args.temperature,
+        scheduler=args.scheduler,
+        max_slots=args.max_slots,
+        hbm_budget_bytes=args.hbm_budget,
+    )
+
+
+def mesh_from_args(args) -> Tuple[Optional[object], str]:
+    """``(mesh, placement)`` from ``--mesh``/``--placement``.
+
+    Replicated with ``--mesh 0`` stays mesh-less (today's single-device
+    path); a sharded placement builds the 1-D mesh with the axis name its
+    collectives expect (``"expand"`` for term, ``"model"`` for tensor)."""
+    from repro.dist.placement import make_serve_mesh
+
+    if args.placement == "replicated" and not args.mesh:
+        return None, "replicated"
+    return make_serve_mesh(args.mesh, args.placement), args.placement

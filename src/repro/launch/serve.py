@@ -14,9 +14,19 @@ generations for a synthetic batch, and decode throughput.
 
 Scheduling: ``--scheduler slots`` (default) serves with slot-based
 continuous batching — ``--max-slots`` sizes the decode pool and
-``--hbm-budget`` caps it by admission control; ``--scheduler grouped``
-keeps the legacy equal-length group-drain path.  ``--mixed-lengths``
-draws variable prompt lengths to exercise prefill-into-slot.
+``--hbm-budget`` caps it by per-device admission control; ``--scheduler
+grouped`` keeps the legacy equal-length group-drain path.
+``--mixed-lengths`` draws variable prompt lengths to exercise
+prefill-into-slot.
+
+Multi-device (DESIGN.md §9): ``--placement term --mesh 4`` serves with the
+series terms scattered over 4 devices (Theorem-2 expansion parallelism,
+one psum per expanded GEMM); ``--placement tensor`` is column-parallel.
+On this CPU container prefix the run with
+``XLA_FLAGS=--xla_force_host_platform_device_count=N`` for fake devices.
+
+The flag set is shared with the examples via ``launch/common.py`` and
+documented in ``docs/api.md``.
 """
 from __future__ import annotations
 
@@ -29,7 +39,9 @@ import numpy as np
 from repro.api import QuantArtifact, QuantRecipe, Runtime, list_methods
 from repro.configs.base import ARCH_IDS, get_arch
 from repro.core.policy import get_policy
-from repro.infer.serve import Engine, ServeConfig
+from repro.infer.serve import Engine
+from repro.launch.common import (add_serve_args, mesh_from_args,
+                                 serve_config_from_args)
 from repro.models import model as M
 
 
@@ -53,29 +65,20 @@ def main(argv=None):
     ap.add_argument("--mixed-lengths", action="store_true",
                     help="draw prompt lengths in [4, --prompt-len] instead of "
                          "a fixed length (exercises continuous batching)")
-    ap.add_argument("--max-new", type=int, default=16)
-    ap.add_argument("--max-seq", type=int, default=64)
-    ap.add_argument("--scheduler", default="slots", choices=("slots", "grouped"),
-                    help="slots = continuous batching (per-slot cache lengths, "
-                         "prefill-into-slot); grouped = legacy group-drain")
-    ap.add_argument("--max-slots", type=int, default=0,
-                    help="decode slot pool size (0 = --requests, capped at "
-                         "--hbm-budget admission control)")
-    ap.add_argument("--hbm-budget", type=float, default=0.0,
-                    help="HBM bytes available for params + KV caches; >0 caps "
-                         "the slot pool via kvcache.max_batch_for_hbm")
     ap.add_argument("--seed", type=int, default=0)
+    add_serve_args(ap, max_batch_default=0)   # 0 -> --requests below
     args = ap.parse_args(argv)
+    args.max_batch = args.max_batch or args.requests
 
     cfg = get_arch(args.arch, smoke=args.smoke)
     assert not cfg.is_encoder, "encoder-only archs have no decode path"
-    serve_cfg = ServeConfig(max_seq=args.max_seq, max_batch=args.requests,
-                            scheduler=args.scheduler, max_slots=args.max_slots,
-                            hbm_budget_bytes=args.hbm_budget)
+    serve_cfg = serve_config_from_args(args)
+    mesh, placement = mesh_from_args(args)
 
     if args.fp:
         params = M.init_params(jax.random.PRNGKey(args.seed), cfg)
-        eng = Engine(cfg, params, serve_cfg=serve_cfg)
+        eng = Engine(cfg, params, serve_cfg=serve_cfg, mesh=mesh,
+                     placement=placement)
         print("serving FP (no quantization)")
     else:
         if args.artifact:
@@ -106,11 +109,13 @@ def main(argv=None):
             if args.save_artifact:
                 art.save(args.save_artifact)
                 print(f"artifact saved to {args.save_artifact}")
-        eng = Runtime(art, backend=args.backend, cfg=cfg).serve(serve_cfg)
+        rt = Runtime(art, backend=args.backend, cfg=cfg, mesh=mesh,
+                     placement=placement)
+        eng = rt.serve(serve_cfg)
         print(f"quantization time: {eng.quant_seconds:.3f}s "
               f"(method={art.method}, "
               f"policy=w{art.policy.w_bits}a{art.policy.a_bits}, "
-              f"backend={args.backend})")
+              f"backend={args.backend}, placement={placement})")
 
     rng = np.random.default_rng(args.seed)
     for _ in range(args.requests):
@@ -126,7 +131,8 @@ def main(argv=None):
     print(f"{n_tok} tokens in {dt:.2f}s = {n_tok/dt:.1f} tok/s (batched, incl. prefill)")
     st = eng.last_run_stats
     if st:
-        print(f"scheduler={st['scheduler']} slots={st['n_slots']} "
+        print(f"scheduler={st['scheduler']} placement={st['placement']} "
+              f"devices={st['mesh_devices']} slots={st['n_slots']} "
               f"occupancy={st['occupancy']:.2f} "
               f"decode={st['decode_tokens_per_sec']:.1f} tok/s")
         ttfts = [m["ttft_s"] for m in eng.last_request_metrics.values()]

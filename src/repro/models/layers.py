@@ -23,14 +23,27 @@ PyTree = Any
 
 @dataclasses.dataclass(frozen=True)
 class QuantContext:
-    """Static quantization context threaded through model apply fns."""
+    """Static quantization context threaded through model apply fns.
+
+    ``mesh``/``placement`` select the distributed execution of expanded
+    GEMMs (DESIGN.md §9): ``placement="term"`` with a 1-D ``"expand"`` mesh
+    routes every :class:`ExpandedTensor` dense through the Theorem-2
+    ``shard_map``+psum executor; ``"tensor"`` (column-parallel) and
+    ``"replicated"`` keep the local apply — their distribution lives in the
+    parameter shardings, consumed by GSPMD, not in the compute graph."""
     policy: Optional[ExpansionPolicy] = None
     use_kernel: bool = False  # Pallas path (CPU interpret / TPU Mosaic)
     int8_kv: bool = False     # int8 KV cache + int8 attention dots (serving)
+    mesh: Optional[Any] = None       # jax.sharding.Mesh (hashable) or None
+    placement: str = "replicated"    # "replicated" | "term" | "tensor"
 
     @property
     def enabled(self) -> bool:
         return self.policy is not None
+
+    @property
+    def term_parallel(self) -> bool:
+        return self.placement == "term" and self.mesh is not None
 
 
 FP = QuantContext(policy=None)
@@ -39,8 +52,15 @@ FP = QuantContext(policy=None)
 def dense(qc: QuantContext, x: jnp.ndarray, params: Dict, name: str = "kernel") -> jnp.ndarray:
     w = params[name]
     if isinstance(w, ExpandedTensor):
-        # the series GEMM accumulates in f32; return in the stream dtype
-        y = _dense(x, w, qc.policy, use_kernel=qc.use_kernel).astype(x.dtype)
+        if qc.term_parallel and w.batch_dims == 0:
+            # Theorem-2 execution: weight terms live scattered over the mesh
+            # "expand" axis; each device contributes its basis-model partial
+            # and one psum (AbelianAdd) combines them (DESIGN.md §9)
+            from repro.dist.expansion_parallel import term_parallel_apply
+            y = term_parallel_apply(x, w, qc.policy, qc.mesh).astype(x.dtype)
+        else:
+            # the series GEMM accumulates in f32; return in the stream dtype
+            y = _dense(x, w, qc.policy, use_kernel=qc.use_kernel).astype(x.dtype)
     else:
         y = jnp.dot(x, w)
     if "bias" in params:

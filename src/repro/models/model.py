@@ -352,7 +352,13 @@ def decode_step(params: PyTree, tokens: jnp.ndarray, caches: PyTree,
 # cache construction & input specs (ShapeDtypeStruct stand-ins, no allocation)
 # ---------------------------------------------------------------------------
 def init_cache(cfg: ArchConfig, batch: int, s_max: int, dtype=None,
-               int8_kv: bool = False) -> PyTree:
+               int8_kv: bool = False, mesh=None) -> PyTree:
+    """Zero decode caches for ``batch`` slots at capacity ``s_max``.
+
+    ``mesh`` (a 1-D serving mesh, DESIGN.md §9) commits the caches
+    *replicated* across the mesh devices — slot rows are identical
+    everywhere; only weights are scattered by a placement — so the fused
+    decode step's donation/aliasing works identically sharded and not."""
     dtype = dtype or _dtype(cfg)
     stage_caches = {}
     for i, kind in enumerate(cfg.stage_pattern):
@@ -362,7 +368,11 @@ def init_cache(cfg: ArchConfig, batch: int, s_max: int, dtype=None,
     tail = {f"t{i}_{kind}": B.init_block_cache(kind, cfg, batch, s_max, dtype,
                                                int8_kv=int8_kv)
             for i, kind in enumerate(cfg.tail_pattern)}
-    return {"stages": stage_caches, "tail": tail}
+    caches = {"stages": stage_caches, "tail": tail}
+    if mesh is not None:
+        from jax.sharding import NamedSharding, PartitionSpec
+        caches = jax.device_put(caches, NamedSharding(mesh, PartitionSpec()))
+    return caches
 
 
 def input_specs(cfg: ArchConfig, shape: str | ShapeConfig,

@@ -1,3 +1,6 @@
+"""Baseline PTQ methods (rtn, gptq_lite) and calibration observers —
+the non-series comparison rows of Tables 1/6, served through the same
+Recipe -> Artifact -> Runtime path as fpxint (api/recipe.py registry)."""
 from repro.quant.baselines import (gptq_lite_quantize, gptq_lite_quantize_params,
                                    rtn_quantize_params, rtn_quantize_tensor)
 from repro.quant.observers import MinMaxObserver, PercentileObserver, LaplaceObserver

@@ -1,3 +1,5 @@
+"""Training substrate: optimizers, microbatched/remat train step, and
+the synthetic-LM data pipeline (calibration + smoke-training source)."""
 from repro.train.optimizer import adamw, adafactor, sgd, OptState
 from repro.train.train_step import TrainConfig, make_train_step, loss_fn
 from repro.train.data import SyntheticLM, make_host_loader

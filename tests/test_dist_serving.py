@@ -1,0 +1,192 @@
+"""Multi-device serving placements (DESIGN.md §9), on fake host devices via
+subprocess — the main pytest process must keep 1 device, per the dry-run
+isolation contract (same pattern as test_multidevice.py):
+
+* ``placement="term"`` (Theorem-2 series-term scattering, shard_map + one
+  psum per expanded GEMM) serves the slot-scheduler continuous-batching
+  workload with generated tokens IDENTICAL to the replicated engine, for
+  the attn, rglru and ssm arch classes — including mixed lengths, slot
+  recycling and per-request budgets;
+* term counts that do not divide the mesh axis are zero-plane padded
+  (W2A4's w_terms=3 on 4 devices) and weight-only policies (W4A16) take
+  the per-term dequant psum path — both token-identical;
+* ``placement="tensor"`` (column-parallel) is token-identical too;
+* HBM admission control is mesh-aware: scattering weights shrinks the
+  per-device parameter residency, so the same per-device budget admits at
+  least as many slots (strictly more at the constructed budget).
+"""
+import os
+import subprocess
+import sys
+import textwrap
+
+import pytest
+
+REPO = os.path.dirname(os.path.dirname(os.path.abspath(__file__)))
+
+
+def _run(*parts: str, n_devices: int = 4, timeout=560):
+    """Run the dedented concatenation of ``parts`` in a fake-device
+    subprocess.  Each part is dedented separately (the shared prelude and
+    per-test bodies carry different source indentation), and the combined
+    script must end by printing OK — guarding against a silently truncated
+    script that defines helpers but never executes the assertions."""
+    py_src = "\n".join(textwrap.dedent(p) for p in parts)
+    assert "OK" in py_src.rsplit("print", 1)[-1], "test body must print ...OK"
+    env = dict(os.environ)
+    env["XLA_FLAGS"] = f"--xla_force_host_platform_device_count={n_devices}"
+    env["PYTHONPATH"] = os.path.join(REPO, "src")
+    env["REPRO_NO_PALLAS"] = "1"   # sharded placements serve the ref path
+    out = subprocess.run([sys.executable, "-c", py_src],
+                         capture_output=True, text=True, timeout=timeout, env=env)
+    assert out.returncode == 0, f"STDOUT:\n{out.stdout}\nSTDERR:\n{out.stderr[-3000:]}"
+    assert "OK" in out.stdout, f"script did not reach its OK print:\n{out.stdout}"
+    return out.stdout
+
+
+_COMMON = """
+    import jax, jax.numpy as jnp, numpy as np
+    from repro.api import QuantRecipe, Runtime, quantize
+    from repro.configs.base import get_arch
+    from repro.core.policy import W4A4, W2A4, W4A16
+    from repro.dist.placement import make_serve_mesh
+    from repro.infer.serve import ServeConfig
+    from repro.models import model as M
+
+    def build(arch, policy, placement, mesh=None, cfg=None, art=None):
+        cfg = cfg or get_arch(arch, smoke=True)
+        if art is None:
+            params = M.init_params(jax.random.PRNGKey(0), cfg)
+            art = quantize(params, QuantRecipe(policy=policy, arch=arch,
+                                               smoke=True))
+        rt = Runtime(art, backend="ref", cfg=cfg, mesh=mesh,
+                     placement=placement)
+        return cfg, art, rt
+
+    def serve_workload(rt, cfg, *, n_req=6, slots=2, max_seq=48, seed=1):
+        # mixed lengths + per-request budgets + recycling (n_req > slots)
+        eng = rt.serve(ServeConfig(max_seq=max_seq, max_batch=slots,
+                                   max_slots=slots))
+        rng = np.random.default_rng(seed)
+        for _ in range(n_req):
+            L = int(rng.integers(4, 14))
+            eng.add_request(rng.integers(0, cfg.vocab_size, L).tolist(),
+                            max_new_tokens=int(rng.integers(3, 7)))
+        out = eng.run(max_new_tokens=6)
+        return out, eng.last_run_stats
+"""
+
+
+def test_term_parallel_serving_token_identical_attn():
+    """attn arch class on a 4-device term mesh: identical served tokens,
+    logits within psum-reassociation tolerance, stats report the mesh."""
+    _run(_COMMON, """
+        arch = "qwen2_1_5b"
+        cfg, art, rt_rep = build(arch, W4A4, "replicated")
+        mesh = make_serve_mesh(4, "term")
+        _, _, rt_term = build(arch, W4A4, "term", mesh, cfg=cfg, art=art)
+
+        toks = jnp.array(np.random.default_rng(0).integers(
+            0, cfg.vocab_size, (2, 12)), jnp.int32)
+        y_rep, y_term = rt_rep.apply(toks), rt_term.apply(toks)
+        np.testing.assert_allclose(np.asarray(y_term), np.asarray(y_rep),
+                                   rtol=1e-3, atol=1e-3)
+
+        out_rep, st_rep = serve_workload(rt_rep, cfg)
+        out_term, st_term = serve_workload(rt_term, cfg)
+        assert out_term == out_rep, (out_term, out_rep)
+        assert st_term["placement"] == "term" and st_term["mesh_devices"] == 4
+        assert st_rep["placement"] == "replicated" and st_rep["mesh_devices"] == 1
+        assert st_term["n_slots"] == st_rep["n_slots"]
+        print("attn term-parallel OK")
+    """)
+
+
+@pytest.mark.parametrize("arch", ["recurrentgemma_9b", "mamba2_780m"])
+def test_term_parallel_serving_token_identical_recurrent(arch):
+    """rglru and ssm arch classes: the term placement must compose with
+    per-row recurrent state carry, local rings and conv tails."""
+    _run(_COMMON, f"""
+        arch = {arch!r}
+        cfg, art, rt_rep = build(arch, W4A4, "replicated")
+        mesh = make_serve_mesh(4, "term")
+        _, _, rt_term = build(arch, W4A4, "term", mesh, cfg=cfg, art=art)
+        out_rep, _ = serve_workload(rt_rep, cfg)
+        out_term, _ = serve_workload(rt_term, cfg)
+        assert out_term == out_rep, (out_term, out_rep)
+        print("recurrent term-parallel OK")
+    """)
+
+
+def test_term_padding_weight_only_and_tensor_placement():
+    """Non-dividing term counts (W2A4: w_terms=3 on 4 shards -> one zero
+    plane), the weight-only dequant psum path (W4A16), and column-parallel
+    tensor placement — all token-identical to replicated."""
+    _run(_COMMON, """
+        from repro.core.expansion import ExpandedTensor
+        arch = "qwen2_1_5b"
+        mesh = make_serve_mesh(4, "term")
+
+        for policy in (W2A4, W4A16):
+            cfg, art, rt_rep = build(arch, policy, "replicated")
+            _, _, rt_term = build(arch, policy, "term", mesh, cfg=cfg, art=art)
+            # zero-plane padding: every expanded leaf's term axis divides 4
+            for leaf in jax.tree_util.tree_leaves(
+                    rt_term.params,
+                    is_leaf=lambda l: isinstance(l, ExpandedTensor)):
+                if isinstance(leaf, ExpandedTensor):
+                    assert leaf.num_terms % 4 == 0, leaf
+            out_rep, _ = serve_workload(rt_rep, cfg)
+            out_term, _ = serve_workload(rt_term, cfg)
+            assert out_term == out_rep, (policy, out_term, out_rep)
+        print("padding + weight-only OK")
+
+        cfg, art, rt_rep = build(arch, W4A4, "replicated")
+        mesh_t = make_serve_mesh(4, "tensor")
+        _, _, rt_tensor = build(arch, W4A4, "tensor", mesh_t, cfg=cfg, art=art)
+        out_rep, _ = serve_workload(rt_rep, cfg)
+        out_tensor, st = serve_workload(rt_tensor, cfg)
+        assert out_tensor == out_rep
+        assert st["placement"] == "tensor" and st["mesh_devices"] == 4
+        print("tensor placement OK")
+    """)
+
+
+def test_hbm_admission_mesh_aware():
+    """Per-device HBM admission: scattering the series terms shrinks the
+    per-device param bytes, so a budget that fits k replicated slots fits
+    strictly more term-sharded slots; the scalar (replicated) math is
+    unchanged from the single-device engine."""
+    _run(_COMMON, """
+        from repro.infer import kvcache
+        from repro.infer.scheduler import plan_slots
+
+        arch = "qwen2_1_5b"
+        cfg, art, rt_rep = build(arch, W4A4, "replicated")
+        mesh = make_serve_mesh(4, "term")
+        _, _, rt_term = build(arch, W4A4, "term", mesh, cfg=cfg, art=art)
+
+        pb_rep = kvcache.param_bytes_per_device(rt_rep.params)
+        pb_term = kvcache.param_bytes_per_device(rt_term.params)
+        assert pb_rep == kvcache.param_bytes(rt_rep.params)  # unsharded: equal
+        assert pb_term < pb_rep, (pb_term, pb_rep)
+
+        max_seq = 32
+        per_seq = kvcache.total_cache_bytes(cfg, 1, max_seq)
+        budget = pb_rep + 2.5 * per_seq   # fits 2 replicated slots
+        sc = ServeConfig(max_seq=max_seq, max_batch=64, max_slots=64,
+                         hbm_budget_bytes=budget)
+        n_rep = plan_slots(cfg, sc, rt_rep.params)
+        n_term = plan_slots(cfg, sc, rt_term.params)
+        assert n_rep == 2, n_rep
+        expected = int((budget - pb_term) // per_seq)
+        assert n_term == expected and n_term > n_rep, (n_term, expected, n_rep)
+
+        # and the caps actually gate engines end-to-end
+        eng = rt_term.serve(sc)
+        for i in range(4):
+            eng.add_request([1 + i, 2, 3], max_new_tokens=2)
+        eng.run(max_new_tokens=2)
+        assert eng.last_run_stats["n_slots"] == n_term
+        print("mesh-aware HBM admission OK")
+    """)
