@@ -1,0 +1,186 @@
+"""Self-speculative decoding: truncated-series drafts vs plain slot serving.
+
+Theorem 1 makes the first ``k`` terms of every FP=xINT expansion a coherent
+low-bit model that shares weights, scales, and KV layout with the full
+series — a *free* draft model.  This bench serves the same mixed-length
+workload three ways on the slot scheduler: non-speculative baseline, then
+speculative at two term budgets ``k``, and
+
+* ASSERTS greedy token identity (the spec engine must emit exactly the
+  baseline stream — the speedup is pure acceptance-rate arithmetic);
+* reports per-budget acceptance rate, tokens/round, and decode tok/s.
+
+Emits ``benchmarks/results/BENCH_spec_serving.json``::
+
+    {"workload": {...},
+     "baseline": {"decode_tokens_per_sec": ...},
+     "spec": {"k=1": {"acceptance_rate": ..., ...},
+              "k=2": {...}},
+     "tokens_identical": true}
+
+Run:  PYTHONPATH=src python benchmarks/spec_serving_bench.py [--tiny]
+(CPU wall-clock; acceptance rate and tokens/round are backend-invariant.)
+"""
+from __future__ import annotations
+
+import argparse
+import json
+import os
+import sys
+import time
+
+import jax
+import numpy as np
+
+from repro.configs.base import get_arch
+from repro.core.policy import ExpansionPolicy
+from repro.api import QuantRecipe, Runtime, quantize
+from repro.infer.serve import ServeConfig
+
+OUT_JSON = os.path.join(os.path.dirname(__file__), "results",
+                        "BENCH_spec_serving.json")
+
+# weight-only so serving reads FP activations (the deployment-typical W4A16
+# shape, Table 6) with THREE weight terms — budgets k=1 and k=2 are real
+# truncations, not the full series
+POLICY = ExpansionPolicy(w_bits=4, a_bits=16, w_terms=3, a_terms=0)
+
+
+def draft_weight_ratio(params, k: int) -> float:
+    """Bytes a k-term draft step reads / bytes a full-series step reads.
+
+    Memory-bound decode is dominated by weight reads: truncation drops the
+    trailing planes+scales of every ExpandedTensor; everything else
+    (embeddings, norms, 1-term first/last layers) is read in full either
+    way."""
+    import jax as _jax
+    from repro.core.expansion import ExpandedTensor
+    from repro.infer.kvcache import param_bytes
+
+    is_et = lambda l: isinstance(l, ExpandedTensor)
+    truncated = _jax.tree_util.tree_map(
+        lambda l: l.truncate(k) if is_et(l) else l, params, is_leaf=is_et)
+    return param_bytes(truncated) / param_bytes(params)
+
+
+def make_workload(cfg, n_requests: int, max_new: int, seed: int = 0):
+    rng = np.random.default_rng(seed)
+    lengths = np.arange(4, 28)
+    ranks = np.arange(1, len(lengths) + 1, dtype=np.float64)
+    pz = ranks ** -1.0
+    pz /= pz.sum()
+    return [(rng.integers(0, cfg.vocab_size,
+                          int(rng.choice(lengths, p=pz))).tolist(),
+             int(rng.integers(max(2, max_new // 2), max_new + 1)))
+            for _ in range(n_requests)]
+
+
+def run_once(rt, reqs, *, slots: int, max_seq: int, max_new: int,
+             spec_terms: int, lookahead: int) -> dict:
+    eng = rt.serve(ServeConfig(
+        max_seq=max_seq, max_batch=slots, max_slots=slots,
+        spec_terms=spec_terms, spec_lookahead=lookahead))
+    ids = [eng.add_request(t, max_new_tokens=m) for t, m in reqs]
+    t0 = time.perf_counter()
+    out = eng.run(max_new_tokens=max_new)
+    wall = time.perf_counter() - t0
+    st = dict(eng.last_run_stats)
+    st["wall_seconds"] = wall
+    st["outputs"] = [out[i] for i in ids]
+    return st
+
+
+def main(argv=None):
+    ap = argparse.ArgumentParser()
+    ap.add_argument("--tiny", action="store_true",
+                    help="CI-sized run (fewer requests/tokens)")
+    ap.add_argument("--requests", type=int, default=16)
+    ap.add_argument("--slots", type=int, default=4)
+    ap.add_argument("--max-new", type=int, default=16)
+    ap.add_argument("--max-seq", type=int, default=64)
+    ap.add_argument("--lookahead", type=int, default=4)
+    ap.add_argument("--term-budgets", type=int, nargs="+", default=[1, 2])
+    ap.add_argument("--seed", type=int, default=0)
+    ap.add_argument("--out", default=OUT_JSON)
+    args = ap.parse_args(argv)
+    if args.tiny:
+        args.requests, args.max_new = 8, 8
+
+    cfg = get_arch("qwen2_1_5b", smoke=True)
+    from repro.models import model as M
+    params = M.init_params(jax.random.PRNGKey(args.seed), cfg)
+    art = quantize(params, QuantRecipe(
+        method="fpxint", policy=POLICY, arch="qwen2_1_5b", smoke=True))
+    rt = Runtime(art, backend="ref", cfg=cfg)
+    reqs = make_workload(cfg, args.requests, args.max_new, seed=args.seed)
+    kw = dict(slots=args.slots, max_seq=args.max_seq, max_new=args.max_new,
+              lookahead=args.lookahead)
+
+    # warmup compiles; the timed passes measure steady-state serving
+    run_once(rt, reqs, spec_terms=0, **kw)
+    base = run_once(rt, reqs, spec_terms=0, **kw)
+    print(f"baseline : decode {base['decode_tokens_per_sec']:.1f} tok/s, "
+          f"{base['decode_steps']} steps")
+
+    spec_results = {}
+    identical = True
+    gamma = args.lookahead
+    for k in args.term_budgets:
+        run_once(rt, reqs, spec_terms=k, **kw)
+        st = run_once(rt, reqs, spec_terms=k, **kw)
+        same = st.pop("outputs") == base["outputs"]
+        identical &= same
+        st["tokens_identical_to_baseline"] = same
+        st["decode_speedup_vs_baseline"] = (
+            st["decode_tokens_per_sec"]
+            / max(base["decode_tokens_per_sec"], 1e-9))
+        # backend-invariant wins: dispatch reduction (each spec round is ONE
+        # fused dispatch, vs one per token), and the memory-bound model — on
+        # weight-bandwidth-bound hardware a round reads gamma draft-weight
+        # passes + one full pass (the verify chunk reads weights ONCE for
+        # all gamma+1 positions) and yields 1 + acceptance*gamma tokens
+        r_draft = draft_weight_ratio(rt.params, k)
+        st["dispatch_reduction_vs_baseline"] = (
+            base["decode_steps"] / max(st["decode_steps"], 1))
+        st["draft_weight_byte_ratio"] = r_draft
+        st["modeled_membound_speedup"] = (
+            (1.0 + st["acceptance_rate"] * gamma)
+            / (gamma * r_draft + 1.0))
+        spec_results[f"k={k}"] = st
+        print(f"spec k={k} : decode {st['decode_tokens_per_sec']:.1f} tok/s "
+              f"({st['decode_speedup_vs_baseline']:.2f}x wall on CPU), "
+              f"acceptance {st['acceptance_rate']:.2f}, "
+              f"{st['tokens_per_round']:.2f} tok/round, "
+              f"{st['dispatch_reduction_vs_baseline']:.2f}x fewer dispatches, "
+              f"modeled mem-bound {st['modeled_membound_speedup']:.2f}x, "
+              f"identical={same}")
+        assert same, f"speculative k={k} diverged from the baseline stream"
+    base.pop("outputs")
+
+    payload = {
+        "arch": "qwen2_1_5b (smoke)",
+        "backend": "cpu",
+        "policy": "w4a16 weight-only, w_terms=3",
+        "note": "wall-clock on the CI/container CPU backend; acceptance "
+                "rate, tokens/round and decode_steps are backend-invariant",
+        "workload": {
+            "requests": args.requests,
+            "length_distribution": "zipf(1.0) over [4..27]",
+            "max_new_tokens": args.max_new,
+            "slots": args.slots,
+            "max_seq": args.max_seq,
+            "spec_lookahead": args.lookahead,
+        },
+        "baseline": base,
+        "spec": spec_results,
+        "tokens_identical": identical,
+    }
+    os.makedirs(os.path.dirname(args.out), exist_ok=True)
+    with open(args.out, "w") as f:
+        json.dump(payload, f, indent=2)
+    print(f"wrote {args.out}", file=sys.stderr)
+    return payload
+
+
+if __name__ == "__main__":
+    main()

@@ -45,6 +45,12 @@ class QuantRecipe:
               artifact under (``replicated`` | ``term`` | ``tensor``, see
               DESIGN.md §9) — recorded intent; ``Runtime(placement=...)``
               overrides it per deployment.
+      spec_terms: default self-speculative draft budget (DESIGN.md §10):
+              serve with the first K series terms as the draft model,
+              verified by the full series.  Recorded intent like
+              ``placement`` — ``Runtime.serve`` applies it when the
+              ``ServeConfig`` doesn't choose; 0 = no speculation.  Only
+              meaningful for ``fpxint`` (the baselines have no term axis).
       calib_batch / calib_seed: synthetic-calibration knobs for the
               calibrated-PTQ stand-in (``gptq_lite``).
     """
@@ -55,6 +61,7 @@ class QuantRecipe:
     arch: Optional[str] = None
     smoke: bool = True
     placement: str = "replicated"
+    spec_terms: int = 0
     calib_batch: int = 32
     calib_seed: int = 0
 
@@ -70,6 +77,13 @@ class QuantRecipe:
                 f"placement='term' distributes series terms; method "
                 f"{self.method!r} produces plain FP reconstructions with no "
                 f"term axis (use placement='tensor' or 'replicated')")
+        if self.spec_terms < 0:
+            raise ValueError(f"spec_terms must be >= 0, got {self.spec_terms}")
+        if self.spec_terms > 0 and self.method != "fpxint":
+            raise ValueError(
+                f"spec_terms>0 drafts with a truncated series; method "
+                f"{self.method!r} produces plain FP reconstructions with no "
+                f"term axis to truncate")
         if self.pack:
             if self.method != "fpxint":
                 raise ValueError(

@@ -121,12 +121,22 @@ class Runtime:
         """A serving Engine admitted by this artifact (no re-expansion),
         under this Runtime's mesh/placement.  ``serve_cfg`` selects the
         scheduler: ``"slots"`` (default, continuous batching with per-slot
-        cache lengths) or ``"grouped"`` (legacy group-drain)."""
+        cache lengths) or ``"grouped"`` (legacy group-drain).
+
+        ``recipe.spec_terms`` (recorded self-speculative intent, DESIGN.md
+        §10) applies when the ``ServeConfig`` doesn't set its own
+        ``spec_terms`` — the same intent-then-override pattern as
+        ``recipe.placement``."""
         from repro.infer.serve import Engine, ServeConfig
+        sc = serve_cfg or ServeConfig()
+        if sc.spec_terms == 0 and self.artifact.recipe.spec_terms > 0 \
+                and sc.scheduler == "slots":
+            sc = dataclasses.replace(
+                sc, spec_terms=self.artifact.recipe.spec_terms)
         return Engine(self._require_cfg(), artifact=self.artifact,
                       backend=self.backend, mesh=self.mesh,
                       placement=self.placement,
-                      serve_cfg=serve_cfg or ServeConfig(),
+                      serve_cfg=sc,
                       _bound_params=self.params, **engine_kw)
 
     def __repr__(self):

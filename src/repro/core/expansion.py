@@ -103,6 +103,15 @@ class ExpandedTensor:
         assert self.batch_dims > 0
         return dataclasses.replace(self, batch_dims=self.batch_dims - 1)
 
+    def truncate(self, terms: int) -> "ExpandedTensor":
+        """Zero-copy prefix view over the term axis: the first ``terms``
+        planes/scales (a ``lax.slice`` the compiler folds into consumers, no
+        materialized copy).  Theorem 1's convergence guarantee makes this
+        prefix a coherent lower-precision model in its own right — the free
+        draft model of self-speculative decoding (DESIGN.md §10).  bias/sat
+        are affine corrections, not series terms, and are kept."""
+        return truncate(self, terms)
+
     def __repr__(self):  # keep pytree-printing short
         return (
             f"ExpandedTensor(bits={self.bits}, terms={self.num_terms}, "
@@ -176,9 +185,14 @@ def _plane_limits(bits: int, k: int, pack_safe: bool = False):
         # half-tie clamp error is absorbed by the next plane (sequential
         # extraction) at the cost of a 3x slack on the final-term bound
         hi = 2 ** (bits - 1) - 1
-    else:
-        hi = min(2 ** (bits - 1), 127)  # proof bound |q| <= 2^{X-1}; int8 cap
-    return -hi, hi
+        return -hi, hi
+    # residual planes: the proof bound |q| <= 2^{X-1} in an int8 container —
+    # asymmetric at X=8, where lo reaches the container floor -128 while hi
+    # clamps +128 -> +127.  Both bounds are unreachable at X=8 by
+    # construction (scale_ratio halves to 2^{X-1}, so |round(r/s)| <= 64);
+    # they are stated exactly so the kernels' copies provably agree with this
+    # reference (tests/test_kernels.py bits=8 parity property).
+    return -(2 ** (bits - 1)), min(2 ** (bits - 1), 127)
 
 
 def _expand_scale_dims(scale, target_ndim, per_channel):

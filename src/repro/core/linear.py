@@ -87,14 +87,20 @@ def expanded_apply(
     a_bits: Optional[int] = None,
     a_terms: Optional[int] = None,
     use_kernel: bool = False,
+    term_budget: Optional[int] = None,
 ) -> jnp.ndarray:
     """y = x @ w with w series-expanded and x dynamically expanded (Eq. 4).
 
     x: (..., K); w_et planes: (tw, K, N).  Returns (..., N) f32.
     ``a_terms == 0`` (or a_bits >= 16) selects the weight-only path (W4A16).
+    ``term_budget`` serves the first k weight terms only — the Theorem-1
+    prefix used as the self-speculative draft model (DESIGN.md §10); the
+    affine corrections (bias/sat) are not series terms and always apply.
     """
     a_bits = a_bits if a_bits is not None else policy.a_bits
     a_terms = a_terms if a_terms is not None else policy.a_terms
+    if term_budget is not None:
+        w_et = E.truncate(w_et, term_budget)
     k, n = w_et.orig_shape[-2], w_et.orig_shape[-1]
     lead = x.shape[:-1]
     x2d = x.reshape(-1, k).astype(jnp.float32)

@@ -122,11 +122,21 @@ def _padded_terms(w_et: ExpandedTensor, n_shards: int):
 
 
 def term_parallel_apply(x: jnp.ndarray, w_et: ExpandedTensor,
-                        policy: ExpansionPolicy, mesh: Mesh) -> jnp.ndarray:
+                        policy: ExpansionPolicy, mesh: Mesh,
+                        term_budget: int = None) -> jnp.ndarray:
     """Distributed twin of ``core.linear.expanded_apply`` (weight-term
     sharding): each device computes the series GEMM over its local weight
     terms, one ``psum`` (the Abelian reduction of Theorem 2) combines them,
     and the Eq. 4 affine epilogue is added replicated.
+
+    ``term_budget`` (the truncated-series draft of DESIGN.md §10) zeroes the
+    scales of terms >= k instead of slicing: the term axis is scattered over
+    the mesh, and a zero scale is the Abelian identity — masked terms
+    contribute exactly +0.0 to the psum, so the result is bit-identical to
+    the replicated engine's sliced ``ExpandedTensor.truncate(k)``.  (The
+    masked devices still run their GEMMs; slicing across shards would need a
+    resharding collective that costs more than it saves at serving batch
+    sizes.)
 
     x: (..., K); returns (..., N) f32 — matches the local fused result up to
     psum reassociation (greedy served *tokens* are identical; logits agree
@@ -150,6 +160,8 @@ def term_parallel_apply(x: jnp.ndarray, w_et: ExpandedTensor,
     tw_pad = planes.shape[0]
     loc = tw_pad // n_shards
     m = x2d.shape[0]
+    if term_budget is not None:
+        scales = scales * (jnp.arange(tw_pad) < term_budget)[:, None]
 
     if a_terms <= 0 or a_bits >= 16:
         # weight-only (e.g. W4A16): exact FP activation against each local

@@ -14,16 +14,25 @@ from repro.configs.base import ArchConfig
 from repro.models.ssm import ssm_dims
 
 
-def cache_bytes_per_token(cfg: ArchConfig, dtype_bytes: int = 2) -> Dict[str, float]:
-    """Bytes of cache that grow per sequence position, and fixed state bytes."""
+def cache_bytes_per_token(cfg: ArchConfig, dtype_bytes: int = 2,
+                          s_max: int = 0) -> Dict[str, float]:
+    """Bytes of cache that grow per sequence position, and fixed state bytes.
+
+    ``s_max`` (the decode capacity) bounds the local-attention ring: the
+    allocator caps the ring at ``min(window, s_max)``
+    (``models.blocks.init_block_cache``), so charging the full window when
+    ``s_max < window`` over-counts and makes ``max_batch_for_hbm`` /
+    ``plan_slots`` under-admit.  ``s_max=0`` keeps the unbounded (allocation-
+    free roofline) estimate."""
     growing = 0.0
     fixed = 0.0
     blocks = tuple(cfg.stage_pattern) * cfg.num_stages + tuple(cfg.tail_pattern)
+    ring = min(cfg.window, s_max if s_max > 0 else 1 << 30)
     for kind in blocks:
         if kind in ("attn", "moe_attn"):
             growing += 2 * cfg.num_kv_heads * cfg.head_dim * dtype_bytes
         elif kind == "local":
-            fixed += 2 * min(cfg.window, 1 << 30) * cfg.num_kv_heads * cfg.head_dim * dtype_bytes
+            fixed += 2 * ring * cfg.num_kv_heads * cfg.head_dim * dtype_bytes
         elif kind == "cross":
             fixed += 2 * cfg.num_image_tokens * cfg.num_kv_heads * cfg.head_dim * dtype_bytes
         elif kind == "rglru":
@@ -35,15 +44,21 @@ def cache_bytes_per_token(cfg: ArchConfig, dtype_bytes: int = 2) -> Dict[str, fl
 
 
 def total_cache_bytes(cfg: ArchConfig, batch: int, s_max: int, dtype_bytes: int = 2) -> float:
-    c = cache_bytes_per_token(cfg, dtype_bytes)
+    c = cache_bytes_per_token(cfg, dtype_bytes, s_max=s_max)
     grow = c["growing_per_token"] * s_max
     return batch * (grow + c["fixed"])
 
 
 def max_batch_for_hbm(cfg: ArchConfig, s_max: int, hbm_bytes: float,
-                      param_bytes: float, dtype_bytes: int = 2) -> int:
-    """Admission control: largest decode batch whose caches + params fit."""
-    per_seq = total_cache_bytes(cfg, 1, s_max, dtype_bytes)
+                      param_bytes: float, dtype_bytes: int = 2,
+                      cache_copies: float = 1.0) -> int:
+    """Admission control: largest decode batch whose caches + params fit.
+
+    ``cache_copies`` charges each sequence's cache more than once —
+    speculative engines pass 2.0 because the fused draft+verify round holds
+    a transient functional copy of the caches at peak (the originals must
+    stay live for verify/commit while the draft decodes on a copy)."""
+    per_seq = total_cache_bytes(cfg, 1, s_max, dtype_bytes) * max(cache_copies, 1.0)
     free = hbm_bytes - param_bytes
     return max(0, int(np.floor(free / max(per_seq, 1.0))))
 

@@ -82,12 +82,17 @@ def plan_slots(cfg, serve_cfg, params) -> int:
     ``hbm_budget_bytes`` is the budget of ONE device; params are counted at
     their per-device resident size (``kvcache.param_bytes_per_device``), so
     scattering weights over a mesh frees budget for additional slots while
-    the replicated caches are charged in full on every device."""
+    the replicated caches are charged in full on every device.  Speculative
+    engines (``spec_terms > 0``) charge each slot's cache TWICE: the fused
+    round drafts on a functional copy while the committed caches stay live
+    for verify/commit, so peak KV residency is ~2x per slot."""
     n = serve_cfg.max_slots or serve_cfg.max_batch
     if serve_cfg.hbm_budget_bytes > 0:
         pbytes = kvcache.param_bytes_per_device(params)
+        copies = 2.0 if serve_cfg.spec_terms > 0 else 1.0
         cap = kvcache.max_batch_for_hbm(cfg, serve_cfg.max_seq,
-                                        serve_cfg.hbm_budget_bytes, pbytes)
+                                        serve_cfg.hbm_budget_bytes, pbytes,
+                                        cache_copies=copies)
         if cap < 1:
             raise ValueError(
                 f"hbm_budget_bytes={serve_cfg.hbm_budget_bytes:.3g} cannot fit "
@@ -121,114 +126,88 @@ class SlotScheduler:
         self.last_request_metrics: Dict[int, Dict[str, float]] = {}
 
     # ------------------------------------------------------------------
-    def run(self, requests: List[Request], max_new_tokens: int = 16
-            ) -> Dict[int, List[int]]:
-        eng, sc = self.eng, self.eng.sc
-        n = self.n_slots
-        # validate the whole batch up front (no partial-run surprises)
+    def _validate(self, requests: List[Request], max_new_tokens: int) -> None:
+        """Validate the whole batch up front (no partial-run surprises).
+
+        The effective per-request budget must be >= 1: generation always
+        emits the prefill-sampled token first, so a zero budget cannot be
+        honored silently — it is rejected here on BOTH scheduler paths (the
+        grouped engine runs the same check), not just at ``add_request``."""
+        sc = self.eng.sc
         for req in requests:
-            m = req.max_new_tokens if req.max_new_tokens is not None else max_new_tokens
+            m = (req.max_new_tokens if req.max_new_tokens is not None
+                 else max_new_tokens)
+            if m < 1:
+                raise ValueError(
+                    f"request {req.rid}: effective max_new_tokens must be "
+                    f">= 1, got {m} (the prefill-sampled first token cannot "
+                    f"be withheld)")
             if len(req.tokens) + m > sc.max_seq:
                 raise ValueError(
                     f"request {req.rid}: prompt len {len(req.tokens)} + "
                     f"max_new_tokens {m} exceeds ServeConfig.max_seq={sc.max_seq}")
 
-        queue = deque(requests)
-        out: Dict[int, List[int]] = {}
+    def _init_pool(self):
+        """Zeroed slot-pool state: the live decode cache (replicated across
+        the mesh — per-slot KV rows are identical on every device; only the
+        weights are scattered) plus per-slot host bookkeeping."""
+        eng, sc, n = self.eng, self.eng.sc, self.n_slots
+        return {
+            "live": M.init_cache(eng.cfg, n, sc.max_seq,
+                                 int8_kv=eng.qc.int8_kv, mesh=eng.mesh),
+            "clen": np.zeros(n, np.int32),     # per-slot cache length (host)
+            "active": np.zeros(n, bool),       # slot occupied (host)
+            "budget": np.zeros(n, np.int64),   # remaining tokens per slot
+            "slot_req": [None] * n,
+            "tok": jnp.zeros((n, 1), jnp.int32),  # next token/slot (device)
+            "alive": jnp.zeros((n,), bool),    # EOS mask (device)
+            "key": jax.random.PRNGKey(sc.seed),
+            "prefill_s": 0.0,
+        }
+
+    def _admit(self, st, queue, out, max_new_tokens: int) -> None:
+        """FCFS: prefill queued requests into free slots (padded prompt,
+        length-masked), scatter their caches into the live decode cache,
+        and seed each slot with its first sampled token — all device-side
+        (no host sync)."""
+        eng, sc = self.eng, self.eng.sc
         eos = jnp.int32(sc.eos_id)
-        temperature = jnp.float32(sc.temperature)
-        key = jax.random.PRNGKey(sc.seed)
+        t0 = time.perf_counter()
+        while queue and not st["active"].all():
+            req = queue.popleft()
+            slot = int(np.flatnonzero(~st["active"])[0])
+            l = len(req.tokens)
+            p_len = bucket_length(l, sc.prefill_bucket, sc.max_seq)
+            padded = np.zeros((1, p_len), np.int32)
+            padded[0, :l] = req.tokens
+            logits, pcache = eng._prefill_slot(
+                eng.params, {"tokens": jnp.asarray(padded)},
+                jnp.asarray([l], jnp.int32))
+            st["live"] = eng._scatter(st["live"], pcache, slot)
+            st["key"], sub = jax.random.split(st["key"])
+            first = eng._sample(logits, sub)           # (1, 1) on device
+            st["tok"] = st["tok"].at[slot, 0].set(first[0, 0])
+            st["alive"] = st["alive"].at[slot].set(first[0, 0] != eos)
+            st["clen"][slot] = l
+            st["active"][slot] = True
+            m = (req.max_new_tokens if req.max_new_tokens is not None
+                 else max_new_tokens)
+            st["budget"][slot] = m
+            st["slot_req"][slot] = req
+            req.t_admitted = time.perf_counter()
+            out[req.rid] = []
+        st["prefill_s"] += time.perf_counter() - t0
 
-        # the decode cache replicates across the mesh (per-slot KV rows are
-        # identical on every device; only the weights are scattered)
-        live = M.init_cache(eng.cfg, n, sc.max_seq, int8_kv=eng.qc.int8_kv,
-                            mesh=eng.mesh)
-        clen = np.zeros(n, np.int32)           # per-slot cache length (host)
-        active = np.zeros(n, bool)             # slot occupied (host)
-        budget = np.zeros(n, np.int64)         # remaining tokens per slot
-        slot_req: List[Optional[Request]] = [None] * n
-        tok = jnp.zeros((n, 1), jnp.int32)     # next token per slot (device)
-        alive = jnp.zeros((n,), bool)          # EOS mask (device)
-
-        steps = 0
-        occupied_steps = 0.0
-        gen_tokens = 0
-        t_run0 = time.perf_counter()
-        prefill_s = 0.0
-
-        def admit():
-            """FCFS: prefill queued requests into free slots (padded prompt,
-            length-masked), scatter their caches into the live decode cache,
-            and seed each slot with its first sampled token — all device-side
-            (no host sync)."""
-            nonlocal live, tok, alive, key, prefill_s
-            t0 = time.perf_counter()
-            while queue and not active.all():
-                req = queue.popleft()
-                slot = int(np.flatnonzero(~active)[0])
-                l = len(req.tokens)
-                p_len = bucket_length(l, sc.prefill_bucket, sc.max_seq)
-                padded = np.zeros((1, p_len), np.int32)
-                padded[0, :l] = req.tokens
-                logits, pcache = eng._prefill_slot(
-                    eng.params, {"tokens": jnp.asarray(padded)},
-                    jnp.asarray([l], jnp.int32))
-                live = eng._scatter(live, pcache, slot)
-                key, sub = jax.random.split(key)
-                first = eng._sample(logits, sub)           # (1, 1) on device
-                tok = tok.at[slot, 0].set(first[0, 0])
-                alive = alive.at[slot].set(first[0, 0] != eos)
-                clen[slot] = l
-                active[slot] = True
-                m = (req.max_new_tokens if req.max_new_tokens is not None
-                     else max_new_tokens)
-                budget[slot] = m
-                slot_req[slot] = req
-                req.t_admitted = time.perf_counter()
-                out[req.rid] = []
-            prefill_s += time.perf_counter() - t0
-
-        while queue or active.any():
-            # interleaved prefill: fill any free slot BEFORE the fetch, so a
-            # newly admitted slot's first (prefill-sampled) token is read by
-            # this iteration's transfer and only then consumed by decode —
-            # admitting between fetch and decode would overwrite it unread
-            if queue and not active.all():
-                admit()
-            steps += 1
-            occupied_steps += float(active.sum()) / n
-            # the ONE host transfer of this decode step
-            tok_host, alive_host = jax.device_get((tok, alive))
-            now = time.perf_counter()
-            for i in np.flatnonzero(active):
-                req = slot_req[i]
-                out[req.rid].append(int(tok_host[i, 0]))
-                gen_tokens += 1
-                if req.t_first_token == 0.0:
-                    req.t_first_token = now
-                budget[i] -= 1
-                if not bool(alive_host[i]) or budget[i] <= 0:
-                    req.t_done = now
-                    req.new_tokens = len(out[req.rid])
-                    active[i] = False
-                    slot_req[i] = None              # slot freed -> recyclable
-            if not active.any():
-                continue                            # admit or exit at the top
-            # snapshot clen: the host mutates it below, and numpy->device
-            # transfers may alias the host buffer (CPU zero-copy)
-            tok, live, key, alive = eng._decode(
-                eng.params, tok, live, jnp.asarray(clen.copy()), key, alive,
-                eos, temperature)
-            clen[active] += 1
-        wall = time.perf_counter() - t_run0
-
+    def _finish_stats(self, requests, *, gen_tokens, steps, occupied_steps,
+                      wall, prefill_s, extra=None) -> None:
+        eng = self.eng
         decode_s = max(wall - prefill_s, 1e-9)
         self.last_request_metrics = {r.rid: r.metrics() for r in requests}
         self.last_run_stats = {
             "scheduler": "slots",
             "placement": eng.placement,
             "mesh_devices": eng.mesh_devices,
-            "n_slots": n,
+            "n_slots": self.n_slots,
             "requests": len(requests),
             "generated_tokens": gen_tokens,
             "decode_steps": steps,
@@ -239,4 +218,154 @@ class SlotScheduler:
             "decode_tokens_per_sec": gen_tokens / decode_s,
             "tokens_per_sec": gen_tokens / wall if wall > 0 else 0.0,
         }
+        if extra:
+            self.last_run_stats.update(extra)
+
+    def run(self, requests: List[Request], max_new_tokens: int = 16
+            ) -> Dict[int, List[int]]:
+        eng, sc = self.eng, self.eng.sc
+        n = self.n_slots
+        self._validate(requests, max_new_tokens)
+        if eng.spec_enabled:
+            return self._run_spec(requests, max_new_tokens)
+
+        queue = deque(requests)
+        out: Dict[int, List[int]] = {}
+        eos = jnp.int32(sc.eos_id)
+        temperature = jnp.float32(sc.temperature)
+        st = self._init_pool()
+        active, clen, budget = st["active"], st["clen"], st["budget"]
+
+        steps = 0             # decode DISPATCHES — the final drain iteration
+        occupied_steps = 0.0  # (emitting last pending tokens) dispatches none
+        gen_tokens = 0
+        t_run0 = time.perf_counter()
+
+        while queue or active.any():
+            # interleaved prefill: fill any free slot BEFORE the fetch, so a
+            # newly admitted slot's first (prefill-sampled) token is read by
+            # this iteration's transfer and only then consumed by decode —
+            # admitting between fetch and decode would overwrite it unread
+            if queue and not active.all():
+                self._admit(st, queue, out, max_new_tokens)
+            # the ONE host transfer of this decode step
+            tok_host, alive_host = jax.device_get((st["tok"], st["alive"]))
+            now = time.perf_counter()
+            for i in np.flatnonzero(active):
+                req = st["slot_req"][i]
+                out[req.rid].append(int(tok_host[i, 0]))
+                gen_tokens += 1
+                if req.t_first_token == 0.0:
+                    req.t_first_token = now
+                budget[i] -= 1
+                if not bool(alive_host[i]) or budget[i] <= 0:
+                    req.t_done = now
+                    req.new_tokens = len(out[req.rid])
+                    active[i] = False
+                    st["slot_req"][i] = None    # slot freed -> recyclable
+            if not active.any():
+                continue                        # admit or exit at the top
+            # count the decode dispatch HERE, after the drain check: counting
+            # at the loop top overstated decode_steps by one per drain (an
+            # iteration that fetches+emits but dispatches no decode) and
+            # correspondingly understated occupancy
+            steps += 1
+            occupied_steps += float(active.sum()) / n
+            # snapshot clen: the host mutates it below, and numpy->device
+            # transfers may alias the host buffer (CPU zero-copy)
+            st["tok"], st["live"], st["key"], st["alive"] = eng._decode(
+                eng.params, st["tok"], st["live"], jnp.asarray(clen.copy()),
+                st["key"], st["alive"], eos, temperature)
+            clen[active] += 1
+        wall = time.perf_counter() - t_run0
+        self._finish_stats(requests, gen_tokens=gen_tokens, steps=steps,
+                           occupied_steps=occupied_steps, wall=wall,
+                           prefill_s=st["prefill_s"])
+        return out
+
+    # ------------------------------------------------------------------
+    def _run_spec(self, requests: List[Request], max_new_tokens: int
+                  ) -> Dict[int, List[int]]:
+        """Self-speculative serving loop (DESIGN.md §10).
+
+        Each round is ONE fused dispatch (draft γ tokens with the truncated
+        series, verify the chunk with the full series, commit the accepted
+        prefix) and ONE host transfer carrying up to γ+1 tokens per slot:
+        the pre-round pending token plus the round's full-model tokens and
+        accept counts.  Emission order per slot — pending token, then the
+        accepted drafts, then the full-model correction becomes the next
+        pending token — reproduces the non-speculative greedy stream
+        token-for-token."""
+        eng, sc = self.eng, self.eng.sc
+        n = self.n_slots
+        gamma = sc.spec_lookahead
+        if sc.temperature > 0:
+            raise ValueError(
+                "speculative decoding serves greedy only (temperature=0): "
+                "draft acceptance compares argmaxes; lossless speculative "
+                "sampling would need rejection sampling on the verify logits")
+        queue = deque(requests)
+        out: Dict[int, List[int]] = {}
+        st = self._init_pool()
+        active, clen, budget = st["active"], st["clen"], st["budget"]
+
+        rounds = 0
+        occupied_steps = 0.0
+        gen_tokens = 0
+        drafted = 0
+        accepted = 0
+        t_run0 = time.perf_counter()
+
+        while queue or active.any():
+            if queue and not active.all():
+                self._admit(st, queue, out, max_new_tokens)
+            rounds += 1
+            occupied_steps += float(active.sum()) / n
+            tok_pre = st["tok"]                # pending tokens entering round
+            st["tok"], st["live"], full, accept = eng._spec(
+                eng.params, st["tok"], st["live"], jnp.asarray(clen.copy()))
+            # the ONE host transfer of this round (up to γ+1 tokens/slot)
+            tok_host, full_host, acc_host = jax.device_get(
+                (tok_pre, full, accept))
+            now = time.perf_counter()
+            for i in np.flatnonzero(active):
+                req = st["slot_req"][i]
+                m_i = int(acc_host[i])
+                drafted += gamma
+                accepted += m_i
+                # pending token first, then the m accepted draft tokens
+                # (full_host[i, :m] — identical to the drafts by acceptance);
+                # the correction full_host[i, m] stays on device as the next
+                # pending token
+                emit = [int(tok_host[i, 0])] +                     [int(t) for t in full_host[i, :m_i]]
+                if req.t_first_token == 0.0:
+                    req.t_first_token = now
+                done = False
+                for t in emit:
+                    out[req.rid].append(t)
+                    gen_tokens += 1
+                    budget[i] -= 1
+                    if t == sc.eos_id or budget[i] <= 0:
+                        done = True
+                        break
+                clen[i] += m_i + 1             # mirrors commit_verify
+                if done:
+                    req.t_done = now
+                    req.new_tokens = len(out[req.rid])
+                    active[i] = False
+                    st["slot_req"][i] = None
+        wall = time.perf_counter() - t_run0
+        self._finish_stats(
+            requests, gen_tokens=gen_tokens, steps=rounds,
+            occupied_steps=occupied_steps, wall=wall,
+            prefill_s=st["prefill_s"],
+            extra={
+                "spec_terms": sc.spec_terms,
+                "spec_lookahead": gamma,
+                "spec_rounds": rounds,
+                "draft_tokens": drafted,
+                "accepted_draft_tokens": accepted,
+                "acceptance_rate": accepted / drafted if drafted else 0.0,
+                "tokens_per_round": gen_tokens / rounds if rounds else 0.0,
+            })
         return out

@@ -19,6 +19,13 @@ calibration-free), then serve the INT series.  The engine:
   pulls exactly one (tokens, alive) pair per decode step;
 * treats ``eos_id`` AND ``temperature`` as dynamic operands of the fused
   step, so reconfiguring either never retraces the decode kernel;
+* serves **self-speculatively** when ``ServeConfig(spec_terms=k)`` is set
+  (DESIGN.md §10): the first ``k`` series terms of the expanded weights —
+  a coherent model by Theorem 1 — draft ``spec_lookahead`` tokens per slot,
+  one chunked full-series pass verifies them all, and the slot scheduler
+  commits the longest matching greedy prefix; emitted tokens are always
+  full-model argmaxes, so greedy output is token-identical to the
+  non-speculative engine;
 * serves **multi-device placements** (DESIGN.md §9): with ``mesh`` +
   ``placement="term"`` the expanded weights live scattered over the mesh's
   ``"expand"`` axis and every expanded GEMM of prefill-into-slot and the
@@ -65,6 +72,11 @@ class ServeConfig:
     max_slots: int = 0            # 0 -> max_batch decode slots
     hbm_budget_bytes: float = 0.0  # >0: cap slots via kvcache.max_batch_for_hbm
     prefill_bucket: int = 16      # pad prompts to a multiple (bounds retraces)
+    # self-speculative decoding (DESIGN.md §10): draft with the first
+    # spec_terms series terms of the SAME expanded weights, verify with the
+    # full series — greedy output stays token-identical to non-speculative
+    spec_terms: int = 0           # 0 = off; k >= 1 = k-term draft model
+    spec_lookahead: int = 4       # draft tokens per round (gamma)
 
 
 def _sample_logits(logits: jnp.ndarray, key, temperature: float) -> jnp.ndarray:
@@ -112,6 +124,48 @@ def make_decode_sample_step(cfg: ArchConfig, qc: QuantContext = FP):
         nxt = sample_logits_dynamic(logits, sub, temperature)
         alive = jnp.logical_and(alive, nxt[:, 0] != eos_id)
         return nxt, caches, key, alive
+    return step
+
+
+def make_spec_decode_step(cfg: ArchConfig, qc: QuantContext,
+                          qc_draft: QuantContext, lookahead: int):
+    """Fused draft-γ + verify speculative round (one dispatch, DESIGN.md §10).
+
+    step(params, tok (B,1), caches, cache_len (B,)) ->
+        (next_tok (B,1), caches', full_tok (B, γ+1), accept (B,)).
+
+    Drafting runs ``lookahead`` greedy decode steps under the truncated
+    ``qc_draft`` on a *functional* copy of the caches (its writes never
+    reach the committed state — XLA materializes copies of only the buffers
+    the draft touches).  Verification scores the chunk
+    ``[tok, d_1..d_γ]`` in ONE full-series pass (:func:`model.verify_step`),
+    accepts the longest prefix where draft and verify tokens agree, commits
+    KV/state for exactly the accepted positions
+    (:func:`model.commit_verify`), and returns the full-model token at the
+    first mismatch (the "free" correction) as the next pending token.  The
+    slot's new cache length is ``cache_len + accept + 1``.
+
+    Greedy only: acceptance compares argmaxes, which is what makes the
+    emitted stream token-identical to the non-speculative engine."""
+    def step(params, tok, caches, cache_len):
+        b = tok.shape[0]
+        clen = jnp.broadcast_to(jnp.asarray(cache_len, jnp.int32), (b,))
+        d_caches, d_tok = caches, tok
+        drafts = []
+        for j in range(lookahead):
+            logits, d_caches = M.decode_step(params, d_tok, d_caches,
+                                              clen + j, cfg, qc_draft)
+            d_tok = jnp.argmax(logits, axis=-1)[:, None].astype(jnp.int32)
+            drafts.append(d_tok)
+        drafts = jnp.concatenate(drafts, axis=1)               # (B, γ)
+        chunk = jnp.concatenate([tok, drafts], axis=1)         # (B, γ+1)
+        logits, deltas = M.verify_step(params, chunk, caches, clen, cfg, qc)
+        full = jnp.argmax(logits, axis=-1).astype(jnp.int32)   # (B, γ+1)
+        match = (drafts == full[:, :-1]).astype(jnp.int32)
+        accept = jnp.sum(jnp.cumprod(match, axis=1), axis=1)   # (B,) in [0,γ]
+        caches = M.commit_verify(caches, deltas, clen, accept, cfg)
+        next_tok = jnp.take_along_axis(full, accept[:, None], axis=1)
+        return next_tok, caches, full, accept
     return step
 
 
@@ -214,7 +268,47 @@ class Engine:
         self._scatter = jax.jit(M.scatter_cache_into_slot, donate_argnums=(0,))
         self._decode = jax.jit(
             make_decode_sample_step(cfg, self.qc), donate_argnums=(2,))
+        self._spec = None
+        if serve_cfg.spec_terms > 0:
+            self._validate_spec(serve_cfg)
+            self.qc_draft = dataclasses.replace(
+                self.qc, term_budget=serve_cfg.spec_terms)
+            self._spec = jax.jit(
+                make_spec_decode_step(cfg, self.qc, self.qc_draft,
+                                      serve_cfg.spec_lookahead),
+                donate_argnums=(2,))
         self._slots: Optional[SlotScheduler] = None
+
+    def _validate_spec(self, sc: ServeConfig) -> None:
+        """Self-speculative decoding preconditions, checked at construction:
+        the knobs are capacity-like (fixed per engine), and a late failure
+        would strand admitted requests."""
+        from repro.core.expansion import ExpandedTensor
+        if sc.scheduler != "slots":
+            raise ValueError(
+                "spec_terms>0 requires scheduler='slots' (the grouped legacy "
+                "path is the bit-exactness baseline and stays speculation-free)")
+        if sc.spec_lookahead < 1:
+            raise ValueError(
+                f"spec_lookahead must be >= 1, got {sc.spec_lookahead}")
+        if not any(isinstance(l, ExpandedTensor)
+                   for l in jax.tree_util.tree_leaves(
+                       self.params,
+                       is_leaf=lambda l: isinstance(l, ExpandedTensor))):
+            raise ValueError(
+                "spec_terms>0 drafts with a truncated series, but these "
+                "params carry no ExpandedTensor leaves (FP or baseline-PTQ "
+                "model) — there is no term axis to truncate")
+        if "local" in (tuple(self.cfg.stage_pattern) + tuple(self.cfg.tail_pattern)) \
+                and self.cfg.window < sc.spec_lookahead + 1:
+            raise ValueError(
+                f"spec_lookahead={sc.spec_lookahead} needs a local-attention "
+                f"window of at least lookahead+1 (got window={self.cfg.window}): "
+                f"a verify chunk must fit the ring without self-collision")
+
+    @property
+    def spec_enabled(self) -> bool:
+        return self._spec is not None
 
     # ------------------------------------------------------------------
     def add_request(self, tokens: Sequence[int],
@@ -280,6 +374,14 @@ class Engine:
         for group in groups:             # validate everything before any work
             budgets = [req.max_new_tokens if req.max_new_tokens is not None
                        else max_new_tokens for req in group]
+            for req, m in zip(group, budgets):
+                # same contract as the slots path: the prefill-sampled first
+                # token cannot be withheld, so a zero budget is an error, not
+                # a silent one-token generation
+                if m < 1:
+                    raise ValueError(
+                        f"request {req.rid}: effective max_new_tokens must "
+                        f"be >= 1, got {m}")
             s = len(group[0].tokens)
             if s + max(budgets) > self.sc.max_seq:
                 raise ValueError(
@@ -290,7 +392,9 @@ class Engine:
         key = jax.random.PRNGKey(self.sc.seed)
         temperature = jnp.float32(self.sc.temperature)
         eos = jnp.int32(self.sc.eos_id)
-        steps_total = 0
+        capacity = self.sc.max_batch
+        steps_total = 0        # decode DISPATCHES (final fetch runs none)
+        occupied_steps = 0.0
         gen_tokens = 0
         prefill_s = 0.0
         t_run0 = time.perf_counter()
@@ -309,7 +413,6 @@ class Engine:
             alive_host = np.ones(b, bool)           # aliveness BEFORE tok
             clen = jnp.int32(s)
             for t in range(int(budgets.max())):
-                steps_total += 1
                 # the ONE host transfer of this decode step
                 tok_host, alive_after = jax.device_get((tok, alive))
                 for i in range(b):
@@ -321,6 +424,11 @@ class Engine:
                 alive_host = np.asarray(alive_after) & budget_ok
                 if not alive_host.any():
                     break
+                # count the dispatch here (the iteration that drains the last
+                # pending tokens breaks above without decoding — counting at
+                # the loop top overstated decode_steps by one per group)
+                steps_total += 1
+                occupied_steps += float(alive_host.sum()) / capacity
                 tok, caches, key, alive = self._decode(
                     self.params, tok, caches, clen, key, alive, eos, temperature)
                 clen = clen + 1
@@ -331,7 +439,6 @@ class Engine:
                 req.t_done, req.new_tokens = t_done, len(g)
         wall = time.perf_counter() - t_run0
         decode_s = max(wall - prefill_s, 1e-9)  # same accounting as slots
-        capacity = self.sc.max_batch
         self.last_request_metrics = {req.rid: req.metrics() for req in self._queue}
         self.last_run_stats = {
             "scheduler": "grouped",
@@ -341,7 +448,9 @@ class Engine:
             "requests": len(self._queue),
             "generated_tokens": gen_tokens,
             "decode_steps": steps_total,
-            "occupancy": (gen_tokens / (steps_total * capacity)
+            # alive-slot fraction at each decode dispatch — the same
+            # definition the slots path uses, so the two are comparable
+            "occupancy": (occupied_steps / steps_total
                           if steps_total else 0.0),
             "wall_seconds": wall,
             "prefill_seconds": prefill_s,

@@ -30,11 +30,14 @@ def _scale_ratio(bits: int) -> int:
 
 
 def _plane_limits(bits: int, k: int):
+    # mirrors repro.core.expansion._plane_limits (bits=8 parity is property-
+    # tested): residual planes use the proof bound +-2^{X-1} in an int8
+    # container — lo reaches -128 at X=8, hi clamps +128 -> +127; both are
+    # unreachable there (halved scale ratio keeps |q| <= 64)
     if k == 0:
         hi = 2 ** (bits - 1) - 1
-    else:
-        hi = min(2 ** (bits - 1), 127)
-    return -hi, hi
+        return -hi, hi
+    return -(2 ** (bits - 1)), min(2 ** (bits - 1), 127)
 
 
 def residual_quantize_ref(x: jnp.ndarray, scale1: jnp.ndarray, bits: int, terms: int) -> jnp.ndarray:

@@ -38,6 +38,14 @@ def add_serve_args(ap: argparse.ArgumentParser, *,
     ap.add_argument("--temperature", type=float, default=0.0,
                     help="0 = greedy (a dynamic operand: changing it never "
                          "retraces the decode step)")
+    ap.add_argument("--spec-terms", type=int, default=0,
+                    help="self-speculative decoding (DESIGN.md §10): draft "
+                         "with the first K series terms of the expanded "
+                         "weights, verify with the full series (greedy "
+                         "output stays token-identical). 0 = off; needs "
+                         "--scheduler slots and an expanded (fpxint) model")
+    ap.add_argument("--spec-lookahead", type=int, default=4,
+                    help="draft tokens per speculative round (gamma)")
     ap.add_argument("--mesh", type=int, default=0,
                     help="serve over the first N local devices (0 = single "
                          "device unless --placement is sharded, then all)")
@@ -62,6 +70,8 @@ def serve_config_from_args(args):
         scheduler=args.scheduler,
         max_slots=args.max_slots,
         hbm_budget_bytes=args.hbm_budget,
+        spec_terms=args.spec_terms,
+        spec_lookahead=args.spec_lookahead,
     )
 
 

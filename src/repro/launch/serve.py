@@ -135,6 +135,12 @@ def main(argv=None):
               f"devices={st['mesh_devices']} slots={st['n_slots']} "
               f"occupancy={st['occupancy']:.2f} "
               f"decode={st['decode_tokens_per_sec']:.1f} tok/s")
+        if "acceptance_rate" in st:
+            print(f"speculative: k={st['spec_terms']} "
+                  f"lookahead={st['spec_lookahead']} "
+                  f"acceptance={st['acceptance_rate']:.2f} "
+                  f"tokens/round={st['tokens_per_round']:.2f} "
+                  f"({st['spec_rounds']} rounds)")
         ttfts = [m["ttft_s"] for m in eng.last_request_metrics.values()]
         if ttfts:
             print(f"ttft mean={np.mean(ttfts)*1e3:.1f}ms "

@@ -186,6 +186,113 @@ def decode_attention_appended(
     return out.reshape(b, 1, h, d).astype(q.dtype)
 
 
+def chunk_decode_attention(
+    q: jnp.ndarray,           # (B, T, H, D) — T new tokens per slot
+    k_cache: jnp.ndarray,     # (B, S, G, D) — WITHOUT the new tokens
+    v_cache: jnp.ndarray,
+    k_new: jnp.ndarray,       # (B, T, G, D) — the chunk's own KV, in order
+    v_new: jnp.ndarray,
+    cache_len: jnp.ndarray,   # () or (B,) — tokens already in each row's cache
+    *,
+    window: int = 0,
+    softcap: float = 0.0,
+    slot_pos: Optional[jnp.ndarray] = None,  # (B, S): local ring positions
+) -> jnp.ndarray:
+    """Multi-token decode attention (speculative *verify*, DESIGN.md §10).
+
+    Query ``t`` sits at absolute position ``cache_len + t`` and attends the
+    cache prefix ``[0, cache_len)`` plus chunk keys ``0..t`` (causal within
+    the chunk) — the T-query generalization of
+    :func:`decode_attention_appended`, so the cache buffer is never copied;
+    the caller commits the chunk KV afterwards (accept/rollback).  With
+    ``slot_pos`` the cache is a local ring: slots are masked by recorded
+    position (valid, in-window, strictly pre-chunk), and ``window`` also
+    masks chunk keys more than ``window-1`` behind a query."""
+    b, tq, h, d = q.shape
+    _, s, g, _ = k_cache.shape
+    r = h // g
+    qg = q.reshape(b, tq, g, r, d) * (d ** -0.5)
+    clen = jnp.broadcast_to(jnp.asarray(cache_len), (b,))
+    qpos = clen[:, None] + jnp.arange(tq)[None, :]                 # (B, T)
+    sc = jnp.einsum("btgrd,bkgd->bgrtk", qg, k_cache)              # (B,G,R,T,S)
+    sc_new = jnp.einsum("btgrd,bjgd->bgrtj", qg, k_new)            # (B,G,R,T,T)
+    if softcap > 0.0:
+        sc = softcap * jnp.tanh(sc / softcap)
+        sc_new = softcap * jnp.tanh(sc_new / softcap)
+    if slot_pos is not None:
+        sp = slot_pos[:, None, :]                                  # (B,1,S)
+        cmask = (sp >= 0) & (sp > qpos[:, :, None] - window) \
+            & (sp < clen[:, None, None])
+    else:
+        pos = jnp.arange(s)
+        cmask = pos[None, None, :] < clen[:, None, None]           # (B,1,S)
+        if window > 0:
+            cmask = cmask & (pos[None, None, :] > qpos[:, :, None] - window)
+        cmask = jnp.broadcast_to(cmask, (b, tq, s))
+    t_idx = jnp.arange(tq)
+    nmask = t_idx[None, :] <= t_idx[:, None]                       # (T, T) causal
+    if window > 0:
+        nmask &= (t_idx[:, None] - t_idx[None, :]) < window
+    sc = jnp.where(cmask[:, None, None, :, :], sc, NEG_INF)
+    sc_new = jnp.where(nmask[None, None, None, :, :], sc_new, NEG_INF)
+    both = jnp.concatenate([sc, sc_new], axis=-1)                  # (B,G,R,T,S+T)
+    p = jax.nn.softmax(both.astype(jnp.float32), axis=-1)
+    out = jnp.einsum("bgrtk,bkgd->bgrtd",
+                     p[..., :s].astype(v_cache.dtype), v_cache) \
+        + jnp.einsum("bgrtj,bjgd->bgrtd",
+                     p[..., s:], v_new.astype(jnp.float32))
+    return jnp.moveaxis(out, 3, 1).reshape(b, tq, h, d).astype(q.dtype)
+
+
+def chunk_decode_attention_int8(
+    q: jnp.ndarray,           # (B, T, H, D) fp
+    k_q: jnp.ndarray,         # (B, S, G, D) int8
+    k_s: jnp.ndarray,         # (B, S, G) f32
+    v_q: jnp.ndarray,
+    v_s: jnp.ndarray,
+    k_new: jnp.ndarray,       # (B, T, G, D) fp — chunk keys (not yet written)
+    v_new: jnp.ndarray,
+    cache_len: jnp.ndarray,
+    *,
+    softcap: float = 0.0,
+) -> jnp.ndarray:
+    """INT8-KV twin of :func:`chunk_decode_attention` (full attention only —
+    local rings store fp KV): int8 dots against the cache exactly as
+    :func:`decode_attention_int8`, fp dots against the chunk's own KV."""
+    b, tq, h, d = q.shape
+    _, s, g, _ = k_q.shape
+    r = h // g
+    qg = q.reshape(b, tq, g, r, d).astype(jnp.float32) * (d ** -0.5)
+    q_i8, q_s = _quantize_rows(qg)                                 # (B,T,G,R,*)
+    sc_i = jnp.einsum("btgrd,bkgd->bgrtk", q_i8, k_q,
+                      preferred_element_type=jnp.int32)            # int8 MXU
+    ks_t = jnp.moveaxis(k_s, 1, 2)                                 # (B,G,S)
+    qs_t = jnp.moveaxis(q_s, 1, 3)                                 # (B,G,R,T)
+    sc = sc_i.astype(jnp.float32) * qs_t[..., None] * ks_t[:, :, None, None, :]
+    sc_new = jnp.einsum("btgrd,bjgd->bgrtj", qg, k_new.astype(jnp.float32))
+    if softcap > 0.0:
+        sc = softcap * jnp.tanh(sc / softcap)
+        sc_new = softcap * jnp.tanh(sc_new / softcap)
+    clen = jnp.broadcast_to(jnp.asarray(cache_len), (b,))
+    pos = jnp.arange(s)
+    cmask = jnp.broadcast_to(pos[None, None, :] < clen[:, None, None],
+                             (b, tq, s))
+    t_idx = jnp.arange(tq)
+    nmask = t_idx[None, :] <= t_idx[:, None]
+    sc = jnp.where(cmask[:, None, None, :, :], sc, NEG_INF)
+    sc_new = jnp.where(nmask[None, None, None, :, :], sc_new, NEG_INF)
+    p = jax.nn.softmax(jnp.concatenate([sc, sc_new], axis=-1), axis=-1)
+    vs_t = jnp.moveaxis(v_s, 1, 2)                                 # (B,G,S)
+    p_fold = p[..., :s] * vs_t[:, :, None, None, :]
+    p_i8, p_s = _quantize_rows(p_fold)
+    out = jnp.einsum("bgrtk,bkgd->bgrtd", p_i8, v_q,
+                     preferred_element_type=jnp.int32
+                     ).astype(jnp.float32) * p_s[..., None] \
+        + jnp.einsum("bgrtj,bjgd->bgrtd", p[..., s:],
+                     v_new.astype(jnp.float32))
+    return jnp.moveaxis(out, 3, 1).reshape(b, tq, h, d).astype(q.dtype)
+
+
 # ---------------------------------------------------------------------------
 # INT8 KV cache (beyond-paper: the series quantizer applied to attention).
 # K/V are stored as int8 planes with per-(position, kv-head) scales; scores

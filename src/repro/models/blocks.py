@@ -306,6 +306,79 @@ def block_decode_delta(qc: QuantContext, kind: str, p: Dict, x: jnp.ndarray,
 
 
 # ---------------------------------------------------------------------------
+# chunked verify: score T speculative tokens at once against the cache,
+# WITHOUT mutating it — the caller decides the accepted prefix from the
+# logits and commits via model.commit_verify (DESIGN.md §10).
+# ---------------------------------------------------------------------------
+def block_verify_delta(qc: QuantContext, kind: str, p: Dict, x: jnp.ndarray,
+                       cache: Dict, cfg, *, cache_len: jnp.ndarray
+                       ) -> Tuple[jnp.ndarray, Dict]:
+    """x: (B, T, D) — T draft-chunk tokens per slot, token ``t`` at absolute
+    position ``cache_len[b] + t``.  Returns (x, delta) where delta mirrors
+    the cache keys with chunk values:
+
+      attn/moe_attn : k/v (B, T, G, Dh) (+ ks/vs (B, T, G) under int8_kv)
+      local         : k/v (B, T, G, Dh) (ring slots/positions derive at commit)
+      cross         : None values (static image KV)
+      rglru/ssm     : per-step states, leading (B, T, ...) — entry t is the
+                      state after chunk tokens 0..t
+
+    Nothing is written into ``cache``; attention reads the cache prefix
+    ``[0, cache_len)`` plus the chunk's own causal KV
+    (:func:`repro.models.attention.chunk_decode_attention`)."""
+    b, t = x.shape[0], x.shape[1]
+    clen = jnp.broadcast_to(jnp.asarray(cache_len, jnp.int32), (b,))
+    positions = clen[:, None] + jnp.arange(t)[None, :]         # (B, T)
+    if kind in ("attn", "moe_attn"):
+        h = L.apply_norm(cfg.norm, p["ln"], x)
+        q, k, v = _qkv(qc, p["attn"], h, cfg, positions, rope=True)
+        if qc.int8_kv:
+            att = ATT.chunk_decode_attention_int8(
+                q, cache["k"], cache["ks"], cache["v"], cache["vs"], k, v,
+                clen, softcap=cfg.attn_softcap)
+            kq, ks = ATT.quantize_kv(k)
+            vq, vs = ATT.quantize_kv(v)
+            delta = {"k": kq, "ks": ks, "v": vq, "vs": vs}
+        else:
+            att = ATT.chunk_decode_attention(q, cache["k"], cache["v"], k, v,
+                                             clen, softcap=cfg.attn_softcap)
+            delta = {"k": k, "v": v}
+        x = x + L.dense(qc, att.reshape(b, t, -1), p["attn"]["o"])
+        x = _mlp_part(qc, kind, p, x, cfg)
+        return x, delta
+    if kind == "local":
+        h = L.apply_norm(cfg.norm, p["ln"], x)
+        q, k, v = _qkv(qc, p["attn"], h, cfg, positions, rope=True)
+        att = ATT.chunk_decode_attention(q, cache["k"], cache["v"], k, v,
+                                         clen, window=cfg.window,
+                                         slot_pos=cache["slot_pos"],
+                                         softcap=cfg.attn_softcap)
+        x = x + L.dense(qc, att.reshape(b, t, -1), p["attn"]["o"])
+        x = _mlp_part(qc, kind, p, x, cfg)
+        return x, {"k": k, "v": v}
+    if kind == "cross":
+        h = L.apply_norm(cfg.norm, p["ln"], x)
+        hd, hq = cfg.head_dim, cfg.num_heads
+        q = L.dense(qc, h, p["attn"]["q"]).reshape(b, t, hq, hd)
+        att = ATT.cross_attention(q, cache["k"], cache["v"])
+        gate = jnp.tanh(p["xattn_gate"])
+        x = x + gate * L.dense(qc, att.reshape(b, t, -1), p["attn"]["o"])
+        x = _mlp_part(qc, kind, p, x, cfg)
+        return x, {"k": None, "v": None}
+    if kind == "rglru":
+        h = L.apply_norm(cfg.norm, p["ln"], x)
+        y, states = RG.rglru_verify(qc, p["rec"], h, cache, cfg)
+        x = x + y
+        x = _mlp_part(qc, kind, p, x, cfg)
+        return x, states
+    if kind == "ssm":
+        h = L.apply_norm(cfg.norm, p["ln"], x)
+        y, states = SSM.ssm_verify(qc, p["mixer"], h, cache, cfg)
+        return x + y, states
+    raise ValueError(kind)
+
+
+# ---------------------------------------------------------------------------
 # empty caches for serve_step lowering (shapes only — works under eval_shape)
 # ---------------------------------------------------------------------------
 def init_block_cache(kind: str, cfg, batch: int, s_max: int, dtype=jnp.bfloat16,

@@ -30,12 +30,23 @@ class QuantContext:
     routes every :class:`ExpandedTensor` dense through the Theorem-2
     ``shard_map``+psum executor; ``"tensor"`` (column-parallel) and
     ``"replicated"`` keep the local apply — their distribution lives in the
-    parameter shardings, consumed by GSPMD, not in the compute graph."""
+    parameter shardings, consumed by GSPMD, not in the compute graph.
+
+    ``term_budget`` caps every expanded GEMM at its first ``k`` series terms
+    (Theorem 1 prefix = a coherent lower-precision model, DESIGN.md §10):
+    the truncated-series *draft* context of self-speculative decoding.
+    ``None`` serves the full series; weights with fewer terms are served
+    whole.  Replicated/tensor placements slice the term axis
+    (:meth:`ExpandedTensor.truncate`, genuinely fewer per-term GEMMs);
+    ``placement="term"`` masks the trailing scales to zero instead — the
+    Abelian identity — because the term axis lives scattered across the
+    mesh."""
     policy: Optional[ExpansionPolicy] = None
     use_kernel: bool = False  # Pallas path (CPU interpret / TPU Mosaic)
     int8_kv: bool = False     # int8 KV cache + int8 attention dots (serving)
     mesh: Optional[Any] = None       # jax.sharding.Mesh (hashable) or None
     placement: str = "replicated"    # "replicated" | "term" | "tensor"
+    term_budget: Optional[int] = None  # k-term series prefix (draft model)
 
     @property
     def enabled(self) -> bool:
@@ -57,10 +68,12 @@ def dense(qc: QuantContext, x: jnp.ndarray, params: Dict, name: str = "kernel") 
             # "expand" axis; each device contributes its basis-model partial
             # and one psum (AbelianAdd) combines them (DESIGN.md §9)
             from repro.dist.expansion_parallel import term_parallel_apply
-            y = term_parallel_apply(x, w, qc.policy, qc.mesh).astype(x.dtype)
+            y = term_parallel_apply(x, w, qc.policy, qc.mesh,
+                                    term_budget=qc.term_budget).astype(x.dtype)
         else:
             # the series GEMM accumulates in f32; return in the stream dtype
-            y = _dense(x, w, qc.policy, use_kernel=qc.use_kernel).astype(x.dtype)
+            y = _dense(x, w, qc.policy, use_kernel=qc.use_kernel,
+                       term_budget=qc.term_budget).astype(x.dtype)
     else:
         y = jnp.dot(x, w)
     if "bias" in params:

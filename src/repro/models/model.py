@@ -349,6 +349,134 @@ def decode_step(params: PyTree, tokens: jnp.ndarray, caches: PyTree,
 
 
 # ---------------------------------------------------------------------------
+# speculative verify: score a T-token draft chunk in one pass (DESIGN.md §10)
+# ---------------------------------------------------------------------------
+def verify_step(params: PyTree, tokens: jnp.ndarray, caches: PyTree,
+                cache_len: jnp.ndarray, cfg: ArchConfig, qc: QuantContext = FP
+                ) -> Tuple[jnp.ndarray, PyTree]:
+    """Chunked decode continuation: tokens (B, T) at per-slot positions
+    ``cache_len[b] .. cache_len[b]+T-1`` -> (logits (B, T, V), deltas).
+
+    The full-series *verify* pass of self-speculative decoding: one batched
+    forward scores every draft position at once (weights are read once for
+    the whole chunk, unlike T sequential decode steps).  ``caches`` is only
+    READ — attention sees the cache prefix plus the chunk's own causal KV —
+    and ``deltas`` mirrors the cache tree with per-position chunk values;
+    :func:`commit_verify` writes the accepted prefix once the caller has
+    compared draft and verify tokens."""
+    batch = {"tokens": tokens}
+    x, _ = _embed(qc, params, batch, cfg)
+    names = _stage_block_names(cfg)
+    b = tokens.shape[0]
+    clen = jnp.broadcast_to(jnp.asarray(cache_len, jnp.int32), (b,))
+
+    def stage_fn(x, scan_in):
+        stage_params, stage_cache = scan_in
+        stage_params = peel_expanded(stage_params)
+        deltas = {}
+        for name, kind in zip(names, cfg.stage_pattern):
+            x, d = B.block_verify_delta(qc, kind, stage_params[name], x,
+                                        stage_cache[name], cfg, cache_len=clen)
+            deltas[name] = d
+        return x, deltas
+
+    x, stage_deltas = jax.lax.scan(stage_fn, x, (params["stages"], caches["stages"]))
+
+    tail_deltas = {}
+    for i, kind in enumerate(cfg.tail_pattern):
+        name = f"t{i}_{kind}"
+        x, d = B.block_verify_delta(qc, kind, params["tail"][name], x,
+                                    caches["tail"][name], cfg, cache_len=clen)
+        tail_deltas[name] = d
+
+    x = L.apply_norm(cfg.norm, params["final_norm"], x)
+    logits = L.logits_apply(qc, params, x, tie_embeddings=cfg.tie_embeddings,
+                            softcap=cfg.logit_softcap)
+    return logits, {"stages": stage_deltas, "tail": tail_deltas}
+
+
+def _commit_block(kind: str, cfg: ArchConfig, cache: PyTree, delta: PyTree,
+                  clen: jnp.ndarray, accept: jnp.ndarray) -> PyTree:
+    """Write one block's verified chunk into its live cache row-wise.
+
+    ``accept`` (B,) is the per-slot count of accepted *draft* tokens m; the
+    round consumes m+1 chunk inputs, so positions ``clen..clen+m`` become
+    valid KV/state and everything past them is rolled back:
+
+    * attn/moe_attn: all T rows are written — rows past the new
+      ``cache_len = clen+m+1`` are stale-but-masked (the slot scheduler's
+      invariant) and are overwritten by later rounds before ever unmasking;
+      out-of-capacity rows (an over-budget chunk tail) drop via JAX scatter
+      OOB semantics and are never consumed.
+    * local ring: chunk entries land at ``(clen+t) % W``; entries whose
+      recorded position exceeds ``clen+accept`` are restored from the
+      pre-round ring — a rejected draft must not evict a window entry that
+      future queries still attend.  Requires T <= W (enforced at engine
+      construction).
+    * rglru/ssm: gather the per-step state at index ``accept`` (state after
+      the m+1 accepted inputs).
+    * cross: static — untouched.
+    """
+    if kind == "cross" or delta is None:
+        return cache
+    b = clen.shape[0]
+    rows = jnp.arange(b)
+    if kind in ("attn", "moe_attn"):
+        t = delta["k"].shape[1]
+        idx = clen[:, None] + jnp.arange(t)[None, :]            # (B, T)
+        return {key: cache[key].at[rows[:, None], idx].set(
+                    delta[key].astype(cache[key].dtype))
+                for key in cache}
+    if kind == "local":
+        w = cache["k"].shape[1]
+        t = delta["k"].shape[1]
+        pos = clen[:, None] + jnp.arange(t)[None, :]            # (B, T)
+        slot = jnp.mod(pos, w)
+        sp_old = cache["slot_pos"]
+        k_new = cache["k"].at[rows[:, None], slot].set(
+            delta["k"].astype(cache["k"].dtype))
+        v_new = cache["v"].at[rows[:, None], slot].set(
+            delta["v"].astype(cache["v"].dtype))
+        sp_new = sp_old.at[rows[:, None], slot].set(pos.astype(sp_old.dtype))
+        keep = sp_new <= (clen + accept)[:, None]               # (B, W)
+        return {"k": jnp.where(keep[:, :, None, None], k_new, cache["k"]),
+                "v": jnp.where(keep[:, :, None, None], v_new, cache["v"]),
+                "slot_pos": jnp.where(keep, sp_new, sp_old)}
+    # recurrent kinds: per-step stacked states — gather the accepted index
+    def pick(buf, d):
+        idx = accept.reshape((b,) + (1,) * (d.ndim - 1))
+        return jnp.take_along_axis(d, idx, axis=1)[:, 0].astype(buf.dtype)
+    return {key: pick(cache[key], delta[key]) for key in cache}
+
+
+def commit_verify(caches: PyTree, deltas: PyTree, cache_len: jnp.ndarray,
+                  accept: jnp.ndarray, cfg: ArchConfig) -> PyTree:
+    """Apply :func:`verify_step` deltas for the accepted prefix: the caches
+    come out exactly as if the accepted tokens had been decoded one-by-one
+    (modulo fp reassociation of the chunked GEMMs); rejected positions are
+    rolled back by construction.  ``accept`` (B,) = accepted draft count per
+    slot; the slot's new cache length is ``cache_len + accept + 1``."""
+    b = accept.shape[0]
+    clen = jnp.broadcast_to(jnp.asarray(cache_len, jnp.int32), (b,))
+    m = jnp.asarray(accept, jnp.int32)
+    names = _stage_block_names(cfg)
+    stages = {}
+    for name, kind in zip(names, cfg.stage_pattern):
+        if kind == "cross":
+            stages[name] = caches["stages"][name]
+            continue
+        stages[name] = jax.vmap(
+            lambda c, d, kind=kind: _commit_block(kind, cfg, c, d, clen, m)
+        )(caches["stages"][name], deltas["stages"][name])
+    tail = {}
+    for i, kind in enumerate(cfg.tail_pattern):
+        name = f"t{i}_{kind}"
+        tail[name] = _commit_block(kind, cfg, caches["tail"][name],
+                                   deltas["tail"][name], clen, m)
+    return {"stages": stages, "tail": tail}
+
+
+# ---------------------------------------------------------------------------
 # cache construction & input specs (ShapeDtypeStruct stand-ins, no allocation)
 # ---------------------------------------------------------------------------
 def init_cache(cfg: ArchConfig, batch: int, s_max: int, dtype=None,

@@ -81,6 +81,38 @@ def rglru_apply(qc: QuantContext, params: Dict, x_in: jnp.ndarray,
     return out, {"conv": conv_state, "h": h[:, -1, :]}
 
 
+def rglru_verify(qc: QuantContext, params: Dict, x: jnp.ndarray,
+                 cache: Dict, cfg) -> Tuple[jnp.ndarray, Dict]:
+    """Multi-token decode continuation (speculative verify, DESIGN.md §10).
+
+    x: (B, T, D); cache: {'conv': (B, K-1, Dr), 'h': (B, Dr)} — the state
+    *entering* the chunk.  Returns (out (B, T, D), per-step states
+    {'conv': (B, T, K-1, Dr), 'h': (B, T, Dr)}): entry ``t`` is the state
+    after consuming chunk tokens 0..t, so accept/rollback is a gather at the
+    accepted index.  The input GEMMs run chunked (B, T, ·); the conv and the
+    recurrence are unrolled per step in exactly
+    :func:`rglru_decode_step`'s form, so per-token state trajectories match
+    the sequential decode path."""
+    t = x.shape[1]
+    xr_raw = L.dense(qc, x, params["in_x"])                   # (B,T,Dr)
+    gate = jax.nn.gelu(L.dense(qc, x, params["in_gate"]))
+    w, bias = params["conv"]["w"], params["conv"]["b"]
+    k = w.shape[0]
+    xp = jnp.concatenate([cache["conv"].astype(xr_raw.dtype), xr_raw], axis=1)
+    xr = jnp.stack([jnp.einsum("bkc,kc->bc", xp[:, j:j + k, :], w) + bias
+                    for j in range(t)], axis=1)               # (B,T,Dr)
+    a, b_in = _gates(qc, params, xr)
+    h = cache["h"]
+    hs = []
+    for j in range(t):                                        # static unroll
+        h = a[:, j] * h + b_in[:, j]
+        hs.append(h)
+    hs = jnp.stack(hs, axis=1)                                # (B,T,Dr)
+    out = L.dense(qc, hs * gate, params["out"])
+    convs = jnp.stack([xp[:, j + 1:j + k, :] for j in range(t)], axis=1)
+    return out, {"conv": convs, "h": hs}
+
+
 def rglru_decode_step(qc: QuantContext, params: Dict, x_t: jnp.ndarray,
                       cache: Dict, cfg) -> Tuple[jnp.ndarray, Dict]:
     """x_t: (B,1,D); cache: {'conv': (B,K-1,Dr), 'h': (B,Dr)}."""

@@ -141,6 +141,47 @@ def ssm_apply(qc: QuantContext, params: Dict, x_in: jnp.ndarray, cfg,
     return out, {"conv": conv_state, "ssm": s_final}
 
 
+def ssm_verify(qc: QuantContext, params: Dict, x: jnp.ndarray, cache: Dict,
+               cfg) -> Tuple[jnp.ndarray, Dict]:
+    """Multi-token decode continuation (speculative verify, DESIGN.md §10).
+
+    x: (B, T, D); cache: {'conv': (B, K-1, C), 'ssm': (B, H, P, N)} — the
+    state entering the chunk.  Returns (out (B, T, D), per-step states
+    {'conv': (B, T, K-1, C), 'ssm': (B, T, H, P, N)}): entry ``t`` is the
+    state after chunk tokens 0..t (accept/rollback gathers the accepted
+    index).  The projection GEMMs run chunked; the conv and the SSD state
+    recurrence are unrolled in exactly :func:`ssm_decode_step`'s per-token
+    form."""
+    d = ssm_dims(cfg)
+    t = x.shape[1]
+    zxbcdt = L.dense(qc, x, params["in_proj"])                # (B,T,in_dim)
+    z, xbc_raw, dt = _split_zxbcdt(zxbcdt, d)
+    w, bias = params["conv"]["w"], params["conv"]["b"]
+    k = w.shape[0]
+    xp = jnp.concatenate([cache["conv"].astype(xbc_raw.dtype), xbc_raw], axis=1)
+    conv_out = jnp.stack([jnp.einsum("bkc,kc->bc", xp[:, j:j + k, :], w) + bias
+                          for j in range(t)], axis=1)         # (B,T,C)
+    xbc = jax.nn.silu(conv_out)
+    xs, bv, cv = _split_xbc(xbc, d)
+    dt = jax.nn.softplus(dt + params["dt_bias"])              # (B,T,H)
+    a = -jnp.exp(params["a_log"])
+    xh = xs.reshape(x.shape[0], t, d["heads"], d["p"])
+    da = jnp.exp(dt * a)                                      # (B,T,H)
+    s = cache["ssm"]
+    ss, ys = [], []
+    for j in range(t):                                        # static unroll
+        s = s * da[:, j, :, None, None] + jnp.einsum(
+            "bh,bn,bhp->bhpn", dt[:, j], bv[:, j], xh[:, j])
+        ss.append(s)
+        ys.append(jnp.einsum("bn,bhpn->bhp", cv[:, j], s)
+                  + params["d_skip"][None, :, None] * xh[:, j])
+    y = jnp.stack(ys, axis=1).reshape(x.shape[0], t, d["d_inner"])
+    y = L.rmsnorm(params["norm"], y * jax.nn.silu(z))
+    out = L.dense(qc, y, params["out_proj"])
+    convs = jnp.stack([xp[:, j + 1:j + k, :] for j in range(t)], axis=1)
+    return out, {"conv": convs, "ssm": jnp.stack(ss, axis=1)}
+
+
 def ssm_decode_step(qc: QuantContext, params: Dict, x_t: jnp.ndarray, cache: Dict,
                     cfg) -> Tuple[jnp.ndarray, Dict]:
     """Single-token state update.  x_t: (B,1,D)."""

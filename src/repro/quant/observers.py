@@ -30,13 +30,24 @@ class MinMaxObserver:
 
 @dataclasses.dataclass
 class PercentileObserver:
-    """Clip to the p/100 absolute-value percentile (outlier-robust)."""
+    """Clip to the p/100 absolute-value percentile (outlier-robust).
+
+    Streams a running *mean* of per-batch percentiles.  A running max (the
+    previous behavior) converges to the global absmax as calibration batches
+    accumulate — any single batch whose p-percentile lands near an outlier
+    ratchets the estimate up permanently — which defeats exactly the
+    outlier-robustness a percentile clip exists to provide.  The mean of
+    per-batch percentiles is a consistent streaming estimator of the typical
+    batch percentile and stays bounded away from the global absmax."""
     p: float = 99.9
     amax: Optional[jnp.ndarray] = None
+    n: int = 0
 
     def update(self, x: jnp.ndarray):
         a = jnp.percentile(jnp.abs(x), self.p)
-        self.amax = a if self.amax is None else jnp.maximum(self.amax, a)
+        self.amax = a if self.amax is None else \
+            (self.amax * self.n + a) / (self.n + 1)
+        self.n += 1
         return self
 
     def range(self):

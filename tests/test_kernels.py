@@ -100,3 +100,74 @@ def test_property_kernel_ref_equal(m, k, n, bits, seed):
     yk = ops.series_matmul(x, s1, w_et.planes, w_et.scales, a_bits=bits, a_terms=2, use_kernel=True)
     yr = ops.series_matmul(x, s1, w_et.planes, w_et.scales, a_bits=bits, a_terms=2, use_kernel=False)
     np.testing.assert_allclose(np.asarray(yk), np.asarray(yr), rtol=1e-5, atol=1e-5)
+
+
+def test_plane_limits_agree_across_modules():
+    """The four `_plane_limits` copies (core reference, ref kernels, Pallas
+    residual-quantize, Pallas series-matmul) must state identical bounds —
+    the bits=8 audit: residual planes use the proof bound ±2^{X-1} in an
+    int8 container, so lo reaches -128 at X=8 while hi clamps to +127
+    (both unreachable there: the halved scale ratio keeps |q| <= 64)."""
+    import importlib
+    RQ = importlib.import_module("repro.kernels.residual_quantize")
+    SM = importlib.import_module("repro.kernels.series_matmul")
+
+    for bits in (2, 3, 4, 8):
+        for k in (0, 1, 2):
+            want = E._plane_limits(bits, k)
+            assert ref._plane_limits(bits, k) == want, (bits, k)
+            assert RQ._plane_limits(bits, k) == want, (bits, k)
+            assert SM._plane_limits(bits, k) == want, (bits, k)
+    assert E._plane_limits(8, 1) == (-128, 127)
+    assert E._plane_limits(4, 1) == (-8, 8)
+    assert E._plane_limits(8, 0) == (-127, 127)
+
+
+@pytest.mark.parametrize("terms", (2, 4))
+def test_bits8_residual_parity_and_halved_grid(rng, terms):
+    """bits=8 parity audit (deterministic adversarial sweep): kernel ==
+    pure-jnp ref == core sequential extraction, on data engineered to sit on
+    half-tie rounding frontiers, and residual planes never leave ±64 (the
+    halved X=8 ratio makes the ±127/-128 container clamp unreachable)."""
+    bits = 8
+    x = rng.normal(size=(64, 64)).astype(np.float32) * 5.0
+    s1f = float(E.first_scale(jnp.max(jnp.abs(jnp.asarray(x))), bits))
+    ratio = E.scale_ratio(bits)
+    # adversarial rows: exact grid multiples and half-ties of every term scale
+    x[0, :] = s1f * np.arange(-32, 32)
+    x[1, :] = s1f * (np.arange(-32, 32) + 0.5)
+    x[2, :] = (s1f / ratio) * (np.arange(-32, 32) + 0.5)
+    x[3, :] = 127.0 * s1f            # the symmetric-grid extreme
+    xj = jnp.asarray(x)
+    s1 = E.first_scale(jnp.max(jnp.abs(xj)), bits)
+    # compare all three extractors under jit, like the serving path runs
+    # them: eager-vs-jit f32 fusion (FMA on `r - s*q`) can shift an exact
+    # half-tie residual by one ulp, which is a program-shape effect, not an
+    # extraction-semantics difference
+    pk = ops.residual_quantize(xj, s1, bits=bits, terms=terms, use_kernel=True)
+    pr = ops.residual_quantize(xj, s1, bits=bits, terms=terms, use_kernel=False)
+    pseq, _ = jax.jit(lambda a, b: E.extract_planes_sequential(
+        a, b, bits, terms, per_channel=False))(xj, s1)
+    np.testing.assert_array_equal(np.asarray(pk), np.asarray(pr))
+    np.testing.assert_array_equal(np.asarray(pk), np.asarray(pseq))
+    resid = np.asarray(pk)[1:].astype(np.int32)
+    assert resid.size == 0 or (np.abs(resid).max() <= 64), np.abs(resid).max()
+
+
+@given(seed=st.integers(0, 2**31 - 1))
+@settings(max_examples=25, deadline=None)
+def test_bits8_residual_parity_property(seed):
+    """bits=8 parity as a property over random scales/data: the Pallas
+    kernel, the jnp ref, and the core sequential reference extract identical
+    planes (the aligned `_plane_limits` never fire at X=8)."""
+    r = np.random.default_rng(seed)
+    x = jnp.asarray((r.normal(size=(32, 32)) *
+                     10.0 ** r.uniform(-3, 3)).astype(np.float32))
+    bits, terms = 8, 3
+    s1 = E.first_scale(jnp.max(jnp.abs(x)), bits)
+    pk = ops.residual_quantize(x, s1, bits=bits, terms=terms, use_kernel=True)
+    pr = ops.residual_quantize(x, s1, bits=bits, terms=terms, use_kernel=False)
+    pseq, _ = jax.jit(lambda a, b: E.extract_planes_sequential(
+        a, b, bits, terms, per_channel=False))(x, s1)
+    np.testing.assert_array_equal(np.asarray(pk), np.asarray(pr))
+    np.testing.assert_array_equal(np.asarray(pk), np.asarray(pseq))

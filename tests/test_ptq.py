@@ -100,3 +100,28 @@ def test_expand_is_deterministic(rng):
     q2 = expand_params(p, W4A4)
     jax.tree_util.tree_map(
         lambda a, b: np.testing.assert_array_equal(np.asarray(a), np.asarray(b)), q1, q2)
+
+
+def test_percentile_observer_streams_instead_of_ratcheting():
+    """Regression: PercentileObserver took a running MAX of per-batch
+    percentiles, which converges to the global absmax over many calibration
+    batches (any batch whose percentile lands near an outlier ratchets the
+    estimate up for good) — defeating the outlier-robustness it documents.
+    The streaming mean of batch percentiles must stay near the typical
+    percentile, far below the global absmax."""
+    from repro.quant.observers import PercentileObserver
+
+    obs = PercentileObserver(p=99.0)
+    r = np.random.default_rng(0)
+    global_absmax = 0.0
+    for i in range(50):
+        x = r.normal(size=4096).astype(np.float32)
+        x[0] = 100.0 + i          # one huge outlier per calibration batch
+        global_absmax = max(global_absmax, float(np.abs(x).max()))
+        obs.update(jnp.asarray(x))
+    lo, hi = obs.range()
+    assert float(lo) == -float(hi)
+    # typical 99th percentile of N(0,1) is ~2.6; the outliers put the global
+    # absmax at ~149 — a running max would have converged toward it
+    assert 1.5 < float(hi) < 10.0, float(hi)
+    assert float(hi) < 0.1 * global_absmax

@@ -271,9 +271,14 @@ def test_request_metrics_and_occupancy(setup):
 
 
 def test_one_transfer_per_step_with_recycling(setup, monkeypatch):
-    """The one-device_get-per-decode-step contract survives continuous
+    """The one-device_get-per-loop-iteration contract survives continuous
     batching: admissions (prefill, scatter, first-token sampling) stay
-    device-side even when slots are recycled mid-stream."""
+    device-side even when slots are recycled mid-stream.
+
+    ``decode_steps`` counts decode DISPATCHES only — drain iterations (the
+    fetch that emits a wave's final pending tokens and dispatches nothing)
+    transfer but don't decode.  This workload is two full waves (4 requests
+    on 2 slots, 4 tokens each): 3 dispatches + 1 drain per wave."""
     cfg, params = setup
     eng = Engine(cfg, params, serve_cfg=ServeConfig(
         max_seq=48, max_batch=8, max_slots=2))
@@ -283,7 +288,60 @@ def test_one_transfer_per_step_with_recycling(setup, monkeypatch):
     real = jax.device_get
     monkeypatch.setattr(jax, "device_get", lambda x: calls.append(1) or real(x))
     eng.run(max_new_tokens=4)
-    assert len(calls) == eng.last_run_stats["decode_steps"]
+    assert eng.last_run_stats["decode_steps"] == 6
+    assert len(calls) == 8  # 6 decode dispatches + 2 drain fetches
+
+
+def test_decode_steps_count_dispatches_only(setup):
+    """Regression (accounting): ``decode_steps`` must equal the number of
+    decode DISPATCHES.  The old loop bumped the counters at the top of every
+    iteration, so the final drain (fetch + emit, no decode) overstated
+    decode_steps by one per drain and understated occupancy."""
+    cfg, params = setup
+    for scheduler in ("slots", "grouped"):
+        eng = Engine(cfg, params, serve_cfg=ServeConfig(
+            max_seq=48, max_batch=2, max_slots=2, scheduler=scheduler))
+        for p in _prompts(cfg, [8, 8]):
+            eng.add_request(p)
+        dispatches = []
+        real = eng._decode
+        eng._decode = lambda *a, **k: dispatches.append(1) or real(*a, **k)
+        eng.run(max_new_tokens=4)
+        st = eng.last_run_stats
+        # 2 requests in lock-step on 2 slots: first token comes from prefill,
+        # the remaining 3 from 3 decode dispatches; the 4th fetch drains
+        assert st["decode_steps"] == len(dispatches) == 3, scheduler
+        # both slots alive at every dispatch -> full occupancy (the old
+        # accounting diluted this with the dispatch-free drain iteration)
+        assert st["occupancy"] == pytest.approx(1.0), scheduler
+        assert st["generated_tokens"] == 8
+
+
+def test_zero_budget_rejected_on_both_paths(setup):
+    """Regression (contract): an effective ``max_new_tokens=0`` used to slip
+    through scheduler-level runs and still emit 1 token (the prefill-sampled
+    token was appended before the budget check).  The contract is reject-
+    at-validation, enforced by add_request, Engine.run AND both scheduler
+    paths (requests handed to the scheduler directly, bypassing
+    add_request's check)."""
+    cfg, params = setup
+    from repro.infer.scheduler import Request
+    with pytest.raises(ValueError, match="max_new_tokens"):
+        Engine(cfg, params, serve_cfg=ServeConfig(max_seq=48)) \
+            .add_request([1, 2, 3], max_new_tokens=0)
+    for scheduler in ("slots", "grouped"):
+        eng = Engine(cfg, params, serve_cfg=ServeConfig(
+            max_seq=48, max_batch=2, scheduler=scheduler))
+        eng._queue.append(Request(rid=0, tokens=[1, 2, 3], max_new_tokens=0))
+        with pytest.raises(ValueError, match=">= 1"):
+            eng.run(max_new_tokens=4)
+        # run-level zero is rejected up front too (queue left intact)
+        eng2 = Engine(cfg, params, serve_cfg=ServeConfig(
+            max_seq=48, max_batch=2, scheduler=scheduler))
+        eng2.add_request([1, 2, 3])
+        with pytest.raises(ValueError, match="max_new_tokens"):
+            eng2.run(max_new_tokens=0)
+        assert len(eng2._queue) == 1
 
 
 def test_bucket_length():

@@ -114,3 +114,28 @@ def test_cache_accounting():
     # ssm: O(1) cache
     m = cache_bytes_per_token(get_arch("mamba2_780m"))
     assert m["growing_per_token"] == 0 and m["fixed"] > 0
+
+
+def test_hbm_cap_honors_smax_below_window():
+    """Regression: ``cache_bytes_per_token`` charged local-attention rings
+    the full ``cfg.window`` regardless of decode capacity, while the
+    allocator caps the ring at ``min(window, s_max)``
+    (models.blocks.init_block_cache) — so ``max_batch_for_hbm``/``plan_slots``
+    under-admitted whenever ``max_seq < window``."""
+    from repro.infer.kvcache import max_batch_for_hbm
+
+    cfg = get_arch("recurrentgemma_9b", smoke=True)   # window 16, local+rglru
+    s_max = 8                                         # below the window
+    per_seq = total_cache_bytes(cfg, 1, s_max)
+    c_unbounded = cache_bytes_per_token(cfg)          # roofline estimate
+    per_seq_window = (c_unbounded["fixed"]
+                      + c_unbounded["growing_per_token"] * s_max)
+    assert per_seq < per_seq_window                   # ring capped at s_max
+    # a budget that truly fits 4 sequences admits 4 ...
+    hbm = 4 * per_seq
+    assert max_batch_for_hbm(cfg, s_max, hbm, 0.0) == 4
+    # ... where the pre-fix full-window charge would have under-admitted
+    assert int(hbm // per_seq_window) < 4
+    # at s_max >= window the two agree (no behavior change above the cap)
+    assert total_cache_bytes(cfg, 1, cfg.window) == pytest.approx(
+        c_unbounded["fixed"] + c_unbounded["growing_per_token"] * cfg.window)

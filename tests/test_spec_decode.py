@@ -1,0 +1,392 @@
+"""Self-speculative decoding from truncated-series drafts (DESIGN.md §10).
+
+Theorem 1 makes the first ``k < t`` terms of every expansion a coherent
+low-bit model sharing weights/scales/KV layout with the full series — a
+free draft model.  Contracts tested here:
+
+* ``ExpandedTensor.truncate(k)`` / ``QuantContext.term_budget``: the
+  truncated prefix is exactly the model the budgeted context serves;
+* ``model.verify_step`` scores a T-token chunk with per-position logits
+  that match T sequential ``decode_step`` calls (token-level; fp caches
+  bitwise-close), and ``commit_verify`` performs accept/rollback such that
+  continuing to decode is indistinguishable from never having speculated —
+  for the attn, local+rglru, and ssm arch classes;
+* the engine's speculative slot scheduler emits GREEDY output
+  token-identical to the non-speculative slots engine (weight-only and
+  activation-quantized policies), through EOS recycling, per-request
+  budgets, and mixed lengths;
+* acceptance-rate metrics behave (full-budget draft => acceptance 1.0);
+* multi-device: ``placement="term"`` at 4 fake devices serves the same
+  speculative stream (subprocess, fake host devices).
+"""
+import dataclasses
+
+import jax
+import jax.numpy as jnp
+import numpy as np
+import pytest
+
+from repro.configs.base import get_arch
+from repro.core import expansion as E
+from repro.core.policy import ExpansionPolicy, W4A4
+from repro.core.ptq import expand_params
+from repro.infer.serve import Engine, ServeConfig
+from repro.models import model as M
+from repro.models.layers import FP, QuantContext
+
+# weight-only with THREE weight terms: k=1/2 are genuine truncations
+W4A16_T3 = ExpansionPolicy(w_bits=4, a_bits=16, w_terms=3, a_terms=0)
+
+ARCHS = ["qwen2_1_5b", "recurrentgemma_9b", "mamba2_780m"]
+
+
+@pytest.fixture(scope="module")
+def setup():
+    cfg = get_arch("qwen2_1_5b", smoke=True)
+    params = M.init_params(jax.random.PRNGKey(0), cfg)
+    return cfg, params
+
+
+def _prompts(cfg, lengths, seed=0):
+    r = np.random.default_rng(seed)
+    return [r.integers(0, cfg.vocab_size, l).tolist() for l in lengths]
+
+
+# ---------------------------------------------------------------------------
+# truncate / term_budget
+# ---------------------------------------------------------------------------
+def test_truncate_method_is_prefix_view(rng):
+    w = jnp.asarray(rng.normal(size=(16, 24)).astype(np.float32))
+    et = E.expand(w, 4, 3, per_channel=True)
+    tr = et.truncate(2)
+    assert tr.num_terms == 2 and tr.orig_shape == et.orig_shape
+    np.testing.assert_array_equal(np.asarray(tr.planes),
+                                  np.asarray(et.planes[:2]))
+    np.testing.assert_array_equal(np.asarray(tr.scales),
+                                  np.asarray(et.scales[:2]))
+    # bias/sat are affine corrections, not series terms: kept
+    et_s = E.expand(w, 4, 3, symmetric=False, saturating=True)
+    tr_s = et_s.truncate(1)
+    assert tr_s.bias is not None and tr_s.sat is not None
+    # over-budget is a no-op; the prefix reconstruction is the k-term model
+    assert et.truncate(7).num_terms == 3
+    np.testing.assert_allclose(np.asarray(E.reconstruct(et.truncate(2))),
+                               np.asarray(E.reconstruct(et, terms=2)),
+                               rtol=0, atol=0)
+
+
+def test_term_budget_context_serves_truncated_model(rng):
+    """A QuantContext with term_budget=k applies every expanded GEMM as if
+    the weights had been truncated to k terms up front."""
+    from repro.models.layers import dense
+
+    w = jnp.asarray(rng.normal(size=(16, 24)).astype(np.float32))
+    x = jnp.asarray(rng.normal(size=(5, 16)).astype(np.float32))
+    et = E.expand(w, 4, 3, per_channel=True)
+    qc_full = QuantContext(policy=W4A16_T3)
+    qc_k = dataclasses.replace(qc_full, term_budget=2)
+    y_budget = dense(qc_k, x, {"kernel": et})
+    y_trunc = dense(qc_full, x, {"kernel": et.truncate(2)})
+    np.testing.assert_array_equal(np.asarray(y_budget), np.asarray(y_trunc))
+    # budget=None and an over-budget both serve the full series
+    y_full = dense(qc_full, x, {"kernel": et})
+    y_over = dense(dataclasses.replace(qc_full, term_budget=9), x,
+                   {"kernel": et})
+    np.testing.assert_array_equal(np.asarray(y_full), np.asarray(y_over))
+    assert not np.array_equal(np.asarray(y_full), np.asarray(y_budget))
+
+
+# ---------------------------------------------------------------------------
+# model layer: verify_step + commit_verify vs sequential decode
+# ---------------------------------------------------------------------------
+@pytest.mark.parametrize("arch", ARCHS)
+def test_verify_step_matches_sequential_decode(rng, arch):
+    """One chunked verify pass == T sequential decode steps: same argmax
+    tokens at every position, caches (after a full-accept commit) close to
+    the sequentially-built caches — for full-attn, local-ring+rglru, and
+    ssm arch classes, at per-slot (vector) cache lengths."""
+    cfg = get_arch(arch, smoke=True)
+    params = M.init_params(jax.random.PRNGKey(0), cfg)
+    b, s_max, T = 2, 32, 4
+    lens = [7, 11]
+    toks = rng.integers(0, cfg.vocab_size, (b, max(lens) + T))
+    pad = np.zeros((b, max(lens)), np.int32)
+    for i, l in enumerate(lens):
+        pad[i, :l] = toks[i, :l]
+    cl = jnp.asarray(lens, jnp.int32)
+    _, c1 = M.prefill(params, {"tokens": jnp.asarray(pad)}, cfg,
+                      s_max=s_max, lengths=cl)
+    _, c2 = M.prefill(params, {"tokens": jnp.asarray(pad)}, cfg,
+                      s_max=s_max, lengths=cl)
+    chunk = jnp.asarray(toks[:, -T:], jnp.int32)
+    seq_logits = []
+    cc = c1
+    for j in range(T):
+        lg, cc = M.decode_step(params, chunk[:, j:j + 1], cc, cl + j, cfg)
+        seq_logits.append(lg)
+    seq_logits = jnp.stack(seq_logits, axis=1)                 # (B,T,V)
+    v_logits, deltas = M.verify_step(params, chunk, c2, cl, cfg)
+    np.testing.assert_allclose(np.asarray(v_logits), np.asarray(seq_logits),
+                               rtol=2e-4, atol=2e-5)
+    np.testing.assert_array_equal(np.asarray(jnp.argmax(v_logits, -1)),
+                                  np.asarray(jnp.argmax(seq_logits, -1)))
+    # full accept (m = T-1: all T inputs consumed) == sequential caches
+    committed = M.commit_verify(c2, deltas, cl, jnp.full((b,), T - 1,
+                                                         jnp.int32), cfg)
+    for a, bb in zip(jax.tree_util.tree_leaves(cc),
+                     jax.tree_util.tree_leaves(committed)):
+        np.testing.assert_allclose(np.asarray(a, np.float32),
+                                   np.asarray(bb, np.float32),
+                                   rtol=1e-4, atol=1e-5)
+
+
+@pytest.mark.parametrize("arch", ARCHS)
+def test_commit_rollback_is_invisible_to_later_decodes(rng, arch):
+    """Accept only m < T-1 drafts, roll the rest back, then keep decoding:
+    the stream must match a reference that never speculated — the rollback
+    contract (stale attn rows masked by cache_len, local-ring entries
+    restored, recurrent state gathered at the accepted step)."""
+    cfg = get_arch(arch, smoke=True)
+    params = M.init_params(jax.random.PRNGKey(0), cfg)
+    b, s, s_max, T = 2, 9, 32, 4
+    accept = 1                                   # consume 2 of 4 chunk inputs
+    toks = jnp.asarray(rng.integers(0, cfg.vocab_size, (b, s + T)), jnp.int32)
+    _, c_ref = M.prefill(params, {"tokens": toks[:, :s]}, cfg, s_max=s_max)
+    _, c_spec = M.prefill(params, {"tokens": toks[:, :s]}, cfg, s_max=s_max)
+    cl = jnp.full((b,), s, jnp.int32)
+    # speculate a chunk, accept only `accept` drafts
+    _, deltas = M.verify_step(params, toks[:, s:s + T], c_spec, cl, cfg)
+    c_spec = M.commit_verify(c_spec, deltas, cl,
+                             jnp.full((b,), accept, jnp.int32), cfg)
+    # reference: plain sequential decode of the SAME accepted tokens
+    cc = c_ref
+    for j in range(accept + 1):
+        _, cc = M.decode_step(params, toks[:, s + j:s + j + 1], cc, cl + j, cfg)
+    # both continue decoding the same continuation — tokens must agree
+    cl2 = cl + accept + 1
+    x_spec, x_ref = c_spec, cc
+    inp = toks[:, s + accept + 1:s + accept + 2]
+    for j in range(4):
+        lg_s, x_spec = M.decode_step(params, inp, x_spec, cl2 + j, cfg)
+        lg_r, x_ref = M.decode_step(params, inp, x_ref, cl2 + j, cfg)
+        np.testing.assert_allclose(np.asarray(lg_s), np.asarray(lg_r),
+                                   rtol=2e-4, atol=2e-5)
+        nxt = jnp.argmax(lg_r, -1)[:, None].astype(jnp.int32)
+        assert bool(jnp.all(jnp.argmax(lg_s, -1)[:, None] == nxt))
+        inp = nxt
+
+
+# ---------------------------------------------------------------------------
+# engine: greedy token identity + recycling + metrics
+# ---------------------------------------------------------------------------
+def _engine(cfg, params, policy, **sc_kw):
+    kw = dict(max_seq=48, max_batch=2, max_slots=2)
+    kw.update(sc_kw)
+    return Engine(cfg, params, policy=policy, serve_cfg=ServeConfig(**kw))
+
+
+@pytest.mark.parametrize("arch", ARCHS)
+@pytest.mark.parametrize("policy", [W4A16_T3, W4A4],
+                         ids=["w4a16_t3", "w4a4"])
+def test_spec_engine_token_identical(arch, policy):
+    """The acceptance contract: greedy speculative output is token-identical
+    to the non-speculative slots engine — mixed lengths, slot recycling,
+    more requests than slots — for every arch class, weight-only AND
+    activation-quantized policies."""
+    cfg = get_arch(arch, smoke=True)
+    params = M.init_params(jax.random.PRNGKey(0), cfg)
+    prompts = _prompts(cfg, [5, 9, 13, 7])
+    base = _engine(cfg, params, policy)
+    ids_b = [base.add_request(p) for p in prompts]
+    ref = base.run(max_new_tokens=6)
+    spec = _engine(cfg, params, policy, spec_terms=1, spec_lookahead=3)
+    ids_s = [spec.add_request(p) for p in prompts]
+    out = spec.run(max_new_tokens=6)
+    for a, b in zip(ids_b, ids_s):
+        assert out[b] == ref[a], (arch, ref[a], out[b])
+    st = spec.last_run_stats
+    assert 0.0 <= st["acceptance_rate"] <= 1.0
+    assert st["spec_rounds"] == st["decode_steps"] > 0
+    assert st["generated_tokens"] == 24
+    assert st["tokens_per_round"] > 1.0        # speculation amortizes steps
+    # never MORE dispatches than the baseline; strictly fewer whenever the
+    # draft earns any acceptance at all (a weak draft can only tie)
+    assert st["decode_steps"] <= base.last_run_stats["decode_steps"]
+
+
+def test_spec_eos_and_budget_recycling(setup):
+    """EOS inside an accepted chunk stops the request exactly where the
+    baseline stops it (tokens after EOS in the chunk are dropped), frees the
+    slot, and a queued request recycles it; per-request budgets truncate the
+    chunk tail the same way."""
+    cfg, params = setup
+    prompts = _prompts(cfg, [8, 10, 6])
+    base = _engine(cfg, params, W4A16_T3)
+    r = base.add_request(prompts[0])
+    eos = base.run(max_new_tokens=6)[r][3]     # a token mid-stream -> EOS
+    base = _engine(cfg, params, W4A16_T3, eos_id=eos, max_slots=1)
+    ids_b = [base.add_request(p, max_new_tokens=m)
+             for p, m in zip(prompts, [6, 4, 6])]
+    ref = base.run(max_new_tokens=6)
+    spec = _engine(cfg, params, W4A16_T3, eos_id=eos, max_slots=1,
+                   spec_terms=1, spec_lookahead=3)
+    ids_s = [spec.add_request(p, max_new_tokens=m)
+             for p, m in zip(prompts, [6, 4, 6])]
+    out = spec.run(max_new_tokens=6)
+    for a, b in zip(ids_b, ids_s):
+        assert out[b] == ref[a]
+    assert len(out[ids_s[0]]) == 4             # stopped at EOS
+    assert len(out[ids_s[1]]) == 4             # per-request budget honored
+
+
+def test_spec_full_budget_draft_accepts_everything(setup):
+    """spec_terms >= w_terms makes the draft the full model: every draft
+    token verifies, acceptance is exactly 1.0, and every round yields
+    lookahead+1 tokens (modulo the final partial round)."""
+    cfg, params = setup
+    eng = _engine(cfg, params, W4A16_T3, spec_terms=3, spec_lookahead=3)
+    for p in _prompts(cfg, [6, 6]):
+        eng.add_request(p)
+    out = eng.run(max_new_tokens=8)
+    st = eng.last_run_stats
+    assert st["acceptance_rate"] == 1.0
+    assert all(len(v) == 8 for v in out.values())
+    assert st["spec_rounds"] == 2              # ceil(8 / (3+1)) lock-step
+
+
+def test_spec_one_transfer_per_round(setup, monkeypatch):
+    """One device_get per speculative round — the round transfer carries up
+    to γ+1 tokens per slot, so speculation REDUCES host syncs per token."""
+    cfg, params = setup
+    eng = _engine(cfg, params, W4A16_T3, spec_terms=3, spec_lookahead=3)
+    for p in _prompts(cfg, [6, 6]):
+        eng.add_request(p)
+    calls = []
+    real = jax.device_get
+    monkeypatch.setattr(jax, "device_get", lambda x: calls.append(1) or real(x))
+    eng.run(max_new_tokens=8)
+    assert len(calls) == eng.last_run_stats["spec_rounds"] == 2
+
+
+def test_spec_validation_errors(setup):
+    """Construction-time preconditions: slots scheduler only, expanded
+    params only, lookahead >= 1, ring-window headroom; greedy-only at run
+    time (temperature is dynamic)."""
+    cfg, params = setup
+    with pytest.raises(ValueError, match="scheduler='slots'"):
+        Engine(cfg, params, policy=W4A16_T3, serve_cfg=ServeConfig(
+            scheduler="grouped", spec_terms=1))
+    with pytest.raises(ValueError, match="ExpandedTensor"):
+        Engine(cfg, params, serve_cfg=ServeConfig(spec_terms=1))  # FP params
+    with pytest.raises(ValueError, match="spec_lookahead"):
+        Engine(cfg, params, policy=W4A16_T3, serve_cfg=ServeConfig(
+            spec_terms=1, spec_lookahead=0))
+    rg = get_arch("recurrentgemma_9b", smoke=True)           # window 16
+    rg_params = M.init_params(jax.random.PRNGKey(0), rg)
+    with pytest.raises(ValueError, match="window"):
+        Engine(rg, rg_params, policy=W4A16_T3, serve_cfg=ServeConfig(
+            spec_terms=1, spec_lookahead=16))
+    eng = _engine(cfg, params, W4A16_T3, spec_terms=1, temperature=0.7)
+    eng.add_request([1, 2, 3])
+    with pytest.raises(ValueError, match="greedy"):
+        eng.run(max_new_tokens=4)
+
+
+def test_spec_admission_charges_draft_cache_copy(setup):
+    """HBM admission must charge each slot's cache TWICE in spec mode: the
+    fused round drafts on a functional copy of the caches while the
+    committed caches stay live for verify/commit — admitting by the
+    1x-cache model would OOM the first speculative round on real HBM."""
+    from repro.infer.kvcache import param_bytes, total_cache_bytes
+    from repro.infer.scheduler import plan_slots
+
+    cfg, params = setup
+    pbytes = param_bytes(params)
+    per_seq = total_cache_bytes(cfg, 1, 48)
+    sc = ServeConfig(max_seq=48, max_batch=8,
+                     hbm_budget_bytes=pbytes + 4.5 * per_seq)
+    assert plan_slots(cfg, sc, params) == 4
+    assert plan_slots(cfg, dataclasses.replace(sc, spec_terms=1), params) == 2
+
+
+def test_runtime_applies_recipe_spec_intent(setup):
+    """QuantRecipe.spec_terms is recorded intent: Runtime.serve applies it
+    when the ServeConfig doesn't choose its own, same pattern as
+    recipe.placement."""
+    from repro.api import QuantRecipe, Runtime, quantize
+
+    cfg, params = setup
+    art = quantize(params, QuantRecipe(
+        method="fpxint", policy=W4A16_T3, arch="qwen2_1_5b", smoke=True,
+        spec_terms=1))
+    eng = Runtime(art, backend="ref", cfg=cfg).serve(
+        ServeConfig(max_seq=48, max_batch=2))
+    assert eng.spec_enabled and eng.sc.spec_terms == 1
+    # an explicit ServeConfig choice wins; grouped scheduler opts out
+    eng2 = Runtime(art, backend="ref", cfg=cfg).serve(
+        ServeConfig(max_seq=48, max_batch=2, scheduler="grouped"))
+    assert not eng2.spec_enabled
+    with pytest.raises(ValueError, match="term axis"):
+        QuantRecipe(method="rtn", spec_terms=1)
+
+
+# ---------------------------------------------------------------------------
+# multi-device: term placement serves the same speculative stream
+# ---------------------------------------------------------------------------
+def test_spec_term_placement_token_identical_4dev():
+    """placement="term" at 4 fake devices: the speculative engine emits the
+    replicated non-speculative stream (the draft's term budget is realized
+    by zero-masking scattered scales — the Abelian identity)."""
+    import os
+    import subprocess
+    import sys
+    import textwrap
+
+    repo = os.path.dirname(os.path.dirname(os.path.abspath(__file__)))
+    src = textwrap.dedent("""
+        import jax, numpy as np
+        from repro.api import QuantRecipe, Runtime, quantize
+        from repro.configs.base import get_arch
+        from repro.core.policy import ExpansionPolicy
+        from repro.dist.placement import make_serve_mesh
+        from repro.infer.serve import ServeConfig
+        from repro.models import model as M
+
+        pol = ExpansionPolicy(w_bits=4, a_bits=16, w_terms=3, a_terms=0)
+        cfg = get_arch("qwen2_1_5b", smoke=True)
+        params = M.init_params(jax.random.PRNGKey(0), cfg)
+        art = quantize(params, QuantRecipe(method="fpxint", policy=pol,
+                                           arch="qwen2_1_5b", smoke=True))
+        rng = np.random.default_rng(0)
+        prompts = [rng.integers(0, cfg.vocab_size, l).tolist()
+                   for l in (5, 9, 13)]
+        outs = {}
+        for placement, ndev, spec in [("replicated", 0, 0),
+                                      ("term", 1, 1), ("term", 4, 0),
+                                      ("term", 4, 1)]:
+            mesh = (make_serve_mesh(ndev, "term") if placement == "term"
+                    else None)
+            eng = Runtime(art, backend="ref", cfg=cfg, mesh=mesh,
+                          placement=placement).serve(ServeConfig(
+                max_seq=48, max_batch=2, max_slots=2,
+                spec_terms=spec, spec_lookahead=3))
+            ids = [eng.add_request(p) for p in prompts]
+            out = eng.run(max_new_tokens=6)
+            outs[(placement, ndev, spec)] = [out[i] for i in ids]
+            if spec:
+                st = eng.last_run_stats
+                assert 0.0 <= st["acceptance_rate"] <= 1.0
+        base = outs[("replicated", 0, 0)]
+        assert outs[("term", 4, 0)] == base, "term baseline diverged"
+        assert outs[("term", 1, 1)] == base, "term@1 speculative diverged"
+        assert outs[("term", 4, 1)] == base, "term@4 speculative diverged"
+        print("OK")
+    """)
+    env = dict(os.environ)
+    env["XLA_FLAGS"] = "--xla_force_host_platform_device_count=4"
+    env["PYTHONPATH"] = os.path.join(repo, "src")
+    env["REPRO_NO_PALLAS"] = "1"
+    out = subprocess.run([sys.executable, "-c", src], capture_output=True,
+                         text=True, timeout=560, env=env)
+    assert out.returncode == 0, f"STDOUT:\n{out.stdout}\nSTDERR:\n{out.stderr[-3000:]}"
+    assert "OK" in out.stdout
