@@ -1,89 +1,107 @@
-"""Elastic scaling end-to-end: train on a 4-device mesh, checkpoint, lose
-half the fleet, restore onto a 2-device mesh with new shardings, continue
-training — parameters identical at the handoff, loss keeps falling.
+"""Elastic quality from ONE artifact: QoS tiers + graceful degradation.
 
-    python examples/elastic_rescale.py      # sets its own XLA_FLAGS (8 dev)
+Theorem 1 makes every k-term prefix of an FP=xINT expansion a coherent
+lower-bit model sharing weights/scales/KV layout with the full series —
+so one resident artifact serves a whole quality ladder, per request, with
+no weight reload (DESIGN.md §11):
+
+1. quantize once (3 weight terms), record the tier ladder on the recipe;
+2. serve a mixed full/k2/k1 workload and print per-tier metrics
+   (nominal vs effective terms, deadline hit rate);
+3. rerun under a seeded chaos HBM squeeze: the scheduler *degrades*
+   degradable tiers to their floor budget instead of rejecting work,
+   then restores them when the squeeze passes — zero slots leaked.
+
+    python examples/elastic_rescale.py
 """
 import os
-os.environ.setdefault("XLA_FLAGS", "--xla_force_host_platform_device_count=8")
 import sys
 sys.path.insert(0, os.path.join(os.path.dirname(__file__), "..", "src"))
 
-import tempfile
-
 import jax
-import jax.numpy as jnp
 import numpy as np
 
+from repro.api import QuantRecipe, Runtime, quantize
 from repro.configs.base import get_arch
-from repro.dist import checkpoint as CKPT
-from repro.dist.sharding import ShardingRules
+from repro.core.policy import ExpansionPolicy
+from repro.infer.qos import ChaosConfig, Rejection
+from repro.infer.serve import ServeConfig
+from repro.launch.common import submit_with_backoff
 from repro.models import model as M
-from repro.train.data import make_batch
-from repro.train.train_step import TrainConfig, make_train_step
+
+# weight-only, THREE weight terms: k2/k1 are genuine truncations
+POLICY = ExpansionPolicy(w_bits=4, a_bits=16, w_terms=3, a_terms=0)
+TIERS = (("k2", 2), ("k1", 1))
 
 
-def make_mesh(d, m):
-    from repro.launch.mesh import make_host_mesh
-    return make_host_mesh((d, m), ("data", "model"))
+def submit_mixed(eng, cfg, n_requests, seed=0):
+    """Round-robin the tier ladder over a mixed-length workload, through
+    the typed-backpressure retry helper."""
+    rng = np.random.default_rng(seed)
+    names = list(eng.tiers)                 # ("full", "k2", "k1")
+    ids = []
+    for i in range(n_requests):
+        toks = rng.integers(0, cfg.vocab_size,
+                            int(rng.integers(4, 16))).tolist()
+        res = submit_with_backoff(eng, toks, quality=names[i % len(names)],
+                                  deadline_s=120.0)
+        if isinstance(res, Rejection):
+            print(f"  request {i} rejected: {res.reason.name}")
+        else:
+            ids.append(res)
+    return ids
+
+
+def report(eng):
+    st = eng.last_run_stats
+    for name, ts in sorted(st["tiers"].items()):
+        print(f"  tier {name:>4}: {ts['requests']} reqs, "
+              f"{ts['served_tokens']:3d} tokens, "
+              f"terms {ts['mean_effective_terms']:.2f}"
+              f"/{ts['nominal_terms']} "
+              f"(degraded {ts['degraded_step_fraction']:.0%} of steps), "
+              f"deadline hit rate {ts['deadline_hit_rate']:.2f}")
+    q = st.get("qos", {})
+    print(f"  degradation: {q.get('degraded_rounds', 0)} rounds, "
+          f"reasons={q.get('degrade_reasons', {})}, "
+          f"degraded_now={q.get('degraded_now', False)}")
+    assert st["slots_leaked"] == 0 and st["queue_leftover"] == 0
+    print(f"  invariants: slots_leaked=0 queue_leftover=0  OK")
 
 
 def main():
     cfg = get_arch("qwen2_1_5b", smoke=True)
-    tc = TrainConfig(lr=3e-3, remat=False)
-    opt, step = make_train_step(cfg, tc)
-    ckpt_dir = tempfile.mkdtemp(prefix="elastic_")
+    params = M.init_params(jax.random.PRNGKey(0), cfg)
+    art = quantize(params, QuantRecipe(
+        method="fpxint", policy=POLICY, arch="qwen2_1_5b", smoke=True,
+        qos_tiers=TIERS))                    # ladder recorded on the recipe
+    rt = Runtime(art, backend="ref", cfg=cfg)
+    print(f"quantized once: {art.quant_seconds:.2f}s; serving tiers "
+          f"full/k2/k1 from the SAME resident weights\n")
 
-    def sharded_state(mesh, state=None):
-        rules = ShardingRules(mesh, ("data",))
-        template = state or {"params": M.init_params(jax.random.PRNGKey(0), cfg,
-                                                     dtype=jnp.float32)}
-        p_specs = rules.param_specs(template["params"])
-        o_specs = rules.opt_state_specs("adamw", template["params"], p_specs)
-        return {"params": p_specs, "opt": o_specs}
+    # --- phase 1: mixed tiers, calm conditions --------------------------
+    print("[calm] 6 requests, tiers round-robin full/k2/k1:")
+    eng = rt.serve(ServeConfig(max_seq=64, max_slots=3))
+    ids = submit_mixed(eng, cfg, 6)
+    out = eng.run(max_new_tokens=8)
+    assert set(out) == set(ids)
+    report(eng)
 
-    # ---- phase 1: 4x2 mesh --------------------------------------------
-    mesh_a = make_mesh(4, 2)
-    params = M.init_params(jax.random.PRNGKey(0), cfg, dtype=jnp.float32)
-    state = {"params": params, "opt": opt.init(params)}
-    specs_a = sharded_state(mesh_a, state)
-    state = jax.tree_util.tree_map(
-        lambda x, s: jax.device_put(x, jax.NamedSharding(mesh_a, s.spec)),
-        state, specs_a)
-    sstep = jax.jit(step)
-    with mesh_a:
-        for i in range(6):
-            batch = {k: jnp.asarray(v) for k, v in make_batch(cfg, 64, 8, i).items()}
-            p, o, m = sstep(state["params"], state["opt"], batch)
-            state = {"params": p, "opt": o}
-            print(f"[mesh 4x2] step {i}: loss={float(m['loss']):.4f}")
-    CKPT.save(ckpt_dir, 5, state)
-    ref_leaf = np.asarray(jax.device_get(
-        jax.tree_util.tree_leaves(state["params"])[0]))
-
-    # ---- phase 2: "failure" -> restore on a 2x2 mesh -------------------
-    print("\n... simulating loss of half the fleet; restoring on 2x2 ...\n")
-    mesh_b = make_mesh(2, 2)
-    rules_b = ShardingRules(mesh_b, ("data",))
-    template = jax.eval_shape(lambda: {"params": M.init_params(jax.random.PRNGKey(0), cfg, dtype=jnp.float32)})
-    p_specs = rules_b.param_specs(template["params"])
-    o_specs = rules_b.opt_state_specs("adamw", template["params"], p_specs)
-    full_template = jax.eval_shape(lambda: {"params": M.init_params(jax.random.PRNGKey(0), cfg, dtype=jnp.float32),
-                                            "opt": opt.init(M.init_params(jax.random.PRNGKey(0), cfg, dtype=jnp.float32))})
-    shardings = jax.tree_util.tree_map(
-        lambda s: jax.NamedSharding(mesh_b, s.spec), {"params": p_specs, "opt": o_specs})
-    state2, step_restored = CKPT.restore(ckpt_dir, full_template, shardings=shardings)
-    got = np.asarray(jax.device_get(jax.tree_util.tree_leaves(state2["params"])[0]))
-    print(f"restored step {step_restored}; params bitwise equal: "
-          f"{np.array_equal(ref_leaf, got)}")
-
-    with mesh_b:
-        for i in range(step_restored + 1, step_restored + 4):
-            batch = {k: jnp.asarray(v) for k, v in make_batch(cfg, 64, 8, i).items()}
-            p, o, m = sstep(state2["params"], state2["opt"], batch)
-            state2 = {"params": p, "opt": o}
-            print(f"[mesh 2x2] step {i}: loss={float(m['loss']):.4f}")
-    print("\nelastic rescale complete: same stream, half the devices.")
+    # --- phase 2: chaos HBM squeeze -> degrade, recover -----------------
+    print("\n[chaos] same workload under a seeded HBM squeeze "
+          "(rounds 2..5 at 40% budget) + latency spikes:")
+    chaos = ChaosConfig(seed=0, latency_p=0.2, latency_s=0.002,
+                        hbm_squeeze_start=2, hbm_squeeze_steps=4,
+                        hbm_squeeze_frac=0.4)
+    eng = rt.serve(ServeConfig(max_seq=64, max_slots=3, chaos=chaos))
+    ids = submit_mixed(eng, cfg, 6)
+    out = eng.run(max_new_tokens=8)
+    assert set(out) == set(ids)              # degraded, not shed
+    report(eng)
+    st = eng.last_run_stats
+    print(f"  chaos injected: {st['chaos']}")
+    print("\nelastic quality complete: one artifact, three live qualities, "
+          "graceful degradation under pressure.")
 
 
 if __name__ == "__main__":

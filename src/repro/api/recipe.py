@@ -51,6 +51,14 @@ class QuantRecipe:
               ``placement`` — ``Runtime.serve`` applies it when the
               ``ServeConfig`` doesn't choose; 0 = no speculation.  Only
               meaningful for ``fpxint`` (the baselines have no term axis).
+      qos_tiers: default QoS tier ladder (DESIGN.md §11) as
+              ``((name, term_budget), ...)``, e.g. ``(("k2", 2), ("k1", 1))``
+              — the degraded qualities ``Engine.add_request(quality=...)``
+              accepts next to the implicit ``"full"``.  Recorded intent like
+              ``spec_terms``: ``Runtime.serve`` threads it into
+              ``ServeConfig.tier_budgets`` when the config doesn't choose.
+              ``None`` = serve the engine default ladder.  Only meaningful
+              for ``fpxint`` (degraded tiers truncate the term axis).
       calib_batch / calib_seed: synthetic-calibration knobs for the
               calibrated-PTQ stand-in (``gptq_lite``).
     """
@@ -62,6 +70,7 @@ class QuantRecipe:
     smoke: bool = True
     placement: str = "replicated"
     spec_terms: int = 0
+    qos_tiers: Optional[Tuple[Tuple[str, int], ...]] = None
     calib_batch: int = 32
     calib_seed: int = 0
 
@@ -84,6 +93,26 @@ class QuantRecipe:
                 f"spec_terms>0 drafts with a truncated series; method "
                 f"{self.method!r} produces plain FP reconstructions with no "
                 f"term axis to truncate")
+        if self.qos_tiers is not None:
+            # Normalize first (JSON round-trips tuples as lists): hashable
+            # tuple-of-(str, int) regardless of how the ladder was spelled.
+            object.__setattr__(self, "qos_tiers", tuple(
+                (str(n), int(b)) for n, b in self.qos_tiers))
+            if self.method != "fpxint":
+                raise ValueError(
+                    f"qos_tiers serves truncated-series qualities; method "
+                    f"{self.method!r} produces plain FP reconstructions with "
+                    f"no term axis to truncate")
+            if self.spec_terms > 0:
+                raise ValueError(
+                    "qos_tiers and spec_terms>0 are mutually exclusive: "
+                    "both spend the series term axis (pick one per recipe)")
+            for entry in self.qos_tiers:
+                name, budget = entry
+                if name == "full" or int(budget) < 1:
+                    raise ValueError(
+                        f"qos_tiers entries must be (name, term_budget>=1) "
+                        f"with name != 'full' (implicit); got {entry!r}")
         if self.pack:
             if self.method != "fpxint":
                 raise ValueError(

@@ -111,11 +111,27 @@ class Runtime:
         (B, S) token array."""
         return self._forward(self.params, self._as_batch(batch))
 
-    def lm_loss(self, batch) -> Tuple[jnp.ndarray, Dict[str, jnp.ndarray]]:
-        """Next-token loss + metrics on a batch with ``labels``."""
+    def lm_loss(self, batch, term_budget: Optional[int] = None
+                ) -> Tuple[jnp.ndarray, Dict[str, jnp.ndarray]]:
+        """Next-token loss + metrics on a batch with ``labels``.
+
+        ``term_budget`` evaluates the loss under a truncated series context
+        (Theorem 1: the first K terms are a coherent lower-bit model) — the
+        quality axis of the QoS loss-vs-load tables (``benchmarks/
+        qos_bench.py``).  ``None`` = the artifact's full context."""
         from repro.train.train_step import loss_fn
+        qc = self.qc
+        if term_budget is not None:
+            if term_budget < 1:
+                raise ValueError(
+                    f"term_budget must be >= 1, got {term_budget}")
+            if not self.artifact.expanded:
+                raise ValueError(
+                    f"term_budget truncates the series term axis; method "
+                    f"{self.artifact.method!r} has no term axis")
+            qc = dataclasses.replace(qc, term_budget=int(term_budget))
         return loss_fn(self.params, self._as_batch(batch),
-                       self._require_cfg(), self.qc)
+                       self._require_cfg(), qc)
 
     def serve(self, serve_cfg=None, **engine_kw):
         """A serving Engine admitted by this artifact (no re-expansion),
@@ -124,8 +140,9 @@ class Runtime:
         cache lengths) or ``"grouped"`` (legacy group-drain).
 
         ``recipe.spec_terms`` (recorded self-speculative intent, DESIGN.md
-        §10) applies when the ``ServeConfig`` doesn't set its own
-        ``spec_terms`` — the same intent-then-override pattern as
+        §10) and ``recipe.qos_tiers`` (recorded QoS ladder, DESIGN.md §11)
+        apply when the ``ServeConfig`` doesn't set its own ``spec_terms`` /
+        ``tier_budgets`` — the same intent-then-override pattern as
         ``recipe.placement``."""
         from repro.infer.serve import Engine, ServeConfig
         sc = serve_cfg or ServeConfig()
@@ -133,6 +150,11 @@ class Runtime:
                 and sc.scheduler == "slots":
             sc = dataclasses.replace(
                 sc, spec_terms=self.artifact.recipe.spec_terms)
+        if sc.tier_budgets is None \
+                and self.artifact.recipe.qos_tiers is not None \
+                and sc.scheduler == "slots" and sc.spec_terms == 0:
+            sc = dataclasses.replace(
+                sc, tier_budgets=self.artifact.recipe.qos_tiers)
         return Engine(self._require_cfg(), artifact=self.artifact,
                       backend=self.backend, mesh=self.mesh,
                       placement=self.placement,

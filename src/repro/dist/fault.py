@@ -6,6 +6,13 @@ is step-keyed, so a crashed run replays exactly), periodic checkpointing
 every ``ckpt_every`` steps, and a final synchronous save.  It also feeds
 per-step wall times to a ``StragglerDetector`` so slow steps (preempted
 neighbors, thermal throttling) are logged without poisoning the EMA.
+
+``DispatchWatchdog`` generalizes the same detector to *serving*: the slot
+scheduler feeds it per-round dispatch wall times, stalled rounds (chaos
+latency spikes, noisy neighbors, allocator hiccups) are flagged against
+the healthy EMA or an absolute ``stall_s`` ceiling, and the EMA doubles as
+the round-time estimate behind the deadline-miss estimator
+(``repro.infer.qos.estimate_miss_rate``).
 """
 from __future__ import annotations
 
@@ -44,6 +51,38 @@ class StragglerDetector:
             return True
         self.ema = self.decay * self.ema + (1.0 - self.decay) * dt
         return False
+
+
+class DispatchWatchdog(StragglerDetector):
+    """Serving-side straggler detection over scheduler dispatch rounds.
+
+    Same EMA-relative flagging as :class:`StragglerDetector`, plus an
+    absolute ``stall_s`` ceiling: a round slower than ``stall_s`` is always
+    flagged (even during warmup, when the EMA has no evidence yet) —
+    ``stall_s=0`` disables the ceiling.  ``ema`` is exposed as the healthy
+    round-time estimate for deadline projections."""
+
+    def __init__(self, factor: float = 4.0, warmup: int = 2,
+                 decay: float = 0.9, stall_s: float = 0.0):
+        super().__init__(factor=factor, warmup=warmup, decay=decay)
+        self.stall_s = stall_s
+
+    def observe(self, step: int, dt: float) -> bool:
+        if self.stall_s > 0.0 and dt > self.stall_s:
+            # absolute ceiling: flag without feeding the EMA (a stall must
+            # not raise the bar for detecting the next one)
+            self.count += 1
+            self.slow_steps.append((step, dt))
+            return True
+        return super().observe(step, dt)
+
+    @property
+    def stalled_rounds(self) -> int:
+        return len(self.slow_steps)
+
+    def stats(self):
+        return {"stalled_rounds": self.stalled_rounds,
+                "round_ema_s": self.ema if self.ema is not None else 0.0}
 
 
 class TrainSupervisor:

@@ -63,6 +63,35 @@ def max_batch_for_hbm(cfg: ArchConfig, s_max: int, hbm_bytes: float,
     return max(0, int(np.floor(free / max(per_seq, 1.0))))
 
 
+def hbm_headroom(cfg: ArchConfig, s_max: int, hbm_bytes: float,
+                 param_bytes: float, active_slots: int,
+                 dtype_bytes: int = 2, cache_copies: float = 1.0) -> float:
+    """Free HBM after params + the caches of ``active_slots`` sequences.
+
+    The serving scheduler's admission-headroom signal: when a chaos-squeezed
+    (or genuinely shrunken) effective budget drives this toward zero, the
+    degradation controller reacts *before* admissions would have to be
+    rejected.  May be negative: the active set already exceeds the
+    (squeezed) budget — existing slots keep running, new admissions wait."""
+    per_seq = total_cache_bytes(cfg, 1, s_max, dtype_bytes) \
+        * max(cache_copies, 1.0)
+    return float(hbm_bytes - param_bytes - active_slots * per_seq)
+
+
+def usable_slots(cfg: ArchConfig, s_max: int, hbm_bytes: float,
+                 param_bytes: float, n_slots: int,
+                 dtype_bytes: int = 2, cache_copies: float = 1.0) -> int:
+    """Slots the (possibly squeezed) effective budget can serve right now:
+    ``max_batch_for_hbm`` capped at the planned pool, floored at 0 (a
+    transient squeeze may leave no admission headroom at all — the
+    scheduler then degrades and waits instead of rejecting)."""
+    if hbm_bytes <= 0:
+        return n_slots
+    cap = max_batch_for_hbm(cfg, s_max, hbm_bytes, param_bytes, dtype_bytes,
+                            cache_copies=cache_copies)
+    return max(0, min(n_slots, cap))
+
+
 def param_bytes(params) -> float:
     """Total *logical* bytes of a (possibly expanded) parameter pytree.
 

@@ -1,0 +1,342 @@
+"""QoS tiers, load-adaptive degradation, backpressure, and fault injection.
+
+Theorem 1 makes every k-term prefix of an FP=xINT artifact a coherent
+lower-bit model sharing weights/scales/KV layout with the full series, so a
+serving engine can degrade *quality* at runtime — per request, per step —
+without reloading weights.  This module is the serving robustness layer
+built on that property (DESIGN.md §11):
+
+* **tiers** — named quality levels (``"full"`` | ``"k2"`` | ``"k1"`` by
+  default, or a custom ladder) that map each request to a
+  ``QuantContext.term_budget``.  The slot scheduler routes every slot
+  through its tier's budget, so one resident artifact serves all tiers;
+* **load-adaptive degradation** — :class:`DegradeController`, a hysteresis
+  state machine fed by queue depth, HBM admission headroom, and a
+  deadline-miss estimator.  Under pressure the degradable tiers drop to
+  their floor budget (the scheduler serves them cheaper and the queue
+  drains faster); when pressure clears for ``cooldown_steps`` consecutive
+  rounds, nominal budgets are restored;
+* **backpressure** — admission rejections are typed *results*
+  (:class:`Rejection` with a :class:`RejectReason`), not exceptions: the
+  caller inspects ``reason``/``retryable``/``retry_after_s`` and retries
+  (``repro.launch.common.submit_with_backoff`` is the bounded-backoff
+  helper);
+* **fault injection** — :class:`ChaosConfig` / :class:`ChaosInjector`: a
+  seeded, deterministic harness that injects dispatch latency spikes,
+  transient dispatch failures, and artificial HBM-budget squeezes into the
+  scheduler loop, so degradation, deadlines, and the dispatch watchdog are
+  CI-testable without real hardware faults.  Chaos perturbs *scheduling
+  only* — it never reaches a jitted computation — so with degradation
+  disabled (or only non-degradable tiers in flight) generated tokens are
+  identical to a chaos-free run; when degradation responds to an injected
+  squeeze, degradable tiers intentionally serve fewer terms and their
+  tokens change accordingly (that IS the graceful-degradation response).
+"""
+from __future__ import annotations
+
+import dataclasses
+import enum
+import time
+from typing import Dict, Optional, Tuple
+
+import numpy as np
+
+# the default quality ladder: tier name -> term budget (None = full series)
+DEFAULT_TIER_BUDGETS: Tuple[Tuple[str, int], ...] = (("k2", 2), ("k1", 1))
+
+
+@dataclasses.dataclass(frozen=True)
+class TierSpec:
+    """One quality tier: a named ``QuantContext.term_budget``.
+
+    ``budget=None`` is the engine's full context (whatever the artifact and
+    ``ServeConfig.term_budget`` define).  ``floor`` is the budget served
+    while the scheduler is degraded; ``floor=None`` (or ``floor == budget``)
+    marks the tier non-degradable — the ``full`` tier is always
+    non-degradable, so its token-identity contract survives any load."""
+    name: str
+    budget: Optional[int]          # None = full series
+    floor: Optional[int] = None    # degraded budget; None = never degrade
+
+    @property
+    def degradable(self) -> bool:
+        return (self.floor is not None and self.budget is not None
+                and self.floor < self.budget)
+
+    def budget_now(self, degraded: bool) -> Optional[int]:
+        return self.floor if (degraded and self.degradable) else self.budget
+
+
+def resolve_tiers(tier_budgets: Optional[Tuple[Tuple[str, int], ...]],
+                  *, expanded: bool) -> Dict[str, TierSpec]:
+    """The tier table an engine serves: ``full`` plus the degradable ladder.
+
+    ``tier_budgets`` is ``ServeConfig.tier_budgets`` (or the recipe's
+    recorded ``qos_tiers``); ``None`` selects :data:`DEFAULT_TIER_BUDGETS`.
+    Non-``full`` tiers truncate the series term axis, so a model without
+    :class:`ExpandedTensor` leaves (``expanded=False``) serves ``full``
+    only."""
+    tiers = {"full": TierSpec("full", None, None)}
+    if not expanded:
+        return tiers
+    ladder = DEFAULT_TIER_BUDGETS if tier_budgets is None else tier_budgets
+    budgets = []
+    for name, budget in ladder:
+        if name == "full":
+            raise ValueError("'full' is the implicit top tier; name custom "
+                             "tiers something else")
+        if name in tiers:
+            raise ValueError(f"duplicate tier name {name!r}")
+        if int(budget) < 1:
+            raise ValueError(f"tier {name!r}: term budget must be >= 1, "
+                             f"got {budget}")
+        tiers[name] = TierSpec(name, int(budget))
+        budgets.append(int(budget))
+    if budgets:
+        floor = min(budgets)
+        for name in list(tiers):
+            t = tiers[name]
+            if t.budget is not None and floor < t.budget:
+                tiers[name] = dataclasses.replace(t, floor=floor)
+    return tiers
+
+
+# ---------------------------------------------------------------------------
+# typed admission rejections (backpressure)
+# ---------------------------------------------------------------------------
+class RejectReason(enum.Enum):
+    CAPACITY = "capacity"          # request queue at ServeConfig.max_queue
+    HBM = "hbm"                    # no usable slot under the (possibly
+    #                                squeezed) HBM budget right now
+    DEADLINE_INFEASIBLE = "deadline_infeasible"  # deadline already hopeless
+
+
+@dataclasses.dataclass(frozen=True)
+class Rejection:
+    """A typed, retryable admission result (NOT an exception).
+
+    ``Engine.add_request`` returns this instead of a request id when the
+    engine is saturated: callers match on ``reason``, honor
+    ``retry_after_s`` (a hint, not a promise), and give up when
+    ``retryable`` is False.  ``submit_with_backoff`` in
+    ``repro.launch.common`` implements the bounded retry loop."""
+    reason: RejectReason
+    detail: str = ""
+    retryable: bool = True
+    retry_after_s: float = 0.05
+
+
+# ---------------------------------------------------------------------------
+# load-adaptive degradation
+# ---------------------------------------------------------------------------
+@dataclasses.dataclass(frozen=True)
+class DegradeConfig:
+    """Thresholds of the scheduler's degradation state machine.
+
+    Signals (evaluated once per scheduler round):
+      * queue depth >= ``queue_high``  (0 = auto: 2x the slot pool);
+      * HBM pressure: the usable slot count (admission headroom under the
+        effective, possibly chaos-squeezed budget) fell below the pool
+        while demand exceeds it;
+      * predicted deadline-miss rate >= ``miss_rate_high`` (the estimator
+        projects per-request completion from the round-time EMA).
+
+    Any firing signal enters DEGRADED; recovery needs every signal clear
+    (queue back at/below ``queue_low``, 0 = auto: the pool size) for
+    ``cooldown_steps`` consecutive rounds — hysteresis so the budget does
+    not flap across a threshold."""
+    enabled: bool = True
+    queue_high: int = 0            # 0 -> 2 * n_slots
+    queue_low: int = 0             # 0 -> n_slots
+    miss_rate_high: float = 0.5
+    cooldown_steps: int = 4
+
+
+class DegradeController:
+    """NORMAL <-> DEGRADED hysteresis over the per-round pressure signals."""
+
+    def __init__(self, cfg: DegradeConfig, n_slots: int):
+        self.cfg = cfg
+        self.queue_high = cfg.queue_high or 2 * n_slots
+        self.queue_low = min(cfg.queue_low or n_slots, self.queue_high - 1)
+        self.degraded = False
+        self._clear_rounds = 0
+        self.degraded_rounds = 0
+        self.transitions = 0
+        self.reasons: Dict[str, int] = {}
+
+    def update(self, *, queue_depth: int, hbm_pressure: bool,
+               miss_rate: float) -> bool:
+        if not self.cfg.enabled:
+            return False
+        pressure = []
+        if queue_depth >= self.queue_high:
+            pressure.append("queue")
+        if hbm_pressure:
+            pressure.append("hbm")
+        if miss_rate >= self.cfg.miss_rate_high:
+            pressure.append("deadline")
+        if pressure:
+            if not self.degraded:
+                self.degraded = True
+                self.transitions += 1
+            self._clear_rounds = 0
+            for r in pressure:
+                self.reasons[r] = self.reasons.get(r, 0) + 1
+        elif self.degraded:
+            clear = (queue_depth <= self.queue_low and not hbm_pressure
+                     and miss_rate < self.cfg.miss_rate_high)
+            if clear:
+                self._clear_rounds += 1
+                if self._clear_rounds >= self.cfg.cooldown_steps:
+                    self.degraded = False
+                    self.transitions += 1
+                    self._clear_rounds = 0
+            else:
+                self._clear_rounds = 0
+        if self.degraded:
+            self.degraded_rounds += 1
+        return self.degraded
+
+    def stats(self) -> Dict[str, object]:
+        return {"degraded_rounds": self.degraded_rounds,
+                "degrade_transitions": self.transitions,
+                "degrade_reasons": dict(self.reasons),
+                "degraded_now": self.degraded}
+
+
+def estimate_miss_rate(now: float, round_s: Optional[float], *,
+                       active: list, queued: list, usable_slots: int,
+                       tokens_per_round: float = 1.0) -> float:
+    """Fraction of deadline-carrying requests projected to miss.
+
+    ``active`` is ``(remaining_tokens, absolute_deadline)`` per occupied
+    slot; ``queued`` the same for waiting requests (their wait is estimated
+    as their queue position amortized over the usable slots).  ``round_s``
+    is the scheduler's round-time EMA (None during warmup -> 0.0: no signal
+    before evidence).  The estimate is intentionally coarse — it is a
+    *pressure signal* for the degradation controller, not an SLO oracle."""
+    if round_s is None or round_s <= 0.0:
+        return 0.0
+    total = miss = 0
+    per_tok = round_s / max(tokens_per_round, 1e-9)
+    for remaining, deadline in active:
+        if deadline is None:
+            continue
+        total += 1
+        if now + remaining * per_tok > deadline:
+            miss += 1
+    slots = max(usable_slots, 1)
+    for pos, (remaining, deadline) in enumerate(queued):
+        if deadline is None:
+            continue
+        total += 1
+        wait = (pos // slots + 1) * remaining * per_tok
+        if now + wait + remaining * per_tok > deadline:
+            miss += 1
+    return miss / total if total else 0.0
+
+
+# ---------------------------------------------------------------------------
+# fault injection (chaos harness)
+# ---------------------------------------------------------------------------
+class ChaosFailure(RuntimeError):
+    """A chaos-injected transient dispatch failure (retryable)."""
+
+
+@dataclasses.dataclass(frozen=True)
+class ChaosConfig:
+    """Seeded, deterministic fault injection for the scheduler loop.
+
+    All injection happens on the *host* side of the loop, before a dispatch
+    is issued — no jitted computation ever sees a fault, so a chaotic run
+    emits exactly the tokens of a calm one as long as the degradation
+    controller does not change any tier's budget in response (asserted in
+    CI with degradation disabled; with it enabled, degraded tiers serve
+    fewer terms under pressure by design).
+
+    * ``latency_p``/``latency_s``: with probability ``latency_p`` a
+      dispatch is preceded by a ``latency_s`` stall (a thermal/neighbor
+      straggler stand-in) — the dispatch watchdog must flag the round;
+    * ``fail_p``/``max_retries``: with probability ``fail_p`` a dispatch
+      raises :class:`ChaosFailure` *before* running (the donated buffers
+      are untouched, so the bounded retry is safe);
+    * ``hbm_squeeze_start``/``steps``/``frac``: scheduler rounds
+      ``[start, start+steps)`` shrink the effective HBM budget by ``frac``
+      (an allocator-pressure / fragmentation stand-in) — admission headroom
+      drops and the degradation controller must react, not reject."""
+    seed: int = 0
+    latency_p: float = 0.0
+    latency_s: float = 0.02
+    fail_p: float = 0.0
+    max_retries: int = 3
+    hbm_squeeze_start: int = -1    # first squeezed round (-1 = never)
+    hbm_squeeze_steps: int = 0     # window length, in scheduler rounds
+    hbm_squeeze_frac: float = 0.5  # fraction of the budget removed
+
+    def __post_init__(self):
+        for name in ("latency_p", "fail_p"):
+            v = getattr(self, name)
+            if not 0.0 <= v <= 1.0:
+                raise ValueError(f"{name} must be in [0, 1], got {v}")
+        if not 0.0 <= self.hbm_squeeze_frac <= 1.0:
+            raise ValueError("hbm_squeeze_frac must be in [0, 1], "
+                             f"got {self.hbm_squeeze_frac}")
+        if self.max_retries < 0:
+            raise ValueError("max_retries must be >= 0")
+
+
+class ChaosInjector:
+    """Per-engine chaos state: a seeded RNG + a monotonic round counter
+    (ticked once per scheduler round, across runs, so squeeze windows are
+    reproducible for a given request sequence)."""
+
+    def __init__(self, cfg: ChaosConfig, *, sleep=time.sleep):
+        self.cfg = cfg
+        self.rng = np.random.default_rng(cfg.seed)
+        self.round = 0
+        self.latency_injected = 0
+        self.failures_injected = 0
+        self._sleep = sleep
+
+    def tick(self) -> None:
+        self.round += 1
+
+    @property
+    def squeezing(self) -> bool:
+        c = self.cfg
+        return (c.hbm_squeeze_start >= 0
+                and c.hbm_squeeze_start <= self.round
+                < c.hbm_squeeze_start + c.hbm_squeeze_steps)
+
+    def effective_hbm(self, budget_bytes: float) -> float:
+        if self.squeezing:
+            return budget_bytes * (1.0 - self.cfg.hbm_squeeze_frac)
+        return budget_bytes
+
+    def before_dispatch(self) -> None:
+        """Host-side injection point, called immediately before a dispatch
+        is issued.  May stall (latency spike) and may raise
+        :class:`ChaosFailure` (transient failure) — never after the real
+        dispatch ran, so retries never double-apply a donated buffer."""
+        c = self.cfg
+        if c.latency_p and self.rng.random() < c.latency_p:
+            self.latency_injected += 1
+            self._sleep(c.latency_s)
+        if c.fail_p and self.rng.random() < c.fail_p:
+            self.failures_injected += 1
+            raise ChaosFailure(
+                f"chaos: injected transient dispatch failure "
+                f"(round {self.round})")
+
+    def stats(self) -> Dict[str, object]:
+        return {"rounds": self.round,
+                "latency_injected": self.latency_injected,
+                "failures_injected": self.failures_injected,
+                "squeezing_now": self.squeezing}
+
+
+def safe_rate(count: float, seconds: float, eps: float = 1e-9) -> float:
+    """``count / seconds`` with zero/near-zero durations mapped to 0.0 —
+    metrics JSON must stay finite and comparable on tiny CI runs."""
+    return float(count) / seconds if seconds > eps else 0.0

@@ -1,31 +1,52 @@
-"""Slot-based continuous-batching scheduler.
+"""Slot-based continuous-batching scheduler with a QoS robustness layer.
 
 The legacy engine drains equal-length request *groups* to completion: one
 long prompt stalls the whole batch, and slots freed by EOS sit idle until
 the group ends.  This module replaces group-drain with true continuous
 batching over a fixed pool of decode *slots*:
 
-* **FCFS admission**, gated by :func:`repro.infer.kvcache.max_batch_for_hbm`
-  when an HBM budget is configured: the slot pool never outgrows what the
-  caches + params fit in.  The accounting is mesh-aware and *per device*
+* **priority admission** (FCFS within a priority level), gated by
+  :func:`repro.infer.kvcache.max_batch_for_hbm` when an HBM budget is
+  configured: the slot pool never outgrows what the caches + params fit in.
+  The accounting is mesh-aware and *per device*
   (``kvcache.param_bytes_per_device``): params scattered by
   ``placement="term"``/``"tensor"`` leave more per-device HBM for caches,
   so a sharded engine admits a larger slot pool under the same budget;
 * **padded prefill-into-slot**: each admitted prompt is right-padded to a
   bucketed length (bounding jit retraces), prefilled with a per-row length
-  mask, and its cache scattered into a free row of the live decode cache
+  mask — under its tier's term budget — and its cache scattered into a
+  free row of the live decode cache
   (:func:`repro.models.model.scatter_cache_into_slot`);
-* **per-slot decode**: one fused decode+sample+EOS step serves every
-  occupied slot at its own sequence position (vector ``cache_len``);
-* **slot recycling**: EOS or per-request token budgets free a slot
-  mid-stream, and the next queued request is admitted into it between
-  decode steps (interleaved prefill/decode);
+* **per-slot decode under per-tier term budgets** (DESIGN.md §11): each
+  iteration issues ONE masked fused decode+sample+EOS dispatch per
+  *distinct effective term budget*; only member rows commit their
+  token/alive/cache writes, so every slot advances exactly one token under
+  its own tier's ``QuantContext.term_budget`` while sharing one live cache.
+  Single-tier workloads collapse to one dispatch per step — the exact
+  stream of the tier-free engine;
+* **load-adaptive degradation**: a :class:`repro.infer.qos.DegradeController`
+  watches queue depth, HBM admission headroom (chaos squeezes shrink the
+  effective budget via :func:`repro.infer.kvcache.usable_slots`) and a
+  deadline-miss estimate; under pressure, degradable tiers serve their
+  floor budget until the pressure clears for a cooldown;
+* **deadlines**: an expired request is cancelled — before admission (never
+  occupying a slot) or mid-run (its slot recycled immediately) — and
+  reported with ``status="cancelled"``;
+* **slot recycling**: EOS, per-request token budgets or deadline cancels
+  free a slot mid-stream, and the next queued request is admitted into it
+  between decode steps (interleaved prefill/decode);
 * **one host transfer per decode step**: the ``(tokens, alive)`` pair — the
-  same contract the legacy engine established.
+  same contract the legacy engine established;
+* **fault tolerance hooks**: every dispatch passes the
+  :class:`repro.infer.qos.ChaosInjector` injection point (latency spikes
+  stall, transient failures retry — always *before* the real dispatch, so
+  donated buffers are never double-applied), and a
+  :class:`repro.dist.fault.DispatchWatchdog` flags stalled rounds.
 
 Per-request metrics (time-to-first-token, decode tokens/sec) and run-level
-stats (slot occupancy, decode throughput) are collected on every run; the
-serving benchmark reads them for ``BENCH_serving.json``.
+stats (slot occupancy, decode throughput, per-tier QoS counters) are
+collected on every run; the serving and QoS benchmarks read them for
+``BENCH_serving.json`` / ``BENCH_qos.json``.
 """
 from __future__ import annotations
 
@@ -38,41 +59,71 @@ import jax
 import jax.numpy as jnp
 import numpy as np
 
+from repro.dist import fault as FD
 from repro.infer import kvcache
+from repro.infer import qos as Q
 from repro.models import model as M
 
 PyTree = Any
 
+# no-hang backstop: consecutive scheduler rounds with nothing dispatchable
+# (e.g. a chaos HBM squeeze left zero usable slots) before aborting.  Idle
+# rounds tick the chaos round clock, so finite squeeze windows always pass
+# well below this.
+_IDLE_CAP = 100_000
+
 
 @dataclasses.dataclass
 class Request:
-    """One queued generation request (FCFS order = rid order)."""
+    """One queued generation request (admission order: priority, then rid)."""
     rid: int
     tokens: List[int]
     max_new_tokens: Optional[int] = None   # None -> the run()-level default
     t_enqueue: float = 0.0
+    quality: str = "full"                  # tier name (engine.tiers)
+    priority: int = 0                      # higher admits first
+    deadline_s: Optional[float] = None     # wall budget from enqueue (info)
+    deadline: Optional[float] = None       # absolute perf_counter() deadline
     # filled in by the scheduler:
     t_admitted: float = 0.0
     t_first_token: float = 0.0
     t_done: float = 0.0
     new_tokens: int = 0
+    status: str = "ok"                     # "ok" | "cancelled"
 
     @property
     def ttft_seconds(self) -> float:
-        """Enqueue -> first generated token (includes queue wait)."""
+        """Enqueue -> first generated token (includes queue wait); 0.0 for
+        a request cancelled before its first token."""
+        if self.t_first_token <= 0.0:
+            return 0.0
         return max(0.0, self.t_first_token - self.t_enqueue)
 
     @property
     def tokens_per_sec(self) -> float:
-        dt = self.t_done - self.t_admitted
-        return self.new_tokens / dt if dt > 0 else 0.0
+        # safe_rate: zero/near-zero durations (tiny CI runs, cancelled
+        # requests) map to 0.0, never inf/NaN
+        return Q.safe_rate(self.new_tokens, self.t_done - self.t_admitted)
 
-    def metrics(self) -> Dict[str, float]:
-        return {"rid": self.rid, "prompt_len": len(self.tokens),
-                "new_tokens": self.new_tokens,
-                "ttft_s": self.ttft_seconds,
-                "tokens_per_sec": self.tokens_per_sec,
-                "queue_s": max(0.0, self.t_admitted - self.t_enqueue)}
+    @property
+    def deadline_missed(self) -> Optional[bool]:
+        """None when the request carries no deadline."""
+        if self.deadline is None:
+            return None
+        return self.status == "cancelled" or self.t_done > self.deadline
+
+    def metrics(self) -> Dict[str, Any]:
+        m = {"rid": self.rid, "prompt_len": len(self.tokens),
+             "new_tokens": self.new_tokens,
+             "ttft_s": self.ttft_seconds,
+             "tokens_per_sec": self.tokens_per_sec,
+             "queue_s": max(0.0, self.t_admitted - self.t_enqueue),
+             "quality": self.quality,
+             "priority": self.priority,
+             "status": self.status}
+        if self.deadline is not None:
+            m["deadline_missed"] = bool(self.deadline_missed)
+        return m
 
 
 def plan_slots(cfg, serve_cfg, params) -> int:
@@ -116,14 +167,61 @@ class SlotScheduler:
     prefill / scatter / fused-decode callables (so jit caches persist across
     runs) and reads dynamic knobs (eos, temperature) from ``engine.sc`` at
     run time — both are dynamic operands of the decode step, so changing
-    them never retraces.
+    them never retraces.  Chaos state (:class:`repro.infer.qos.ChaosInjector`)
+    is per-scheduler and its round clock is monotonic ACROSS runs, so a
+    squeeze window hits a reproducible point of a request sequence.
     """
 
     def __init__(self, engine):
         self.eng = engine
-        self.n_slots = plan_slots(engine.cfg, engine.sc, engine.params)
+        sc = engine.sc
+        self.n_slots = plan_slots(engine.cfg, sc, engine.params)
         self.last_run_stats: Dict[str, Any] = {}
         self.last_request_metrics: Dict[int, Dict[str, float]] = {}
+        # HBM admission-headroom model (per device; same accounting as
+        # plan_slots) — evaluated every round so chaos squeezes and real
+        # budget changes shrink the *usable* pool mid-run
+        self._pbytes = kvcache.param_bytes_per_device(engine.params)
+        self._copies = 2.0 if sc.spec_terms > 0 else 1.0
+        self._per_seq = kvcache.total_cache_bytes(
+            engine.cfg, 1, sc.max_seq) * self._copies
+        self.chaos = (Q.ChaosInjector(sc.chaos)
+                      if sc.chaos is not None else None)
+        self.watchdog = self._new_watchdog()
+        self.retries = 0               # chaos-failure redispatches (lifetime)
+
+    def _new_watchdog(self) -> FD.DispatchWatchdog:
+        sc = self.eng.sc
+        # with latency injection on, an absolute stall ceiling below the
+        # injected spike makes flagging deterministic (EMA-relative alone
+        # depends on how fast clean rounds happen to be)
+        stall = (0.5 * sc.chaos.latency_s
+                 if sc.chaos is not None and sc.chaos.latency_p > 0 else 0.0)
+        return FD.DispatchWatchdog(stall_s=stall)
+
+    # ------------------------------------------------------------------
+    def _effective_hbm(self) -> float:
+        """The HBM budget admission control sees *this round*.  With no
+        explicit budget configured, the exact-fit budget (params + the
+        planned pool's caches) is implied so a chaos squeeze still has a
+        well-defined quantity to shrink."""
+        budget = self.eng.sc.hbm_budget_bytes
+        if budget <= 0:
+            budget = self._pbytes + self.n_slots * self._per_seq
+        if self.chaos is not None:
+            budget = self.chaos.effective_hbm(budget)
+        return budget
+
+    def usable_slots_now(self) -> int:
+        """Slots the effective (possibly squeezed) budget can serve."""
+        return kvcache.usable_slots(
+            self.eng.cfg, self.eng.sc.max_seq, self._effective_hbm(),
+            self._pbytes, self.n_slots, cache_copies=self._copies)
+
+    def hbm_headroom_now(self, active_slots: int) -> float:
+        return kvcache.hbm_headroom(
+            self.eng.cfg, self.eng.sc.max_seq, self._effective_hbm(),
+            self._pbytes, active_slots, cache_copies=self._copies)
 
     # ------------------------------------------------------------------
     def _validate(self, requests: List[Request], max_new_tokens: int) -> None:
@@ -146,6 +244,16 @@ class SlotScheduler:
                 raise ValueError(
                     f"request {req.rid}: prompt len {len(req.tokens)} + "
                     f"max_new_tokens {m} exceeds ServeConfig.max_seq={sc.max_seq}")
+            if req.quality not in self.eng.tiers:
+                raise ValueError(
+                    f"request {req.rid}: unknown quality {req.quality!r}; "
+                    f"this engine serves {sorted(self.eng.tiers)}")
+
+    @staticmethod
+    def _order(requests: List[Request]) -> List[Request]:
+        """Admission order: higher ``priority`` first; ``sorted`` is stable,
+        so requests within a level stay FCFS (rid order)."""
+        return sorted(requests, key=lambda r: -r.priority)
 
     def _init_pool(self):
         """Zeroed slot-pool state: the live decode cache (replicated across
@@ -165,22 +273,29 @@ class SlotScheduler:
             "prefill_s": 0.0,
         }
 
-    def _admit(self, st, queue, out, max_new_tokens: int) -> None:
-        """FCFS: prefill queued requests into free slots (padded prompt,
-        length-masked), scatter their caches into the live decode cache,
-        and seed each slot with its first sampled token — all device-side
-        (no host sync)."""
+    def _admit(self, st, queue, out, max_new_tokens: int, *,
+               limit: Optional[int] = None, degraded: bool = False) -> None:
+        """Prefill queued requests into free slots (padded prompt,
+        length-masked, under the request's tier term budget), scatter their
+        caches into the live decode cache, and seed each slot with its
+        first sampled token — all device-side (no host sync).  ``limit``
+        caps concurrently-occupied slots at the usable pool (HBM admission
+        headroom under the effective budget)."""
         eng, sc = self.eng, self.eng.sc
         eos = jnp.int32(sc.eos_id)
+        limit = self.n_slots if limit is None else limit
         t0 = time.perf_counter()
-        while queue and not st["active"].all():
+        while queue and not st["active"].all() \
+                and int(st["active"].sum()) < limit:
             req = queue.popleft()
             slot = int(np.flatnonzero(~st["active"])[0])
             l = len(req.tokens)
             p_len = bucket_length(l, sc.prefill_bucket, sc.max_seq)
             padded = np.zeros((1, p_len), np.int32)
             padded[0, :l] = req.tokens
-            logits, pcache = eng._prefill_slot(
+            tier = eng.tiers[req.quality]
+            prefill = eng._prefill_slot_for(tier.budget_now(degraded))
+            logits, pcache = prefill(
                 eng.params, {"tokens": jnp.asarray(padded)},
                 jnp.asarray([l], jnp.int32))
             st["live"] = eng._scatter(st["live"], pcache, slot)
@@ -198,6 +313,80 @@ class SlotScheduler:
             out[req.rid] = []
         st["prefill_s"] += time.perf_counter() - t0
 
+    # -- deadlines ------------------------------------------------------
+    def _cancel(self, req: Request, out, now: float) -> None:
+        req.status = "cancelled"
+        req.t_done = now
+        gen = out.setdefault(req.rid, [])
+        req.new_tokens = len(gen)
+
+    def _cancel_expired(self, st, queue, out, now: float) -> int:
+        """Deadline enforcement: an expired queued request is cancelled
+        without ever occupying a slot; an expired running request is
+        cancelled mid-run and its slot recycled immediately."""
+        n_cancelled = 0
+        for req in [r for r in queue
+                    if r.deadline is not None and now > r.deadline]:
+            queue.remove(req)
+            self._cancel(req, out, now)
+            n_cancelled += 1
+        for i in np.flatnonzero(st["active"]):
+            req = st["slot_req"][i]
+            if req.deadline is not None and now > req.deadline:
+                self._cancel(req, out, now)
+                st["active"][i] = False
+                st["slot_req"][i] = None
+                n_cancelled += 1
+        return n_cancelled
+
+    def _miss_rate(self, st, queue, now: float, usable: int,
+                   max_new_tokens: int) -> float:
+        return Q.estimate_miss_rate(
+            now, self.watchdog.ema,
+            active=[(int(st["budget"][i]), st["slot_req"][i].deadline)
+                    for i in np.flatnonzero(st["active"])],
+            queued=[((r.max_new_tokens if r.max_new_tokens is not None
+                      else max_new_tokens), r.deadline) for r in queue],
+            usable_slots=usable)
+
+    # -- chaos-wrapped dispatch ----------------------------------------
+    def _dispatch(self, fn, args):
+        """Issue one jitted dispatch through the chaos injection point.
+
+        Injection happens strictly BEFORE the real dispatch: a retried
+        round has touched no donated buffer, so the retry re-issues the
+        identical computation and a chaotic run's tokens match a calm
+        run's bit-for-bit.  Retries are bounded by
+        ``ChaosConfig.max_retries``; exhaustion re-raises."""
+        if self.chaos is None:
+            return fn(*args)
+        attempt = 0
+        while True:
+            try:
+                self.chaos.before_dispatch()
+                return fn(*args)
+            except Q.ChaosFailure:
+                attempt += 1
+                self.retries += 1
+                if attempt > self.chaos.cfg.max_retries:
+                    raise
+
+    def _budget_groups(self, st, degraded: bool):
+        """Active slots bucketed by *effective* (normalized) term budget.
+
+        Deterministic dispatch order: the full context first, then
+        descending budgets.  A single-tier workload lands in exactly one
+        bucket, so its per-step dispatch count — and its jitted step — are
+        identical to the tier-free engine's."""
+        groups: Dict[Optional[int], List[int]] = {}
+        for i in np.flatnonzero(st["active"]):
+            tier = self.eng.tiers[st["slot_req"][i].quality]
+            eff = self.eng._norm_budget(tier.budget_now(degraded))
+            groups.setdefault(eff, []).append(int(i))
+        order = sorted(groups, key=lambda b: (0, 0) if b is None else (1, -b))
+        return [(b, groups[b]) for b in order]
+
+    # ------------------------------------------------------------------
     def _finish_stats(self, requests, *, gen_tokens, steps, occupied_steps,
                       wall, prefill_s, extra=None) -> None:
         eng = self.eng
@@ -215,12 +404,61 @@ class SlotScheduler:
             "wall_seconds": wall,
             "prefill_seconds": prefill_s,
             "decode_seconds": decode_s,
-            "decode_tokens_per_sec": gen_tokens / decode_s,
-            "tokens_per_sec": gen_tokens / wall if wall > 0 else 0.0,
+            # zero/near-zero durations map to 0.0 (finite metrics JSON on
+            # tiny CI runs — never inf/NaN)
+            "decode_tokens_per_sec": Q.safe_rate(gen_tokens, decode_s),
+            "tokens_per_sec": Q.safe_rate(gen_tokens, wall),
         }
         if extra:
             self.last_run_stats.update(extra)
 
+    def _qos_extra(self, requests, tier_stats, ctrl, st, queue, *,
+                   dispatches, usable_min, retries_before) -> Dict[str, Any]:
+        """Per-tier QoS metrics + controller/chaos/watchdog summaries for
+        ``last_run_stats`` (the QoS benchmark's raw material)."""
+        full_terms = self.eng.series_terms or 0
+        tiers: Dict[str, Any] = {}
+        for name, ts in tier_stats.items():
+            group = [r for r in requests if r.quality == name]
+            if not group:
+                continue
+            dl = [r for r in group if r.deadline is not None]
+            hits = sum(1 for r in dl
+                       if r.status == "ok" and r.t_done <= r.deadline)
+            member = ts["member_steps"]
+            tiers[name] = {
+                "requests": len(group),
+                "served_tokens": ts["served_tokens"],
+                "nominal_terms": (full_terms
+                                  if self.eng.tiers[name].budget is None
+                                  else self.eng.tiers[name].budget),
+                "mean_effective_terms": (ts["term_steps"] / member
+                                         if member else 0.0),
+                "degraded_step_fraction": (ts["degraded_steps"] / member
+                                           if member else 0.0),
+                "cancelled": sum(1 for r in group
+                                 if r.status == "cancelled"),
+                "deadline_total": len(dl),
+                "deadline_hits": hits,
+                "deadline_hit_rate": hits / len(dl) if dl else 1.0,
+            }
+        extra: Dict[str, Any] = {
+            "tiers": tiers,
+            "dispatches": dispatches,
+            "usable_slots_min": usable_min,
+            "cancelled": sum(1 for r in requests if r.status == "cancelled"),
+            "dispatch_retries": self.retries - retries_before,
+            "slots_leaked": int(st["active"].sum()),   # invariant: 0
+            "queue_leftover": len(queue),              # invariant: 0
+            "watchdog": self.watchdog.stats(),
+        }
+        if ctrl is not None:
+            extra["qos"] = ctrl.stats()
+        if self.chaos is not None:
+            extra["chaos"] = self.chaos.stats()
+        return extra
+
+    # ------------------------------------------------------------------
     def run(self, requests: List[Request], max_new_tokens: int = 16
             ) -> Dict[int, List[int]]:
         eng, sc = self.eng, self.eng.sc
@@ -229,25 +467,67 @@ class SlotScheduler:
         if eng.spec_enabled:
             return self._run_spec(requests, max_new_tokens)
 
-        queue = deque(requests)
+        queue = deque(self._order(requests))
         out: Dict[int, List[int]] = {}
         eos = jnp.int32(sc.eos_id)
         temperature = jnp.float32(sc.temperature)
         st = self._init_pool()
         active, clen, budget = st["active"], st["clen"], st["budget"]
+        ctrl = Q.DegradeController(sc.degrade, n)
+        self.watchdog = wd = self._new_watchdog()
+        tier_stats = {name: {"served_tokens": 0, "member_steps": 0,
+                             "term_steps": 0, "degraded_steps": 0}
+                      for name in eng.tiers}
+        full_terms = eng.series_terms or 0
 
-        steps = 0             # decode DISPATCHES — the final drain iteration
+        steps = 0             # decode DISPATCH iterations — the final drain
         occupied_steps = 0.0  # (emitting last pending tokens) dispatches none
         gen_tokens = 0
+        dispatches = 0        # masked group dispatches (>= steps with tiers)
+        idle_iters = 0
+        usable_min = n
+        retries0 = self.retries
         t_run0 = time.perf_counter()
+        t_prev = None
 
         while queue or active.any():
+            now = time.perf_counter()
+            # 1) deadline enforcement (queued + running), slots recycled
+            self._cancel_expired(st, queue, out, now)
+            # 2) effective capacity under the (possibly squeezed) budget
+            usable = self.usable_slots_now()
+            usable_min = min(usable_min, usable)
+            # 3) degradation controller: queue depth / HBM headroom /
+            #    projected deadline misses
+            degraded = ctrl.update(
+                queue_depth=len(queue),
+                hbm_pressure=(usable < n
+                              and int(active.sum()) + len(queue) > usable),
+                miss_rate=self._miss_rate(st, queue, now, usable,
+                                          max_new_tokens))
             # interleaved prefill: fill any free slot BEFORE the fetch, so a
             # newly admitted slot's first (prefill-sampled) token is read by
             # this iteration's transfer and only then consumed by decode —
             # admitting between fetch and decode would overwrite it unread
-            if queue and not active.all():
-                self._admit(st, queue, out, max_new_tokens)
+            if queue and not active.all() and int(active.sum()) < usable:
+                self._admit(st, queue, out, max_new_tokens, limit=usable,
+                            degraded=degraded)
+            if not active.any():
+                if not queue:
+                    continue               # drained -> loop exits
+                # queue pending but nothing admittable (squeeze left zero
+                # usable slots): spin the chaos round clock — windows are
+                # counted in rounds, so the squeeze passes — with a hard
+                # cap as the no-hang backstop
+                if self.chaos is not None:
+                    self.chaos.tick()
+                idle_iters += 1
+                if idle_iters > _IDLE_CAP:
+                    raise RuntimeError(
+                        f"scheduler made no progress for {_IDLE_CAP} rounds "
+                        f"({len(queue)} queued, {usable} usable slots)")
+                continue
+            idle_iters = 0
             # the ONE host transfer of this decode step
             tok_host, alive_host = jax.device_get((st["tok"], st["alive"]))
             now = time.perf_counter()
@@ -255,6 +535,7 @@ class SlotScheduler:
                 req = st["slot_req"][i]
                 out[req.rid].append(int(tok_host[i, 0]))
                 gen_tokens += 1
+                tier_stats[req.quality]["served_tokens"] += 1
                 if req.t_first_token == 0.0:
                     req.t_first_token = now
                 budget[i] -= 1
@@ -264,6 +545,8 @@ class SlotScheduler:
                     active[i] = False
                     st["slot_req"][i] = None    # slot freed -> recyclable
             if not active.any():
+                if self.chaos is not None:
+                    self.chaos.tick()
                 continue                        # admit or exit at the top
             # count the decode dispatch HERE, after the drain check: counting
             # at the loop top overstated decode_steps by one per drain (an
@@ -273,14 +556,41 @@ class SlotScheduler:
             occupied_steps += float(active.sum()) / n
             # snapshot clen: the host mutates it below, and numpy->device
             # transfers may alias the host buffer (CPU zero-copy)
-            st["tok"], st["live"], st["key"], st["alive"] = eng._decode(
-                eng.params, st["tok"], st["live"], jnp.asarray(clen.copy()),
-                st["key"], st["alive"], eos, temperature)
+            clen_dev = jnp.asarray(clen.copy())
+            # one masked dispatch per distinct effective term budget: only
+            # member rows commit token/alive/cache writes, so every active
+            # slot advances exactly one token under its own tier's context
+            for b_eff, members in self._budget_groups(st, degraded):
+                mask = np.zeros(n, bool)
+                mask[members] = True
+                dispatches += 1
+                st["tok"], st["live"], st["key"], st["alive"] = \
+                    self._dispatch(eng._decode_for(b_eff), (
+                        eng.params, st["tok"], st["live"], clen_dev,
+                        st["key"], st["alive"], eos, temperature,
+                        jnp.asarray(mask)))
+                terms = full_terms if b_eff is None else b_eff
+                for i in members:
+                    req = st["slot_req"][i]
+                    ts = tier_stats[req.quality]
+                    ts["member_steps"] += 1
+                    ts["term_steps"] += terms
+                    if degraded and eng.tiers[req.quality].degradable:
+                        ts["degraded_steps"] += 1
             clen[active] += 1
+            if self.chaos is not None:
+                self.chaos.tick()
+            now2 = time.perf_counter()
+            if t_prev is not None:
+                wd.observe(steps, now2 - t_prev)
+            t_prev = now2
         wall = time.perf_counter() - t_run0
+        extra = self._qos_extra(requests, tier_stats, ctrl, st, queue,
+                                dispatches=dispatches, usable_min=usable_min,
+                                retries_before=retries0)
         self._finish_stats(requests, gen_tokens=gen_tokens, steps=steps,
                            occupied_steps=occupied_steps, wall=wall,
-                           prefill_s=st["prefill_s"])
+                           prefill_s=st["prefill_s"], extra=extra)
         return out
 
     # ------------------------------------------------------------------
@@ -295,7 +605,12 @@ class SlotScheduler:
         accept counts.  Emission order per slot — pending token, then the
         accepted drafts, then the full-model correction becomes the next
         pending token — reproduces the non-speculative greedy stream
-        token-for-token."""
+        token-for-token.
+
+        QoS tiers are not served here (the term axis is already spent on
+        drafting; the engine's tier table is ``full``-only), but deadlines,
+        chaos injection and the dispatch watchdog apply round-wise exactly
+        as on the plain path."""
         eng, sc = self.eng, self.eng.sc
         n = self.n_slots
         gamma = sc.spec_lookahead
@@ -304,26 +619,51 @@ class SlotScheduler:
                 "speculative decoding serves greedy only (temperature=0): "
                 "draft acceptance compares argmaxes; lossless speculative "
                 "sampling would need rejection sampling on the verify logits")
-        queue = deque(requests)
+        queue = deque(self._order(requests))
         out: Dict[int, List[int]] = {}
         st = self._init_pool()
         active, clen, budget = st["active"], st["clen"], st["budget"]
+        self.watchdog = wd = self._new_watchdog()
+        tier_stats = {name: {"served_tokens": 0, "member_steps": 0,
+                             "term_steps": 0, "degraded_steps": 0}
+                      for name in eng.tiers}
 
         rounds = 0
         occupied_steps = 0.0
         gen_tokens = 0
         drafted = 0
         accepted = 0
+        idle_iters = 0
+        usable_min = n
+        retries0 = self.retries
         t_run0 = time.perf_counter()
+        t_prev = None
 
         while queue or active.any():
-            if queue and not active.all():
-                self._admit(st, queue, out, max_new_tokens)
+            now = time.perf_counter()
+            self._cancel_expired(st, queue, out, now)
+            usable = self.usable_slots_now()
+            usable_min = min(usable_min, usable)
+            if queue and not active.all() and int(active.sum()) < usable:
+                self._admit(st, queue, out, max_new_tokens, limit=usable)
+            if not active.any():
+                if not queue:
+                    continue
+                if self.chaos is not None:
+                    self.chaos.tick()
+                idle_iters += 1
+                if idle_iters > _IDLE_CAP:
+                    raise RuntimeError(
+                        f"scheduler made no progress for {_IDLE_CAP} rounds "
+                        f"({len(queue)} queued, {usable} usable slots)")
+                continue
+            idle_iters = 0
             rounds += 1
             occupied_steps += float(active.sum()) / n
             tok_pre = st["tok"]                # pending tokens entering round
-            st["tok"], st["live"], full, accept = eng._spec(
-                eng.params, st["tok"], st["live"], jnp.asarray(clen.copy()))
+            st["tok"], st["live"], full, accept = self._dispatch(
+                eng._spec, (eng.params, st["tok"], st["live"],
+                            jnp.asarray(clen.copy())))
             # the ONE host transfer of this round (up to γ+1 tokens/slot)
             tok_host, full_host, acc_host = jax.device_get(
                 (tok_pre, full, accept))
@@ -337,13 +677,15 @@ class SlotScheduler:
                 # (full_host[i, :m] — identical to the drafts by acceptance);
                 # the correction full_host[i, m] stays on device as the next
                 # pending token
-                emit = [int(tok_host[i, 0])] +                     [int(t) for t in full_host[i, :m_i]]
+                emit = [int(tok_host[i, 0])] + \
+                    [int(t) for t in full_host[i, :m_i]]
                 if req.t_first_token == 0.0:
                     req.t_first_token = now
                 done = False
                 for t in emit:
                     out[req.rid].append(t)
                     gen_tokens += 1
+                    tier_stats[req.quality]["served_tokens"] += 1
                     budget[i] -= 1
                     if t == sc.eos_id or budget[i] <= 0:
                         done = True
@@ -354,18 +696,27 @@ class SlotScheduler:
                     req.new_tokens = len(out[req.rid])
                     active[i] = False
                     st["slot_req"][i] = None
+            if self.chaos is not None:
+                self.chaos.tick()
+            now2 = time.perf_counter()
+            if t_prev is not None:
+                wd.observe(rounds, now2 - t_prev)
+            t_prev = now2
         wall = time.perf_counter() - t_run0
+        extra = self._qos_extra(requests, tier_stats, None, st, queue,
+                                dispatches=rounds, usable_min=usable_min,
+                                retries_before=retries0)
+        extra.update({
+            "spec_terms": sc.spec_terms,
+            "spec_lookahead": gamma,
+            "spec_rounds": rounds,
+            "draft_tokens": drafted,
+            "accepted_draft_tokens": accepted,
+            "acceptance_rate": accepted / drafted if drafted else 0.0,
+            "tokens_per_round": gen_tokens / rounds if rounds else 0.0,
+        })
         self._finish_stats(
             requests, gen_tokens=gen_tokens, steps=rounds,
             occupied_steps=occupied_steps, wall=wall,
-            prefill_s=st["prefill_s"],
-            extra={
-                "spec_terms": sc.spec_terms,
-                "spec_lookahead": gamma,
-                "spec_rounds": rounds,
-                "draft_tokens": drafted,
-                "accepted_draft_tokens": accepted,
-                "acceptance_rate": accepted / drafted if drafted else 0.0,
-                "tokens_per_round": gen_tokens / rounds if rounds else 0.0,
-            })
+            prefill_s=st["prefill_s"], extra=extra)
         return out

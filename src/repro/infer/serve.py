@@ -52,6 +52,7 @@ import numpy as np
 from repro.configs.base import ArchConfig
 from repro.core import ptq as PTQ
 from repro.core.policy import ExpansionPolicy
+from repro.infer import qos as Q
 from repro.infer.scheduler import Request, SlotScheduler
 from repro.models import model as M
 from repro.models.layers import FP, QuantContext
@@ -77,6 +78,18 @@ class ServeConfig:
     # full series — greedy output stays token-identical to non-speculative
     spec_terms: int = 0           # 0 = off; k >= 1 = k-term draft model
     spec_lookahead: int = 4       # draft tokens per round (gamma)
+    # -- QoS / robustness (DESIGN.md §11) --------------------------------
+    # statically truncate the WHOLE engine to the first k series terms
+    # (Theorem 1 prefix = a coherent lower-bit deployment of one artifact);
+    # None = full series.  Per-request tiers are relative to this context.
+    term_budget: Optional[int] = None
+    # quality-tier ladder served by add_request(quality=...): ((name,
+    # term_budget), ...); None = the default (("k2", 2), ("k1", 1)) ladder
+    # when the model is series-expanded.  "full" is always available.
+    tier_budgets: Optional[Any] = None
+    max_queue: int = 0            # >0: add_request backpressure bound
+    degrade: Q.DegradeConfig = Q.DegradeConfig()  # load-adaptive degradation
+    chaos: Optional[Q.ChaosConfig] = None         # fault injection (CI/chaos)
 
 
 def _sample_logits(logits: jnp.ndarray, key, temperature: float) -> jnp.ndarray:
@@ -109,22 +122,69 @@ def make_serve_step(cfg: ArchConfig, qc: QuantContext = FP):
     return serve_step
 
 
-def make_decode_sample_step(cfg: ArchConfig, qc: QuantContext = FP):
+def _select_rows(new, old, mask, axis):
+    """Row-wise merge: keep ``new`` where ``mask`` (over batch ``axis``)."""
+    shape = [1] * new.ndim
+    shape[axis] = mask.shape[0]
+    return jnp.where(mask.reshape(shape), new, old)
+
+
+def make_decode_sample_step(cfg: ArchConfig, qc: QuantContext = FP,
+                            masked: bool = False):
     """Fused decode + sample + EOS-mask step (all on device).
 
     step(params, tok (B,1), caches, cache_len () or (B,), key, alive (B,),
-         eos_id (), temperature ()) -> (next_tok, caches', key', alive').
+         eos_id (), temperature ()[, row_mask (B,)])
+        -> (next_tok, caches', key', alive').
 
     ``alive`` accumulates ``tok != eos`` so the engine's host loop needs a
     single device transfer per step; ``eos_id`` and ``temperature`` are
-    dynamic operands so reconfiguring either does not retrace."""
+    dynamic operands so reconfiguring either does not retrace.
+
+    ``masked=True`` adds a ``row_mask`` operand (also dynamic — membership
+    changes never retrace): only masked rows commit their new token / alive
+    bit / cache writes, unmasked rows keep their inputs bit-for-bit.  This
+    is how QoS tiers share one slot pool: each scheduler iteration issues
+    one masked dispatch per distinct term budget, and every slot's state
+    advances under exactly its own tier's ``QuantContext.term_budget``
+    (the ``jnp.where`` merges fuse into the cache scatter — no extra cache
+    materialization).  Stage cache leaves are stacked ``(L, B, ...)``
+    (batch axis 1), tail leaves ``(B, ...)`` (axis 0)."""
     def step(params, tok, caches, cache_len, key, alive, eos_id, temperature):
         logits, caches = M.decode_step(params, tok, caches, cache_len, cfg, qc)
         key, sub = jax.random.split(key)
         nxt = sample_logits_dynamic(logits, sub, temperature)
         alive = jnp.logical_and(alive, nxt[:, 0] != eos_id)
         return nxt, caches, key, alive
-    return step
+
+    if not masked:
+        return step
+
+    def masked_step(params, tok, caches, cache_len, key, alive, eos_id,
+                    temperature, row_mask):
+        nxt, new_caches, key, alive_new = step(
+            params, tok, caches, cache_len, key, alive, eos_id, temperature)
+        nxt = jnp.where(row_mask[:, None], nxt, tok)
+        alive_out = jnp.where(row_mask, alive_new, alive)
+        merged = {
+            "stages": jax.tree_util.tree_map(
+                lambda nw, old: _select_rows(nw, old, row_mask, 1),
+                new_caches["stages"], caches["stages"]),
+            "tail": jax.tree_util.tree_map(
+                lambda nw, old: _select_rows(nw, old, row_mask, 0),
+                new_caches["tail"], caches["tail"]),
+        }
+        return nxt, merged, key, alive_out
+    return masked_step
+
+
+def _has_expanded(params) -> bool:
+    """True when the tree carries ExpandedTensor leaves (a series term axis
+    exists to truncate — the precondition for QoS tiers / term budgets)."""
+    from repro.core.expansion import ExpandedTensor
+    return any(isinstance(l, ExpandedTensor)
+               for l in jax.tree_util.tree_leaves(
+                   params, is_leaf=lambda l: isinstance(l, ExpandedTensor)))
 
 
 def make_spec_decode_step(cfg: ArchConfig, qc: QuantContext,
@@ -254,6 +314,23 @@ class Engine:
                 self.qc = dataclasses.replace(self.qc, mesh=mesh,
                                               placement="term")
         self.params = params
+        self.expanded = _has_expanded(params)
+        self._validate_qos(serve_cfg)
+        if serve_cfg.term_budget is not None:
+            # static whole-engine truncation: by Theorem 1 the k-term prefix
+            # is itself a coherent lower-bit model, so the engine simply
+            # serves under a tighter QuantContext; per-request tiers below
+            # are resolved RELATIVE to this context (they can only tighten)
+            self.qc = dataclasses.replace(self.qc,
+                                          term_budget=serve_cfg.term_budget)
+        if serve_cfg.scheduler != "slots" or serve_cfg.spec_terms > 0:
+            # tiers ride the masked slots dispatch loop; the grouped baseline
+            # and the speculative loop (which spends the term axis on drafts)
+            # serve the full context only
+            self.tiers = {"full": Q.TierSpec("full", None, None)}
+        else:
+            self.tiers = Q.resolve_tiers(serve_cfg.tier_budgets,
+                                         expanded=self.expanded)
         self._queue: List[Request] = []
         self._next_id = 0
         self.last_run_stats: Dict[str, Any] = {}
@@ -267,7 +344,14 @@ class Engine:
                                                 s_max=s_max, lengths=lengths))
         self._scatter = jax.jit(M.scatter_cache_into_slot, donate_argnums=(0,))
         self._decode = jax.jit(
-            make_decode_sample_step(cfg, self.qc), donate_argnums=(2,))
+            make_decode_sample_step(cfg, self.qc, masked=True),
+            donate_argnums=(2,))
+        # per-term-budget jitted callables (QoS tiers): budget None = the
+        # engine's own context.  Populated lazily — an engine that never
+        # serves a degraded tier never traces a truncated step.
+        self._decode_by_budget: Dict[Optional[int], Any] = {None: self._decode}
+        self._prefill_by_budget: Dict[Optional[int], Any] = {
+            None: self._prefill_slot}
         self._spec = None
         if serve_cfg.spec_terms > 0:
             self._validate_spec(serve_cfg)
@@ -306,14 +390,134 @@ class Engine:
                 f"window of at least lookahead+1 (got window={self.cfg.window}): "
                 f"a verify chunk must fit the ring without self-collision")
 
+    def _validate_qos(self, sc: ServeConfig) -> None:
+        """QoS knob preconditions, checked at construction (capacity-like:
+        fixed per engine, and a late failure would strand admitted work)."""
+        if sc.term_budget is not None:
+            if sc.term_budget < 1:
+                raise ValueError(
+                    f"term_budget must be >= 1, got {sc.term_budget}")
+            if not self.expanded:
+                raise ValueError(
+                    "term_budget truncates the series term axis, but these "
+                    "params carry no ExpandedTensor leaves (FP or baseline-"
+                    "PTQ model) — there is no term axis to truncate")
+        if sc.tier_budgets is not None:
+            if sc.scheduler != "slots":
+                raise ValueError(
+                    "QoS tiers require scheduler='slots' (the grouped legacy "
+                    "path is the bit-exactness baseline and serves 'full' "
+                    "only)")
+            if sc.spec_terms > 0:
+                raise ValueError(
+                    "QoS tiers and self-speculative decoding are mutually "
+                    "exclusive: both spend the series term axis (drafts "
+                    "truncate it already) — pick one per engine")
+            if not self.expanded:
+                raise ValueError(
+                    "tier_budgets names truncated-series tiers, but these "
+                    "params carry no ExpandedTensor leaves (FP or baseline-"
+                    "PTQ model) — only quality='full' is servable")
+        if sc.max_queue < 0:
+            raise ValueError(f"max_queue must be >= 0, got {sc.max_queue}")
+
+    # -- per-tier QuantContexts / jitted callables -----------------------
+    def _norm_budget(self, budget: Optional[int]) -> Optional[int]:
+        """Canonical per-dispatch budget: tightened to the engine's own
+        static ``term_budget`` and collapsed to ``None`` when it equals the
+        full context — so equal-context tiers share one jitted step (and
+        the jit cache stays one entry per *distinct* truncation)."""
+        if budget is None:
+            return None
+        b = int(budget)
+        tb = self.qc.term_budget
+        if tb is not None:
+            b = min(b, tb)
+            if b >= tb:
+                return None
+        return b
+
+    def _qc_for(self, budget: Optional[int]) -> QuantContext:
+        budget = self._norm_budget(budget)
+        if budget is None:
+            return self.qc
+        return dataclasses.replace(self.qc, term_budget=budget)
+
+    def _decode_for(self, budget: Optional[int]):
+        """The masked fused decode step under ``term_budget=budget`` —
+        identical construction to ``self._decode`` (only the QuantContext
+        differs), so a tier's output is bit-identical to an engine built
+        statically on that truncated context."""
+        budget = self._norm_budget(budget)
+        if budget is None:
+            # Live attribute, not the dict entry: tests (and the watchdog
+            # harness) monkeypatch ``eng._decode`` to observe dispatches.
+            return self._decode
+        if budget not in self._decode_by_budget:
+            self._decode_by_budget[budget] = jax.jit(
+                make_decode_sample_step(self.cfg, self._qc_for(budget),
+                                        masked=True),
+                donate_argnums=(2,))
+        return self._decode_by_budget[budget]
+
+    def _prefill_slot_for(self, budget: Optional[int]):
+        """Length-masked prefill under a tier's term budget: a degraded
+        request's prompt is processed by the same truncated series that
+        will decode it (required for the static-truncation bit-identity)."""
+        budget = self._norm_budget(budget)
+        if budget is None:
+            return self._prefill_slot
+        if budget not in self._prefill_by_budget:
+            qc = self._qc_for(budget)
+            cfg, s_max = self.cfg, self.sc.max_seq
+            self._prefill_by_budget[budget] = jax.jit(
+                lambda p, batch, lengths: M.prefill(p, batch, cfg, qc,
+                                                    s_max=s_max,
+                                                    lengths=lengths))
+        return self._prefill_by_budget[budget]
+
     @property
     def spec_enabled(self) -> bool:
         return self._spec is not None
 
+    @property
+    def series_terms(self) -> Optional[int]:
+        """Series terms the engine's own (full) context runs: the largest
+        ExpandedTensor term count in the bound params, tightened by a
+        static ``term_budget``.  ``None`` for FP/baseline-PTQ params (no
+        term axis) — QoS metrics then report 0 effective terms."""
+        if not self.expanded:
+            return None
+        from repro.core.expansion import ExpandedTensor
+        t = max(l.num_terms for l in jax.tree_util.tree_leaves(
+                    self.params,
+                    is_leaf=lambda l: isinstance(l, ExpandedTensor))
+                if isinstance(l, ExpandedTensor))
+        if self.qc.term_budget is not None:
+            t = min(t, self.qc.term_budget)
+        return int(t)
+
     # ------------------------------------------------------------------
     def add_request(self, tokens: Sequence[int],
-                    max_new_tokens: Optional[int] = None) -> int:
-        """Queue a prompt; returns the request id.
+                    max_new_tokens: Optional[int] = None, *,
+                    quality: str = "full",
+                    deadline_s: Optional[float] = None,
+                    priority: int = 0):
+        """Queue a prompt; returns the request id, or a typed
+        :class:`repro.infer.qos.Rejection` when the engine is saturated.
+
+        Programmer errors (malformed prompt, impossible budget, a quality
+        tier this engine does not serve) raise ``ValueError``; *load*
+        conditions (queue at ``max_queue``, no usable slot under a squeezed
+        HBM budget, an already-hopeless deadline) return a ``Rejection``
+        result the caller can match on and retry
+        (``repro.launch.common.submit_with_backoff``).
+
+        ``quality`` picks the request's tier (``engine.tiers``); ``full``
+        is always served at the engine's own context.  ``deadline_s`` is a
+        wall-clock budget from *now*: a request that cannot finish in time
+        is cancelled mid-run and its slot recycled.  Higher ``priority``
+        admits first (FCFS within a priority level).
 
         Validates capacity here (a proper error, not an ``assert`` that
         vanishes under ``python -O``): the prompt plus its token budget —
@@ -331,11 +535,42 @@ class Engine:
                 f"request rejected: prompt len {len(toks)} + max_new_tokens "
                 f"{max_new_tokens if max_new_tokens is not None else 1} exceeds "
                 f"ServeConfig.max_seq={self.sc.max_seq}")
+        if quality not in self.tiers:
+            raise ValueError(
+                f"unknown quality {quality!r}: this engine serves "
+                f"{sorted(self.tiers)} (degraded tiers need an expanded "
+                f"model on the plain slots scheduler)")
+        if deadline_s is not None and self.sc.scheduler != "slots":
+            raise ValueError(
+                "deadline_s requires scheduler='slots' (the grouped path "
+                "drains groups to completion and cannot cancel mid-run)")
+        now = time.perf_counter()
+        if deadline_s is not None and deadline_s <= 0:
+            return Q.Rejection(
+                Q.RejectReason.DEADLINE_INFEASIBLE,
+                detail=f"deadline_s={deadline_s} already expired",
+                retryable=False, retry_after_s=0.0)
+        if self.sc.max_queue > 0 and len(self._queue) >= self.sc.max_queue:
+            return Q.Rejection(
+                Q.RejectReason.CAPACITY,
+                detail=f"queue at ServeConfig.max_queue={self.sc.max_queue}")
+        if self.sc.scheduler == "slots" and self.sc.chaos is not None:
+            # a chaos-squeezed HBM budget can leave zero usable slots: new
+            # admissions are shed (typed + retryable) while in-flight work
+            # rides out the squeeze under degraded budgets
+            if self._slots is None:
+                self._slots = SlotScheduler(self)
+            if self._slots.usable_slots_now() == 0:
+                return Q.Rejection(
+                    Q.RejectReason.HBM,
+                    detail="no usable slot under the effective HBM budget")
         rid = self._next_id
         self._next_id += 1
-        self._queue.append(Request(rid=rid, tokens=toks,
-                                   max_new_tokens=max_new_tokens,
-                                   t_enqueue=time.perf_counter()))
+        self._queue.append(Request(
+            rid=rid, tokens=toks, max_new_tokens=max_new_tokens,
+            t_enqueue=now, quality=quality, priority=priority,
+            deadline_s=deadline_s,
+            deadline=(now + deadline_s) if deadline_s is not None else None))
         return rid
 
     def run(self, max_new_tokens: int = 16) -> Dict[int, List[int]]:
@@ -401,6 +636,7 @@ class Engine:
         for group in groups:
             prompts = np.array([req.tokens for req in group], np.int32)
             b, s = prompts.shape
+            mask_all = jnp.ones((b,), bool)   # every row commits (no tiers)
             budgets = np.array([req.max_new_tokens if req.max_new_tokens is not None
                                 else max_new_tokens for req in group])
             t_admit = time.perf_counter()
@@ -430,7 +666,8 @@ class Engine:
                 steps_total += 1
                 occupied_steps += float(alive_host.sum()) / capacity
                 tok, caches, key, alive = self._decode(
-                    self.params, tok, caches, clen, key, alive, eos, temperature)
+                    self.params, tok, caches, clen, key, alive, eos,
+                    temperature, mask_all)
                 clen = clen + 1
             t_done = time.perf_counter()
             for req, g in zip(group, gen):
@@ -455,8 +692,10 @@ class Engine:
             "wall_seconds": wall,
             "prefill_seconds": prefill_s,
             "decode_seconds": decode_s,
-            "decode_tokens_per_sec": gen_tokens / decode_s,
-            "tokens_per_sec": gen_tokens / wall if wall > 0 else 0.0,
+            # zero/near-zero durations map to 0.0 (tiny CI runs must emit
+            # finite, comparable metrics JSON — never inf/NaN)
+            "decode_tokens_per_sec": Q.safe_rate(gen_tokens, decode_s),
+            "tokens_per_sec": Q.safe_rate(gen_tokens, wall),
         }
         self._queue.clear()
         return out

@@ -5,15 +5,19 @@ previously each hand-rolled the same argparse → :class:`ServeConfig` →
 mesh wiring; this module is the single builder both use (and the one place
 the flags are defined — documented in ``docs/api.md``):
 
-* :func:`add_serve_args` — the scheduler/capacity/mesh flag set;
+* :func:`add_serve_args` — the scheduler/capacity/mesh/QoS/chaos flag set;
 * :func:`serve_config_from_args` — flags → ``ServeConfig``;
 * :func:`mesh_from_args` — ``--mesh``/``--placement`` → a 1-D serving mesh
   (or ``(None, "replicated")``), validating fake-device counts early with
-  an actionable ``XLA_FLAGS`` hint.
+  an actionable ``XLA_FLAGS`` hint;
+* :func:`submit_with_backoff` — the client half of typed backpressure:
+  retries retryable :class:`~repro.infer.qos.Rejection` results with
+  bounded exponential backoff.
 """
 from __future__ import annotations
 
 import argparse
+import time
 from typing import Optional, Tuple
 
 
@@ -46,6 +50,43 @@ def add_serve_args(ap: argparse.ArgumentParser, *,
                          "--scheduler slots and an expanded (fpxint) model")
     ap.add_argument("--spec-lookahead", type=int, default=4,
                     help="draft tokens per speculative round (gamma)")
+    ap.add_argument("--term-budget", type=int, default=0,
+                    help="statically truncate the served series to the "
+                         "first K terms (Theorem 1 prefix coherence); "
+                         "0 = the artifact's full series")
+    ap.add_argument("--tiers", default="",
+                    help="QoS tier ladder 'name:budget,...' (e.g. "
+                         "'k2:2,k1:1'); '' = the engine's default ladder "
+                         "(expanded slot engines), 'none' = quality='full' "
+                         "only (DESIGN.md §11)")
+    ap.add_argument("--max-queue", type=int, default=0,
+                    help="bounded admission queue: a full queue returns a "
+                         "retryable CAPACITY Rejection instead of growing "
+                         "without bound (0 = unbounded)")
+    ap.add_argument("--no-degrade", action="store_true",
+                    help="disable load-adaptive term-budget degradation "
+                         "(degradable tiers then always run their nominal "
+                         "budget)")
+    ap.add_argument("--chaos", action="store_true",
+                    help="enable the seeded fault-injection harness "
+                         "(deterministic latency spikes / transient dispatch "
+                         "failures / HBM squeezes; see --chaos-*)")
+    ap.add_argument("--chaos-seed", type=int, default=0,
+                    help="chaos RNG seed (same seed = same fault schedule)")
+    ap.add_argument("--chaos-latency-p", type=float, default=0.0,
+                    help="per-dispatch probability of an injected latency "
+                         "spike")
+    ap.add_argument("--chaos-latency-s", type=float, default=0.02,
+                    help="injected latency spike duration (seconds)")
+    ap.add_argument("--chaos-fail-p", type=float, default=0.0,
+                    help="per-dispatch probability of a transient "
+                         "ChaosFailure (retried up to --chaos-max-retries)")
+    ap.add_argument("--chaos-max-retries", type=int, default=3,
+                    help="dispatch retries before a ChaosFailure is fatal")
+    ap.add_argument("--chaos-squeeze", default="",
+                    help="artificial HBM-budget squeeze 'start:steps:frac' "
+                         "in scheduler rounds (e.g. '4:6:0.5' halves the "
+                         "effective budget for rounds 4..9)")
     ap.add_argument("--mesh", type=int, default=0,
                     help="serve over the first N local devices (0 = single "
                          "device unless --placement is sharded, then all)")
@@ -58,9 +99,55 @@ def add_serve_args(ap: argparse.ArgumentParser, *,
     return ap
 
 
+def _parse_tiers(spec: str):
+    """``--tiers`` → ``ServeConfig.tier_budgets``: ``''`` = None (engine
+    default ladder), ``'none'`` = () (full only), else ``'name:budget,...'``."""
+    s = spec.strip()
+    if not s:
+        return None
+    if s.lower() == "none":
+        return ()
+    out = []
+    for part in s.split(","):
+        try:
+            name, budget = part.split(":")
+            out.append((name.strip(), int(budget)))
+        except ValueError:
+            raise SystemExit(
+                f"--tiers expects 'name:budget,...' (e.g. 'k2:2,k1:1'); "
+                f"could not parse {part!r}") from None
+    return tuple(out)
+
+
+def _chaos_from_args(args):
+    """``--chaos*`` flags → :class:`repro.infer.qos.ChaosConfig` (or None)."""
+    if not getattr(args, "chaos", False):
+        return None
+    from repro.infer.qos import ChaosConfig
+
+    start, steps, frac = -1, 0, 0.5
+    if args.chaos_squeeze:
+        try:
+            s_start, s_steps, s_frac = args.chaos_squeeze.split(":")
+            start, steps, frac = int(s_start), int(s_steps), float(s_frac)
+        except ValueError:
+            raise SystemExit(
+                f"--chaos-squeeze expects 'start:steps:frac' (e.g. "
+                f"'4:6:0.5'); got {args.chaos_squeeze!r}") from None
+    return ChaosConfig(seed=args.chaos_seed,
+                       latency_p=args.chaos_latency_p,
+                       latency_s=args.chaos_latency_s,
+                       fail_p=args.chaos_fail_p,
+                       max_retries=args.chaos_max_retries,
+                       hbm_squeeze_start=start,
+                       hbm_squeeze_steps=steps,
+                       hbm_squeeze_frac=frac)
+
+
 def serve_config_from_args(args):
     """Build the :class:`repro.infer.serve.ServeConfig` the shared flags
     describe (capacity knobs are fixed at engine construction)."""
+    from repro.infer.qos import DegradeConfig
     from repro.infer.serve import ServeConfig
 
     return ServeConfig(
@@ -72,7 +159,37 @@ def serve_config_from_args(args):
         hbm_budget_bytes=args.hbm_budget,
         spec_terms=args.spec_terms,
         spec_lookahead=args.spec_lookahead,
+        term_budget=args.term_budget or None,
+        tier_budgets=_parse_tiers(args.tiers),
+        max_queue=args.max_queue,
+        degrade=DegradeConfig(enabled=not args.no_degrade),
+        chaos=_chaos_from_args(args),
     )
+
+
+def submit_with_backoff(engine, tokens, *, max_attempts: int = 5,
+                        max_delay_s: float = 1.0, sleep=time.sleep,
+                        **request_kw):
+    """Client half of the typed backpressure contract: submit a request,
+    retrying retryable :class:`~repro.infer.qos.Rejection` results
+    (CAPACITY / HBM) with bounded exponential backoff.
+
+    Returns the request id on success, or the last ``Rejection`` once
+    attempts are exhausted / the rejection is non-retryable
+    (DEADLINE_INFEASIBLE) — callers branch on ``isinstance(..., Rejection)``
+    exactly as for a plain ``add_request``.  ``sleep`` is injectable so
+    tests (and the chaos harness) run without wall-clock waits."""
+    from repro.infer.qos import Rejection
+
+    res = None
+    for attempt in range(max(1, int(max_attempts))):
+        res = engine.add_request(tokens, **request_kw)
+        if not isinstance(res, Rejection) or not res.retryable:
+            return res
+        if attempt + 1 < max_attempts:
+            sleep(min(max(res.retry_after_s, 0.0) * (2 ** attempt),
+                      max_delay_s))
+    return res
 
 
 def mesh_from_args(args) -> Tuple[Optional[object], str]:

@@ -40,8 +40,9 @@ from repro.api import QuantArtifact, QuantRecipe, Runtime, list_methods
 from repro.configs.base import ARCH_IDS, get_arch
 from repro.core.policy import get_policy
 from repro.infer.serve import Engine
+from repro.infer.qos import Rejection
 from repro.launch.common import (add_serve_args, mesh_from_args,
-                                 serve_config_from_args)
+                                 serve_config_from_args, submit_with_backoff)
 from repro.models import model as M
 
 
@@ -66,6 +67,14 @@ def main(argv=None):
                     help="draw prompt lengths in [4, --prompt-len] instead of "
                          "a fixed length (exercises continuous batching)")
     ap.add_argument("--seed", type=int, default=0)
+    ap.add_argument("--quality", default="full",
+                    help="QoS tier for the synthetic requests; 'mix' "
+                         "round-robins the engine's tier table (DESIGN.md "
+                         "§11)")
+    ap.add_argument("--deadline-s", type=float, default=0.0,
+                    help="per-request deadline in seconds (0 = none); "
+                         "expired requests are cancelled and their slots "
+                         "recycled mid-run")
     add_serve_args(ap, max_batch_default=0)   # 0 -> --requests below
     args = ap.parse_args(argv)
     args.max_batch = args.max_batch or args.requests
@@ -118,10 +127,17 @@ def main(argv=None):
               f"backend={args.backend}, placement={placement})")
 
     rng = np.random.default_rng(args.seed)
-    for _ in range(args.requests):
+    qualities = (list(eng.tiers) if args.quality == "mix"
+                 else [args.quality])
+    for i in range(args.requests):
         length = (int(rng.integers(4, args.prompt_len + 1))
                   if args.mixed_lengths else args.prompt_len)
-        eng.add_request(rng.integers(0, cfg.vocab_size, length).tolist())
+        res = submit_with_backoff(
+            eng, rng.integers(0, cfg.vocab_size, length).tolist(),
+            quality=qualities[i % len(qualities)],
+            deadline_s=args.deadline_s or None)
+        if isinstance(res, Rejection):
+            print(f"req {i} rejected: {res.reason.name} {res.detail}")
     t0 = time.perf_counter()
     out = eng.run(max_new_tokens=args.max_new)
     dt = time.perf_counter() - t0
@@ -141,6 +157,20 @@ def main(argv=None):
                   f"acceptance={st['acceptance_rate']:.2f} "
                   f"tokens/round={st['tokens_per_round']:.2f} "
                   f"({st['spec_rounds']} rounds)")
+        for tier, ts in sorted(st.get("tiers", {}).items()):
+            print(f"tier {tier}: {ts['requests']} reqs "
+                  f"{ts['served_tokens']} tok "
+                  f"terms={ts['mean_effective_terms']:.2f}"
+                  f"/{ts['nominal_terms']} "
+                  f"degraded={ts['degraded_step_fraction']:.2f} "
+                  f"deadline_hit={ts['deadline_hit_rate']:.2f}")
+        if st.get("qos", {}).get("degrade_transitions", 0):
+            q = st["qos"]
+            print(f"degradation: {q['degraded_rounds']} rounds over "
+                  f"{q['degrade_transitions']} transitions "
+                  f"(reasons={q['degrade_reasons']})")
+        if "chaos" in st:
+            print(f"chaos: {st['chaos']} retries={st['dispatch_retries']}")
         ttfts = [m["ttft_s"] for m in eng.last_request_metrics.values()]
         if ttfts:
             print(f"ttft mean={np.mean(ttfts)*1e3:.1f}ms "

@@ -1,0 +1,381 @@
+"""Serving robustness layer (DESIGN.md §11): QoS tiers, load-adaptive
+term-budget degradation, deadlines/backpressure, and the chaos harness.
+
+Contracts tested here:
+
+* ``quality="full"`` through a tiered engine is token-identical to the
+  pre-QoS engine (grouped bit-exactness baseline, batch 1);
+* a degraded tier is bit-identical to an engine statically built on the
+  truncated context (``ServeConfig(term_budget=k)``) — Theorem 1's prefix
+  coherence served live, for the attn and recurrent arch classes;
+* mixed-tier pools serve every request, leak no slots, and report per-tier
+  metrics (nominal vs effective terms, degraded-step fraction);
+* deadlines cancel queued and mid-run requests and recycle their slots, in
+  BOTH plain and speculative modes; validation failures leave the queue
+  intact in both modes;
+* backpressure is typed (``Rejection``: CAPACITY retryable,
+  DEADLINE_INFEASIBLE not) and ``submit_with_backoff`` honors it with
+  bounded sleeps;
+* chaos injection (latency spikes, transient failures, HBM squeezes) is
+  seeded-deterministic, never hangs, never leaks slots; with degradation
+  off the chaotic token streams are bit-identical to a calm run, and with
+  degradation on a squeeze degrades (instead of rejecting) then recovers;
+* rate metrics are finite at zero/near-zero durations.
+"""
+import dataclasses
+
+import jax
+import jax.numpy as jnp
+import numpy as np
+import pytest
+
+from repro.configs.base import get_arch
+from repro.api import QuantRecipe, quantize
+from repro.core.policy import ExpansionPolicy
+from repro.infer import qos as Q
+from repro.infer.scheduler import Request, SlotScheduler
+from repro.infer.serve import Engine, ServeConfig
+from repro.launch.common import submit_with_backoff
+from repro.models import model as M
+
+# weight-only with THREE weight terms: k=1/2 are genuine truncations
+W4A16_T3 = ExpansionPolicy(w_bits=4, a_bits=16, w_terms=3, a_terms=0)
+
+TIERS = (("k2", 2), ("k1", 1))
+NO_DEGRADE = Q.DegradeConfig(enabled=False)
+
+
+def _artifact(arch):
+    cfg = get_arch(arch, smoke=True)
+    params = M.init_params(jax.random.PRNGKey(0), cfg)
+    return cfg, quantize(params, QuantRecipe(method="fpxint",
+                                             policy=W4A16_T3))
+
+
+@pytest.fixture(scope="module")
+def setup():
+    return _artifact("qwen2_1_5b")
+
+
+def _prompts(cfg, lengths, seed=0):
+    r = np.random.default_rng(seed)
+    return [r.integers(0, cfg.vocab_size, l).tolist() for l in lengths]
+
+
+def _tiered_cfg(**kw):
+    base = dict(max_seq=48, max_slots=2, tier_budgets=TIERS,
+                degrade=NO_DEGRADE)
+    base.update(kw)
+    return ServeConfig(**base)
+
+
+# ---------------------------------------------------------------------------
+# exactness: full tier == pre-QoS engine; degraded tier == static truncation
+# ---------------------------------------------------------------------------
+def test_full_tier_token_identical_to_pre_qos(setup):
+    """quality='full' through a tiered engine reproduces the grouped
+    bit-exactness baseline per request — the QoS layer is a no-op for the
+    full tier."""
+    cfg, art = setup
+    prompts = _prompts(cfg, [5, 9, 13, 7])
+    eng = Engine(cfg, artifact=art, serve_cfg=_tiered_cfg())
+    ids = [eng.add_request(p) for p in prompts]
+    out = eng.run(max_new_tokens=6)
+    for rid, p in zip(ids, prompts):
+        ref = Engine(cfg, artifact=art, serve_cfg=ServeConfig(
+            max_seq=48, max_batch=1, scheduler="grouped"))
+        rr = ref.add_request(p)
+        assert out[rid] == ref.run(max_new_tokens=6)[rr]
+
+
+@pytest.mark.parametrize("arch", ["qwen2_1_5b", "recurrentgemma_9b"])
+@pytest.mark.parametrize("k", [2, 1])
+def test_degraded_tier_bit_identical_to_static_truncation(arch, k):
+    """A k-term tier's stream is bit-identical to an engine statically
+    truncated to k terms (ServeConfig(term_budget=k)) — for a full-attn
+    arch and a local-ring+rglru recurrent arch."""
+    cfg, art = _artifact(arch)
+    prompts = _prompts(cfg, [6, 10, 8])
+    tiered = Engine(cfg, artifact=art, serve_cfg=_tiered_cfg())
+    ids = [tiered.add_request(p, quality=f"k{k}") for p in prompts]
+    out = tiered.run(max_new_tokens=5)
+    static = Engine(cfg, artifact=art, serve_cfg=ServeConfig(
+        max_seq=48, max_slots=2, term_budget=k, degrade=NO_DEGRADE))
+    sids = [static.add_request(p) for p in prompts]
+    sout = static.run(max_new_tokens=5)
+    for rid, sid in zip(ids, sids):
+        assert out[rid] == sout[sid]
+
+
+def test_mixed_tiers_served_with_per_tier_metrics(setup):
+    """A mixed full/k2/k1 pool serves every request to its budget, leaks
+    nothing, and reports per-tier nominal vs effective terms."""
+    cfg, art = setup
+    prompts = _prompts(cfg, [5, 9, 13, 9, 3, 7])
+    eng = Engine(cfg, artifact=art, serve_cfg=_tiered_cfg(max_slots=3))
+    names = ["full", "k2", "k1"]
+    ids = [eng.add_request(p, quality=names[i % 3])
+           for i, p in enumerate(prompts)]
+    out = eng.run(max_new_tokens=5)
+    assert set(out) == set(ids)
+    assert all(len(v) == 5 for v in out.values())
+    st = eng.last_run_stats
+    assert st["slots_leaked"] == 0 and st["queue_leftover"] == 0
+    tiers = st["tiers"]
+    assert set(tiers) == {"full", "k2", "k1"}
+    assert tiers["full"]["nominal_terms"] == 3
+    assert tiers["k2"]["nominal_terms"] == 2
+    assert tiers["k1"]["nominal_terms"] == 1
+    for name in names:    # degradation off: effective == nominal
+        assert tiers[name]["mean_effective_terms"] == \
+            pytest.approx(tiers[name]["nominal_terms"])
+        assert tiers[name]["degraded_step_fraction"] == 0.0
+        assert tiers[name]["served_tokens"] == 2 * 5
+    # mixed budgets need one dispatch per distinct budget per step
+    assert st["dispatches"] > st["decode_steps"]
+
+
+def test_single_tier_workload_one_dispatch_per_step(setup):
+    """An all-'full' workload collapses to one dispatch per decode step —
+    the tier machinery costs nothing when unused."""
+    cfg, art = setup
+    eng = Engine(cfg, artifact=art, serve_cfg=_tiered_cfg())
+    for p in _prompts(cfg, [6, 6]):
+        eng.add_request(p)
+    eng.run(max_new_tokens=4)
+    st = eng.last_run_stats
+    assert st["dispatches"] == st["decode_steps"]
+
+
+# ---------------------------------------------------------------------------
+# deadlines / cancellation / queue integrity — plain AND speculative modes
+# ---------------------------------------------------------------------------
+@pytest.mark.parametrize("spec_terms", [0, 2])
+def test_deadline_cancels_and_recycles(setup, spec_terms):
+    """An expired deadline cancels the request (queued or mid-run), frees
+    its slot for remaining work, and reports deadline metrics — on both the
+    plain and the speculative scheduler."""
+    cfg, art = setup
+    sc = ServeConfig(max_seq=48, max_slots=1, spec_terms=spec_terms,
+                     degrade=NO_DEGRADE)
+    eng = Engine(cfg, artifact=art, serve_cfg=sc)
+    p1, p2 = _prompts(cfg, [8, 8])
+    rid_dead = eng.add_request(p1, deadline_s=1e-6)   # expires immediately
+    rid_ok = eng.add_request(p2)
+    out = eng.run(max_new_tokens=4)
+    assert out[rid_dead] == []           # cancelled before its first token
+    assert len(out[rid_ok]) == 4
+    m = eng.last_request_metrics
+    assert m[rid_dead]["status"] == "cancelled"
+    assert m[rid_dead]["deadline_missed"] is True
+    assert m[rid_ok]["status"] == "ok"
+    st = eng.last_run_stats
+    assert st["cancelled"] == 1
+    assert st["slots_leaked"] == 0 and st["queue_leftover"] == 0
+    ts = st["tiers"]["full"]
+    assert ts["deadline_total"] == 1 and ts["deadline_hits"] == 0
+
+
+@pytest.mark.parametrize("spec_terms", [0, 2])
+def test_validation_failure_leaves_queue_intact(setup, spec_terms):
+    """A run() whose run-level budget overflows max_seq raises BEFORE any
+    work and leaves the queue intact; a corrected retry then serves every
+    queued request — on both scheduler modes."""
+    cfg, art = setup
+    eng = Engine(cfg, artifact=art, serve_cfg=ServeConfig(
+        max_seq=24, max_slots=2, spec_terms=spec_terms, degrade=NO_DEGRADE))
+    ids = [eng.add_request(p) for p in _prompts(cfg, [8, 10])]
+    with pytest.raises(ValueError, match="max_seq"):
+        eng.run(max_new_tokens=20)
+    assert [r.rid for r in eng._queue] == ids     # untouched
+    out = eng.run(max_new_tokens=4)
+    assert set(out) == set(ids)
+    assert all(len(v) == 4 for v in out.values())
+    assert eng.last_run_stats["slots_leaked"] == 0
+
+
+# ---------------------------------------------------------------------------
+# typed backpressure + retry helper
+# ---------------------------------------------------------------------------
+def test_capacity_rejection_and_retry_helper(setup):
+    cfg, art = setup
+    eng = Engine(cfg, artifact=art, serve_cfg=_tiered_cfg(max_queue=2))
+    p = _prompts(cfg, [6])[0]
+    assert isinstance(eng.add_request(p), int)
+    assert isinstance(eng.add_request(p), int)
+    rej = eng.add_request(p)
+    assert isinstance(rej, Q.Rejection)
+    assert rej.reason is Q.RejectReason.CAPACITY and rej.retryable
+    assert rej.retry_after_s > 0
+    # bounded backoff: saturated queue -> sleeps between attempts, then the
+    # last Rejection is returned (not raised)
+    sleeps = []
+    res = submit_with_backoff(eng, p, max_attempts=3, max_delay_s=0.2,
+                              sleep=sleeps.append)
+    assert isinstance(res, Q.Rejection)
+    assert len(sleeps) == 2 and all(0 < s <= 0.2 for s in sleeps)
+    assert sleeps[1] > sleeps[0]          # exponential (below the cap)
+    # draining the queue makes room; the helper then succeeds, no sleeps
+    eng.run(max_new_tokens=2)
+    sleeps.clear()
+    assert isinstance(submit_with_backoff(eng, p, sleep=sleeps.append), int)
+    assert sleeps == []
+
+
+def test_infeasible_deadline_not_retryable(setup):
+    cfg, art = setup
+    eng = Engine(cfg, artifact=art, serve_cfg=_tiered_cfg())
+    p = _prompts(cfg, [6])[0]
+    rej = eng.add_request(p, deadline_s=-1.0)
+    assert isinstance(rej, Q.Rejection)
+    assert rej.reason is Q.RejectReason.DEADLINE_INFEASIBLE
+    assert not rej.retryable
+    # the helper returns it immediately — no pointless retries
+    sleeps = []
+    res = submit_with_backoff(eng, p, deadline_s=-1.0, sleep=sleeps.append)
+    assert res.reason is Q.RejectReason.DEADLINE_INFEASIBLE
+    assert sleeps == []
+    assert eng._queue == []               # nothing was enqueued
+
+
+# ---------------------------------------------------------------------------
+# chaos harness: determinism, identity, degradation + recovery, no leaks
+# ---------------------------------------------------------------------------
+def _chaos_cfg(**kw):
+    return Q.ChaosConfig(seed=7, latency_s=0.002, **kw)
+
+
+def test_chaos_latency_and_failures_token_identical(setup):
+    """With degradation off, a run under injected latency spikes and
+    transient dispatch failures emits bit-identical tokens to a calm run
+    (injection happens strictly before each dispatch, so retries re-issue
+    the identical computation), and the same seed reproduces the same
+    fault schedule."""
+    cfg, art = setup
+    prompts = _prompts(cfg, [5, 9, 7, 11])
+
+    def run_engine(chaos):
+        eng = Engine(cfg, artifact=art, serve_cfg=_tiered_cfg(chaos=chaos))
+        ids = [eng.add_request(p, quality=q) for p, q in
+               zip(prompts, ["full", "k2", "k1", "full"])]
+        out = eng.run(max_new_tokens=5)
+        return [out[r] for r in ids], eng.last_run_stats
+
+    calm, _ = run_engine(None)
+    chaotic1, st1 = run_engine(_chaos_cfg(latency_p=0.4, fail_p=0.3, max_retries=8))
+    chaotic2, st2 = run_engine(_chaos_cfg(latency_p=0.4, fail_p=0.3, max_retries=8))
+    assert chaotic1 == calm
+    assert chaotic2 == chaotic1                      # seeded-deterministic
+    assert st1["chaos"]["failures_injected"] > 0
+    assert st1["chaos"]["failures_injected"] == st2["chaos"]["failures_injected"]
+    assert st1["dispatch_retries"] > 0
+    assert st1["chaos"]["latency_injected"] > 0
+    assert st1["watchdog"]["stalled_rounds"] > 0     # spikes were flagged
+    assert st1["slots_leaked"] == 0 and st1["queue_leftover"] == 0
+
+
+def test_chaos_hbm_squeeze_degrades_then_recovers(setup):
+    """An HBM squeeze makes the controller degrade degradable tiers
+    (serving their floor budget) instead of rejecting; when the window
+    passes, nominal budgets are restored, every request completes, and no
+    slot leaks."""
+    cfg, art = setup
+    chaos = _chaos_cfg(hbm_squeeze_start=2, hbm_squeeze_steps=4,
+                       hbm_squeeze_frac=0.4)
+    eng = Engine(cfg, artifact=art, serve_cfg=_tiered_cfg(
+        max_slots=2, chaos=chaos, degrade=Q.DegradeConfig()))
+    prompts = _prompts(cfg, [6, 8, 10, 6])
+    ids = [eng.add_request(p, quality="k2") for p in prompts]
+    out = eng.run(max_new_tokens=6)
+    assert set(out) == set(ids)
+    assert all(len(v) == 6 for v in out.values())    # degraded, not shed
+    st = eng.last_run_stats
+    assert st["usable_slots_min"] < st["n_slots"]    # the squeeze bit
+    assert st["qos"]["degraded_rounds"] > 0
+    assert st["qos"]["degrade_transitions"] >= 1
+    assert not st["qos"]["degraded_now"]             # recovered by the end
+    ts = st["tiers"]["k2"]
+    assert ts["degraded_step_fraction"] > 0.0
+    assert 1.0 <= ts["mean_effective_terms"] < 2.0   # floor < mean < nominal
+    assert st["slots_leaked"] == 0 and st["queue_leftover"] == 0
+
+
+def test_chaos_retry_exhaustion_raises(setup):
+    """fail_p=1 exhausts max_retries: the ChaosFailure surfaces instead of
+    hanging, and the queue/slot invariants still hold afterwards."""
+    cfg, art = setup
+    eng = Engine(cfg, artifact=art, serve_cfg=_tiered_cfg(
+        chaos=Q.ChaosConfig(seed=0, fail_p=1.0, max_retries=2)))
+    eng.add_request(_prompts(cfg, [6])[0])
+    with pytest.raises(Q.ChaosFailure):
+        eng.run(max_new_tokens=3)
+
+
+# ---------------------------------------------------------------------------
+# priority + metrics hygiene
+# ---------------------------------------------------------------------------
+def test_priority_admission_order(setup):
+    """Higher priority admits first (FCFS within a level): on a 1-slot
+    pool the priority-5 request reaches its first token before the
+    priority-0 one enqueued earlier."""
+    cfg, art = setup
+    reqs = [Request(rid=0, tokens=[1], priority=0),
+            Request(rid=1, tokens=[1], priority=5),
+            Request(rid=2, tokens=[1], priority=0)]
+    assert [r.rid for r in SlotScheduler._order(reqs)] == [1, 0, 2]
+    eng = Engine(cfg, artifact=art, serve_cfg=_tiered_cfg(max_slots=1))
+    p1, p2 = _prompts(cfg, [6, 6])
+    rid_lo = eng.add_request(p1, priority=0)
+    rid_hi = eng.add_request(p2, priority=5)
+    eng.run(max_new_tokens=3)
+    m = eng.last_request_metrics
+    assert m[rid_hi]["ttft_s"] < m[rid_lo]["ttft_s"]
+
+
+def test_zero_duration_metrics_are_finite():
+    """safe_rate and the derived request metrics return 0.0 (never
+    inf/NaN) at zero/near-zero durations — tiny CI runs stay JSON-safe."""
+    assert Q.safe_rate(5, 0.0) == 0.0
+    assert Q.safe_rate(5, -1.0) == 0.0
+    assert Q.safe_rate(3, 2.0) == pytest.approx(1.5)
+    r = Request(rid=0, tokens=[1, 2])
+    r.t_admitted = r.t_done = 5.0
+    r.new_tokens = 4
+    assert r.tokens_per_sec == 0.0        # zero-duration run
+    assert r.ttft_seconds == 0.0          # never produced a token
+    assert r.deadline_missed is None      # no deadline attached
+    m = r.metrics()
+    assert m["tokens_per_sec"] == 0.0 and "deadline_missed" not in m
+
+
+# ---------------------------------------------------------------------------
+# validation: the QoS knobs reject unserveable configurations up front
+# ---------------------------------------------------------------------------
+def test_qos_validation_errors(setup):
+    cfg, art = setup
+    fp_params = M.init_params(jax.random.PRNGKey(0), cfg)
+    with pytest.raises(ValueError, match="slots"):
+        Engine(cfg, artifact=art, serve_cfg=ServeConfig(
+            scheduler="grouped", tier_budgets=TIERS))
+    with pytest.raises(ValueError, match="exclusive"):
+        Engine(cfg, artifact=art, serve_cfg=ServeConfig(
+            spec_terms=2, tier_budgets=TIERS))
+    with pytest.raises(ValueError, match="ExpandedTensor"):
+        Engine(cfg, fp_params, serve_cfg=ServeConfig(tier_budgets=TIERS))
+    with pytest.raises(ValueError, match="ExpandedTensor"):
+        Engine(cfg, fp_params, serve_cfg=ServeConfig(term_budget=2))
+    with pytest.raises(ValueError, match="max_queue"):
+        Engine(cfg, artifact=art, serve_cfg=ServeConfig(max_queue=-1))
+    # FP engine serves quality='full' only; unknown tiers are programmer
+    # errors (raised), not load conditions (Rejection)
+    eng_fp = Engine(cfg, fp_params, serve_cfg=ServeConfig(max_seq=48))
+    assert sorted(eng_fp.tiers) == ["full"]
+    with pytest.raises(ValueError, match="quality"):
+        eng_fp.add_request([1, 2, 3], quality="k2")
+    eng = Engine(cfg, artifact=art, serve_cfg=_tiered_cfg())
+    with pytest.raises(ValueError, match="quality"):
+        eng.add_request([1, 2, 3], quality="k9")
+    with pytest.raises(ValueError, match="slots"):
+        Engine(cfg, artifact=art, serve_cfg=ServeConfig(
+            scheduler="grouped", max_batch=1)).add_request(
+                [1, 2, 3], deadline_s=1.0)
