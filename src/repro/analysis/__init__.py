@@ -1,0 +1,72 @@
+"""Static analysis: mechanized serving-correctness contracts (DESIGN.md §12).
+
+Every serving PR so far hand-discovered the same bug classes: f32 partial
+psums breaking the integer-domain exactness contract (PR 4), retraces from
+dynamic operands marked static (PR 3), drain-loop host transfers miscounted
+(PR 5), bare asserts compiled out under ``-O``, and numeric-constant tables
+duplicated across modules drifting apart (PR 5 bug #5).  This package
+mechanizes those contracts so they are *proved on every commit* instead of
+re-found by hand:
+
+* :mod:`repro.analysis.jaxpr_check` — a jaxpr walker that traces any jitted
+  callable and checks declared contracts: the integer-domain psum rule (no
+  float ``psum`` on the ``"expand"`` mesh axis), host-callback censuses,
+  MXU/kernel dispatch budgets, a runtime donation ledger (donated buffers
+  never reused — the chaos double-apply class), a host-transfer census
+  (``device_get`` per decode round <= 1), and a retrace tripwire over jit
+  caches;
+* :mod:`repro.analysis.lint` — repo-specific AST lint rules
+  (``python -m repro.analysis lint``): no bare ``assert`` on runtime paths,
+  no dynamic operands in ``static_argnames``, no duplicated numeric-constant
+  tables (``repro/numerics.py`` is the single source), no cache-busting
+  ``jax.jit`` in loops;
+* :mod:`repro.analysis.budgets` — a committed per-entry-point budget ledger
+  (``analysis_budgets.json``): dispatch/transfer/retrace budgets for the
+  fused decode, QoS-masked, spec-decode, and prefill steps, asserted by
+  ``tests/test_analysis.py`` and the CI ``analysis`` job;
+* :mod:`repro.analysis.contracts` — the lightweight declaration layer the
+  serving entry points annotate themselves with (``infer/serve.py``,
+  ``dist/expansion_parallel.py``), read back by the checkers.
+
+Every checker has a mutation self-test (seed the bug, assert the checker
+fires with a pointed ``file:line`` diagnostic) — a checker that cannot fail
+is not a check.
+"""
+from repro.analysis.contracts import Contract, annotate, get_contract
+
+# jaxpr_check pulls in jax; resolve its names lazily so runtime modules
+# (infer/, dist/) can import the stdlib-only contracts layer without
+# paying for — or cycling through — the analysis machinery.
+_LAZY = {
+    "AnalysisViolation": "jaxpr_check",
+    "DonationLedger": "jaxpr_check",
+    "TransferCensus": "jaxpr_check",
+    "Violation": "jaxpr_check",
+    "check_integer_psum": "jaxpr_check",
+    "check_budget": "jaxpr_check",
+    "check_no_retrace": "jaxpr_check",
+    "count_host_callbacks": "jaxpr_check",
+    "dispatch_census": "jaxpr_check",
+    "gemm_dispatch_count": "jaxpr_check",
+    "jit_cache_sizes": "jaxpr_check",
+    "kernel_structure": "jaxpr_check",
+    "LintError": "lint",
+    "run_lint": "lint",
+    "load_budgets": "budgets",
+    "measure_budgets": "budgets",
+}
+
+
+def __getattr__(name):
+    if name in _LAZY:
+        import importlib
+        mod = importlib.import_module(f"repro.analysis.{_LAZY[name]}")
+        return getattr(mod, name)
+    raise AttributeError(f"module 'repro.analysis' has no attribute {name!r}")
+
+
+def __dir__():
+    return sorted(set(globals()) | set(_LAZY))
+
+
+__all__ = ["Contract", "annotate", "get_contract"] + sorted(_LAZY)

@@ -1,0 +1,149 @@
+"""CLI for the static-analysis subsystem (the CI ``analysis`` job driver).
+
+    python -m repro.analysis lint [PATH ...]      # AST lint (REPRO1xx)
+    python -m repro.analysis budgets [--update]   # dispatch-budget ledger
+    python -m repro.analysis contracts            # dump declared contracts
+    python -m repro.analysis report [-o FILE]     # everything, as JSON
+
+Exit status is nonzero when any check finds a violation, so each
+subcommand is CI-gating as-is.
+"""
+from __future__ import annotations
+
+import argparse
+import json
+import os
+import sys
+
+#: default lint roots, repo-relative (resolved against this file so the CLI
+#: works from any cwd)
+_SRC_ROOT = os.path.dirname(os.path.dirname(os.path.dirname(
+    os.path.abspath(__file__))))
+DEFAULT_LINT_PATHS = (os.path.join(_SRC_ROOT, "repro"),)
+
+
+def _cmd_lint(args) -> int:
+    from repro.analysis.lint import run_lint
+
+    paths = args.paths or list(DEFAULT_LINT_PATHS)
+    errors = run_lint(paths)
+    for e in errors:
+        print(e)
+    print(f"lint: {len(errors)} finding(s) in {', '.join(paths)}")
+    return 1 if errors else 0
+
+
+def _cmd_budgets(args) -> int:
+    from repro.analysis import budgets as B
+
+    if args.update:
+        data = B.write_budgets()
+        print(f"wrote {B.LEDGER_PATH} "
+              f"({len([k for k in data if not k.startswith('_')])} entries)")
+        return 0
+    violations = B.check_budgets(strict=False)
+    for v in violations:
+        print(v)
+    print(f"budgets: {len(violations)} violation(s) vs {B.LEDGER_PATH}")
+    return 1 if violations else 0
+
+
+def _contract_table():
+    """name -> contract dict for every annotated entry point (imports the
+    serving stack, so jax loads here — not at CLI startup)."""
+    from repro.analysis.contracts import get_contract
+    from repro.configs.base import get_arch
+    from repro.infer import qos as Q
+    from repro.infer import serve as S
+    from repro.models.layers import FP
+
+    cfg = get_arch("qwen2_1_5b", smoke=True)
+    carriers = [
+        S.make_decode_sample_step(cfg, FP, masked=False),
+        S.make_decode_sample_step(cfg, FP, masked=True),
+        S.make_spec_decode_step(cfg, FP, FP, 2),
+        Q.ChaosInjector.before_dispatch,
+    ]
+    try:
+        # the prefill contract lives on an Engine's jitted slot-prefill
+        # (jit construction never traces, so this is cheap)
+        import jax
+        from repro.models import model as M
+        eng = S.Engine(cfg, M.init_params(jax.random.PRNGKey(0), cfg))
+        carriers.append(eng._prefill_slot)
+    except Exception:
+        pass
+    try:
+        from repro.dist import expansion_parallel as EP
+        carriers.append(EP.term_parallel_apply)
+    except Exception:
+        pass
+    out = {}
+    for fn in carriers:
+        c = get_contract(fn)
+        if c is not None:
+            out[c.name] = c.to_json()
+    return out
+
+
+def _cmd_contracts(args) -> int:
+    table = _contract_table()
+    print(json.dumps(table, indent=2, sort_keys=True))
+    return 0
+
+
+def _cmd_report(args) -> int:
+    """Full checker report: lint + budgets + contracts, one JSON document
+    (the CI artifact)."""
+    from repro.analysis import budgets as B
+    from repro.analysis.lint import run_lint
+
+    lint_errors = run_lint(list(DEFAULT_LINT_PATHS))
+    budget_violations = B.check_budgets(strict=False)
+    report = {
+        "lint": [str(e) for e in lint_errors],
+        "budgets": {
+            "ledger": B.LEDGER_PATH,
+            "measured": B.measure_budgets(),
+            "violations": [str(v) for v in budget_violations],
+        },
+        "contracts": _contract_table(),
+        "ok": not lint_errors and not budget_violations,
+    }
+    text = json.dumps(report, indent=2, sort_keys=True)
+    if args.output:
+        with open(args.output, "w", encoding="utf-8") as fh:
+            fh.write(text + "\n")
+        print(f"wrote {args.output} (ok={report['ok']})")
+    else:
+        print(text)
+    return 0 if report["ok"] else 1
+
+
+def main(argv=None) -> int:
+    p = argparse.ArgumentParser(prog="python -m repro.analysis",
+                                description=__doc__.splitlines()[0])
+    sub = p.add_subparsers(dest="cmd", required=True)
+
+    sp = sub.add_parser("lint", help="AST lint (REPRO1xx rules)")
+    sp.add_argument("paths", nargs="*", help="files/dirs (default: src/repro)")
+    sp.set_defaults(fn=_cmd_lint)
+
+    sp = sub.add_parser("budgets", help="check the dispatch-budget ledger")
+    sp.add_argument("--update", action="store_true",
+                    help="re-measure and rewrite analysis_budgets.json")
+    sp.set_defaults(fn=_cmd_budgets)
+
+    sp = sub.add_parser("contracts", help="dump declared entry-point contracts")
+    sp.set_defaults(fn=_cmd_contracts)
+
+    sp = sub.add_parser("report", help="full JSON report (CI artifact)")
+    sp.add_argument("-o", "--output", default="", help="write JSON here")
+    sp.set_defaults(fn=_cmd_report)
+
+    args = p.parse_args(argv)
+    return args.fn(args)
+
+
+if __name__ == "__main__":
+    sys.exit(main())

@@ -1,0 +1,147 @@
+"""Dispatch-budget ledger: committed primitive-count ceilings per entry point.
+
+``analysis_budgets.json`` (next to this file) pins, for each serving entry
+point, a ceiling on the primitive counts of its traced computation
+(:func:`repro.analysis.jaxpr_check.dispatch_census`): MXU ``dot_general``
+dispatches, Pallas kernel calls, host callbacks, quantization ``round``
+ops, collectives, cache scatters.  ``tests/test_analysis.py`` and the CI
+``analysis`` job assert measured <= budget on the smoke model, so a change
+that silently doubles dispatches (a fori_loop unrolled, a fusion broken, a
+debug callback left in) fails review-visibly: growing a budget is a
+deliberate edit to the committed JSON in the same PR.
+
+Entries (keyed by the ``Contract.budget_key`` of the annotated entry point,
+all measured on the ``qwen2_1_5b`` smoke arch, W8A8, reference path):
+
+* ``decode``        — the fused decode+sample+EOS step (unmasked);
+* ``decode_masked`` — the QoS row-masked variant (tier dispatch unit);
+* ``spec_decode``   — the fused draft-gamma + verify speculative round;
+* ``prefill``       — padded prefill-into-slot.
+
+Heavy imports (jax, the model zoo) happen inside functions only: importing
+this module costs nothing, so ``python -m repro.analysis`` can lint without
+tracing models.  Refresh the ledger with
+``python -m repro.analysis budgets --update`` after an intentional change.
+"""
+from __future__ import annotations
+
+import json
+import os
+from typing import Any, Dict, Optional
+
+LEDGER_PATH = os.path.join(os.path.dirname(__file__), "analysis_budgets.json")
+
+#: census keys that are budgeted (ceilings); keys a census reports but the
+#: ledger omits are unconstrained
+BUDGETED_KEYS = ("dot_general", "pallas_call", "callbacks", "round",
+                 "psum", "all_gather", "scatter")
+
+#: the fixture every entry is measured on (committed alongside the numbers
+#: so a ledger mismatch is attributable)
+FIXTURE = {"arch": "qwen2_1_5b", "smoke": True, "policy": "W8A8",
+           "max_seq": 32, "batch": 2, "spec_lookahead": 2}
+
+
+def load_budgets(path: str = LEDGER_PATH) -> Dict[str, Dict[str, int]]:
+    """The committed ledger: ``{entry: {census_key: ceiling}}`` (the
+    ``_fixture`` metadata entry is stripped)."""
+    with open(path, "r", encoding="utf-8") as fh:
+        data = json.load(fh)
+    return {k: v for k, v in data.items() if not k.startswith("_")}
+
+
+def _fixture_steps():
+    """Build the four traced entry points + their inputs on the smoke model.
+
+    Returns ``{entry: (fn, args)}`` ready for ``dispatch_census(fn, *args)``.
+    """
+    import jax
+    import jax.numpy as jnp
+
+    from repro.configs.base import get_arch
+    from repro.core import ptq as PTQ
+    from repro.core.policy import W8A8
+    from repro.infer import serve as S
+    from repro.models import model as M
+    from repro.models.layers import QuantContext
+
+    fx = FIXTURE
+    cfg = get_arch(fx["arch"], smoke=fx["smoke"])
+    params = M.init_params(jax.random.PRNGKey(0), cfg)
+    qc = QuantContext(policy=W8A8)
+    params_q = PTQ.expand_params(params, W8A8)
+
+    b, s_max = fx["batch"], fx["max_seq"]
+    prompt = jnp.ones((b, 8), jnp.int32)
+    lengths = jnp.full((b,), 8, jnp.int32)
+    _, caches = M.prefill(params_q, {"tokens": prompt}, cfg, qc, s_max=s_max)
+
+    tok = jnp.ones((b, 1), jnp.int32)
+    cache_len = jnp.full((b,), 8, jnp.int32)
+    key = jax.random.PRNGKey(1)
+    alive = jnp.ones((b,), bool)
+    eos = jnp.asarray(-1, jnp.int32)
+    temp = jnp.asarray(0.0, jnp.float32)
+    row_mask = jnp.ones((b,), bool)
+
+    import dataclasses
+    decode = S.make_decode_sample_step(cfg, qc, masked=False)
+    masked = S.make_decode_sample_step(cfg, qc, masked=True)
+    qc_draft = dataclasses.replace(qc, term_budget=1)
+    spec = S.make_spec_decode_step(cfg, qc, qc_draft, fx["spec_lookahead"])
+
+    def prefill_slot(p, batch, ln):
+        return M.prefill(p, batch, cfg, qc, s_max=s_max, lengths=ln)
+
+    return {
+        "decode": (decode, (params_q, tok, caches, cache_len, key, alive,
+                            eos, temp)),
+        "decode_masked": (masked, (params_q, tok, caches, cache_len, key,
+                                   alive, eos, temp, row_mask)),
+        "spec_decode": (spec, (params_q, tok, caches, cache_len)),
+        "prefill": (prefill_slot, (params_q, {"tokens": prompt}, lengths)),
+    }
+
+
+def measure_budgets() -> Dict[str, Dict[str, int]]:
+    """Trace every entry point on the committed fixture and return its
+    census restricted to :data:`BUDGETED_KEYS` (tracing only — no device
+    execution, runs in seconds on CPU)."""
+    from repro.analysis.jaxpr_check import dispatch_census
+
+    out: Dict[str, Dict[str, int]] = {}
+    for entry, (fn, args) in _fixture_steps().items():
+        census = dispatch_census(fn, *args)
+        out[entry] = {k: int(census.get(k, 0)) for k in BUDGETED_KEYS}
+    return out
+
+
+def write_budgets(path: str = LEDGER_PATH) -> Dict[str, Dict[str, int]]:
+    """Re-measure and commit the ledger (``--update``)."""
+    data: Dict[str, Any] = {"_fixture": dict(FIXTURE)}
+    data.update(measure_budgets())
+    with open(path, "w", encoding="utf-8") as fh:
+        json.dump(data, fh, indent=2, sort_keys=True)
+        fh.write("\n")
+    return data
+
+
+def check_budgets(path: str = LEDGER_PATH, *, strict: bool = True):
+    """Measure the fixture and assert every entry stays within its
+    committed ceiling.  Returns the violation list (empty == within
+    budget); ``strict=True`` raises
+    :class:`repro.analysis.jaxpr_check.AnalysisViolation`."""
+    from repro.analysis.jaxpr_check import check_budget
+
+    ledger = load_budgets(path)
+    measured = measure_budgets()
+    violations = []
+    for entry, budget in sorted(ledger.items()):
+        if entry not in measured:
+            continue
+        violations.extend(check_budget(measured[entry], budget,
+                                       entry=entry, strict=False))
+    if violations and strict:
+        from repro.analysis.jaxpr_check import AnalysisViolation
+        raise AnalysisViolation(violations)
+    return violations

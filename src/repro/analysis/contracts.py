@@ -1,0 +1,74 @@
+"""Contract declarations: what an entry point promises, machine-readable.
+
+The serving stack annotates its entry points (``infer/serve.py`` step
+factories, ``dist/expansion_parallel.py``) with a :class:`Contract` —
+the invariants each callable promises — and the checkers in
+:mod:`repro.analysis.jaxpr_check` / :mod:`repro.analysis.budgets` read the
+annotation back instead of hard-coding per-function knowledge.  This module
+is stdlib-only on purpose: ``repro.infer`` imports it at module load, so it
+must never pull in jax-heavy analysis machinery (no import cycle).
+"""
+from __future__ import annotations
+
+import dataclasses
+from typing import Dict, Optional, Tuple
+
+#: attribute name the annotation is stored under
+ATTR = "__repro_contract__"
+
+
+@dataclasses.dataclass(frozen=True)
+class Contract:
+    """The machine-checkable promises of one serving entry point.
+
+    Fields are ceilings/requirements a checker enforces; ``None`` means
+    "not contracted" (the checker skips that dimension):
+
+    * ``transfers_per_round`` — host ``device_get`` calls the driving loop
+      may issue per dispatch round (the one-transfer serving contract);
+    * ``int_psum_axes`` — mesh axes on which every ``psum`` inside the
+      traced computation must reduce *integers* (the Abelian exactness
+      contract of DESIGN.md §9; f32 partial sums reassociate per device
+      count — the PR 4 divergence class);
+    * ``float_psum_waiver`` — human-readable reason a float psum is allowed
+      (e.g. the weight-only path has no requantization amplifier); when
+      set, :func:`~repro.analysis.jaxpr_check.check_integer_psum` is run
+      with the waiver and only *reports*, never fails, float reductions;
+    * ``dynamic_operands`` — operand names that must NEVER appear in
+      ``static_argnames`` anywhere in the repo (the temperature-retrace
+      class; lint rule REPRO102 enforces the global denylist);
+    * ``donate_argnums`` — positions the caller donates; the
+      :class:`~repro.analysis.jaxpr_check.DonationLedger` uses this to
+      assert a donated buffer is never passed again (chaos double-apply);
+    * ``budget_key`` — entry under ``analysis_budgets.json`` carrying this
+      callable's dispatch budgets.
+    """
+    name: str
+    transfers_per_round: Optional[int] = None
+    int_psum_axes: Tuple[str, ...] = ()
+    float_psum_waiver: str = ""
+    dynamic_operands: Tuple[str, ...] = ()
+    donate_argnums: Tuple[int, ...] = ()
+    budget_key: str = ""
+
+    def to_json(self) -> Dict[str, object]:
+        return dataclasses.asdict(self)
+
+
+def annotate(fn, **kwargs):
+    """Attach a :class:`Contract` to ``fn`` (returns ``fn``, decorator-style).
+
+    ``annotate(step, name="fused_decode", transfers_per_round=1, ...)``
+    """
+    setattr(fn, ATTR, Contract(**kwargs))
+    return fn
+
+
+def get_contract(fn) -> Optional[Contract]:
+    """The :class:`Contract` attached to ``fn`` (following ``__wrapped__``
+    and jit-wrapper chains), or ``None``."""
+    for obj in (fn, getattr(fn, "__wrapped__", None),
+                getattr(fn, "_fun", None)):
+        if obj is not None and hasattr(obj, ATTR):
+            return getattr(obj, ATTR)
+    return None

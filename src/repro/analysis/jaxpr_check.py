@@ -1,0 +1,515 @@
+"""Jaxpr/runtime contract checkers for the serving stack (DESIGN.md §12).
+
+One generic walker (:func:`iter_eqns` — recurses into every sub-jaxpr:
+``pjit``, ``shard_map``, ``scan``/``while``/``cond`` branches, Pallas kernel
+bodies) feeds several checkers, each mechanizing a bug class a previous PR
+found by hand:
+
+* :func:`check_integer_psum` — the Abelian exactness contract (DESIGN.md
+  §9): every ``psum`` over a contracted mesh axis must reduce integers.
+  An f32 partial psum reassociates per device count and the ulp wobble
+  amplifies through activation requantization (~1e-4/step) — the PR 4
+  token-divergence class;
+* :func:`count_host_callbacks` — host round-trips compiled INTO the graph
+  (``pure_callback``/``io_callback``/``debug_callback``): the fused serving
+  steps contract to zero;
+* :func:`dispatch_census` / :func:`check_budget` — primitive counts
+  (MXU ``dot_general``, ``pallas_call``, collectives) checked against the
+  committed ledger (``analysis_budgets.json``);
+* :class:`TransferCensus` — runtime census of ``jax.device_get`` per
+  dispatch round (the one-transfer serving contract; the PR 5
+  drain-miscount class), with caller ``file:line`` attribution;
+* :class:`DonationLedger` — runtime audit that a donated buffer is never
+  passed again after the dispatch consumed it (the chaos double-apply
+  class; CPU jax ignores donation, so the hazard is *silent* here and
+  real on TPU);
+* :func:`jit_cache_sizes` / :func:`check_no_retrace` — the retrace
+  tripwire (the PR 3 temperature-retrace class): pinned jit-cache sizes
+  across dynamic-operand changes.
+
+The kernel-structure introspection that seeded this module
+(``kernel_structure``/``gemm_dispatch_count``) lives here now;
+``kernels/ops.py`` re-exports it for the existing tests/benchmarks.
+"""
+from __future__ import annotations
+
+import dataclasses
+from functools import partial
+from typing import Any, Callable, Dict, Iterator, List, Optional, Sequence, Tuple
+
+import jax
+
+# primitive-name sets (jax 0.4.x: psum lowers to "psum2" inside shard_map,
+# "psum" under pmap/older paths; keep both)
+PSUM_PRIMS = ("psum", "psum2")
+CALLBACK_PRIMS = ("pure_callback", "io_callback", "debug_callback")
+COLLECTIVE_PRIMS = PSUM_PRIMS + ("all_gather", "reduce_scatter", "all_to_all",
+                                 "ppermute")
+
+
+class AnalysisViolation(AssertionError):
+    """A checked contract failed.  Carries the individual findings."""
+
+    def __init__(self, violations: Sequence["Violation"]):
+        self.violations = list(violations)
+        super().__init__(
+            "\n".join(str(v) for v in self.violations) or "contract violated")
+
+
+@dataclasses.dataclass(frozen=True)
+class Violation:
+    """One pointed finding: which rule, where, and what was seen."""
+    rule: str
+    where: str          # "file:line" or a jaxpr path like "pjit/shard_map"
+    message: str
+
+    def __str__(self) -> str:
+        return f"{self.where}: [{self.rule}] {self.message}"
+
+
+def _raise_or_return(violations: List[Violation], strict: bool):
+    if violations and strict:
+        raise AnalysisViolation(violations)
+    return violations
+
+
+# ---------------------------------------------------------------------------
+# generic jaxpr walking
+# ---------------------------------------------------------------------------
+def child_jaxprs(params: Dict[str, Any]) -> List[Any]:
+    """Every sub-jaxpr reachable from one equation's params: ClosedJaxprs
+    (``pjit``, scan/while/cond branches), raw Jaxprs (``shard_map``,
+    ``pallas_call`` bodies), and lists/tuples of either."""
+    out = []
+    for v in params.values():
+        vs = v if isinstance(v, (list, tuple)) else (v,)
+        for vv in vs:
+            inner = getattr(vv, "jaxpr", None)
+            if inner is not None and hasattr(inner, "eqns"):
+                out.append(inner)     # ClosedJaxpr -> unwrap to raw
+            elif hasattr(vv, "eqns"):
+                out.append(vv)        # raw Jaxpr (shard_map, pallas bodies)
+    return out
+
+
+def iter_eqns(jaxpr, path: str = "") -> Iterator[Tuple[Any, str]]:
+    """Yield ``(eqn, path)`` for every equation, depth-first through all
+    sub-jaxprs; ``path`` is the slash-joined chain of enclosing primitive
+    names (e.g. ``"pjit/shard_map"``) for pointed diagnostics."""
+    for e in jaxpr.eqns:
+        yield e, path
+        sub_path = f"{path}/{e.primitive.name}" if path else e.primitive.name
+        for sub in child_jaxprs(e.params):
+            yield from iter_eqns(sub, sub_path)
+
+
+def trace(fn: Callable, *args, **kwargs):
+    """``jax.make_jaxpr`` with kwargs folded in (tracing never executes
+    device code, so this is cheap enough for CI)."""
+    return jax.make_jaxpr(partial(fn, **kwargs))(*args)
+
+
+def _eqn_site(eqn) -> str:
+    """Best-effort ``file:line`` for an equation from its source_info."""
+    try:
+        from jax._src import source_info_util
+        for fr in source_info_util.user_frames(eqn.source_info):
+            return f"{fr.file_name}:{fr.start_line}"
+    except Exception:
+        pass
+    try:  # fallback: first non-jax raw frame (raw frames carry .line_num)
+        for fr in eqn.source_info.traceback.frames:
+            fname = getattr(fr, "file_name", "")
+            if fname and "site-packages" not in fname and "jax/_src" not in fname:
+                return f"{fname}:{fr.line_num}"
+    except Exception:
+        pass
+    return "<unknown>"
+
+
+# ---------------------------------------------------------------------------
+# integer-domain psum rule (DESIGN.md §9)
+# ---------------------------------------------------------------------------
+def check_integer_psum(fn: Callable, *args,
+                       axes: Sequence[str] = ("expand",),
+                       strict: bool = True, **kwargs) -> List[Violation]:
+    """Every ``psum`` over any mesh axis in ``axes`` must reduce an integer
+    (or bool) dtype — the Abelian group of Theorem 2 realized in Z, where
+    the reduction is genuinely order-independent.  A float psum on the term
+    axis is the PR 4 divergence class: its association depends on device
+    count and the deviation amplifies through activation requantization.
+
+    ``strict=True`` raises :class:`AnalysisViolation`; ``strict=False``
+    returns the findings (the weight-only waiver path)."""
+    jaxpr = trace(fn, *args, **kwargs)
+    axes = set(axes)
+    violations: List[Violation] = []
+    for eqn, path in iter_eqns(jaxpr.jaxpr):
+        if eqn.primitive.name not in PSUM_PRIMS:
+            continue
+        eqn_axes = set(a for a in eqn.params.get("axes", ())
+                       if isinstance(a, str))
+        if not (eqn_axes & axes):
+            continue
+        for v in eqn.invars:
+            dt = getattr(getattr(v, "aval", None), "dtype", None)
+            if dt is not None and jax.numpy.issubdtype(dt, jax.numpy.floating):
+                violations.append(Violation(
+                    rule="integer-psum",
+                    where=_eqn_site(eqn),
+                    message=(f"{eqn.primitive.name} over mesh axis "
+                             f"{sorted(eqn_axes & axes)} reduces {dt} (in "
+                             f"{path or 'top level'}); the exactness "
+                             f"contract requires an integer domain — psum "
+                             f"int32 accumulators and scale replicated "
+                             f"(DESIGN.md §9)")))
+    return _raise_or_return(violations, strict)
+
+
+# ---------------------------------------------------------------------------
+# host-callback census (in-graph host round trips)
+# ---------------------------------------------------------------------------
+def count_host_callbacks(fn: Callable, *args, **kwargs) -> int:
+    """Host callbacks compiled into the traced computation.  The fused
+    serving steps contract to 0: an in-graph callback is a hidden host
+    sync per dispatch (and cannot be partitioned on a mesh)."""
+    jaxpr = trace(fn, *args, **kwargs)
+    return sum(1 for e, _ in iter_eqns(jaxpr.jaxpr)
+               if e.primitive.name in CALLBACK_PRIMS)
+
+
+# ---------------------------------------------------------------------------
+# dispatch census + budget check
+# ---------------------------------------------------------------------------
+def dispatch_census(fn: Callable, *args, **kwargs) -> Dict[str, int]:
+    """Primitive counts of the traced computation (flattened through every
+    sub-jaxpr): the quantities ``analysis_budgets.json`` budgets.
+
+    Keys: ``dot_general`` (MXU dispatches), ``pallas_call`` (fused-kernel
+    dispatches), ``psum``/``all_gather``/... (collectives), ``callbacks``,
+    ``round`` (quantization rounds), ``scatter`` (cache writes)."""
+    jaxpr = trace(fn, *args, **kwargs)
+    census: Dict[str, int] = {
+        "dot_general": 0, "pallas_call": 0, "callbacks": 0, "round": 0,
+        "psum": 0, "all_gather": 0, "scatter": 0,
+    }
+    for e, _ in iter_eqns(jaxpr.jaxpr):
+        name = e.primitive.name
+        if name in PSUM_PRIMS:
+            census["psum"] += 1
+        elif name in CALLBACK_PRIMS:
+            census["callbacks"] += 1
+        elif name.startswith("scatter") or name == "dynamic_update_slice":
+            census["scatter"] += 1
+        elif name in census:
+            census[name] += 1
+    return census
+
+
+def check_budget(measured: Dict[str, int], budget: Dict[str, int], *,
+                 entry: str, strict: bool = True) -> List[Violation]:
+    """Compare a census against a committed budget: keys in ``budget`` are
+    ceilings (``<=``); a measured count above its ceiling is a violation.
+    Growing a budget is a deliberate, reviewed edit to the JSON — never an
+    accident."""
+    violations = [
+        Violation(
+            rule="dispatch-budget",
+            where=f"analysis_budgets.json:{entry}",
+            message=(f"{key}: measured {measured.get(key, 0)} exceeds the "
+                     f"budget {ceiling} — if intentional, bump the committed "
+                     f"ledger in the same PR"))
+        for key, ceiling in budget.items()
+        if measured.get(key, 0) > ceiling
+    ]
+    return _raise_or_return(violations, strict)
+
+
+# ---------------------------------------------------------------------------
+# runtime host-transfer census (device_get per dispatch round)
+# ---------------------------------------------------------------------------
+class TransferCensus:
+    """Counts host transfers (``jax.device_get``) between dispatch rounds.
+
+    Usage::
+
+        census = TransferCensus()
+        eng._decode = census.wrap_dispatch(eng._decode)   # round boundary
+        with census:
+            eng.run(...)
+        census.check(max_per_round=1)     # raises with file:line on breach
+
+    Every ``jax.device_get`` inside the ``with`` is recorded with its
+    caller's ``file:line``; ``wrap_dispatch`` marks round boundaries.  The
+    serving contract (DESIGN.md §6): exactly ONE transfer per decode round
+    — a second one is a hidden host sync that serializes the pipeline."""
+
+    def __init__(self):
+        self.events: List[Tuple[str, str]] = []   # ("transfer"|"round", site)
+        self._orig = None
+
+    # -- instrumentation -------------------------------------------------
+    def __enter__(self):
+        import inspect
+
+        self._orig = jax.device_get
+
+        def counted_device_get(x):
+            site = "<unknown>"
+            try:
+                fr = inspect.stack()[1]
+                site = f"{fr.filename}:{fr.lineno}"
+            except Exception:
+                pass
+            self.events.append(("transfer", site))
+            return self._orig(x)
+
+        jax.device_get = counted_device_get
+        return self
+
+    def __exit__(self, *exc):
+        jax.device_get = self._orig
+        self._orig = None
+        return False
+
+    def wrap_dispatch(self, fn, label: str = "dispatch"):
+        """Wrap a jitted dispatch callable so each call marks a round
+        boundary (attribute-preserving: ``_cache_size`` etc. still reachable
+        via ``__wrapped__``)."""
+        import functools
+
+        @functools.wraps(fn)
+        def marked(*args, **kwargs):
+            self.events.append(("round", label))
+            return fn(*args, **kwargs)
+
+        marked.__wrapped__ = fn
+        return marked
+
+    # -- results ---------------------------------------------------------
+    def per_round(self) -> List[List[str]]:
+        """Transfer sites grouped per dispatch round.  Transfers before the
+        first round boundary (prefill/admission) land in group 0; each
+        dispatch opens a new group."""
+        groups: List[List[str]] = [[]]
+        for kind, site in self.events:
+            if kind == "round":
+                groups.append([])
+            else:
+                groups[-1].append(site)
+        return groups
+
+    @property
+    def transfers(self) -> int:
+        return sum(1 for k, _ in self.events if k == "transfer")
+
+    @property
+    def rounds(self) -> int:
+        return sum(1 for k, _ in self.events if k == "round")
+
+    def check(self, max_per_round: int = 1, *, skip_first: bool = True,
+              strict: bool = True) -> List[Violation]:
+        """Assert no dispatch round saw more than ``max_per_round``
+        transfers.  ``skip_first`` exempts the pre-first-dispatch group
+        (admission/prefill transfers are not decode-round traffic)."""
+        groups = self.per_round()
+        start = 1 if skip_first else 0
+        violations = [
+            Violation(
+                rule="transfer-census",
+                where=", ".join(sorted(set(g))) or "<none>",
+                message=(f"round {i}: {len(g)} host transfers "
+                         f"(contract: <= {max_per_round} per decode round)"))
+            for i, g in enumerate(groups[start:], start=start)
+            if len(g) > max_per_round
+        ]
+        return _raise_or_return(violations, strict)
+
+
+# ---------------------------------------------------------------------------
+# donation ledger (double-apply audit)
+# ---------------------------------------------------------------------------
+class DonationLedger:
+    """Runtime audit: a buffer passed in a donated position is consumed —
+    passing it (or any alias of it) to a later audited call is the chaos
+    double-apply class.  CPU jax *ignores* donation, so the reuse silently
+    "works" here and corrupts state on TPU; this ledger makes the hazard a
+    deterministic failure on any backend.
+
+    Usage::
+
+        ledger = DonationLedger()
+        step = ledger.wrap(eng._decode, donate_argnums=(2,))
+        out = step(params, tok, caches, ...)   # caches now spent
+        step(params, tok, caches, ...)         # -> AnalysisViolation
+    """
+
+    def __init__(self):
+        self._spent: Dict[int, str] = {}       # id(leaf) -> where donated
+        self.violations: List[Violation] = []
+
+    @staticmethod
+    def _leaf_ids(tree) -> List[int]:
+        return [id(l) for l in jax.tree_util.tree_leaves(tree)
+                if hasattr(l, "dtype")]        # arrays only, skip python ints
+
+    def wrap(self, fn, donate_argnums: Sequence[int], label: str = "dispatch"):
+        import functools
+
+        @functools.wraps(fn)
+        def audited(*args, **kwargs):
+            # 1) reuse check on EVERY array argument (donated or not): a
+            #    spent buffer must never be read again, not just re-donated
+            for pos, a in enumerate(args):
+                for lid in self._leaf_ids(a):
+                    if lid in self._spent:
+                        v = Violation(
+                            rule="donation-reuse",
+                            where=self._spent[lid],
+                            message=(f"{label}: argument {pos} contains a "
+                                     f"buffer already donated there — "
+                                     f"double-apply (donation is a no-op on "
+                                     f"CPU but frees the buffer on TPU)"))
+                        self.violations.append(v)
+                        raise AnalysisViolation([v])
+            out = fn(*args, **kwargs)
+            # 2) mark donated inputs spent AFTER a successful dispatch (a
+            #    failed dispatch never consumed them — the chaos-retry rule)
+            import inspect
+            site = "<unknown>"
+            try:
+                fr = inspect.stack()[1]
+                site = f"{fr.filename}:{fr.lineno}"
+            except Exception:
+                pass
+            for pos in donate_argnums:
+                if pos < len(args):
+                    for lid in self._leaf_ids(args[pos]):
+                        self._spent[lid] = f"{site} (arg {pos})"
+            return out
+
+        audited.__wrapped__ = fn
+        return audited
+
+
+# ---------------------------------------------------------------------------
+# retrace tripwire
+# ---------------------------------------------------------------------------
+def jit_cache_sizes(callables: Dict[str, Any]) -> Dict[str, int]:
+    """``name -> _cache_size()`` for a dict of jitted callables (unwraps
+    census/ledger wrappers); entries without a cache report -1."""
+    out = {}
+    for name, fn in callables.items():
+        # walk the wrapper chain until something exposes a jit cache (a
+        # jitted fn ALSO has __wrapped__ = the raw python fn, so test for
+        # the cache before unwrapping further)
+        size = None
+        seen = 0
+        while fn is not None and seen < 8:
+            size = getattr(fn, "_cache_size", None)
+            if callable(size):
+                break
+            fn = getattr(fn, "__wrapped__", None)
+            seen += 1
+        out[name] = int(size()) if callable(size) else -1
+    return out
+
+
+def check_no_retrace(callables: Dict[str, Any], *, max_traces: int = 1,
+                     strict: bool = True) -> List[Violation]:
+    """Every jitted callable must hold at most ``max_traces`` cached traces
+    — more means a dynamic operand retraced it (the PR 3 temperature class:
+    an operand marked static retraces per distinct value)."""
+    violations = [
+        Violation(
+            rule="retrace",
+            where=name,
+            message=(f"jit cache holds {size} traces (contract: <= "
+                     f"{max_traces}) — a dynamic operand is being treated "
+                     f"as static, or shapes vary per call"))
+        for name, size in jit_cache_sizes(callables).items()
+        if size > max_traces
+    ]
+    return _raise_or_return(violations, strict)
+
+
+# ---------------------------------------------------------------------------
+# Pallas kernel-structure introspection (moved from kernels/ops.py; the
+# public names remain re-exported there)
+# ---------------------------------------------------------------------------
+def _count_prim(jaxpr, name: str) -> int:
+    total = 0
+    for e in jaxpr.eqns:
+        if e.primitive.name == name:
+            total += 1
+        for sub in child_jaxprs(e.params):
+            total += _count_prim(sub, name)
+    return total
+
+
+def _is_var(v) -> bool:
+    return not hasattr(v, "val")          # jaxpr Literals carry .val
+
+
+def _count_ref_reads(jaxpr, tainted) -> int:
+    """Reads (``get``) of any ref in ``tainted``, following refs positionally
+    through cond branches and nested calls."""
+    total = 0
+    for e in jaxpr.eqns:
+        if e.primitive.name == "get" and e.invars and _is_var(e.invars[0]) \
+                and e.invars[0] in tainted:
+            total += 1
+        if e.primitive.name == "cond":
+            ops = e.invars[1:]
+            for br in e.params["branches"]:
+                sub = br.jaxpr if hasattr(br, "jaxpr") else br
+                sub_taint = {bv for bv, ov in zip(sub.invars, ops)
+                             if _is_var(ov) and ov in tainted}
+                total += _count_ref_reads(sub, sub_taint)
+        elif e.primitive.name in ("closed_call", "pjit", "core_call"):
+            for sub in child_jaxprs(e.params):
+                sub_taint = {bv for bv, ov in zip(sub.invars, e.invars)
+                             if _is_var(ov) and ov in tainted}
+                total += _count_ref_reads(sub, sub_taint)
+    return total
+
+
+def kernel_structure(fn, *args, **kwargs) -> List[Dict[str, int]]:
+    """Trace ``fn(*args, **kwargs)`` and report, per Pallas kernel dispatched:
+
+    * ``dot_dispatches``      — MXU ``dot_general`` issues per grid block
+      (the acceptance metric: the series kernel must issue <= ta);
+    * ``out_ref_reads``       — reads of the HBM output ref inside the
+      kernel body (0 == no read-modify-write accumulation);
+    * ``quantize_rounds``     — total ``round`` ops in the body;
+    * ``unguarded_rounds``    — ``round`` ops at the kernel's top level,
+      i.e. NOT inside a ``pl.when`` guard (0 == quantize-once is guarded).
+    """
+    jaxpr = jax.make_jaxpr(partial(fn, **kwargs))(*args)
+    stats: List[Dict[str, int]] = []
+
+    def visit(jx):
+        for e in jx.eqns:
+            if e.primitive.name == "pallas_call":
+                inner = e.params["jaxpr"]
+                gm = e.params["grid_mapping"]
+                lo = gm.num_index_operands + gm.num_inputs
+                out_refs = set(inner.invars[lo:lo + gm.num_outputs])
+                top_rounds = sum(1 for q in inner.eqns if q.primitive.name == "round")
+                stats.append({
+                    "dot_dispatches": _count_prim(inner, "dot_general"),
+                    "out_ref_reads": _count_ref_reads(inner, out_refs),
+                    "quantize_rounds": _count_prim(inner, "round"),
+                    "unguarded_rounds": top_rounds,
+                })
+            for sub in child_jaxprs(e.params):
+                visit(sub)
+
+    visit(jaxpr.jaxpr)
+    return stats
+
+
+def gemm_dispatch_count(fn, *args, **kwargs) -> int:
+    """Total MXU dot dispatches per grid block across all Pallas kernels
+    dispatched by ``fn`` (0 when no kernel is dispatched)."""
+    return sum(s["dot_dispatches"] for s in kernel_structure(fn, *args, **kwargs))

@@ -1,0 +1,246 @@
+"""Repo-specific AST lint (``python -m repro.analysis lint``).
+
+Four rules, each mechanizing a bug class a previous PR found by hand:
+
+* **REPRO101 — bare assert on a runtime path.**  ``assert`` statements are
+  compiled out under ``python -O``; on the serving runtime paths
+  (``infer/``, ``models/``, ``api/``) a violated precondition must raise a
+  typed exception (``ValueError`` / ``SchedulerError``) that survives
+  optimization and that callers can catch.  Test files and kernel-launch
+  shape checks (``kernels/``, static at trace time) are exempt.
+
+* **REPRO102 — dynamic operand marked static.**  Operand names that vary
+  per request (``temperature``, ``eos_id``, ``row_mask``, ...) must never
+  appear in a ``static_argnames``/``static_argnums``-annotated jit: each
+  distinct value retraces and recompiles (the PR 3 temperature-retrace
+  class, one XLA compile per sampled temperature).
+
+* **REPRO103 — duplicated numeric-constant table.**  ``repro/numerics.py``
+  is the single source of the series grid constants
+  (``plane_limits``/``scale_ratio``); a re-definition elsewhere WILL drift
+  (the PR 5 clamp-table skew: four copies, one updated).  Also flags any
+  pair of identically-named module-level functions with identical bodies
+  in different non-test modules.
+
+* **REPRO104 — jit construction inside a loop.**  ``jax.jit(f)`` inside a
+  ``for``/``while`` body creates a fresh cache per iteration — every call
+  retraces; hoist the jit out of the loop.
+
+``run_lint(paths)`` returns :class:`LintError` findings formatted as
+``path:line:col: REPROxxx message`` — pointed enough to click through.
+"""
+from __future__ import annotations
+
+import ast
+import dataclasses
+import os
+from typing import Dict, Iterable, List, Optional, Sequence, Tuple
+
+#: directories (repo-relative, under src/repro/) whose asserts are runtime
+RUNTIME_DIRS = ("infer", "models", "api")
+
+#: operand names that vary per request/step — never static (REPRO102)
+DYNAMIC_OPERANDS = frozenset({
+    "temperature", "eos_id", "row_mask", "mask", "cache_len", "alive",
+    "key", "tok", "tokens", "logits", "top_p", "top_k",
+})
+
+#: the single-source grid-constant names (REPRO103); defined ONLY in
+#: repro/numerics.py
+NUMERIC_TABLE_NAMES = frozenset({
+    "plane_limits", "_plane_limits", "scale_ratio", "_scale_ratio",
+})
+NUMERICS_MODULE = os.path.join("repro", "numerics.py")
+
+
+@dataclasses.dataclass(frozen=True)
+class LintError:
+    path: str
+    line: int
+    col: int
+    rule: str
+    message: str
+
+    def __str__(self) -> str:
+        return f"{self.path}:{self.line}:{self.col}: {self.rule} {self.message}"
+
+
+def _is_test_file(path: str) -> bool:
+    base = os.path.basename(path)
+    return base.startswith("test_") or base.startswith("conftest") \
+        or f"{os.sep}tests{os.sep}" in path
+
+
+def _is_runtime_path(path: str) -> bool:
+    norm = path.replace(os.sep, "/")
+    return any(f"/repro/{d}/" in norm or norm.endswith(f"/repro/{d}.py")
+               for d in RUNTIME_DIRS)
+
+
+# ---------------------------------------------------------------------------
+# per-file visitors
+# ---------------------------------------------------------------------------
+class _Visitor(ast.NodeVisitor):
+    def __init__(self, path: str):
+        self.path = path
+        self.errors: List[LintError] = []
+        self._loop_depth = 0
+        self._runtime = _is_runtime_path(path)
+
+    def _err(self, node: ast.AST, rule: str, message: str):
+        self.errors.append(LintError(
+            self.path, getattr(node, "lineno", 0), getattr(node, "col_offset", 0),
+            rule, message))
+
+    # -- REPRO101: bare assert on runtime paths --------------------------
+    def visit_Assert(self, node: ast.Assert):
+        if self._runtime:
+            self._err(node, "REPRO101",
+                      "bare assert on a runtime path (compiled out under "
+                      "python -O); raise ValueError/SchedulerError instead")
+        self.generic_visit(node)
+
+    # -- REPRO102: dynamic operands in static_argnames -------------------
+    def visit_Call(self, node: ast.Call):
+        fname = self._call_name(node)
+        if fname in ("jit", "jax.jit", "functools.partial", "partial") or \
+                fname.endswith(".jit"):
+            for kw in node.keywords:
+                if kw.arg == "static_argnames":
+                    for name in self._str_elts(kw.value):
+                        if name in DYNAMIC_OPERANDS:
+                            self._err(
+                                kw.value, "REPRO102",
+                                f"dynamic operand {name!r} marked static — "
+                                f"every distinct value retraces/recompiles "
+                                f"(the temperature-retrace class); pass it "
+                                f"as a traced operand")
+        # REPRO104: jit constructed inside a loop body
+        if self._loop_depth > 0 and \
+                (fname in ("jax.jit", "jit") or fname.endswith(".jit")):
+            self._err(node, "REPRO104",
+                      "jax.jit(...) constructed inside a loop — a fresh "
+                      "cache per iteration means every call retraces; "
+                      "hoist the jit out of the loop")
+        self.generic_visit(node)
+
+    # -- REPRO104: loop tracking -----------------------------------------
+    def visit_For(self, node: ast.For):
+        self._loop_depth += 1
+        self.generic_visit(node)
+        self._loop_depth -= 1
+
+    def visit_While(self, node: ast.While):
+        self._loop_depth += 1
+        self.generic_visit(node)
+        self._loop_depth -= 1
+
+    # -- REPRO103 half 1: grid-constant names defined outside numerics ---
+    def visit_FunctionDef(self, node: ast.FunctionDef):
+        if node.name in NUMERIC_TABLE_NAMES and \
+                not self.path.replace(os.sep, "/").endswith("repro/numerics.py"):
+            self._err(node, "REPRO103",
+                      f"{node.name!r} re-defined outside repro/numerics.py — "
+                      f"the series grid-constant table is single-source "
+                      f"(duplicates drift: the PR 5 clamp-table skew)")
+        self.generic_visit(node)
+
+    # -- helpers ----------------------------------------------------------
+    @staticmethod
+    def _call_name(node: ast.Call) -> str:
+        try:
+            return ast.unparse(node.func)
+        except Exception:
+            return ""
+
+    @staticmethod
+    def _str_elts(node: ast.AST) -> List[str]:
+        if isinstance(node, ast.Constant) and isinstance(node.value, str):
+            return [node.value]
+        if isinstance(node, (ast.Tuple, ast.List, ast.Set)):
+            return [e.value for e in node.elts
+                    if isinstance(e, ast.Constant) and isinstance(e.value, str)]
+        return []
+
+
+def _module_functions(tree: ast.Module) -> Dict[str, ast.FunctionDef]:
+    return {n.name: n for n in tree.body if isinstance(n, ast.FunctionDef)}
+
+
+def _body_fingerprint(fn: ast.FunctionDef) -> str:
+    """Structural fingerprint of a function body (docstring stripped, source
+    locations ignored) — identical fingerprints in two modules mean a
+    copy-pasted table."""
+    body = fn.body
+    if body and isinstance(body[0], ast.Expr) and \
+            isinstance(body[0].value, ast.Constant) and \
+            isinstance(body[0].value.value, str):
+        body = body[1:]
+    return ast.dump(ast.Module(body=body, type_ignores=[]),
+                    include_attributes=False)
+
+
+# ---------------------------------------------------------------------------
+# driver
+# ---------------------------------------------------------------------------
+def iter_py_files(paths: Sequence[str]) -> Iterable[str]:
+    for p in paths:
+        if os.path.isfile(p) and p.endswith(".py"):
+            yield p
+        elif os.path.isdir(p):
+            for root, dirs, files in os.walk(p):
+                dirs[:] = [d for d in dirs
+                           if d not in ("__pycache__", ".git", ".venv")]
+                for f in sorted(files):
+                    if f.endswith(".py"):
+                        yield os.path.join(root, f)
+
+
+def lint_file(path: str, source: Optional[str] = None) -> List[LintError]:
+    """Lint one file; returns findings (empty == clean)."""
+    if source is None:
+        with open(path, "r", encoding="utf-8") as fh:
+            source = fh.read()
+    try:
+        tree = ast.parse(source, filename=path)
+    except SyntaxError as e:
+        return [LintError(path, e.lineno or 0, e.offset or 0, "REPRO100",
+                          f"syntax error: {e.msg}")]
+    if _is_test_file(path):
+        return []
+    v = _Visitor(path)
+    v.visit(tree)
+    return v.errors
+
+
+def run_lint(paths: Sequence[str]) -> List[LintError]:
+    """Lint every ``.py`` under ``paths``.  Includes the cross-file half of
+    REPRO103: identically-named module-level functions with structurally
+    identical bodies in two different modules."""
+    errors: List[LintError] = []
+    # (name, fingerprint) -> first definition site
+    seen: Dict[Tuple[str, str], Tuple[str, int]] = {}
+    for path in iter_py_files(paths):
+        with open(path, "r", encoding="utf-8") as fh:
+            source = fh.read()
+        errors.extend(lint_file(path, source))
+        if _is_test_file(path):
+            continue
+        try:
+            tree = ast.parse(source, filename=path)
+        except SyntaxError:
+            continue
+        for name, fn in _module_functions(tree).items():
+            if len(fn.body) < 2 and name not in NUMERIC_TABLE_NAMES:
+                continue                      # one-liners collide by chance
+            key = (name, _body_fingerprint(fn))
+            prev = seen.get(key)
+            if prev is not None and prev[0] != path:
+                errors.append(LintError(
+                    path, fn.lineno, fn.col_offset, "REPRO103",
+                    f"function {name!r} duplicates {prev[0]}:{prev[1]} "
+                    f"(identical body) — extract one shared definition; "
+                    f"duplicated tables drift"))
+            else:
+                seen.setdefault(key, (path, fn.lineno))
+    return errors

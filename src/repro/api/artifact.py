@@ -233,7 +233,9 @@ class QuantArtifact:
             elif leaf is None:
                 entry["kind"] = "none"
             elif isinstance(leaf, (dict, list, tuple)):
-                assert not leaf  # _flatten only leaves empty containers whole
+                if leaf:  # _flatten only leaves empty containers whole
+                    raise ValueError(
+                        f"unflattened non-empty container at {key!r}: {type(leaf).__name__}")
                 entry["kind"] = "empty"
                 entry["container"] = ("dict" if isinstance(leaf, dict)
                                       else "tuple" if isinstance(leaf, tuple)

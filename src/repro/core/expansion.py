@@ -32,6 +32,14 @@ from typing import Optional
 import jax
 import jax.numpy as jnp
 
+# the shared grid-constant table (repro/numerics.py, dependency-free): the
+# kernels import the same functions, so every extraction site provably
+# agrees; lint rule REPRO103 locks re-definitions outside repro/numerics.py.
+# ``scale_ratio`` stays public here (E.scale_ratio) — it is part of the
+# expansion API surface.
+from repro.numerics import plane_limits as _plane_limits
+from repro.numerics import scale_ratio
+
 # ---------------------------------------------------------------------------
 # ACIQ-style Laplace-optimal clipping multipliers: clip = kappa(X) * b where
 # b is the Laplace scale estimated as mean |M - mu|.  (Banner et al., 2018.)
@@ -160,14 +168,7 @@ def first_scale(c: jnp.ndarray, bits: int) -> jnp.ndarray:
     return jnp.maximum(c, 1e-30) / qmax
 
 
-def scale_ratio(bits: int) -> int:
-    """Inter-term scale ratio.  The paper's dyadic schedule is 2^X; a residual
-    in [-s/2, s/2] then needs the grid value ±2^{X-1}, which the int8
-    container holds for X < 8 but not for X = 8 (+128 overflows) — there the
-    clamp *stalls* convergence at ~s_2/2 on half-tie elements.  We therefore
-    use ratio 2^{X-1} for X = 8 (|q| <= 64, clamp-free, still geometric).
-    Documented deviation, see DESIGN.md §7."""
-    return 2 ** bits if bits < 8 else 2 ** (bits - 1)
+# scale_ratio: imported from repro.numerics above (shared with the kernels).
 
 
 def term_scale(scale1: jnp.ndarray, bits: int, k: int) -> jnp.ndarray:
@@ -176,23 +177,8 @@ def term_scale(scale1: jnp.ndarray, bits: int, k: int) -> jnp.ndarray:
 
 
 # ---------------------------------------------------------------------------
-# plane extraction
+# plane extraction (_plane_limits: imported from repro.numerics above)
 # ---------------------------------------------------------------------------
-def _plane_limits(bits: int, k: int, pack_safe: bool = False):
-    if k == 0 or pack_safe:
-        # pack_safe: every plane stays on the true X-bit grid [-(2^{X-1}-1),
-        # 2^{X-1}-1] so INT4 planes pack 2/byte (kernels/pack.py); the rare
-        # half-tie clamp error is absorbed by the next plane (sequential
-        # extraction) at the cost of a 3x slack on the final-term bound
-        hi = 2 ** (bits - 1) - 1
-        return -hi, hi
-    # residual planes: the proof bound |q| <= 2^{X-1} in an int8 container —
-    # asymmetric at X=8, where lo reaches the container floor -128 while hi
-    # clamps +128 -> +127.  Both bounds are unreachable at X=8 by
-    # construction (scale_ratio halves to 2^{X-1}, so |round(r/s)| <= 64);
-    # they are stated exactly so the kernels' copies provably agree with this
-    # reference (tests/test_kernels.py bits=8 parity property).
-    return -(2 ** (bits - 1)), min(2 ** (bits - 1), 127)
 
 
 def _expand_scale_dims(scale, target_ndim, per_channel):

@@ -32,6 +32,7 @@ import jax.numpy as jnp
 from jax.experimental.shard_map import shard_map
 from jax.sharding import Mesh, NamedSharding, PartitionSpec as P
 
+from repro.analysis.contracts import annotate as _contract
 from repro.core import expansion as E
 from repro.core import linear as LIN
 from repro.core.expansion import ExpandedTensor
@@ -231,6 +232,18 @@ def term_parallel_apply(x: jnp.ndarray, w_et: ExpandedTensor,
     if sigma is not None:
         out = out + sigma @ E.reconstruct(w_et)
     return out.reshape(*lead, n)
+
+
+# the integer-domain psum contract (DESIGN.md §9), checked by
+# repro.analysis.check_integer_psum: the series path psums int32
+# accumulators; the weight-only path deliberately psums FP partials and
+# carries the waiver below (reported, never failed).
+_contract(term_parallel_apply, name="term_parallel_apply",
+          int_psum_axes=(AXIS,),
+          float_psum_waiver=(
+              "weight-only path (a_terms == 0 or a_bits >= 16) psums FP "
+              "partials: without the activation-requantization amplifier "
+              "the reassociation deviation stays at ulp level"))
 
 
 def term_parallel_mlp_forward(x: jnp.ndarray, ets: List[ExpandedTensor],

@@ -34,6 +34,23 @@ PLACEMENTS = ("replicated", "term", "tensor")
 #: mesh axis name each placement's collectives are written against
 PLACEMENT_AXIS = {"term": "expand", "tensor": "model"}
 
+#: mesh axes whose psums must reduce in the INTEGER domain (the Abelian
+#: exactness contract, DESIGN.md §9).  "term" contracts series partials —
+#: f32 psums there reassociate per device count and diverge through
+#: requantization; "tensor" shards output columns (no contraction is
+#: reassociated), so it carries no integer-domain requirement.
+#: ``repro.analysis.check_integer_psum`` reads this to know which axes to
+#: police when tracing a placed computation.
+INT_PSUM_AXES = ("expand",)
+
+
+def int_psum_axes(placement: str) -> tuple:
+    """The mesh axes the integer-domain psum rule applies to under a
+    placement (empty for placements with no reassociated contraction)."""
+    check_placement(placement)
+    axis = PLACEMENT_AXIS.get(placement)
+    return (axis,) if axis in INT_PSUM_AXES else ()
+
 
 def check_placement(placement: str) -> str:
     if placement not in PLACEMENTS:

@@ -41,6 +41,8 @@ from typing import Dict, Optional, Tuple
 
 import numpy as np
 
+from repro.analysis.contracts import annotate as _contract
+
 # the default quality ladder: tier name -> term budget (None = full series)
 DEFAULT_TIER_BUDGETS: Tuple[Tuple[str, int], ...] = (("k2", 2), ("k1", 1))
 
@@ -318,7 +320,9 @@ class ChaosInjector:
         """Host-side injection point, called immediately before a dispatch
         is issued.  May stall (latency spike) and may raise
         :class:`ChaosFailure` (transient failure) — never after the real
-        dispatch ran, so retries never double-apply a donated buffer."""
+        dispatch ran, so retries never double-apply a donated buffer.
+        The ordering contract is annotated below and proven by the
+        :class:`repro.analysis.DonationLedger` mutation test."""
         c = self.cfg
         if c.latency_p and self.rng.random() < c.latency_p:
             self.latency_injected += 1
@@ -334,6 +338,15 @@ class ChaosInjector:
                 "latency_injected": self.latency_injected,
                 "failures_injected": self.failures_injected,
                 "squeezing_now": self.squeezing}
+
+
+# chaos must fire BEFORE the dispatch that consumes donated buffers (the
+# fused steps donate the caches, arg position 2): a retry after an injected
+# failure re-issues the dispatch with buffers that were never consumed.
+# Injecting *after* would donate first and retry on a freed buffer — the
+# double-apply class the DonationLedger mutation test seeds.
+_contract(ChaosInjector.before_dispatch, name="chaos_before_dispatch",
+          donate_argnums=(2,))
 
 
 def safe_rate(count: float, seconds: float, eps: float = 1e-9) -> float:

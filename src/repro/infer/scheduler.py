@@ -73,6 +73,13 @@ PyTree = Any
 _IDLE_CAP = 100_000
 
 
+class SchedulerError(RuntimeError):
+    """The scheduler cannot make progress (e.g. a chaos squeeze left zero
+    usable slots past the no-hang backstop).  Typed so callers can
+    distinguish a stalled schedule from arbitrary runtime failures — and so
+    the backstop survives ``python -O`` (it is a raise, never an assert)."""
+
+
 @dataclasses.dataclass
 class Request:
     """One queued generation request (admission order: priority, then rid)."""
@@ -523,7 +530,7 @@ class SlotScheduler:
                     self.chaos.tick()
                 idle_iters += 1
                 if idle_iters > _IDLE_CAP:
-                    raise RuntimeError(
+                    raise SchedulerError(
                         f"scheduler made no progress for {_IDLE_CAP} rounds "
                         f"({len(queue)} queued, {usable} usable slots)")
                 continue
@@ -653,7 +660,7 @@ class SlotScheduler:
                     self.chaos.tick()
                 idle_iters += 1
                 if idle_iters > _IDLE_CAP:
-                    raise RuntimeError(
+                    raise SchedulerError(
                         f"scheduler made no progress for {_IDLE_CAP} rounds "
                         f"({len(queue)} queued, {usable} usable slots)")
                 continue

@@ -49,6 +49,7 @@ import jax
 import jax.numpy as jnp
 import numpy as np
 
+from repro.analysis.contracts import annotate as _contract
 from repro.configs.base import ArchConfig
 from repro.core import ptq as PTQ
 from repro.core.policy import ExpansionPolicy
@@ -157,6 +158,10 @@ def make_decode_sample_step(cfg: ArchConfig, qc: QuantContext = FP,
         alive = jnp.logical_and(alive, nxt[:, 0] != eos_id)
         return nxt, caches, key, alive
 
+    _contract(step, name="fused_decode", transfers_per_round=1,
+              int_psum_axes=("expand",),
+              dynamic_operands=("eos_id", "temperature"),
+              donate_argnums=(2,), budget_key="decode")
     if not masked:
         return step
 
@@ -175,6 +180,11 @@ def make_decode_sample_step(cfg: ArchConfig, qc: QuantContext = FP,
                 new_caches["tail"], caches["tail"]),
         }
         return nxt, merged, key, alive_out
+
+    _contract(masked_step, name="fused_decode_masked", transfers_per_round=1,
+              int_psum_axes=("expand",),
+              dynamic_operands=("eos_id", "temperature", "row_mask"),
+              donate_argnums=(2,), budget_key="decode_masked")
     return masked_step
 
 
@@ -226,6 +236,10 @@ def make_spec_decode_step(cfg: ArchConfig, qc: QuantContext,
         caches = M.commit_verify(caches, deltas, clen, accept, cfg)
         next_tok = jnp.take_along_axis(full, accept[:, None], axis=1)
         return next_tok, caches, full, accept
+
+    _contract(step, name="spec_decode", transfers_per_round=1,
+              int_psum_axes=("expand",), donate_argnums=(2,),
+              budget_key="spec_decode")
     return step
 
 
@@ -339,9 +353,11 @@ class Engine:
         s_max = serve_cfg.max_seq  # frozen at construction (jit closure)
         self._prefill = jax.jit(
             lambda p, batch: M.prefill(p, batch, cfg, self.qc, s_max=s_max))
-        self._prefill_slot = jax.jit(
+        self._prefill_slot = jax.jit(_contract(
             lambda p, batch, lengths: M.prefill(p, batch, cfg, self.qc,
-                                                s_max=s_max, lengths=lengths))
+                                                s_max=s_max, lengths=lengths),
+            name="prefill_slot", int_psum_axes=("expand",),
+            budget_key="prefill"))
         self._scatter = jax.jit(M.scatter_cache_into_slot, donate_argnums=(0,))
         self._decode = jax.jit(
             make_decode_sample_step(cfg, self.qc, masked=True),

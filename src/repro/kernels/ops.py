@@ -319,93 +319,11 @@ def dequant_matmul(x: jnp.ndarray, w_planes: jnp.ndarray,
 
 
 # ---------------------------------------------------------------------------
-# kernel-structure introspection (tests + BENCH_kernels.json)
+# kernel-structure introspection — the implementation moved to
+# repro.analysis.jaxpr_check (the generic jaxpr walker grew out of it);
+# re-exported here because tests and BENCH_kernels.json call it as ops.*
 # ---------------------------------------------------------------------------
-def _subjaxprs(params) -> List[Any]:
-    out = []
-    for v in params.values():
-        vs = v if isinstance(v, (list, tuple)) else (v,)
-        for vv in vs:
-            core = getattr(vv, "jaxpr", None)
-            if core is None:
-                continue
-            out.append(core if hasattr(core, "eqns") else core.jaxpr)
-    return out
-
-
-def _count_prim(jaxpr, name: str) -> int:
-    total = 0
-    for e in jaxpr.eqns:
-        if e.primitive.name == name:
-            total += 1
-        for sub in _subjaxprs(e.params):
-            total += _count_prim(sub, name)
-    return total
-
-
-def _is_var(v) -> bool:
-    return not hasattr(v, "val")          # jaxpr Literals carry .val
-
-
-def _count_ref_reads(jaxpr, tainted) -> int:
-    """Reads (``get``) of any ref in ``tainted``, following refs positionally
-    through cond branches and nested calls."""
-    total = 0
-    for e in jaxpr.eqns:
-        if e.primitive.name == "get" and e.invars and _is_var(e.invars[0]) \
-                and e.invars[0] in tainted:
-            total += 1
-        if e.primitive.name == "cond":
-            ops = e.invars[1:]
-            for br in e.params["branches"]:
-                sub = br.jaxpr if hasattr(br, "jaxpr") else br
-                sub_taint = {bv for bv, ov in zip(sub.invars, ops)
-                             if _is_var(ov) and ov in tainted}
-                total += _count_ref_reads(sub, sub_taint)
-        elif e.primitive.name in ("closed_call", "pjit", "core_call"):
-            for sub in _subjaxprs(e.params):
-                sub_taint = {bv for bv, ov in zip(sub.invars, e.invars)
-                             if _is_var(ov) and ov in tainted}
-                total += _count_ref_reads(sub, sub_taint)
-    return total
-
-
-def kernel_structure(fn, *args, **kwargs) -> List[Dict[str, int]]:
-    """Trace ``fn(*args, **kwargs)`` and report, per Pallas kernel dispatched:
-
-    * ``dot_dispatches``      — MXU ``dot_general`` issues per grid block
-      (the acceptance metric: the series kernel must issue <= ta);
-    * ``out_ref_reads``       — reads of the HBM output ref inside the
-      kernel body (0 == no read-modify-write accumulation);
-    * ``quantize_rounds``     — total ``round`` ops in the body;
-    * ``unguarded_rounds``    — ``round`` ops at the kernel's top level,
-      i.e. NOT inside a ``pl.when`` guard (0 == quantize-once is guarded).
-    """
-    jaxpr = jax.make_jaxpr(partial(fn, **kwargs))(*args)
-    stats: List[Dict[str, int]] = []
-
-    def visit(jx):
-        for e in jx.eqns:
-            if e.primitive.name == "pallas_call":
-                inner = e.params["jaxpr"]
-                gm = e.params["grid_mapping"]
-                lo = gm.num_index_operands + gm.num_inputs
-                out_refs = set(inner.invars[lo:lo + gm.num_outputs])
-                top_rounds = sum(1 for q in inner.eqns if q.primitive.name == "round")
-                stats.append({
-                    "dot_dispatches": _count_prim(inner, "dot_general"),
-                    "out_ref_reads": _count_ref_reads(inner, out_refs),
-                    "quantize_rounds": _count_prim(inner, "round"),
-                    "unguarded_rounds": top_rounds,
-                })
-            for sub in _subjaxprs(e.params):
-                visit(sub)
-
-    visit(jaxpr.jaxpr)
-    return stats
-
-
-def gemm_dispatch_count(fn, *args, **kwargs) -> int:
-    """Total MXU dot dispatches per grid block across all Pallas kernels
-    dispatched by ``fn`` (0 when no kernel is dispatched)."""
-    return sum(s["dot_dispatches"] for s in kernel_structure(fn, *args, **kwargs))
+from repro.analysis.jaxpr_check import (  # noqa: E402
+    gemm_dispatch_count,
+    kernel_structure,
+)

@@ -22,22 +22,10 @@ from __future__ import annotations
 import jax
 import jax.numpy as jnp
 
-
-def _scale_ratio(bits: int) -> int:
-    # Mirrors repro.core.expansion.scale_ratio (duplicated: kernels stay
-    # import-cycle-free): 2^X for X<8, 2^{X-1} for X=8 (int8 container).
-    return 2 ** bits if bits < 8 else 2 ** (bits - 1)
-
-
-def _plane_limits(bits: int, k: int):
-    # mirrors repro.core.expansion._plane_limits (bits=8 parity is property-
-    # tested): residual planes use the proof bound +-2^{X-1} in an int8
-    # container — lo reaches -128 at X=8, hi clamps +128 -> +127; both are
-    # unreachable there (halved scale ratio keeps |q| <= 64)
-    if k == 0:
-        hi = 2 ** (bits - 1) - 1
-        return -hi, hi
-    return -(2 ** (bits - 1)), min(2 ** (bits - 1), 127)
+# the shared grid-constant table (repro/numerics.py is dependency-free, so
+# kernels stay import-cycle-free); lint rule REPRO103 locks re-definitions
+from repro.numerics import plane_limits as _plane_limits
+from repro.numerics import scale_ratio as _scale_ratio
 
 
 def residual_quantize_ref(x: jnp.ndarray, scale1: jnp.ndarray, bits: int, terms: int) -> jnp.ndarray:

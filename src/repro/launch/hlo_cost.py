@@ -357,3 +357,38 @@ def total_costs(text: str) -> Dict[str, Any]:
         return out
 
     return walk(entry)
+
+
+def collective_dtype_census(text: str) -> List[Dict[str, str]]:
+    """Every collective instruction in the HLO with its element dtype:
+    ``[{"op", "dtype", "computation", "line"}, ...]``.
+
+    The HLO-side cross-check of the integer-domain psum rule: the jaxpr
+    walker (:func:`repro.analysis.check_integer_psum`) polices what was
+    *written*; this sees what XLA actually *lowered* — SPMD partitioning can
+    introduce collectives no jaxpr equation shows."""
+    out: List[Dict[str, str]] = []
+    cur = "?"
+    for lineno, raw in enumerate(text.splitlines(), start=1):
+        line = raw.strip()
+        m = _COMP_START_RE.match(line)
+        if m and raw.rstrip().endswith("{"):
+            cur = m.group(1)
+            continue
+        for coll in _COLLECTIVES:
+            if re.search(rf"=\s*(?:\([^)]*\)|\S+)\s+{coll}\(", line):
+                sd = _shape_dims(line.split("=", 1)[1])
+                out.append({"op": coll, "dtype": sd[0] if sd else "?",
+                            "computation": cur, "line": str(lineno)})
+                break
+    return out
+
+
+def check_integer_collectives(text: str, *,
+                              kinds: Tuple[str, ...] = ("all-reduce",)
+                              ) -> List[Dict[str, str]]:
+    """The collectives of ``kinds`` whose element type is NOT integer —
+    empty on a computation honoring the integer-domain reduction contract.
+    Returns the offending census rows (op/dtype/computation/line)."""
+    return [row for row in collective_dtype_census(text)
+            if row["op"] in kinds and row["dtype"] not in _INT_TYPES]

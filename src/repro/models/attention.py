@@ -23,7 +23,9 @@ NEG_INF = -1e30
 def _chunk(x: jnp.ndarray, size: int, axis: int) -> jnp.ndarray:
     """(..., S, ...) -> (..., S//size, size, ...) with S % size == 0."""
     s = x.shape[axis]
-    assert s % size == 0, (x.shape, size, axis)
+    if s % size != 0:
+        raise ValueError(
+            f"axis {axis} of {x.shape} not divisible by chunk size {size}")
     new = x.shape[:axis] + (s // size, size) + x.shape[axis + 1:]
     return x.reshape(new)
 
@@ -42,7 +44,8 @@ def flash_attention(
 ) -> jnp.ndarray:
     b, s, h, d = q.shape
     _, t, g, _ = k.shape
-    assert h % g == 0, (h, g)
+    if h % g != 0:
+        raise ValueError(f"query heads {h} not divisible by kv heads {g}")
     r = h // g
     q_chunk = min(q_chunk, s)
     kv_chunk = min(kv_chunk, t)

@@ -140,7 +140,8 @@ def block_forward(qc: QuantContext, kind: str, p: Dict, x: jnp.ndarray, cfg, *,
             cache = {"k": k, "v": v}
         return x, cache
     if kind == "cross":
-        assert side is not None and "image_emb" in side, "cross block needs image side input"
+        if side is None or "image_emb" not in side:
+            raise ValueError("cross block needs an 'image_emb' side input")
         h = L.apply_norm(cfg.norm, p["ln"], x)
         hd, hq, g = cfg.head_dim, cfg.num_heads, cfg.num_kv_heads
         q = L.dense(qc, h, p["attn"]["q"]).reshape(b, h.shape[1], hq, hd)

@@ -43,7 +43,8 @@ def _expert_mm(qc: QuantContext, x_e: jnp.ndarray, w, act=None) -> jnp.ndarray:
     """x_e: (E, C', D) @ stacked kernels (E, D, F) -> (E, C', F)."""
     if isinstance(w["kernel"], ExpandedTensor):
         et = w["kernel"]
-        assert et.batch_dims == 1, et
+        if et.batch_dims != 1:
+            raise ValueError(f"stacked expert kernel must have batch_dims=1, got {et}")
         out = jax.vmap(lambda xe, we: expanded_apply(xe, we, qc.policy, use_kernel=qc.use_kernel))(
             x_e, et.unbatched_view())
     else:
@@ -58,7 +59,9 @@ def moe_apply(qc: QuantContext, params: Dict, x: jnp.ndarray, cfg,
     e, k = cfg.num_experts, cfg.experts_per_token
     tokens = b * s
     g_sz = min(group_size, tokens)
-    assert tokens % g_sz == 0, (tokens, g_sz)
+    if tokens % g_sz != 0:
+        raise ValueError(
+            f"token count {tokens} not divisible by MoE group size {g_sz}")
     g = tokens // g_sz
     cap = min(g_sz, max(k, math.ceil(g_sz * k / e * cfg.capacity_factor)))
 

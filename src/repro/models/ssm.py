@@ -68,7 +68,8 @@ def ssd_chunked(x, dt, a, bv, cv, *, chunk: int):
     b, l, h, p = x.shape
     n = bv.shape[-1]
     chunk = min(chunk, l)
-    assert l % chunk == 0, (l, chunk)
+    if l % chunk != 0:
+        raise ValueError(f"sequence length {l} not divisible by SSD chunk {chunk}")
     nc = l // chunk
 
     da = dt * a                                             # (B,L,H)  <= 0

@@ -1,0 +1,49 @@
+"""Single source of truth for the series-grid constants (DESIGN.md §7).
+
+The dyadic scale schedule and the per-plane clamp bounds define the FP=xINT
+number system: every extraction site — the reference oracle, both Pallas
+kernels, and the tensor-level expansion — must agree on them EXACTLY or the
+exactness guarantees of Theorem 1 silently break (PR 5 found the four
+hand-copied tables drifting apart in their stated bounds).  This module is
+the one place they are defined; ``repro.analysis`` lint rule REPRO103 locks
+any re-definition of these functions outside this file.
+
+Dependency-free by construction (stdlib only): both ``repro.core`` and
+``repro.kernels`` import it, and neither may import the other
+(``core.linear`` -> ``kernels.ops`` is the one allowed direction).
+"""
+from __future__ import annotations
+
+from typing import Tuple
+
+
+def scale_ratio(bits: int) -> int:
+    """Inter-term scale ratio.  The paper's dyadic schedule is 2^X; a
+    residual in [-s/2, s/2] then needs the grid value ±2^{X-1}, which the
+    int8 container holds for X < 8 but not for X = 8 (+128 overflows) —
+    there the clamp *stalls* convergence at ~s_2/2 on half-tie elements.
+    We therefore use ratio 2^{X-1} for X = 8 (|q| <= 64, clamp-free, still
+    geometric).  Documented deviation, see DESIGN.md §7."""
+    return 2 ** bits if bits < 8 else 2 ** (bits - 1)
+
+
+def plane_limits(bits: int, k: int, pack_safe: bool = False) -> Tuple[int, int]:
+    """Clamp bounds of plane ``k`` of an INT-``bits`` series (int8 container).
+
+    Plane 0 uses the symmetric grid [-(2^{X-1}-1), 2^{X-1}-1] so
+    ``scale_1 = absmax / (2^{X-1}-1)`` maps the extremes exactly;
+    ``pack_safe`` keeps EVERY plane on that grid so INT4 planes pack two
+    per byte (kernels/pack.py) — the rare half-tie clamp error is absorbed
+    by the next plane (sequential extraction) at the cost of a 3x slack on
+    the final-term bound.
+
+    Residual planes (k >= 1) use the proof bound |q| <= 2^{X-1} in an int8
+    container — asymmetric at X=8, where lo reaches the container floor
+    -128 while hi clamps +128 -> +127.  Both bounds are unreachable at X=8
+    by construction (scale_ratio halves to 2^{X-1}, so |round(r/s)| <= 64);
+    they are stated exactly so every extraction site provably agrees
+    (tests/test_kernels.py bits=8 parity property)."""
+    if k == 0 or pack_safe:
+        hi = 2 ** (bits - 1) - 1
+        return -hi, hi
+    return -(2 ** (bits - 1)), min(2 ** (bits - 1), 127)

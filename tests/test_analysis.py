@@ -1,0 +1,440 @@
+"""The static-analysis subsystem (repro.analysis, DESIGN.md §12).
+
+Two halves, both mandatory:
+
+* **mutation self-tests** — seed each historical bug class and assert the
+  owning checker FIRES with a pointed diagnostic (a checker that cannot
+  fail is not a check): f32 psum on the expand axis, a second host
+  transfer per decode round, a dynamic operand marked static, a duplicated
+  grid-constant table, a bare runtime assert, a donated buffer reused;
+* **clean-pass + serving regressions** — the unmutated tree passes every
+  checker with zero violations, and live engine runs (plain, speculative,
+  QoS-masked) honor the one-transfer-per-round contract and the pinned
+  jit-cache sizes.
+"""
+import os
+import textwrap
+
+import jax
+import jax.numpy as jnp
+import numpy as np
+import pytest
+
+import repro.analysis as A
+from repro.analysis import budgets as AB
+from repro.analysis.jaxpr_check import check_budget, check_no_retrace
+from repro.analysis.lint import lint_file, run_lint
+from repro.configs.base import get_arch
+from repro.core.policy import ExpansionPolicy
+from repro.infer.serve import Engine, ServeConfig
+from repro.models import model as M
+
+SRC = os.path.join(os.path.dirname(os.path.dirname(os.path.abspath(__file__))),
+                   "src", "repro")
+
+W4A16_T3 = ExpansionPolicy(w_bits=4, a_bits=16, w_terms=3, a_terms=0)
+
+
+@pytest.fixture(scope="module")
+def setup():
+    cfg = get_arch("qwen2_1_5b", smoke=True)
+    params = M.init_params(jax.random.PRNGKey(0), cfg)
+    return cfg, params
+
+
+def _prompts(cfg, lengths, seed=0):
+    r = np.random.default_rng(seed)
+    return [r.integers(0, cfg.vocab_size, l).tolist() for l in lengths]
+
+
+def _mesh():
+    from jax.sharding import Mesh
+    return Mesh(np.array(jax.devices()[:1]), ("expand",))
+
+
+# ===========================================================================
+# mutation self-tests: seed the bug, the checker must fire with file:line
+# ===========================================================================
+def test_mutation_float_psum_fires():
+    """An f32 psum on the expand axis (the PR 4 divergence class) is caught,
+    with the psum's source site in the diagnostic."""
+    from jax.experimental.shard_map import shard_map
+    from jax.sharding import PartitionSpec as P
+
+    mesh = _mesh()
+
+    def bad(x):
+        return shard_map(lambda v: jax.lax.psum(v, "expand"),
+                         mesh=mesh, in_specs=P(), out_specs=P())(x)
+
+    with pytest.raises(A.AnalysisViolation) as exc:
+        A.check_integer_psum(bad, jnp.ones((4,), jnp.float32))
+    msg = str(exc.value)
+    assert "integer-psum" in msg and "float32" in msg
+    assert "test_analysis.py" in msg  # pointed: names THIS file's psum
+
+
+def test_mutation_int_psum_passes():
+    from jax.experimental.shard_map import shard_map
+    from jax.sharding import PartitionSpec as P
+
+    mesh = _mesh()
+
+    def good(x):
+        return shard_map(lambda v: jax.lax.psum(v, "expand"),
+                         mesh=mesh, in_specs=P(), out_specs=P())(x)
+
+    assert A.check_integer_psum(good, jnp.ones((4,), jnp.int32)) == []
+
+
+def test_mutation_waiver_reports_without_raising():
+    """The weight-only float psum is reported (never silently dropped) but
+    does not fail when run non-strict under a declared waiver."""
+    from jax.experimental.shard_map import shard_map
+    from jax.sharding import PartitionSpec as P
+
+    mesh = _mesh()
+
+    def weight_only(x):
+        return shard_map(lambda v: jax.lax.psum(v, "expand"),
+                         mesh=mesh, in_specs=P(), out_specs=P())(x)
+
+    found = A.check_integer_psum(weight_only, jnp.ones((4,), jnp.float32),
+                                 strict=False)
+    assert len(found) == 1 and found[0].rule == "integer-psum"
+
+
+def test_mutation_host_callback_counted():
+    def with_cb(x):
+        return jax.pure_callback(
+            lambda a: np.asarray(a),
+            jax.ShapeDtypeStruct((4,), jnp.float32), x)
+
+    assert A.count_host_callbacks(with_cb, jnp.ones(4)) == 1
+    assert A.count_host_callbacks(lambda x: x * 2, jnp.ones(4)) == 0
+
+
+def test_mutation_double_transfer_fires():
+    """A second device_get inside a decode round (the PR 5 drain-miscount
+    class) breaches the census, and the diagnostic carries the call sites."""
+    census = A.TransferCensus()
+    step = census.wrap_dispatch(lambda x: x + 1)
+    with census:
+        x = jnp.ones(2)
+        for _ in range(3):
+            x = step(x)
+            jax.device_get(x)          # the contracted transfer
+            jax.device_get(x)          # the seeded bug: one too many
+    with pytest.raises(A.AnalysisViolation) as exc:
+        census.check(max_per_round=1)
+    msg = str(exc.value)
+    assert "transfer-census" in msg and "test_analysis.py" in msg
+    assert census.rounds == 3 and census.transfers == 6
+
+
+def test_mutation_transfer_census_clean():
+    census = A.TransferCensus()
+    step = census.wrap_dispatch(lambda x: x + 1)
+    with census:
+        x = jnp.ones(2)
+        for _ in range(3):
+            x = step(x)
+            jax.device_get(x)
+    assert census.check(max_per_round=1) == []
+
+
+def test_mutation_static_temperature_retraces():
+    """temperature marked static (the PR 3 class): two distinct values mean
+    two traces, and the tripwire fires; passed dynamically, one trace."""
+    @jax.jit
+    def dynamic(x, temperature):
+        return x / jnp.maximum(temperature, 1e-6)
+
+    from functools import partial
+
+    @partial(jax.jit, static_argnames=("temperature",))
+    def static(x, temperature):
+        return x / max(temperature, 1e-6)
+
+    x = jnp.ones(4)
+    for t in (0.5, 0.9):
+        dynamic(x, jnp.asarray(t))
+        static(x, t)
+    assert A.jit_cache_sizes({"dynamic": dynamic})["dynamic"] == 1
+    with pytest.raises(A.AnalysisViolation) as exc:
+        check_no_retrace({"static": static})
+    assert "retrace" in str(exc.value) and "2 traces" in str(exc.value)
+
+
+def test_mutation_donation_double_apply_fires(setup):
+    """Re-dispatching with an already-donated cache tree (the chaos
+    double-apply class) raises even on CPU, where jax silently ignores
+    donation and the bug would otherwise pass every test."""
+    cfg, params = setup
+    ledger = A.DonationLedger()
+    step = ledger.wrap(lambda p, tok, caches: (tok + 1, caches),
+                       donate_argnums=(2,))
+    caches = {"k": jnp.zeros((2, 4)), "v": jnp.zeros((2, 4))}
+    step(params, jnp.ones((2, 1), jnp.int32), caches)     # donates caches
+    with pytest.raises(A.AnalysisViolation) as exc:
+        step(params, jnp.ones((2, 1), jnp.int32), caches)  # double-apply
+    assert "donation-reuse" in str(exc.value)
+    assert "test_analysis.py" in str(exc.value)  # where it was donated
+
+
+def test_mutation_donation_failed_dispatch_not_spent():
+    """A dispatch that RAISES never consumed its donated buffers — the
+    chaos-retry contract: retry with the same buffers must be legal."""
+    ledger = A.DonationLedger()
+    calls = {"n": 0}
+
+    def flaky(caches):
+        calls["n"] += 1
+        if calls["n"] == 1:
+            raise RuntimeError("chaos: injected transient failure")
+        return caches["k"] + 1
+
+    step = ledger.wrap(flaky, donate_argnums=(0,))
+    caches = {"k": jnp.zeros(3)}
+    with pytest.raises(RuntimeError):
+        step(caches)
+    step(caches)                        # the retry — must NOT trip the ledger
+    with pytest.raises(A.AnalysisViolation):
+        step(caches)                    # but a third use does
+
+
+def test_mutation_budget_breach_fires():
+    measured = {"dot_general": 40, "callbacks": 1}
+    budget = {"dot_general": 17, "callbacks": 0}
+    with pytest.raises(A.AnalysisViolation) as exc:
+        check_budget(measured, budget, entry="decode")
+    msg = str(exc.value)
+    assert "dispatch-budget" in msg and "analysis_budgets.json:decode" in msg
+    assert "40" in msg and "17" in msg
+
+
+# ---------------------------------------------------------------------------
+# lint mutations (REPRO101-104): each rule fires on seeded source
+# ---------------------------------------------------------------------------
+def _write(tmp_path, rel, source):
+    p = tmp_path / rel
+    p.parent.mkdir(parents=True, exist_ok=True)
+    p.write_text(textwrap.dedent(source))
+    return str(p)
+
+
+def test_lint_bare_assert_fires(tmp_path):
+    p = _write(tmp_path, "repro/infer/mutated.py", """
+        def admit(n):
+            assert n > 0, "no slots"
+            return n
+    """)
+    errs = lint_file(p)
+    assert len(errs) == 1 and errs[0].rule == "REPRO101"
+    assert f"{p}:3:" in str(errs[0])          # file:line:col prefix
+
+
+def test_lint_bare_assert_ignores_kernels_and_tests(tmp_path):
+    for rel in ("repro/kernels/k.py", "repro/core/c.py", "tests/test_x.py"):
+        p = _write(tmp_path, rel, "def f(n):\n    assert n\n    return n\n")
+        assert lint_file(p) == [], rel
+
+
+def test_lint_static_dynamic_operand_fires(tmp_path):
+    p = _write(tmp_path, "repro/infer/mutated.py", """
+        import jax
+        step = jax.jit(lambda x, temperature: x, static_argnames=("temperature",))
+    """)
+    errs = lint_file(p)
+    assert len(errs) == 1 and errs[0].rule == "REPRO102"
+    assert "temperature" in errs[0].message
+
+
+def test_lint_duplicate_plane_limits_fires(tmp_path):
+    p = _write(tmp_path, "repro/somewhere/dup.py", """
+        def _plane_limits(bits, k, pack_safe=False):
+            hi = 2 ** (bits - 1) - 1
+            return -hi, hi
+    """)
+    errs = lint_file(p)
+    assert len(errs) == 1 and errs[0].rule == "REPRO103"
+    assert "numerics" in errs[0].message
+
+
+def test_lint_duplicate_function_body_fires(tmp_path):
+    body = """
+        def lookup_table(x):
+            table = {1: 7, 2: 127, 3: 255}
+            return table[x]
+    """
+    _write(tmp_path, "repro/a/mod_a.py", body)
+    _write(tmp_path, "repro/b/mod_b.py", body)
+    errs = run_lint([str(tmp_path)])
+    dup = [e for e in errs if e.rule == "REPRO103"]
+    assert len(dup) == 1
+    # the finding points at one copy and names the other (walk order decides
+    # which is which)
+    assert "duplicates" in dup[0].message
+    combined = dup[0].path + " " + dup[0].message
+    assert "mod_a.py" in combined and "mod_b.py" in combined
+
+
+def test_lint_jit_in_loop_fires(tmp_path):
+    p = _write(tmp_path, "repro/infer/mutated.py", """
+        import jax
+        def serve(xs):
+            out = []
+            for x in xs:
+                out.append(jax.jit(lambda v: v + 1)(x))
+            return out
+    """)
+    errs = lint_file(p)
+    assert len(errs) == 1 and errs[0].rule == "REPRO104"
+
+
+# ===========================================================================
+# clean pass: the unmutated tree has zero violations
+# ===========================================================================
+def test_src_tree_lints_clean():
+    errs = run_lint([SRC])
+    assert errs == [], "\n".join(str(e) for e in errs)
+
+
+def test_committed_budget_ledger_holds():
+    """Measured dispatch censuses stay within the committed ceilings, and
+    the ledger covers every contracted budget_key."""
+    ledger = AB.load_budgets()
+    assert set(ledger) == {"decode", "decode_masked", "spec_decode", "prefill"}
+    assert AB.check_budgets(strict=False) == []
+
+
+def test_fused_decode_has_no_host_callbacks(setup):
+    """The fused decode step compiles zero host round-trips in-graph."""
+    cfg, params = setup
+    steps = AB._fixture_steps()
+    for entry in ("decode", "decode_masked", "spec_decode"):
+        fn, args = steps[entry]
+        assert A.count_host_callbacks(fn, *args) == 0, entry
+
+
+def test_contracts_declared_on_entry_points(setup):
+    cfg, _ = setup
+    from repro.infer.serve import make_decode_sample_step, make_spec_decode_step
+    from repro.models.layers import FP
+    for fn, name in [
+        (make_decode_sample_step(cfg, FP, masked=False), "fused_decode"),
+        (make_decode_sample_step(cfg, FP, masked=True), "fused_decode_masked"),
+        (make_spec_decode_step(cfg, FP, FP, 2), "spec_decode"),
+    ]:
+        c = A.get_contract(fn)
+        assert c is not None and c.name == name
+        assert c.transfers_per_round == 1
+        assert c.int_psum_axes == ("expand",)
+
+
+def test_placement_psum_axes():
+    from repro.dist.placement import int_psum_axes
+    assert int_psum_axes("term") == ("expand",)
+    assert int_psum_axes("tensor") == ()
+    assert int_psum_axes("replicated") == ()
+
+
+def test_hlo_collective_census_cross_check():
+    """The HLO-side twin of the psum rule sees what XLA lowered."""
+    from jax.experimental.shard_map import shard_map
+    from jax.sharding import PartitionSpec as P
+    from repro.launch.hlo_cost import check_integer_collectives
+
+    mesh = _mesh()
+
+    def f(x):
+        return shard_map(lambda v: jax.lax.psum(v, "expand"),
+                         mesh=mesh, in_specs=P(), out_specs=P())(x)
+
+    bad = jax.jit(f).lower(jnp.ones((4,), jnp.float32)).compile().as_text()
+    good = jax.jit(f).lower(jnp.ones((4,), jnp.int32)).compile().as_text()
+    assert check_integer_collectives(bad), "f32 all-reduce must be flagged"
+    assert check_integer_collectives(good) == []
+
+
+# ===========================================================================
+# serving regressions: live engines honor the transfer + retrace contracts
+# ===========================================================================
+def _run_censused(eng, prompts, *, max_new_tokens, qualities=None):
+    """Run an engine under a TransferCensus with its dispatches marked as
+    round boundaries; returns (outputs, census)."""
+    census = A.TransferCensus()
+    # _decode_for is the scheduler's per-tier dispatch lookup — wrapping it
+    # marks EVERY fused dispatch (any budget) as a round boundary, without
+    # touching the cached jits the retrace tripwire inspects
+    orig_decode_for = eng._decode_for
+    eng._decode_for = lambda b: census.wrap_dispatch(
+        orig_decode_for(b), f"decode[k={b}]")
+    if eng._spec is not None:
+        eng._spec = census.wrap_dispatch(eng._spec, "spec")
+    ids = []
+    for i, p in enumerate(prompts):
+        q = qualities[i % len(qualities)] if qualities else "full"
+        ids.append(eng.add_request(p, quality=q))
+    with census:
+        out = eng.run(max_new_tokens=max_new_tokens)
+    return out, census
+
+
+def test_transfer_census_plain_slots(setup):
+    """Plain slots engine: exactly one host transfer per decode round."""
+    cfg, params = setup
+    eng = Engine(cfg, params, serve_cfg=ServeConfig(max_seq=48, max_batch=4))
+    out, census = _run_censused(eng, _prompts(cfg, [8, 8, 8]),
+                                max_new_tokens=5)
+    assert census.rounds > 0
+    assert census.check(max_per_round=1) == []
+    assert all(len(v) == 5 for v in out.values())
+
+
+def test_transfer_census_speculative(setup):
+    """Speculative engine: one transfer per fused draft+verify round."""
+    cfg, params = setup
+    eng = Engine(cfg, params, policy=W4A16_T3,
+                 serve_cfg=ServeConfig(max_seq=48, max_batch=2,
+                                       spec_terms=2, spec_lookahead=2))
+    out, census = _run_censused(eng, _prompts(cfg, [8, 8]),
+                                max_new_tokens=4)
+    assert census.rounds > 0
+    assert census.check(max_per_round=1) == []
+
+
+def test_transfer_census_and_retrace_qos_masked(setup):
+    """Mixed-tier run: one transfer per scheduler round even with multiple
+    masked dispatches per round, and the per-budget jit caches stay at ONE
+    trace each (membership/temperature changes never retrace)."""
+    cfg, params = setup
+    eng = Engine(cfg, params, policy=W4A16_T3, serve_cfg=ServeConfig(
+        max_seq=48, max_slots=4, tier_budgets=(("k2", 2), ("k1", 1))))
+    out, census = _run_censused(
+        eng, _prompts(cfg, [8, 8, 8, 8]), max_new_tokens=5,
+        qualities=["full", "k2", "k1", "k2"])
+    assert census.rounds > 0
+    # one scheduler-round transfer; tier dispatches within a round are
+    # marked as separate groups, each issuing at most the contracted one
+    assert census.check(max_per_round=1) == []
+    # retrace tripwire: one trace per distinct term budget, pinned
+    table = {f"decode[k={k}]": fn
+             for k, fn in eng._decode_by_budget.items()}
+    assert check_no_retrace(table) == []
+    for name, size in A.jit_cache_sizes(table).items():
+        assert size in (0, 1), (name, size)
+
+
+def test_engine_decode_caches_pinned_across_reconfig(setup):
+    """Changing eos_id/temperature between runs must not retrace the fused
+    step (they are dynamic operands of one cached trace)."""
+    cfg, params = setup
+    eng = Engine(cfg, params, serve_cfg=ServeConfig(max_seq=48, max_batch=2))
+    for temp, eos in ((0.0, -1), (0.7, 5)):
+        eng.sc = ServeConfig(max_seq=48, max_batch=2,
+                             temperature=temp, eos_id=eos)
+        for p in _prompts(cfg, [8, 8], seed=int(temp * 10)):
+            eng.add_request(p)
+        eng.run(max_new_tokens=3)
+    assert A.jit_cache_sizes({"decode": eng._decode})["decode"] == 1
