@@ -1,21 +1,31 @@
-"""Serving throughput: continuous slot batching vs legacy group-drain.
+"""Serving throughput: continuous slot batching vs legacy group-drain,
+plus the paged-KV benchmark and an open-loop Poisson arrival mode.
 
-The workload is deliberately group-drain-hostile (and deployment-realistic):
-prompt lengths follow a Zipf-ish mix of many distinct values, and per-request
-token budgets vary, so the legacy scheduler fragments into many small
-equal-length groups — each drained to completion with most of the batch
-idle — while the slot scheduler keeps every slot busy by prefilling queued
-requests into slots freed mid-stream.
+The closed-loop workload is deliberately group-drain-hostile (and
+deployment-realistic): prompt lengths follow a Zipf-ish mix of many distinct
+values, and per-request token budgets vary, so the legacy scheduler fragments
+into many small equal-length groups — each drained to completion with most of
+the batch idle — while the slot scheduler keeps every slot busy by prefilling
+queued requests into slots freed mid-stream.
 
-Emits ``benchmarks/results/BENCH_serving.json``::
+Default mode emits ``benchmarks/results/BENCH_serving.json``::
 
     {"workload": {...},
      "grouped": {"decode_tokens_per_sec": ..., "occupancy": ...},
      "slots":   {"decode_tokens_per_sec": ..., "occupancy": ...},
      "speedup_decode_tokens_per_sec": ...}
 
-Run:  PYTHONPATH=src python benchmarks/serving_bench.py [--tiny]
-(CPU wall-clock numbers; the occupancy/steps columns are backend-invariant.)
+``--paged`` mode emits ``benchmarks/results/BENCH_paged.json`` instead:
+dense-slots vs paged-slots on the same workload (token-identity asserted),
+page-granular HBM accounting (kv_bytes_hwm vs the dense-equivalent
+reservation, per-request footprints ∝ actual length), admitted-slots-at-
+fixed-budget from the planner, and an **open-loop Poisson sweep**: requests
+arrive with exponential inter-arrival gaps at each offered load (req/s) via
+``Engine.add_request(..., arrival=t)``, and we report p50/p99 TTFT and
+p50/p99 mean inter-token latency across requests at each rate.
+
+Run:  PYTHONPATH=src python benchmarks/serving_bench.py [--tiny] [--paged]
+(CPU wall-clock numbers; occupancy/steps/page counts are backend-invariant.)
 """
 from __future__ import annotations
 
@@ -33,6 +43,7 @@ from repro.infer.serve import Engine, ServeConfig
 from repro.models import model as M
 
 OUT_JSON = os.path.join(os.path.dirname(__file__), "results", "BENCH_serving.json")
+OUT_PAGED = os.path.join(os.path.dirname(__file__), "results", "BENCH_paged.json")
 
 
 def make_workload(cfg, n_requests: int, max_new: int, seed: int = 0):
@@ -55,23 +66,184 @@ def make_workload(cfg, n_requests: int, max_new: int, seed: int = 0):
     return reqs
 
 
+def poisson_arrivals(n: int, rate: float, seed: int = 0) -> np.ndarray:
+    """Open-loop arrival offsets (seconds from run start): cumulative sum of
+    exponential inter-arrival gaps at ``rate`` requests/sec."""
+    rng = np.random.default_rng(seed)
+    return np.cumsum(rng.exponential(1.0 / rate, size=n))
+
+
+def _pct(xs, q: float) -> float:
+    return float(np.percentile(xs, q)) if len(xs) else 0.0
+
+
 def run_once(cfg, params, reqs, *, scheduler: str, slots: int, max_seq: int,
-             max_new: int) -> dict:
+             max_new: int, paged: bool = False, page_size: int = 8,
+             arrivals=None):
+    """One serving pass; returns ``(stats, outputs)``.
+
+    ``arrivals`` (per-request second offsets) switches the run open-loop:
+    requests become eligible at ``run_start + arrivals[i]`` instead of all
+    sitting queued at t=0."""
     eng = Engine(cfg, params, serve_cfg=ServeConfig(
-        max_seq=max_seq, max_batch=slots, max_slots=slots, scheduler=scheduler))
-    for toks, budget in reqs:
-        eng.add_request(toks, max_new_tokens=budget)
+        max_seq=max_seq, max_batch=slots, max_slots=slots, scheduler=scheduler,
+        paged=paged, page_size=page_size))
+    for i, (toks, budget) in enumerate(reqs):
+        arr = float(arrivals[i]) if arrivals is not None else 0.0
+        eng.add_request(toks, max_new_tokens=budget, arrival=arr)
     t0 = time.perf_counter()
     out = eng.run(max_new_tokens=max_new)
     wall = time.perf_counter() - t0
     st = dict(eng.last_run_stats)
     st["wall_seconds"] = wall
     st["tokens_per_sec"] = st["generated_tokens"] / wall if wall > 0 else 0.0
-    ttfts = [m["ttft_s"] for m in eng.last_request_metrics.values()]
+    mets = list(eng.last_request_metrics.values())
+    ttfts = [m["ttft_s"] for m in mets]
+    itls = [m["itl_s"] for m in mets if m.get("itl_s", 0.0) > 0.0]
     st["ttft_mean_s"] = float(np.mean(ttfts)) if ttfts else 0.0
     st["ttft_max_s"] = float(np.max(ttfts)) if ttfts else 0.0
+    st["ttft_p50_s"] = _pct(ttfts, 50)
+    st["ttft_p99_s"] = _pct(ttfts, 99)
+    st["itl_p50_s"] = _pct(itls, 50)
+    st["itl_p99_s"] = _pct(itls, 99)
     st["n_outputs"] = len(out)
-    return st
+    return st, out
+
+
+def paged_bench(args):
+    """Paged-vs-dense serving comparison + open-loop Poisson sweep.
+
+    Emits ``BENCH_paged.json``: token identity (asserted), page-granular HBM
+    accounting (peak pages vs dense-equivalent reservation, per-request
+    footprints ∝ actual length), admitted-slots-at-fixed-budget from the
+    planner, modeled per-step KV read traffic, and p50/p99 TTFT +
+    inter-token latency at each offered load."""
+    from repro.infer import kvcache
+    from repro.infer.scheduler import plan_slots
+
+    cfg = get_arch("qwen2_1_5b", smoke=True)
+    params = M.init_params(jax.random.PRNGKey(args.seed), cfg)
+    reqs = make_workload(cfg, args.requests, args.max_new, seed=args.seed)
+    common = dict(scheduler="slots", slots=args.slots, max_seq=args.max_seq,
+                  max_new=args.max_new)
+    page = args.page_size
+
+    # -- closed-loop: dense vs paged on the identical workload ------------
+    run_once(cfg, params, reqs, **common)                       # warmup
+    st_dense, out_dense = run_once(cfg, params, reqs, **common)
+    run_once(cfg, params, reqs, paged=True, page_size=page, **common)
+    st_paged, out_paged = run_once(cfg, params, reqs, paged=True,
+                                   page_size=page, **common)
+    norm = lambda o: {r: [int(t) for t in v] for r, v in o.items()}
+    token_identical = norm(out_dense) == norm(out_paged)
+    assert token_identical, "paged engine diverged from dense (greedy)"
+    print(f"dense : {st_dense['generated_tokens']} tokens, "
+          f"wall {st_dense['wall_seconds']:.2f}s")
+    print(f"paged : {st_paged['generated_tokens']} tokens, "
+          f"wall {st_paged['wall_seconds']:.2f}s, "
+          f"pages_hwm {st_paged['paged']['pages_hwm']}"
+          f"/{st_paged['paged']['num_pages']}")
+
+    # -- accounting: per-request KV footprint ∝ actual length -------------
+    pb = kvcache.page_bytes(cfg, page)
+    mp = kvcache.pages_for(args.max_seq, page)
+    footprints = []
+    for toks, budget in reqs[:8]:
+        total = min(len(toks) + budget, args.max_seq)
+        footprints.append({
+            "prompt_len": len(toks), "max_new": budget, "kv_len": total,
+            "kv_bytes_paged": kvcache.pages_for(total, page) * pb,
+            "kv_bytes_dense": mp * pb,
+        })
+
+    # -- admission: slots a fixed HBM budget buys, dense vs paged ---------
+    pbytes = kvcache.param_bytes_per_device(params)
+    per_seq = kvcache.total_cache_bytes(cfg, 1, args.max_seq)
+    budget_bytes = pbytes + 4.0 * per_seq          # room for 4 dense seqs
+    mk = lambda paged: ServeConfig(
+        max_seq=args.max_seq, max_batch=64, max_slots=64, scheduler="slots",
+        hbm_budget_bytes=budget_bytes, paged=paged, page_size=page)
+    slots_dense = plan_slots(cfg, mk(False), params)
+    slots_paged = plan_slots(cfg, mk(True), params)
+    print(f"admission @ params+4seq budget: dense {slots_dense} slots, "
+          f"paged {slots_paged} slots")
+
+    # -- modeled per-step KV read traffic (backend-invariant) -------------
+    # full-cache attention reads the resident KV every decode step: dense
+    # streams max_seq rows per slot regardless of fill; paged streams only
+    # the pages the sequence actually occupies (rounded up to page_size)
+    dense_reads = paged_reads = 0
+    for toks, budget in reqs:
+        for t in range(1, budget + 1):
+            cur = min(len(toks) + t, args.max_seq)
+            paged_reads += -(-cur // page) * page
+            dense_reads += args.max_seq
+    traffic_reduction = 1.0 - paged_reads / max(dense_reads, 1)
+
+    # -- open-loop Poisson sweep ------------------------------------------
+    rates = [float(r) for r in args.rates.split(",") if r.strip()]
+    sweep = []
+    for rate in rates:
+        arr = poisson_arrivals(len(reqs), rate, seed=args.seed)
+        st, out = run_once(cfg, params, reqs, paged=True, page_size=page,
+                           arrivals=arr, **common)
+        assert norm(out) == norm(out_dense), \
+            f"open-loop paged run diverged at rate {rate}"
+        sweep.append({
+            "offered_rate_req_per_s": rate,
+            "ttft_p50_s": st["ttft_p50_s"], "ttft_p99_s": st["ttft_p99_s"],
+            "itl_p50_s": st["itl_p50_s"], "itl_p99_s": st["itl_p99_s"],
+            "tokens_per_sec": st["tokens_per_sec"],
+            "pages_hwm": st["paged"]["pages_hwm"],
+        })
+        print(f"poisson {rate:5.1f} req/s: ttft p50 {st['ttft_p50_s']:.3f}s "
+              f"p99 {st['ttft_p99_s']:.3f}s, itl p50 {st['itl_p50_s']*1e3:.1f}ms "
+              f"p99 {st['itl_p99_s']*1e3:.1f}ms")
+
+    pg = st_paged["paged"]
+    payload = {
+        "arch": "qwen2_1_5b (smoke)",
+        "backend": "cpu",
+        "note": "wall-clock on the CI/container CPU backend; page counts, "
+                "admission slots and modeled traffic are backend-invariant",
+        "workload": {
+            "requests": args.requests,
+            "length_distribution": "zipf(1.0) over [4..27]",
+            "max_new_tokens": args.max_new,
+            "slots": args.slots, "max_seq": args.max_seq,
+            "page_size": page,
+        },
+        "token_identical": token_identical,
+        "dense": st_dense,
+        "paged": st_paged,
+        "hbm": {
+            "page_bytes": pb,
+            "kv_bytes_hwm_paged": pg["kv_bytes_hwm"],
+            "kv_bytes_dense_equivalent": pg["kv_bytes_dense"],
+            "kv_hbm_reduction": 1.0 - pg["kv_bytes_hwm"]
+                                      / max(pg["kv_bytes_dense"], 1e-9),
+            "per_request_footprints": footprints,
+        },
+        "admission_at_fixed_budget": {
+            "hbm_budget_bytes": budget_bytes,
+            "dense_slots": slots_dense,
+            "paged_slots": slots_paged,
+        },
+        "modeled_kv_read_traffic": {
+            "dense_token_rows_read": dense_reads,
+            "paged_token_rows_read": paged_reads,
+            "reduction": traffic_reduction,
+        },
+        "poisson_sweep": sweep,
+    }
+    os.makedirs(os.path.dirname(args.paged_out), exist_ok=True)
+    with open(args.paged_out, "w") as f:
+        json.dump(payload, f, indent=2)
+    print(f"kv HBM hwm reduction: {payload['hbm']['kv_hbm_reduction']:.1%}, "
+          f"modeled read-traffic reduction: {traffic_reduction:.1%}",
+          file=sys.stderr)
+    print(f"wrote {args.paged_out}", file=sys.stderr)
+    return payload
 
 
 def main(argv=None):
@@ -84,9 +256,19 @@ def main(argv=None):
     ap.add_argument("--max-seq", type=int, default=64)
     ap.add_argument("--seed", type=int, default=0)
     ap.add_argument("--out", default=OUT_JSON)
+    ap.add_argument("--paged", action="store_true",
+                    help="run the paged-KV benchmark (emits BENCH_paged.json)")
+    ap.add_argument("--page-size", type=int, default=8)
+    ap.add_argument("--rates", default="2,8",
+                    help="comma-separated offered loads (req/s) for the "
+                         "open-loop Poisson sweep in --paged mode")
+    ap.add_argument("--paged-out", default=OUT_PAGED)
     args = ap.parse_args(argv)
     if args.tiny:
         args.requests, args.max_new = 10, 6
+
+    if args.paged:
+        return paged_bench(args)
 
     cfg = get_arch("qwen2_1_5b", smoke=True)
     params = M.init_params(jax.random.PRNGKey(args.seed), cfg)
@@ -98,7 +280,7 @@ def main(argv=None):
         # pass measures steady-state serving
         run_once(cfg, params, reqs, scheduler=scheduler, slots=args.slots,
                  max_seq=args.max_seq, max_new=args.max_new)
-        results[scheduler] = run_once(
+        results[scheduler], _ = run_once(
             cfg, params, reqs, scheduler=scheduler, slots=args.slots,
             max_seq=args.max_seq, max_new=args.max_new)
         st = results[scheduler]

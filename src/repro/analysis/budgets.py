@@ -16,7 +16,9 @@ all measured on the ``qwen2_1_5b`` smoke arch, W8A8, reference path):
 * ``decode``        — the fused decode+sample+EOS step (unmasked);
 * ``decode_masked`` — the QoS row-masked variant (tier dispatch unit);
 * ``spec_decode``   — the fused draft-gamma + verify speculative round;
-* ``prefill``       — padded prefill-into-slot.
+* ``prefill``       — padded prefill-into-slot;
+* ``decode_paged``  — the paged (block-table) masked decode step;
+* ``spec_decode_paged`` — the paged speculative round.
 
 Heavy imports (jax, the model zoo) happen inside functions only: importing
 this module costs nothing, so ``python -m repro.analysis`` can lint without
@@ -39,7 +41,7 @@ BUDGETED_KEYS = ("dot_general", "pallas_call", "callbacks", "round",
 #: the fixture every entry is measured on (committed alongside the numbers
 #: so a ledger mismatch is attributable)
 FIXTURE = {"arch": "qwen2_1_5b", "smoke": True, "policy": "W8A8",
-           "max_seq": 32, "batch": 2, "spec_lookahead": 2}
+           "max_seq": 32, "batch": 2, "spec_lookahead": 2, "page_size": 8}
 
 
 def load_budgets(path: str = LEDGER_PATH) -> Dict[str, Dict[str, int]]:
@@ -93,6 +95,17 @@ def _fixture_steps():
     def prefill_slot(p, batch, ln):
         return M.prefill(p, batch, cfg, qc, s_max=s_max, lengths=ln)
 
+    # paged layout: sequential per-slot block tables over a dense-equivalent
+    # pool (census budgets shape-level structure, not values)
+    page = fx["page_size"]
+    mp = -(-s_max // page)
+    pcaches = M.init_paged_cache(cfg, b, s_max, page_size=page,
+                                 num_pages=b * mp)
+    bt = jnp.arange(b * mp, dtype=jnp.int32).reshape(b, mp)
+    paged = S.make_paged_decode_step(cfg, qc, page, masked=True)
+    spec_paged = S.make_paged_spec_decode_step(cfg, qc, qc_draft,
+                                               fx["spec_lookahead"], page)
+
     return {
         "decode": (decode, (params_q, tok, caches, cache_len, key, alive,
                             eos, temp)),
@@ -100,6 +113,10 @@ def _fixture_steps():
                                    alive, eos, temp, row_mask)),
         "spec_decode": (spec, (params_q, tok, caches, cache_len)),
         "prefill": (prefill_slot, (params_q, {"tokens": prompt}, lengths)),
+        "decode_paged": (paged, (params_q, tok, pcaches, cache_len, bt, key,
+                                 alive, eos, temp, row_mask)),
+        "spec_decode_paged": (spec_paged, (params_q, tok, pcaches, cache_len,
+                                           bt)),
     }
 
 

@@ -434,6 +434,63 @@ def check_no_retrace(callables: Dict[str, Any], *, max_traces: int = 1,
 
 
 # ---------------------------------------------------------------------------
+# dense-score materialization tripwire (paged attention, DESIGN.md §13)
+# ---------------------------------------------------------------------------
+def check_no_dense_scores(fn: Callable, *args, batch: int,
+                          seq_sizes: Sequence[int],
+                          strict: bool = True, **kwargs) -> List[Violation]:
+    """No float intermediate of the traced computation may carry BOTH a
+    ``batch``-sized axis and an axis whose size is in ``seq_sizes`` (the
+    dense cache capacity ``max_seq`` and any padded variants, e.g.
+    ``ceil(max_seq/page) * page``).
+
+    This is the paged-attention memory contract: the whole point of paging
+    is that per-step attention streams KV page-by-page, so a materialized
+    ``(B, ..., max_seq)`` score/probability tensor — or a dense per-slot KV
+    row — reappearing in the paged dispatch silently reverts the HBM win.
+    The DENSE reference path trips this check by construction (its scores
+    and cache rows are exactly that shape), which is the calibration that
+    the tripwire can see the bug class at all.
+
+    Choose fixture dims collision-free: ``batch`` and every entry of
+    ``seq_sizes`` must differ from vocab/hidden/head dims, or unrelated
+    tensors (logits, embeddings) false-positive."""
+    jaxpr = trace(fn, *args, **kwargs)
+    sizes = set(int(s) for s in seq_sizes)
+    violations: List[Violation] = []
+    seen = set()
+    for eqn, path in iter_eqns(jaxpr.jaxpr):
+        for v in eqn.outvars:
+            aval = getattr(v, "aval", None)
+            shape = tuple(getattr(aval, "shape", ()) or ())
+            dt = getattr(aval, "dtype", None)
+            if dt is None or not jax.numpy.issubdtype(dt, jax.numpy.floating):
+                continue
+            if batch not in shape:
+                continue
+            # the seq-sized axis must be a DIFFERENT axis than the one
+            # matched as batch (batch == a seq size would self-match)
+            rest = list(shape)
+            rest.remove(batch)
+            if not any(d in sizes for d in rest):
+                continue
+            key = (shape, str(dt), _eqn_site(eqn))
+            if key in seen:
+                continue
+            seen.add(key)
+            violations.append(Violation(
+                rule="no-dense-scores",
+                where=_eqn_site(eqn),
+                message=(f"float intermediate {dt}{list(shape)} carries both "
+                         f"the batch axis ({batch}) and a dense sequence "
+                         f"axis ({sorted(sizes & set(rest))}) in "
+                         f"{path or 'top level'} — paged attention must "
+                         f"stream KV per page, never materialize per-slot "
+                         f"(B, max_seq) score/cache tensors (DESIGN.md §13)")))
+    return _raise_or_return(violations, strict)
+
+
+# ---------------------------------------------------------------------------
 # Pallas kernel-structure introspection (moved from kernels/ops.py; the
 # public names remain re-exported there)
 # ---------------------------------------------------------------------------

@@ -1,12 +1,20 @@
-"""KV/state-cache accounting and helpers.
+"""KV/state-cache accounting, page allocator, and sizing helpers.
 
 Cache construction lives with the blocks (models/blocks.init_block_cache,
 models/model.init_cache); this module provides the size model used by the
-serving engine's admission control and the roofline's memory-term notes.
+serving engine's admission control and the roofline's memory-term notes,
+plus the :class:`PageAllocator` behind the paged KV cache
+(``ServeConfig(paged=True)``): growing attention KV lives in a global
+per-layer page pool indexed through per-slot block tables, so a slot's
+resident HBM is ``pages_reserved * page_bytes`` instead of
+``max_seq * bytes_per_token`` — the page-granular accounting in
+:func:`plan_pages` / :func:`max_slots_paged` is what raises concurrent
+slot count for short sequences.
 """
 from __future__ import annotations
 
-from typing import Dict
+from collections import deque
+from typing import Dict, List, Optional, Sequence
 
 import numpy as np
 
@@ -15,7 +23,8 @@ from repro.models.ssm import ssm_dims
 
 
 def cache_bytes_per_token(cfg: ArchConfig, dtype_bytes: int = 2,
-                          s_max: int = 0) -> Dict[str, float]:
+                          s_max: int = 0, int8_kv: bool = False
+                          ) -> Dict[str, float]:
     """Bytes of cache that grow per sequence position, and fixed state bytes.
 
     ``s_max`` (the decode capacity) bounds the local-attention ring: the
@@ -23,14 +32,23 @@ def cache_bytes_per_token(cfg: ArchConfig, dtype_bytes: int = 2,
     (``models.blocks.init_block_cache``), so charging the full window when
     ``s_max < window`` over-counts and makes ``max_batch_for_hbm`` /
     ``plan_slots`` under-admit.  ``s_max=0`` keeps the unbounded (allocation-
-    free roofline) estimate."""
+    free roofline) estimate.
+
+    ``int8_kv`` charges the growing attention KV at its *stored* width —
+    int8 planes plus one f32 scale per (position, kv-head) — instead of
+    ``dtype_bytes``.  Charging 2-byte KV while serving int8 over-counts the
+    attention caches ~2x and under-admits (the admission-control bug this
+    parameter fixes); local rings / cross KV stay fp regardless."""
     growing = 0.0
     fixed = 0.0
     blocks = tuple(cfg.stage_pattern) * cfg.num_stages + tuple(cfg.tail_pattern)
     ring = min(cfg.window, s_max if s_max > 0 else 1 << 30)
     for kind in blocks:
         if kind in ("attn", "moe_attn"):
-            growing += 2 * cfg.num_kv_heads * cfg.head_dim * dtype_bytes
+            if int8_kv:  # int8 planes + f32 per-(pos, kv-head) scales
+                growing += 2 * cfg.num_kv_heads * (cfg.head_dim * 1 + 4)
+            else:
+                growing += 2 * cfg.num_kv_heads * cfg.head_dim * dtype_bytes
         elif kind == "local":
             fixed += 2 * ring * cfg.num_kv_heads * cfg.head_dim * dtype_bytes
         elif kind == "cross":
@@ -43,29 +61,34 @@ def cache_bytes_per_token(cfg: ArchConfig, dtype_bytes: int = 2,
     return {"growing_per_token": growing, "fixed": fixed}
 
 
-def total_cache_bytes(cfg: ArchConfig, batch: int, s_max: int, dtype_bytes: int = 2) -> float:
-    c = cache_bytes_per_token(cfg, dtype_bytes, s_max=s_max)
+def total_cache_bytes(cfg: ArchConfig, batch: int, s_max: int,
+                      dtype_bytes: int = 2, int8_kv: bool = False) -> float:
+    c = cache_bytes_per_token(cfg, dtype_bytes, s_max=s_max, int8_kv=int8_kv)
     grow = c["growing_per_token"] * s_max
     return batch * (grow + c["fixed"])
 
 
 def max_batch_for_hbm(cfg: ArchConfig, s_max: int, hbm_bytes: float,
                       param_bytes: float, dtype_bytes: int = 2,
-                      cache_copies: float = 1.0) -> int:
+                      cache_copies: float = 1.0, int8_kv: bool = False) -> int:
     """Admission control: largest decode batch whose caches + params fit.
 
     ``cache_copies`` charges each sequence's cache more than once —
     speculative engines pass 2.0 because the fused draft+verify round holds
     a transient functional copy of the caches at peak (the originals must
-    stay live for verify/commit while the draft decodes on a copy)."""
-    per_seq = total_cache_bytes(cfg, 1, s_max, dtype_bytes) * max(cache_copies, 1.0)
+    stay live for verify/commit while the draft decodes on a copy).
+    ``int8_kv`` must mirror the engine's KV storage width (see
+    :func:`cache_bytes_per_token`)."""
+    per_seq = total_cache_bytes(cfg, 1, s_max, dtype_bytes, int8_kv=int8_kv) \
+        * max(cache_copies, 1.0)
     free = hbm_bytes - param_bytes
     return max(0, int(np.floor(free / max(per_seq, 1.0))))
 
 
 def hbm_headroom(cfg: ArchConfig, s_max: int, hbm_bytes: float,
                  param_bytes: float, active_slots: int,
-                 dtype_bytes: int = 2, cache_copies: float = 1.0) -> float:
+                 dtype_bytes: int = 2, cache_copies: float = 1.0,
+                 int8_kv: bool = False) -> float:
     """Free HBM after params + the caches of ``active_slots`` sequences.
 
     The serving scheduler's admission-headroom signal: when a chaos-squeezed
@@ -73,14 +96,15 @@ def hbm_headroom(cfg: ArchConfig, s_max: int, hbm_bytes: float,
     degradation controller reacts *before* admissions would have to be
     rejected.  May be negative: the active set already exceeds the
     (squeezed) budget — existing slots keep running, new admissions wait."""
-    per_seq = total_cache_bytes(cfg, 1, s_max, dtype_bytes) \
+    per_seq = total_cache_bytes(cfg, 1, s_max, dtype_bytes, int8_kv=int8_kv) \
         * max(cache_copies, 1.0)
     return float(hbm_bytes - param_bytes - active_slots * per_seq)
 
 
 def usable_slots(cfg: ArchConfig, s_max: int, hbm_bytes: float,
                  param_bytes: float, n_slots: int,
-                 dtype_bytes: int = 2, cache_copies: float = 1.0) -> int:
+                 dtype_bytes: int = 2, cache_copies: float = 1.0,
+                 int8_kv: bool = False) -> int:
     """Slots the (possibly squeezed) effective budget can serve right now:
     ``max_batch_for_hbm`` capped at the planned pool, floored at 0 (a
     transient squeeze may leave no admission headroom at all — the
@@ -88,8 +112,152 @@ def usable_slots(cfg: ArchConfig, s_max: int, hbm_bytes: float,
     if hbm_bytes <= 0:
         return n_slots
     cap = max_batch_for_hbm(cfg, s_max, hbm_bytes, param_bytes, dtype_bytes,
-                            cache_copies=cache_copies)
+                            cache_copies=cache_copies, int8_kv=int8_kv)
     return max(0, min(n_slots, cap))
+
+
+# ---------------------------------------------------------------------------
+# paged KV: page-granular sizing + the allocator (DESIGN.md §13)
+# ---------------------------------------------------------------------------
+def page_bytes(cfg: ArchConfig, page_size: int, dtype_bytes: int = 2,
+               int8_kv: bool = False) -> float:
+    """HBM bytes ONE page id costs across every attention layer's pool.
+
+    A page id indexes the same physical slot of every attn/moe_attn layer's
+    pool (one block table serves the whole stack), so a page's cost is the
+    summed per-token growing KV bytes times the page size."""
+    c = cache_bytes_per_token(cfg, dtype_bytes, int8_kv=int8_kv)
+    return c["growing_per_token"] * page_size
+
+
+def pages_for(length: int, page_size: int) -> int:
+    """Pages covering ``length`` positions (ceil division)."""
+    return -(-max(0, int(length)) // page_size)
+
+
+def fixed_state_bytes(cfg: ArchConfig, s_max: int, dtype_bytes: int = 2
+                      ) -> float:
+    """Per-slot bytes that do NOT page: local rings, cross KV, recurrent
+    state (always dense per-slot rows, paged or not)."""
+    return cache_bytes_per_token(cfg, dtype_bytes, s_max=s_max)["fixed"]
+
+
+def plan_pages(cfg: ArchConfig, s_max: int, page_size: int, n_slots: int,
+               hbm_bytes: float = 0.0, param_bytes: float = 0.0,
+               dtype_bytes: int = 2, cache_copies: float = 1.0,
+               int8_kv: bool = False) -> int:
+    """Size the global page pool.
+
+    Without an HBM budget: enough pages for every slot at full capacity
+    (``n_slots * ceil(s_max / page)`` — dense-equivalent worst case).  With
+    a budget: whatever fits after params and the per-slot fixed state,
+    floored at one sequence's worth so a configured pool is never unusable.
+    ``cache_copies`` (speculative engines) scales the page cost, mirroring
+    :func:`max_batch_for_hbm`."""
+    per_slot_pages = pages_for(s_max, page_size)
+    if hbm_bytes <= 0:
+        return n_slots * per_slot_pages
+    fixed = fixed_state_bytes(cfg, s_max, dtype_bytes) * max(cache_copies, 1.0)
+    pb = page_bytes(cfg, page_size, dtype_bytes, int8_kv=int8_kv) \
+        * max(cache_copies, 1.0)
+    free = hbm_bytes - param_bytes - n_slots * fixed
+    if pb <= 0:       # attention-free arch: nothing pages
+        return 0
+    return max(per_slot_pages, int(np.floor(free / pb)))
+
+
+def max_slots_paged(cfg: ArchConfig, s_max: int, page_size: int,
+                    hbm_bytes: float, param_bytes: float,
+                    dtype_bytes: int = 2, cache_copies: float = 1.0,
+                    int8_kv: bool = False, mean_len: float = 0.0) -> int:
+    """Page-granular admission bound: slots whose fixed state plus
+    ``ceil(mean_len / page)`` pages fit the budget.  ``mean_len=0`` charges
+    one page per slot (the floor any live slot needs) — the *upper* bound
+    the paged scheduler can reach when sequences are short; compare with
+    :func:`max_batch_for_hbm`, which charges every slot ``s_max``."""
+    copies = max(cache_copies, 1.0)
+    fixed = fixed_state_bytes(cfg, s_max, dtype_bytes) * copies
+    pb = page_bytes(cfg, page_size, dtype_bytes, int8_kv=int8_kv) * copies
+    pages = max(1, pages_for(mean_len, page_size)) if pb > 0 else 0
+    per_slot = fixed + pages * pb
+    free = hbm_bytes - param_bytes
+    return max(0, int(np.floor(free / max(per_slot, 1.0))))
+
+
+class PageAllocator:
+    """Fixed-size-page allocator: free list + per-page refcounts.
+
+    Host-side bookkeeping for the paged KV cache: page ids index the global
+    per-layer pools; id ``num_pages`` is the *sentinel* (a real, in-bounds
+    pool row that absorbs writes from masked-out or unallocated table slots
+    and is never read unmasked).  Refcounts support shared pages (the
+    prefix-caching roadmap item): :meth:`alloc` returns pages at refcount 1,
+    :meth:`incref` adds sharers, :meth:`free` decrements and returns a page
+    to the free list only at zero.  Double-free and foreign-page frees
+    raise — the property test's invariant."""
+
+    def __init__(self, num_pages: int):
+        if num_pages < 1:
+            raise ValueError(f"num_pages must be >= 1, got {num_pages}")
+        self.num_pages = int(num_pages)
+        self._free = deque(range(self.num_pages))
+        self._ref = np.zeros(self.num_pages, np.int32)
+
+    @property
+    def sentinel(self) -> int:
+        return self.num_pages
+
+    @property
+    def free_pages(self) -> int:
+        return len(self._free)
+
+    @property
+    def pages_in_use(self) -> int:
+        return self.num_pages - len(self._free)
+
+    def alloc(self, n: int) -> Optional[List[int]]:
+        """``n`` fresh pages at refcount 1, or None when the pool cannot
+        cover the request (all-or-nothing: no partial allocation to roll
+        back)."""
+        if n < 0:
+            raise ValueError(f"alloc({n})")
+        if n > len(self._free):
+            return None
+        pages = [self._free.popleft() for _ in range(n)]
+        for p in pages:
+            self._ref[p] = 1
+        return pages
+
+    def incref(self, pages: Sequence[int]) -> None:
+        for p in pages:
+            if not (0 <= p < self.num_pages) or self._ref[p] < 1:
+                raise ValueError(f"incref of unallocated page {p}")
+            self._ref[p] += 1
+
+    def free(self, pages: Sequence[int]) -> None:
+        """Drop one reference per page; a page returns to the free list when
+        its last reference drops.  Sentinel ids are ignored (a block-table
+        row is freed wholesale, padding included)."""
+        for p in pages:
+            if p == self.sentinel:
+                continue
+            if not (0 <= p < self.num_pages) or self._ref[p] < 1:
+                raise ValueError(f"double/foreign free of page {p}")
+            self._ref[p] -= 1
+            if self._ref[p] == 0:
+                self._free.append(p)
+
+    def check(self) -> None:
+        """Leak/corruption audit: every page is either free (ref 0) or
+        referenced (ref >= 1), and the free list holds exactly the ref-0
+        pages with no duplicates."""
+        free = sorted(self._free)
+        if len(set(free)) != len(free):
+            raise AssertionError("free list holds duplicate pages")
+        ref0 = sorted(int(p) for p in np.flatnonzero(self._ref == 0))
+        if free != ref0:
+            raise AssertionError(
+                f"free list {free} != ref-0 pages {ref0} (leak or corruption)")
 
 
 def param_bytes(params) -> float:

@@ -91,6 +91,10 @@ class Request:
     priority: int = 0                      # higher admits first
     deadline_s: Optional[float] = None     # wall budget from enqueue (info)
     deadline: Optional[float] = None       # absolute perf_counter() deadline
+    # open-loop arrival offset (seconds from run() start); 0.0 = already
+    # queued.  The Poisson serving benchmark sets this so offered load is
+    # independent of service rate (arrivals never wait on completions).
+    arrival: float = 0.0
     # filled in by the scheduler:
     t_admitted: float = 0.0
     t_first_token: float = 0.0
@@ -119,10 +123,20 @@ class Request:
             return None
         return self.status == "cancelled" or self.t_done > self.deadline
 
+    @property
+    def itl_seconds(self) -> float:
+        """Mean inter-token latency: first token -> done, per emitted gap
+        (0.0 for single-token or cancelled-early requests)."""
+        if self.new_tokens < 2 or self.t_first_token <= 0.0 \
+                or self.t_done <= self.t_first_token:
+            return 0.0
+        return (self.t_done - self.t_first_token) / (self.new_tokens - 1)
+
     def metrics(self) -> Dict[str, Any]:
         m = {"rid": self.rid, "prompt_len": len(self.tokens),
              "new_tokens": self.new_tokens,
              "ttft_s": self.ttft_seconds,
+             "itl_s": self.itl_seconds,
              "tokens_per_sec": self.tokens_per_sec,
              "queue_s": max(0.0, self.t_admitted - self.t_enqueue),
              "quality": self.quality,
@@ -133,7 +147,7 @@ class Request:
         return m
 
 
-def plan_slots(cfg, serve_cfg, params) -> int:
+def plan_slots(cfg, serve_cfg, params, *, int8_kv: bool = False) -> int:
     """Size the decode-slot pool: the configured ``max_slots`` (or
     ``max_batch``), capped by HBM admission control when a budget is set.
 
@@ -143,14 +157,30 @@ def plan_slots(cfg, serve_cfg, params) -> int:
     the replicated caches are charged in full on every device.  Speculative
     engines (``spec_terms > 0``) charge each slot's cache TWICE: the fused
     round drafts on a functional copy while the committed caches stay live
-    for verify/commit, so peak KV residency is ~2x per slot."""
+    for verify/commit, so peak KV residency is ~2x per slot.
+
+    ``int8_kv`` engines charge the int8 KV byte cost (values + scales), not
+    the bf16 cost — an int8-KV engine admits MORE slots under the same
+    budget instead of silently over-charging ~2x.
+
+    Paged engines (``serve_cfg.paged``) are capped at page granularity
+    (:func:`kvcache.max_slots_paged`): a slot is charged its fixed state
+    plus ONE page, the floor any live slot needs — the page allocator, not
+    this bound, gates how far concurrent sequences can actually grow."""
     n = serve_cfg.max_slots or serve_cfg.max_batch
     if serve_cfg.hbm_budget_bytes > 0:
         pbytes = kvcache.param_bytes_per_device(params)
         copies = 2.0 if serve_cfg.spec_terms > 0 else 1.0
-        cap = kvcache.max_batch_for_hbm(cfg, serve_cfg.max_seq,
-                                        serve_cfg.hbm_budget_bytes, pbytes,
-                                        cache_copies=copies)
+        if getattr(serve_cfg, "paged", False):
+            cap = kvcache.max_slots_paged(
+                cfg, serve_cfg.max_seq, serve_cfg.page_size,
+                serve_cfg.hbm_budget_bytes, pbytes,
+                cache_copies=copies, int8_kv=int8_kv)
+        else:
+            cap = kvcache.max_batch_for_hbm(cfg, serve_cfg.max_seq,
+                                            serve_cfg.hbm_budget_bytes, pbytes,
+                                            cache_copies=copies,
+                                            int8_kv=int8_kv)
         if cap < 1:
             raise ValueError(
                 f"hbm_budget_bytes={serve_cfg.hbm_budget_bytes:.3g} cannot fit "
@@ -182,16 +212,37 @@ class SlotScheduler:
     def __init__(self, engine):
         self.eng = engine
         sc = engine.sc
-        self.n_slots = plan_slots(engine.cfg, sc, engine.params)
+        self.paged = bool(getattr(engine, "paged", False))
+        self.n_slots = plan_slots(engine.cfg, sc, engine.params,
+                                  int8_kv=engine.qc.int8_kv)
         self.last_run_stats: Dict[str, Any] = {}
         self.last_request_metrics: Dict[int, Dict[str, float]] = {}
         # HBM admission-headroom model (per device; same accounting as
         # plan_slots) — evaluated every round so chaos squeezes and real
-        # budget changes shrink the *usable* pool mid-run
+        # budget changes shrink the *usable* pool mid-run.  int8-KV engines
+        # charge int8 cache bytes, not bf16 (else admission under-admits 2x).
         self._pbytes = kvcache.param_bytes_per_device(engine.params)
         self._copies = 2.0 if sc.spec_terms > 0 else 1.0
         self._per_seq = kvcache.total_cache_bytes(
-            engine.cfg, 1, sc.max_seq) * self._copies
+            engine.cfg, 1, sc.max_seq,
+            int8_kv=engine.qc.int8_kv) * self._copies
+        if self.paged:
+            self.page_size = sc.page_size
+            self.mp = kvcache.pages_for(sc.max_seq, sc.page_size)
+            self._pb = kvcache.page_bytes(engine.cfg, sc.page_size,
+                                          int8_kv=engine.qc.int8_kv)
+            self.num_pages = sc.num_pages or kvcache.plan_pages(
+                engine.cfg, sc.max_seq, sc.page_size, self.n_slots,
+                hbm_bytes=sc.hbm_budget_bytes, param_bytes=self._pbytes,
+                cache_copies=self._copies, int8_kv=engine.qc.int8_kv)
+            # num_pages == 0 only for attention-free archs (nothing pages);
+            # block tables stay inert all-sentinel and no pages are reserved
+            self.alloc = (kvcache.PageAllocator(self.num_pages)
+                          if self.num_pages > 0 else None)
+            self._sentinel = self.num_pages
+            self.bt = np.full((self.n_slots, self.mp), self._sentinel,
+                              np.int32)
+            self._pages_hwm = 0
         self.chaos = (Q.ChaosInjector(sc.chaos)
                       if sc.chaos is not None else None)
         self.watchdog = self._new_watchdog()
@@ -220,15 +271,23 @@ class SlotScheduler:
         return budget
 
     def usable_slots_now(self) -> int:
-        """Slots the effective (possibly squeezed) budget can serve."""
+        """Slots the effective (possibly squeezed) budget can serve.  On the
+        paged engine admission is page-granular: the allocator (not a
+        max_seq-charged bound) gates admission, so the whole pool is usable
+        whenever pages are free (chaos squeezes are rejected at
+        construction)."""
+        if self.paged:
+            return self.n_slots
         return kvcache.usable_slots(
             self.eng.cfg, self.eng.sc.max_seq, self._effective_hbm(),
-            self._pbytes, self.n_slots, cache_copies=self._copies)
+            self._pbytes, self.n_slots, cache_copies=self._copies,
+            int8_kv=self.eng.qc.int8_kv)
 
     def hbm_headroom_now(self, active_slots: int) -> float:
         return kvcache.hbm_headroom(
             self.eng.cfg, self.eng.sc.max_seq, self._effective_hbm(),
-            self._pbytes, active_slots, cache_copies=self._copies)
+            self._pbytes, active_slots, cache_copies=self._copies,
+            int8_kv=self.eng.qc.int8_kv)
 
     # ------------------------------------------------------------------
     def _validate(self, requests: List[Request], max_new_tokens: int) -> None:
@@ -265,11 +324,24 @@ class SlotScheduler:
     def _init_pool(self):
         """Zeroed slot-pool state: the live decode cache (replicated across
         the mesh — per-slot KV rows are identical on every device; only the
-        weights are scattered) plus per-slot host bookkeeping."""
+        weights are scattered) plus per-slot host bookkeeping.  Paged
+        engines get page pools + a fresh allocator and all-sentinel block
+        tables instead of dense ``(n, max_seq)`` KV rows."""
         eng, sc, n = self.eng, self.eng.sc, self.n_slots
+        if self.paged:
+            live = M.init_paged_cache(
+                eng.cfg, n, sc.max_seq, page_size=self.page_size,
+                num_pages=self.num_pages, int8_kv=eng.qc.int8_kv,
+                mesh=eng.mesh)
+            if self.num_pages > 0:
+                self.alloc = kvcache.PageAllocator(self.num_pages)
+            self.bt[:] = self._sentinel
+            self._pages_hwm = 0
+        else:
+            live = M.init_cache(eng.cfg, n, sc.max_seq,
+                                int8_kv=eng.qc.int8_kv, mesh=eng.mesh)
         return {
-            "live": M.init_cache(eng.cfg, n, sc.max_seq,
-                                 int8_kv=eng.qc.int8_kv, mesh=eng.mesh),
+            "live": live,
             "clen": np.zeros(n, np.int32),     # per-slot cache length (host)
             "active": np.zeros(n, bool),       # slot occupied (host)
             "budget": np.zeros(n, np.int64),   # remaining tokens per slot
@@ -280,6 +352,46 @@ class SlotScheduler:
             "prefill_s": 0.0,
         }
 
+    def _reserve_pages(self, slot: int, prompt_len: int, budget: int) -> bool:
+        """Reserve this request's FULL page footprint up front (no lazy
+        growth, hence no mid-stream allocation deadlock): enough pages to
+        cover prompt + every token its budget can emit — plus a verify
+        chunk's worth (γ+1) on speculative engines, whose commit may write
+        past the budget boundary within the final round.  All-or-nothing:
+        on failure the block-table row is untouched and admission stops."""
+        if not self.paged or self.alloc is None:
+            return True
+        need = prompt_len + budget
+        if self.eng.spec_enabled:
+            need += self.eng.sc.spec_lookahead + 1
+        n_pages = min(kvcache.pages_for(need, self.page_size), self.mp)
+        pages = self.alloc.alloc(n_pages)
+        if pages is None:
+            return False
+        row = np.full(self.mp, self._sentinel, np.int32)
+        row[:len(pages)] = pages
+        self.bt[slot] = row
+        self._pages_hwm = max(self._pages_hwm, self.alloc.pages_in_use)
+        return True
+
+    def _release_pages(self, slot: int) -> None:
+        """Return a recycled slot's pages to the free list (sentinel padding
+        is ignored by the allocator) and reset its table row."""
+        if not self.paged or self.alloc is None:
+            return
+        self.alloc.free(int(p) for p in self.bt[slot])
+        self.bt[slot] = self._sentinel
+
+    def _next_eligible(self, queue, now: float) -> Optional[Request]:
+        """First queued request that has ARRIVED (open-loop ``arrival``
+        offsets make t_enqueue a future instant until then).  The queue is
+        priority-then-FCFS ordered, so the scan preserves that order among
+        arrived requests."""
+        for r in queue:
+            if r.t_enqueue <= now:
+                return r
+        return None
+
     def _admit(self, st, queue, out, max_new_tokens: int, *,
                limit: Optional[int] = None, degraded: bool = False) -> None:
         """Prefill queued requests into free slots (padded prompt,
@@ -287,16 +399,26 @@ class SlotScheduler:
         caches into the live decode cache, and seed each slot with its
         first sampled token — all device-side (no host sync).  ``limit``
         caps concurrently-occupied slots at the usable pool (HBM admission
-        headroom under the effective budget)."""
+        headroom under the effective budget).  On the paged engine each
+        admission first reserves its full page footprint; a failed
+        reservation stops admission this round (strict priority/FCFS — a
+        later smaller request never jumps a starved larger one)."""
         eng, sc = self.eng, self.eng.sc
         eos = jnp.int32(sc.eos_id)
         limit = self.n_slots if limit is None else limit
         t0 = time.perf_counter()
         while queue and not st["active"].all() \
                 and int(st["active"].sum()) < limit:
-            req = queue.popleft()
+            req = self._next_eligible(queue, time.perf_counter())
+            if req is None:
+                break
             slot = int(np.flatnonzero(~st["active"])[0])
             l = len(req.tokens)
+            m = (req.max_new_tokens if req.max_new_tokens is not None
+                 else max_new_tokens)
+            if not self._reserve_pages(slot, l, m):
+                break
+            queue.remove(req)
             p_len = bucket_length(l, sc.prefill_bucket, sc.max_seq)
             padded = np.zeros((1, p_len), np.int32)
             padded[0, :l] = req.tokens
@@ -305,15 +427,17 @@ class SlotScheduler:
             logits, pcache = prefill(
                 eng.params, {"tokens": jnp.asarray(padded)},
                 jnp.asarray([l], jnp.int32))
-            st["live"] = eng._scatter(st["live"], pcache, slot)
+            if self.paged:
+                st["live"] = eng._scatter_paged(
+                    st["live"], pcache, slot, jnp.asarray(self.bt[slot]))
+            else:
+                st["live"] = eng._scatter(st["live"], pcache, slot)
             st["key"], sub = jax.random.split(st["key"])
             first = eng._sample(logits, sub)           # (1, 1) on device
             st["tok"] = st["tok"].at[slot, 0].set(first[0, 0])
             st["alive"] = st["alive"].at[slot].set(first[0, 0] != eos)
             st["clen"][slot] = l
             st["active"][slot] = True
-            m = (req.max_new_tokens if req.max_new_tokens is not None
-                 else max_new_tokens)
             st["budget"][slot] = m
             st["slot_req"][slot] = req
             req.t_admitted = time.perf_counter()
@@ -343,6 +467,7 @@ class SlotScheduler:
                 self._cancel(req, out, now)
                 st["active"][i] = False
                 st["slot_req"][i] = None
+                self._release_pages(int(i))
                 n_cancelled += 1
         return n_cancelled
 
@@ -463,7 +588,43 @@ class SlotScheduler:
             extra["qos"] = ctrl.stats()
         if self.chaos is not None:
             extra["chaos"] = self.chaos.stats()
+        if self.paged:
+            in_use = self.alloc.pages_in_use if self.alloc else 0
+            extra["paged"] = {
+                "page_size": self.page_size,
+                "num_pages": self.num_pages,
+                "pages_hwm": self._pages_hwm,
+                "pages_in_use_end": in_use,       # invariant: 0 (no leaks)
+                "page_bytes": self._pb,
+                # peak paged-KV HBM vs the dense pool the same slots would
+                # pin at max_seq — the headline admission win
+                "kv_bytes_hwm": self._pages_hwm * self._pb,
+                "kv_bytes_dense": self.n_slots * self.mp * self._pb,
+            }
+            if self.alloc is not None:
+                self.alloc.check()                # leak/corruption audit
         return extra
+
+    @staticmethod
+    def _apply_arrivals(requests: List[Request], t0: float) -> None:
+        """Open-loop arrivals: a request with ``arrival > 0`` enqueues at
+        ``t0 + arrival`` (a future t_enqueue keeps it ineligible until that
+        instant, and TTFT/queue-wait metrics measure from arrival, not from
+        run start)."""
+        for r in requests:
+            if r.arrival > 0:
+                r.t_enqueue = t0 + r.arrival
+
+    @staticmethod
+    def _idle_sleep(queue, now: float) -> bool:
+        """True when the pool is idle only because no queued request has
+        arrived yet (open loop): sleep toward the next arrival instead of
+        burning no-progress rounds against the idle cap."""
+        nxt = min(r.t_enqueue for r in queue)
+        if nxt <= now:
+            return False
+        time.sleep(min(nxt - now, 0.05))
+        return True
 
     # ------------------------------------------------------------------
     def run(self, requests: List[Request], max_new_tokens: int = 16
@@ -495,6 +656,7 @@ class SlotScheduler:
         usable_min = n
         retries0 = self.retries
         t_run0 = time.perf_counter()
+        self._apply_arrivals(requests, t_run0)
         t_prev = None
 
         while queue or active.any():
@@ -505,11 +667,18 @@ class SlotScheduler:
             usable = self.usable_slots_now()
             usable_min = min(usable_min, usable)
             # 3) degradation controller: queue depth / HBM headroom /
-            #    projected deadline misses
+            #    projected deadline misses.  Paged: pressure is page-pool
+            #    exhaustion (requests waiting on a drained free list), not
+            #    the dense max_seq-charged bound.
+            if self.paged:
+                pressure = (self.alloc is not None and queue
+                            and self.alloc.free_pages == 0)
+            else:
+                pressure = (usable < n
+                            and int(active.sum()) + len(queue) > usable)
             degraded = ctrl.update(
                 queue_depth=len(queue),
-                hbm_pressure=(usable < n
-                              and int(active.sum()) + len(queue) > usable),
+                hbm_pressure=bool(pressure),
                 miss_rate=self._miss_rate(st, queue, now, usable,
                                           max_new_tokens))
             # interleaved prefill: fill any free slot BEFORE the fetch, so a
@@ -522,6 +691,10 @@ class SlotScheduler:
             if not active.any():
                 if not queue:
                     continue               # drained -> loop exits
+                # open-loop gap: everything queued is still in the future —
+                # sleep toward the next arrival (never counts as idle)
+                if self._idle_sleep(queue, time.perf_counter()):
+                    continue
                 # queue pending but nothing admittable (squeeze left zero
                 # usable slots): spin the chaos round clock — windows are
                 # counted in rounds, so the squeeze passes — with a hard
@@ -551,6 +724,7 @@ class SlotScheduler:
                     req.new_tokens = len(out[req.rid])
                     active[i] = False
                     st["slot_req"][i] = None    # slot freed -> recyclable
+                    self._release_pages(int(i))
             if not active.any():
                 if self.chaos is not None:
                     self.chaos.tick()
@@ -564,6 +738,7 @@ class SlotScheduler:
             # snapshot clen: the host mutates it below, and numpy->device
             # transfers may alias the host buffer (CPU zero-copy)
             clen_dev = jnp.asarray(clen.copy())
+            bt_dev = jnp.asarray(self.bt.copy()) if self.paged else None
             # one masked dispatch per distinct effective term budget: only
             # member rows commit token/alive/cache writes, so every active
             # slot advances exactly one token under its own tier's context
@@ -571,11 +746,16 @@ class SlotScheduler:
                 mask = np.zeros(n, bool)
                 mask[members] = True
                 dispatches += 1
+                if self.paged:
+                    args = (eng.params, st["tok"], st["live"], clen_dev,
+                            bt_dev, st["key"], st["alive"], eos, temperature,
+                            jnp.asarray(mask))
+                else:
+                    args = (eng.params, st["tok"], st["live"], clen_dev,
+                            st["key"], st["alive"], eos, temperature,
+                            jnp.asarray(mask))
                 st["tok"], st["live"], st["key"], st["alive"] = \
-                    self._dispatch(eng._decode_for(b_eff), (
-                        eng.params, st["tok"], st["live"], clen_dev,
-                        st["key"], st["alive"], eos, temperature,
-                        jnp.asarray(mask)))
+                    self._dispatch(eng._decode_for(b_eff), args)
                 terms = full_terms if b_eff is None else b_eff
                 for i in members:
                     req = st["slot_req"][i]
@@ -644,6 +824,7 @@ class SlotScheduler:
         usable_min = n
         retries0 = self.retries
         t_run0 = time.perf_counter()
+        self._apply_arrivals(requests, t_run0)
         t_prev = None
 
         while queue or active.any():
@@ -655,6 +836,8 @@ class SlotScheduler:
                 self._admit(st, queue, out, max_new_tokens, limit=usable)
             if not active.any():
                 if not queue:
+                    continue
+                if self._idle_sleep(queue, time.perf_counter()):
                     continue
                 if self.chaos is not None:
                     self.chaos.tick()
@@ -668,9 +851,15 @@ class SlotScheduler:
             rounds += 1
             occupied_steps += float(active.sum()) / n
             tok_pre = st["tok"]                # pending tokens entering round
+            if self.paged:
+                spec_args = (eng.params, st["tok"], st["live"],
+                             jnp.asarray(clen.copy()),
+                             jnp.asarray(self.bt.copy()))
+            else:
+                spec_args = (eng.params, st["tok"], st["live"],
+                             jnp.asarray(clen.copy()))
             st["tok"], st["live"], full, accept = self._dispatch(
-                eng._spec, (eng.params, st["tok"], st["live"],
-                            jnp.asarray(clen.copy())))
+                eng._spec, spec_args)
             # the ONE host transfer of this round (up to γ+1 tokens/slot)
             tok_host, full_host, acc_host = jax.device_get(
                 (tok_pre, full, accept))
@@ -703,6 +892,7 @@ class SlotScheduler:
                     req.new_tokens = len(out[req.rid])
                     active[i] = False
                     st["slot_req"][i] = None
+                    self._release_pages(int(i))
             if self.chaos is not None:
                 self.chaos.tick()
             now2 = time.perf_counter()

@@ -91,6 +91,14 @@ class ServeConfig:
     max_queue: int = 0            # >0: add_request backpressure bound
     degrade: Q.DegradeConfig = Q.DegradeConfig()  # load-adaptive degradation
     chaos: Optional[Q.ChaosConfig] = None         # fault injection (CI/chaos)
+    # -- paged KV cache (DESIGN.md §13) ----------------------------------
+    # attention KV lives in fixed-size page pools addressed through
+    # per-slot block tables; admission reserves ceil(len/page) pages, so a
+    # short sequence stops charging max_seq HBM.  Requires the slots
+    # scheduler; chaos injection is not supported on the paged engine.
+    paged: bool = False
+    page_size: int = 16           # tokens per KV page
+    num_pages: int = 0            # 0 -> derived (hbm budget or slots*max_seq)
 
 
 def _sample_logits(logits: jnp.ndarray, key, temperature: float) -> jnp.ndarray:
@@ -188,6 +196,81 @@ def make_decode_sample_step(cfg: ArchConfig, qc: QuantContext = FP,
     return masked_step
 
 
+def _pool_sentinel(caches) -> Optional[int]:
+    """Sentinel page id of a paged cache tree (None when the arch has no
+    full-attention blocks — nothing is paged, tables are inert)."""
+    for part, ax in (("stages", 1), ("tail", 0)):
+        leaves, _ = jax.tree_util.tree_flatten_with_path(caches.get(part, {}))
+        for path, leaf in leaves:
+            if M._is_pool_leaf(path):
+                return leaf.shape[ax] - 1
+    return None
+
+
+def make_paged_decode_step(cfg: ArchConfig, qc: QuantContext, page_size: int,
+                           masked: bool = False):
+    """Paged twin of :func:`make_decode_sample_step`: same fused
+    decode+sample+EOS contract with a ``block_tables`` (B, MP) operand after
+    ``cache_len``.
+
+    ``masked=True`` keeps the QoS-tier contract on the paged layout with a
+    two-part merge: rows outside ``row_mask`` run under an all-sentinel
+    block table (their pool writes land on the sentinel page — garbage that
+    is never read unmasked — so pool leaves, which have no batch axis, are
+    taken wholesale), while per-slot leaves (local rings, recurrent state)
+    merge row-wise exactly as the dense step."""
+    def step(params, tok, caches, cache_len, block_tables, key, alive,
+             eos_id, temperature):
+        logits, caches = M.paged_decode_step(params, tok, caches, cache_len,
+                                             block_tables, cfg, qc,
+                                             page_size=page_size)
+        key, sub = jax.random.split(key)
+        nxt = sample_logits_dynamic(logits, sub, temperature)
+        alive = jnp.logical_and(alive, nxt[:, 0] != eos_id)
+        return nxt, caches, key, alive
+
+    _contract(step, name="fused_decode_paged", transfers_per_round=1,
+              int_psum_axes=("expand",),
+              dynamic_operands=("block_tables", "eos_id", "temperature"),
+              donate_argnums=(2,), budget_key="decode_paged")
+    if not masked:
+        return step
+
+    def masked_step(params, tok, caches, cache_len, block_tables, key, alive,
+                    eos_id, temperature, row_mask):
+        sentinel = _pool_sentinel(caches)
+        bt_eff = block_tables
+        if sentinel is not None:
+            bt_eff = jnp.where(row_mask[:, None], block_tables, sentinel)
+        nxt, new_caches, key, alive_new = step(
+            params, tok, caches, cache_len, bt_eff, key, alive, eos_id,
+            temperature)
+        nxt = jnp.where(row_mask[:, None], nxt, tok)
+        alive_out = jnp.where(row_mask, alive_new, alive)
+
+        def merge(axis):
+            def f(path, nw, old):
+                if M._is_pool_leaf(path):
+                    return nw          # unmasked writes went to the sentinel
+                return _select_rows(nw, old, row_mask, axis)
+            return f
+
+        merged = {
+            "stages": jax.tree_util.tree_map_with_path(
+                merge(1), new_caches["stages"], caches["stages"]),
+            "tail": jax.tree_util.tree_map_with_path(
+                merge(0), new_caches["tail"], caches["tail"]),
+        }
+        return nxt, merged, key, alive_out
+
+    _contract(masked_step, name="fused_decode_paged_masked",
+              transfers_per_round=1, int_psum_axes=("expand",),
+              dynamic_operands=("block_tables", "eos_id", "temperature",
+                                "row_mask"),
+              donate_argnums=(2,), budget_key="decode_paged")
+    return masked_step
+
+
 def _has_expanded(params) -> bool:
     """True when the tree carries ExpandedTensor leaves (a series term axis
     exists to truncate — the precondition for QoS tiers / term budgets)."""
@@ -240,6 +323,44 @@ def make_spec_decode_step(cfg: ArchConfig, qc: QuantContext,
     _contract(step, name="spec_decode", transfers_per_round=1,
               int_psum_axes=("expand",), donate_argnums=(2,),
               budget_key="spec_decode")
+    return step
+
+
+def make_paged_spec_decode_step(cfg: ArchConfig, qc: QuantContext,
+                                qc_draft: QuantContext, lookahead: int,
+                                page_size: int):
+    """Paged twin of :func:`make_spec_decode_step`: draft steps, the verify
+    pass, and the commit all go through the slot block tables.  Admission
+    reserves ``lookahead + 1`` extra positions' worth of pages per slot so
+    the chunk writes never overflow the table (scheduler._admit)."""
+    def step(params, tok, caches, cache_len, block_tables):
+        b = tok.shape[0]
+        clen = jnp.broadcast_to(jnp.asarray(cache_len, jnp.int32), (b,))
+        d_caches, d_tok = caches, tok
+        drafts = []
+        for j in range(lookahead):
+            logits, d_caches = M.paged_decode_step(
+                params, d_tok, d_caches, clen + j, block_tables, cfg,
+                qc_draft, page_size=page_size)
+            d_tok = jnp.argmax(logits, axis=-1)[:, None].astype(jnp.int32)
+            drafts.append(d_tok)
+        drafts = jnp.concatenate(drafts, axis=1)               # (B, γ)
+        chunk = jnp.concatenate([tok, drafts], axis=1)         # (B, γ+1)
+        logits, deltas = M.paged_verify_step(params, chunk, caches, clen,
+                                             block_tables, cfg, qc,
+                                             page_size=page_size)
+        full = jnp.argmax(logits, axis=-1).astype(jnp.int32)   # (B, γ+1)
+        match = (drafts == full[:, :-1]).astype(jnp.int32)
+        accept = jnp.sum(jnp.cumprod(match, axis=1), axis=1)   # (B,) in [0,γ]
+        caches = M.commit_verify_paged(caches, deltas, clen, accept,
+                                       block_tables, cfg, page_size=page_size)
+        next_tok = jnp.take_along_axis(full, accept[:, None], axis=1)
+        return next_tok, caches, full, accept
+
+    _contract(step, name="spec_decode_paged", transfers_per_round=1,
+              int_psum_axes=("expand",),
+              dynamic_operands=("block_tables",), donate_argnums=(2,),
+              budget_key="spec_decode_paged")
     return step
 
 
@@ -330,6 +451,9 @@ class Engine:
         self.params = params
         self.expanded = _has_expanded(params)
         self._validate_qos(serve_cfg)
+        self.paged = serve_cfg.paged
+        if self.paged:
+            self._validate_paged(serve_cfg)
         if serve_cfg.term_budget is not None:
             # static whole-engine truncation: by Theorem 1 the k-term prefix
             # is itself a coherent lower-bit model, so the engine simply
@@ -359,9 +483,19 @@ class Engine:
             name="prefill_slot", int_psum_axes=("expand",),
             budget_key="prefill"))
         self._scatter = jax.jit(M.scatter_cache_into_slot, donate_argnums=(0,))
-        self._decode = jax.jit(
-            make_decode_sample_step(cfg, self.qc, masked=True),
-            donate_argnums=(2,))
+        if self.paged:
+            page = serve_cfg.page_size
+            self._scatter_paged = jax.jit(
+                lambda live, pref, slot, page_ids: M.scatter_cache_into_pages(
+                    live, pref, slot, page_ids, page),
+                donate_argnums=(0,))
+            self._decode = jax.jit(
+                make_paged_decode_step(cfg, self.qc, page, masked=True),
+                donate_argnums=(2,))
+        else:
+            self._decode = jax.jit(
+                make_decode_sample_step(cfg, self.qc, masked=True),
+                donate_argnums=(2,))
         # per-term-budget jitted callables (QoS tiers): budget None = the
         # engine's own context.  Populated lazily — an engine that never
         # serves a degraded tier never traces a truncated step.
@@ -373,10 +507,17 @@ class Engine:
             self._validate_spec(serve_cfg)
             self.qc_draft = dataclasses.replace(
                 self.qc, term_budget=serve_cfg.spec_terms)
-            self._spec = jax.jit(
-                make_spec_decode_step(cfg, self.qc, self.qc_draft,
-                                      serve_cfg.spec_lookahead),
-                donate_argnums=(2,))
+            if self.paged:
+                self._spec = jax.jit(
+                    make_paged_spec_decode_step(cfg, self.qc, self.qc_draft,
+                                                serve_cfg.spec_lookahead,
+                                                serve_cfg.page_size),
+                    donate_argnums=(2,))
+            else:
+                self._spec = jax.jit(
+                    make_spec_decode_step(cfg, self.qc, self.qc_draft,
+                                          serve_cfg.spec_lookahead),
+                    donate_argnums=(2,))
         self._slots: Optional[SlotScheduler] = None
 
     def _validate_spec(self, sc: ServeConfig) -> None:
@@ -405,6 +546,22 @@ class Engine:
                 f"spec_lookahead={sc.spec_lookahead} needs a local-attention "
                 f"window of at least lookahead+1 (got window={self.cfg.window}): "
                 f"a verify chunk must fit the ring without self-collision")
+
+    def _validate_paged(self, sc: ServeConfig) -> None:
+        """Paged-KV preconditions (capacity-like: fixed per engine)."""
+        if sc.scheduler != "slots":
+            raise ValueError(
+                "paged=True requires scheduler='slots' (the grouped legacy "
+                "path is the dense bit-exactness baseline)")
+        if sc.chaos is not None:
+            raise ValueError(
+                "paged=True does not support chaos injection: a chaos-"
+                "squeezed HBM budget would need live page-pool resizing — "
+                "run chaos drills on the dense engine")
+        if sc.page_size < 1:
+            raise ValueError(f"page_size must be >= 1, got {sc.page_size}")
+        if sc.num_pages < 0:
+            raise ValueError(f"num_pages must be >= 0, got {sc.num_pages}")
 
     def _validate_qos(self, sc: ServeConfig) -> None:
         """QoS knob preconditions, checked at construction (capacity-like:
@@ -470,10 +627,16 @@ class Engine:
             # harness) monkeypatch ``eng._decode`` to observe dispatches.
             return self._decode
         if budget not in self._decode_by_budget:
-            self._decode_by_budget[budget] = jax.jit(
-                make_decode_sample_step(self.cfg, self._qc_for(budget),
-                                        masked=True),
-                donate_argnums=(2,))
+            if self.paged:
+                self._decode_by_budget[budget] = jax.jit(
+                    make_paged_decode_step(self.cfg, self._qc_for(budget),
+                                           self.sc.page_size, masked=True),
+                    donate_argnums=(2,))
+            else:
+                self._decode_by_budget[budget] = jax.jit(
+                    make_decode_sample_step(self.cfg, self._qc_for(budget),
+                                            masked=True),
+                    donate_argnums=(2,))
         return self._decode_by_budget[budget]
 
     def _prefill_slot_for(self, budget: Optional[int]):
@@ -518,7 +681,8 @@ class Engine:
                     max_new_tokens: Optional[int] = None, *,
                     quality: str = "full",
                     deadline_s: Optional[float] = None,
-                    priority: int = 0):
+                    priority: int = 0,
+                    arrival: float = 0.0):
         """Queue a prompt; returns the request id, or a typed
         :class:`repro.infer.qos.Rejection` when the engine is saturated.
 
@@ -533,7 +697,10 @@ class Engine:
         is always served at the engine's own context.  ``deadline_s`` is a
         wall-clock budget from *now*: a request that cannot finish in time
         is cancelled mid-run and its slot recycled.  Higher ``priority``
-        admits first (FCFS within a priority level).
+        admits first (FCFS within a priority level).  ``arrival > 0``
+        delays the request's open-loop arrival to that many seconds after
+        ``run()`` starts (the Poisson serving benchmark's offered-load
+        knob); TTFT and queue-wait then measure from the arrival instant.
 
         Validates capacity here (a proper error, not an ``assert`` that
         vanishes under ``python -O``): the prompt plus its token budget —
@@ -582,11 +749,19 @@ class Engine:
                     detail="no usable slot under the effective HBM budget")
         rid = self._next_id
         self._next_id += 1
+        if arrival < 0:
+            raise ValueError(f"arrival must be >= 0, got {arrival}")
+        if arrival > 0 and self.sc.scheduler != "slots":
+            raise ValueError(
+                "arrival > 0 requires scheduler='slots' (the grouped path "
+                "forms its batches up front and cannot model open-loop "
+                "arrivals)")
         self._queue.append(Request(
             rid=rid, tokens=toks, max_new_tokens=max_new_tokens,
             t_enqueue=now, quality=quality, priority=priority,
             deadline_s=deadline_s,
-            deadline=(now + deadline_s) if deadline_s is not None else None))
+            deadline=(now + deadline_s) if deadline_s is not None else None,
+            arrival=arrival))
         return rid
 
     def run(self, max_new_tokens: int = 16) -> Dict[int, List[int]]:

@@ -1,0 +1,221 @@
+"""Paged flash-attention Pallas kernels (decode + chunk-verify).
+
+One kernel family computes the *partial* online-softmax attention of T query
+tokens per slot against that slot's paged KV cache: grid ``(B, MP)`` walks
+each slot's block table (scalar-prefetched, so the kv ``index_map`` streams
+exactly the slot's own pages through VMEM), carrying the running
+``(acc, max, denom)`` in the revisited output blocks.  The jnp wrapper
+(:mod:`repro.models.attention`) merges the chunk's own causal KV — decode is
+T=1, speculative verify is T=γ+1 — by the exact two-way online-softmax
+merge, so the cache buffer is never gathered to a dense ``(B, S)`` layout.
+
+The int8 variant keeps BOTH GEMMs on the int8 MXU path via the factored-
+scale identity (DESIGN.md §10): K's per-(position, kv-head) scales multiply
+the int32 QK^T products per column; V's scales fold into the softmax
+weights *before* the PV dot, with the folded weights re-quantized per row
+per page.  Per-page weight quantization reassociates differently from the
+reference's whole-row quantization, so the int8 kernel is tolerance-tested
+(few %), while the fp kernel matches the gather reference to ~1e-6.
+
+Block tables use a *sentinel* page id (``pool_pages - 1``, the last pool
+row): unused table slots point at it, its reads are always masked by
+``pos < cache_len``, and masked-row QoS dispatches substitute all-sentinel
+tables so dropped rows write only garbage into the sentinel page.
+
+On this CPU container the kernels run under ``interpret=True``;
+``REPRO_NO_PALLAS=1`` (or ``use_kernel=False`` contexts) selects the
+gather-based jnp reference, which is the token-identity oracle.
+"""
+from __future__ import annotations
+
+import functools
+
+import jax
+import jax.numpy as jnp
+from jax.experimental import pallas as pl
+from jax.experimental.pallas import tpu as pltpu
+
+NEG_INF = -1e30
+
+
+def _paged_partial_kernel(bt_ref, clen_ref, q_ref, k_ref, v_ref,
+                          acc_ref, m_ref, l_ref, *, page: int, softcap: float):
+    """Grid (B, MP): block j of slot b streams page ``bt[b, j]`` through
+    VMEM and folds it into the slot's running (acc, m, l)."""
+    b = pl.program_id(0)
+    j = pl.program_id(1)
+
+    @pl.when(j == 0)
+    def _init():
+        acc_ref[...] = jnp.zeros_like(acc_ref[...])
+        m_ref[...] = jnp.full_like(m_ref[...], NEG_INF)
+        l_ref[...] = jnp.zeros_like(l_ref[...])
+
+    clen = clen_ref[b]
+    pos = j * page + jax.lax.broadcasted_iota(jnp.int32, (page,), 0)
+    valid = pos < clen
+
+    @pl.when(jnp.any(valid))
+    def _step():
+        q = q_ref[0]                     # (T, G, R, D) f32, pre-scaled
+        k = k_ref[0]                     # (page, G, D)
+        v = v_ref[0]
+        sc = jnp.einsum("tgrd,pgd->tgrp", q, k.astype(jnp.float32),
+                        preferred_element_type=jnp.float32)
+        if softcap > 0.0:
+            sc = softcap * jnp.tanh(sc / softcap)
+        sc = jnp.where(valid[None, None, None, :], sc, NEG_INF)
+        m_prev = m_ref[0]
+        m_new = jnp.maximum(m_prev, jnp.max(sc, axis=-1))
+        p = jnp.exp(sc - m_new[..., None])
+        alpha = jnp.exp(m_prev - m_new)
+        l_ref[0] = l_ref[0] * alpha + jnp.sum(p, axis=-1)
+        pv = jnp.einsum("tgrp,pgd->tgrd", p, v.astype(jnp.float32),
+                        preferred_element_type=jnp.float32)
+        acc_ref[0] = acc_ref[0] * alpha[..., None] + pv
+        m_ref[0] = m_new
+
+
+def _quantize_rows(x):
+    amax = jnp.max(jnp.abs(x), axis=-1)
+    scale = jnp.maximum(amax, 1e-30) / 127.0
+    q = jnp.clip(jnp.round(x / scale[..., None]), -127, 127)
+    return q.astype(jnp.int8), scale
+
+
+def _paged_partial_int8_kernel(bt_ref, clen_ref, q_ref, qs_ref, k_ref, ks_ref,
+                               v_ref, vs_ref, acc_ref, m_ref, l_ref,
+                               *, page: int, softcap: float):
+    """int8 twin: QK^T runs int8 x int8 -> int32 with K scales applied per
+    column; V scales fold into the weights which are re-quantized per row
+    (per page) so PV is an int8 dot too — in-kernel dequantization via the
+    factored-scale identity, never a dequantized KV materialization."""
+    b = pl.program_id(0)
+    j = pl.program_id(1)
+
+    @pl.when(j == 0)
+    def _init():
+        acc_ref[...] = jnp.zeros_like(acc_ref[...])
+        m_ref[...] = jnp.full_like(m_ref[...], NEG_INF)
+        l_ref[...] = jnp.zeros_like(l_ref[...])
+
+    clen = clen_ref[b]
+    pos = j * page + jax.lax.broadcasted_iota(jnp.int32, (page,), 0)
+    valid = pos < clen
+
+    @pl.when(jnp.any(valid))
+    def _step():
+        q = q_ref[0]                     # (T, G, R, D) int8
+        qs = qs_ref[0]                   # (T, G, R) f32
+        k = k_ref[0]                     # (page, G, D) int8
+        ks = ks_ref[0]                   # (page, G) f32
+        sc_i = jnp.einsum("tgrd,pgd->tgrp", q, k,
+                          preferred_element_type=jnp.int32)
+        sc = sc_i.astype(jnp.float32) * qs[..., None] \
+            * jnp.moveaxis(ks, 0, 1)[None, :, None, :]
+        if softcap > 0.0:
+            sc = softcap * jnp.tanh(sc / softcap)
+        sc = jnp.where(valid[None, None, None, :], sc, NEG_INF)
+        m_prev = m_ref[0]
+        m_new = jnp.maximum(m_prev, jnp.max(sc, axis=-1))
+        p = jnp.exp(sc - m_new[..., None])
+        alpha = jnp.exp(m_prev - m_new)
+        l_ref[0] = l_ref[0] * alpha + jnp.sum(p, axis=-1)
+        # fold V's per-position scales, re-quantize the folded weights per
+        # row, and keep the PV dot on the int8 MXU
+        p_fold = p * jnp.moveaxis(vs_ref[0], 0, 1)[None, :, None, :]
+        p_i8, p_s = _quantize_rows(p_fold)
+        pv = jnp.einsum("tgrp,pgd->tgrd", p_i8, v_ref[0],
+                        preferred_element_type=jnp.int32)
+        acc_ref[0] = acc_ref[0] * alpha[..., None] \
+            + pv.astype(jnp.float32) * p_s[..., None]
+        m_ref[0] = m_new
+
+
+def _out_shapes(b, t, g, r, d):
+    return [jax.ShapeDtypeStruct((b, t, g, r, d), jnp.float32),
+            jax.ShapeDtypeStruct((b, t, g, r), jnp.float32),
+            jax.ShapeDtypeStruct((b, t, g, r), jnp.float32)]
+
+
+def _q_spec(t, g, r, d):
+    return pl.BlockSpec((1, t, g, r, d), lambda i, j, *_: (i, 0, 0, 0, 0))
+
+
+def _kv_map(i, j, bt_s, cl_s):
+    # scalar-prefetched block table drives the page stream: block j of slot
+    # i is physical pool row bt[i, j] (the sentinel row when unallocated)
+    return (bt_s[i, j], 0, 0, 0)
+
+
+def _scale_map(i, j, bt_s, cl_s):
+    return (bt_s[i, j], 0, 0)
+
+
+def _carry_specs(t, g, r, d):
+    return [pl.BlockSpec((1, t, g, r, d), lambda i, j, *_: (i, 0, 0, 0, 0)),
+            pl.BlockSpec((1, t, g, r), lambda i, j, *_: (i, 0, 0, 0)),
+            pl.BlockSpec((1, t, g, r), lambda i, j, *_: (i, 0, 0, 0))]
+
+
+def paged_flash_partial_pallas(q, k_pool, v_pool, block_tables, cache_len, *,
+                               softcap: float = 0.0, interpret: bool = True,
+                               dimension_semantics=("parallel", "arbitrary")):
+    """Partial paged attention of q (B, T, G, R, D) f32 (pre-scaled by
+    ``D**-0.5``) against pools (P, page, G, D); block_tables (B, MP) int32,
+    cache_len (B,) int32.  Returns ``(acc, m, l)`` — un-normalized output,
+    running max, running denominator — over cache positions ``[0, clen)``."""
+    b, t, g, r, d = q.shape
+    page = k_pool.shape[1]
+    mp = block_tables.shape[1]
+    kernel = functools.partial(_paged_partial_kernel, page=page,
+                               softcap=float(softcap))
+    return pl.pallas_call(
+        kernel,
+        grid_spec=pltpu.PrefetchScalarGridSpec(
+            num_scalar_prefetch=2,
+            grid=(b, mp),
+            in_specs=[_q_spec(t, g, r, d),
+                      pl.BlockSpec((1, page, g, d), _kv_map),
+                      pl.BlockSpec((1, page, g, d), _kv_map)],
+            out_specs=_carry_specs(t, g, r, d),
+        ),
+        out_shape=_out_shapes(b, t, g, r, d),
+        compiler_params=pltpu.TPUCompilerParams(
+            dimension_semantics=dimension_semantics),
+        interpret=interpret,
+    )(block_tables, cache_len, q, k_pool, v_pool)
+
+
+def paged_flash_partial_int8_pallas(q_i8, q_s, kq_pool, ks_pool, vq_pool,
+                                    vs_pool, block_tables, cache_len, *,
+                                    softcap: float = 0.0,
+                                    interpret: bool = True,
+                                    dimension_semantics=("parallel",
+                                                         "arbitrary")):
+    """int8 twin of :func:`paged_flash_partial_pallas`: q_i8 (B, T, G, R, D)
+    int8 with per-row scales q_s (B, T, G, R) (scale the D**-0.5 into q_s);
+    pools int8 with per-(page-slot, kv-head) scale pools (P, page, G)."""
+    b, t, g, r, d = q_i8.shape
+    page = kq_pool.shape[1]
+    mp = block_tables.shape[1]
+    kernel = functools.partial(_paged_partial_int8_kernel, page=page,
+                               softcap=float(softcap))
+    return pl.pallas_call(
+        kernel,
+        grid_spec=pltpu.PrefetchScalarGridSpec(
+            num_scalar_prefetch=2,
+            grid=(b, mp),
+            in_specs=[_q_spec(t, g, r, d),
+                      pl.BlockSpec((1, t, g, r), lambda i, j, *_: (i, 0, 0, 0)),
+                      pl.BlockSpec((1, page, g, d), _kv_map),
+                      pl.BlockSpec((1, page, g), _scale_map),
+                      pl.BlockSpec((1, page, g, d), _kv_map),
+                      pl.BlockSpec((1, page, g), _scale_map)],
+            out_specs=_carry_specs(t, g, r, d),
+        ),
+        out_shape=_out_shapes(b, t, g, r, d),
+        compiler_params=pltpu.TPUCompilerParams(
+            dimension_semantics=dimension_semantics),
+        interpret=interpret,
+    )(block_tables, cache_len, q_i8, q_s, kq_pool, ks_pool, vq_pool, vs_pool)

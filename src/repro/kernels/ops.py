@@ -84,6 +84,9 @@ _SEMANTICS = {
     "series": ("parallel", "arbitrary", "arbitrary"),
     "dequant": ("parallel", "parallel", "arbitrary"),
     "quant": ("parallel", "parallel"),
+    # paged flash attention: slots are independent; the page axis carries
+    # the online-softmax (acc, m, l) accumulator
+    "flash": ("parallel", "arbitrary"),
 }
 
 # Known-good tiles for canonical (kind, M, K, N) shapes — checked before the
@@ -316,6 +319,38 @@ def dequant_matmul(x: jnp.ndarray, w_planes: jnp.ndarray,
     if w_scales.ndim == 1:
         w_scales = jnp.broadcast_to(w_scales[:, None], (tw, n))
     return ref.dequant_matmul_ref(x, w_planes, w_scales)
+
+
+def paged_flash_partial(q, k_pool, v_pool, block_tables, cache_len, *,
+                        softcap: float = 0.0):
+    """Paged flash-attention partial (kernels/flash_attention.py): q
+    (B, T, G, R, D) f32 pre-scaled by ``D**-0.5``; pools (P, page, G, D)
+    with the last row the sentinel page; block_tables (B, MP) int32;
+    cache_len (B,) int32.  Returns un-normalized (acc, m, l) over the
+    paged cache prefix — the caller merges the chunk's own KV.
+
+    The page tile is fixed by the pool layout (one page per grid step), so
+    this bypasses the block autotuner; it shares the dimension-semantics
+    registry (``_SEMANTICS["flash"]``) and the interpret/TPU switch.  No
+    jnp fallback here: ref dispatch happens one level up, in
+    ``models.attention.paged_*`` (``use_kernel`` / ``REPRO_NO_PALLAS``),
+    because the reference needs the dense gather the kernel exists to
+    avoid."""
+    from repro.kernels import flash_attention as _fa
+    return _fa.paged_flash_partial_pallas(
+        q, k_pool, v_pool, block_tables, cache_len, softcap=softcap,
+        interpret=not _on_tpu(), dimension_semantics=_SEMANTICS["flash"])
+
+
+def paged_flash_partial_int8(q_i8, q_s, kq_pool, ks_pool, vq_pool, vs_pool,
+                             block_tables, cache_len, *, softcap: float = 0.0):
+    """int8 twin of :func:`paged_flash_partial` — in-kernel dequant via the
+    factored-scale identity keeps QK^T and PV on the int8 MXU path."""
+    from repro.kernels import flash_attention as _fa
+    return _fa.paged_flash_partial_int8_pallas(
+        q_i8, q_s, kq_pool, ks_pool, vq_pool, vs_pool, block_tables,
+        cache_len, softcap=softcap,
+        interpret=not _on_tpu(), dimension_semantics=_SEMANTICS["flash"])
 
 
 # ---------------------------------------------------------------------------

@@ -365,6 +365,141 @@ def decode_attention_int8(
     return out.reshape(b, 1, h, d).astype(q.dtype)
 
 
+# ---------------------------------------------------------------------------
+# Paged KV cache (DESIGN.md §13).  KV lives in global per-layer page pools
+# (P+1, page, G, D) — the last row is the sentinel page — addressed through
+# per-slot block tables (B, MP).  The reference path gathers a slot's pages
+# to a dense (B, MP*page, ...) view and reuses the dense decode/chunk
+# attention above: it is the token-identity oracle.  The kernel path streams
+# pages through the Pallas partial kernels and merges the chunk's own causal
+# KV by the exact two-way online-softmax merge — no dense (B, S) gather.
+# ---------------------------------------------------------------------------
+def gather_pages(pool: jnp.ndarray, block_tables: jnp.ndarray) -> jnp.ndarray:
+    """(P, page, ...) pool + (B, MP) tables -> dense (B, MP*page, ...)."""
+    b, mp = block_tables.shape
+    g = jnp.take(pool, block_tables, axis=0)           # (B, MP, page, ...)
+    return g.reshape((b, mp * pool.shape[1]) + pool.shape[2:])
+
+
+def merge_partial_softmax(acc, m, l, sc_new, v_new):
+    """Exact two-way online-softmax merge of a kernel partial (acc, m, l)
+    with already-masked chunk scores sc_new (B, T, G, R, J) over chunk
+    values v_new (B, J, G, D) f32.  Returns normalized (B, T, G, R, D)."""
+    m_c = jnp.max(sc_new, axis=-1)
+    p_c = jnp.exp(sc_new - m_c[..., None])
+    l_c = jnp.sum(p_c, axis=-1)
+    acc_c = jnp.einsum("btgrj,bjgd->btgrd", p_c, v_new)
+    m_t = jnp.maximum(m, m_c)
+    a1 = jnp.exp(m - m_t)
+    a2 = jnp.exp(m_c - m_t)
+    denom = jnp.maximum(l * a1 + l_c * a2, 1e-30)
+    return (acc * a1[..., None] + acc_c * a2[..., None]) / denom[..., None]
+
+
+def _chunk_scores(qg, k_new, softcap, causal_chunk):
+    sc_new = jnp.einsum("btgrd,bjgd->btgrj", qg, k_new.astype(jnp.float32))
+    if softcap > 0.0:
+        sc_new = softcap * jnp.tanh(sc_new / softcap)
+    if causal_chunk:
+        t = qg.shape[1]
+        t_idx = jnp.arange(t)
+        nmask = t_idx[None, :] <= t_idx[:, None]                   # (T, J)
+        sc_new = jnp.where(nmask[None, :, None, None, :], sc_new, NEG_INF)
+    return sc_new
+
+
+def _paged_flash(q, k_pool, v_pool, block_tables, cache_len, k_new, v_new,
+                 softcap, causal_chunk):
+    from repro.kernels import ops as _ops
+    b, t, h, d = q.shape
+    g = k_pool.shape[2]
+    r = h // g
+    qg = q.reshape(b, t, g, r, d).astype(jnp.float32) * (d ** -0.5)
+    acc, m, l = _ops.paged_flash_partial(qg, k_pool, v_pool, block_tables,
+                                         cache_len, softcap=softcap)
+    out = merge_partial_softmax(acc, m, l,
+                                _chunk_scores(qg, k_new, softcap, causal_chunk),
+                                v_new.astype(jnp.float32))
+    return out.reshape(b, t, h, d).astype(q.dtype)
+
+
+def _paged_flash_int8(q, kq_pool, ks_pool, vq_pool, vs_pool, block_tables,
+                      cache_len, k_new, v_new, softcap, causal_chunk):
+    from repro.kernels import ops as _ops
+    b, t, h, d = q.shape
+    g = kq_pool.shape[2]
+    r = h // g
+    qg = q.reshape(b, t, g, r, d).astype(jnp.float32) * (d ** -0.5)
+    q_i8, q_s = _quantize_rows(qg)
+    acc, m, l = _ops.paged_flash_partial_int8(q_i8, q_s, kq_pool, ks_pool,
+                                              vq_pool, vs_pool, block_tables,
+                                              cache_len, softcap=softcap)
+    out = merge_partial_softmax(acc, m, l,
+                                _chunk_scores(qg, k_new, softcap, causal_chunk),
+                                v_new.astype(jnp.float32))
+    return out.reshape(b, t, h, d).astype(q.dtype)
+
+
+def paged_decode_attention(q, k_pool, v_pool, block_tables, cache_len,
+                           k_new, v_new, *, softcap: float = 0.0,
+                           use_kernel: bool = False) -> jnp.ndarray:
+    """Paged twin of :func:`decode_attention_appended`: q/k_new/v_new are the
+    single new token (B, 1, ...), the cache lives in pools + block tables."""
+    if use_kernel:
+        return _paged_flash(q, k_pool, v_pool, block_tables, cache_len,
+                            k_new, v_new, softcap, causal_chunk=False)
+    kd = gather_pages(k_pool, block_tables)
+    vd = gather_pages(v_pool, block_tables)
+    return decode_attention_appended(q, kd, vd, k_new, v_new, cache_len,
+                                     softcap=softcap)
+
+
+def paged_chunk_decode_attention(q, k_pool, v_pool, block_tables, cache_len,
+                                 k_new, v_new, *, softcap: float = 0.0,
+                                 use_kernel: bool = False) -> jnp.ndarray:
+    """Paged twin of :func:`chunk_decode_attention` (full attention only —
+    local rings are never paged): T chunk queries, causal within the chunk."""
+    if use_kernel:
+        return _paged_flash(q, k_pool, v_pool, block_tables, cache_len,
+                            k_new, v_new, softcap, causal_chunk=True)
+    kd = gather_pages(k_pool, block_tables)
+    vd = gather_pages(v_pool, block_tables)
+    return chunk_decode_attention(q, kd, vd, k_new, v_new, cache_len,
+                                  softcap=softcap)
+
+
+def paged_decode_attention_int8(q, kq_pool, ks_pool, vq_pool, vs_pool,
+                                block_tables, cache_len, k_new, v_new, *,
+                                softcap: float = 0.0,
+                                use_kernel: bool = False) -> jnp.ndarray:
+    if use_kernel:
+        return _paged_flash_int8(q, kq_pool, ks_pool, vq_pool, vs_pool,
+                                 block_tables, cache_len, k_new, v_new,
+                                 softcap, causal_chunk=False)
+    return decode_attention_int8(
+        q, gather_pages(kq_pool, block_tables),
+        gather_pages(ks_pool, block_tables),
+        gather_pages(vq_pool, block_tables),
+        gather_pages(vs_pool, block_tables),
+        k_new, v_new, cache_len, softcap=softcap)
+
+
+def paged_chunk_decode_attention_int8(q, kq_pool, ks_pool, vq_pool, vs_pool,
+                                      block_tables, cache_len, k_new, v_new,
+                                      *, softcap: float = 0.0,
+                                      use_kernel: bool = False) -> jnp.ndarray:
+    if use_kernel:
+        return _paged_flash_int8(q, kq_pool, ks_pool, vq_pool, vs_pool,
+                                 block_tables, cache_len, k_new, v_new,
+                                 softcap, causal_chunk=True)
+    return chunk_decode_attention_int8(
+        q, gather_pages(kq_pool, block_tables),
+        gather_pages(ks_pool, block_tables),
+        gather_pages(vq_pool, block_tables),
+        gather_pages(vs_pool, block_tables),
+        k_new, v_new, cache_len, softcap=softcap)
+
+
 def cross_attention(
     q: jnp.ndarray,           # (B, S, H, D)
     k: jnp.ndarray,           # (B, T_img, G, D)

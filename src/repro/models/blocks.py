@@ -380,6 +380,102 @@ def block_verify_delta(qc: QuantContext, kind: str, p: Dict, x: jnp.ndarray,
 
 
 # ---------------------------------------------------------------------------
+# paged decode/verify (DESIGN.md §13): full-attention KV lives in page pools
+# (P+1, page, G, Dh) addressed through per-slot block tables (B, MP); the
+# last pool row is the sentinel page.  Only attn/moe_attn page — local rings
+# and recurrent states are already O(window)/O(1) per slot and keep their
+# dense layout (other kinds route to the dense functions above).
+# ---------------------------------------------------------------------------
+def _use_paged_kernel(qc: QuantContext) -> bool:
+    from repro.kernels import ops as _ops
+    return bool(qc.use_kernel) and _ops.kernels_enabled()
+
+
+def paged_write_token(pool_cache: Dict, writes: Dict, block_tables: jnp.ndarray,
+                      clen: jnp.ndarray, page_size: int) -> Dict:
+    """Scatter one token per slot into the pools at logical position
+    ``clen[b]``: physical page ``block_tables[b, clen // page]``, offset
+    ``clen % page``.  Positions past the table (or on unallocated table
+    slots) land on the sentinel page — harmless garbage, never read
+    unmasked."""
+    mp = block_tables.shape[1]
+    sentinel = next(iter(pool_cache.values())).shape[0] - 1
+    pidx = clen // page_size                                     # (B,)
+    pid = jnp.take_along_axis(
+        block_tables, jnp.clip(pidx, 0, mp - 1)[:, None], axis=1)[:, 0]
+    pid = jnp.where(pidx < mp, pid, sentinel)
+    off = jnp.mod(clen, page_size)
+    return {key: pool_cache[key].at[pid, off].set(val.astype(pool_cache[key].dtype))
+            for key, val in writes.items()}
+
+
+def block_decode_paged(qc: QuantContext, kind: str, p: Dict, x: jnp.ndarray,
+                       cache: Dict, cfg, *, cache_len: jnp.ndarray,
+                       block_tables: jnp.ndarray, page_size: int
+                       ) -> Tuple[jnp.ndarray, Dict]:
+    """Paged twin of :func:`block_decode` for full-attention kinds; all other
+    kinds keep their dense cache and route through :func:`block_decode`."""
+    if kind not in ("attn", "moe_attn"):
+        return block_decode(qc, kind, p, x, cache, cfg, cache_len=cache_len)
+    b = x.shape[0]
+    clen = jnp.broadcast_to(jnp.asarray(cache_len, jnp.int32), (b,))
+    h = L.apply_norm(cfg.norm, p["ln"], x)
+    q, k, v = _qkv(qc, p["attn"], h, cfg, clen[:, None], rope=True)
+    use_k = _use_paged_kernel(qc)
+    if qc.int8_kv:
+        att = ATT.paged_decode_attention_int8(
+            q, cache["k"], cache["ks"], cache["v"], cache["vs"],
+            block_tables, clen, k, v, softcap=cfg.attn_softcap,
+            use_kernel=use_k)
+        kq, ks = ATT.quantize_kv(k)
+        vq, vs = ATT.quantize_kv(v)
+        writes = {"k": kq[:, 0], "ks": ks[:, 0], "v": vq[:, 0], "vs": vs[:, 0]}
+    else:
+        att = ATT.paged_decode_attention(
+            q, cache["k"], cache["v"], block_tables, clen, k, v,
+            softcap=cfg.attn_softcap, use_kernel=use_k)
+        writes = {"k": k[:, 0], "v": v[:, 0]}
+    new_cache = paged_write_token(cache, writes, block_tables, clen, page_size)
+    x = x + L.dense(qc, att.reshape(b, 1, -1), p["attn"]["o"])
+    x = _mlp_part(qc, kind, p, x, cfg)
+    return x, new_cache
+
+
+def block_verify_paged(qc: QuantContext, kind: str, p: Dict, x: jnp.ndarray,
+                       cache: Dict, cfg, *, cache_len: jnp.ndarray,
+                       block_tables: jnp.ndarray, page_size: int
+                       ) -> Tuple[jnp.ndarray, Dict]:
+    """Paged twin of :func:`block_verify_delta`: scores T chunk tokens
+    against the paged cache WITHOUT mutating it; the caller commits the
+    accepted prefix through the block tables (model.commit_verify_paged)."""
+    if kind not in ("attn", "moe_attn"):
+        return block_verify_delta(qc, kind, p, x, cache, cfg,
+                                  cache_len=cache_len)
+    b, t = x.shape[0], x.shape[1]
+    clen = jnp.broadcast_to(jnp.asarray(cache_len, jnp.int32), (b,))
+    positions = clen[:, None] + jnp.arange(t)[None, :]
+    h = L.apply_norm(cfg.norm, p["ln"], x)
+    q, k, v = _qkv(qc, p["attn"], h, cfg, positions, rope=True)
+    use_k = _use_paged_kernel(qc)
+    if qc.int8_kv:
+        att = ATT.paged_chunk_decode_attention_int8(
+            q, cache["k"], cache["ks"], cache["v"], cache["vs"],
+            block_tables, clen, k, v, softcap=cfg.attn_softcap,
+            use_kernel=use_k)
+        kq, ks = ATT.quantize_kv(k)
+        vq, vs = ATT.quantize_kv(v)
+        delta = {"k": kq, "ks": ks, "v": vq, "vs": vs}
+    else:
+        att = ATT.paged_chunk_decode_attention(
+            q, cache["k"], cache["v"], block_tables, clen, k, v,
+            softcap=cfg.attn_softcap, use_kernel=use_k)
+        delta = {"k": k, "v": v}
+    x = x + L.dense(qc, att.reshape(b, t, -1), p["attn"]["o"])
+    x = _mlp_part(qc, kind, p, x, cfg)
+    return x, delta
+
+
+# ---------------------------------------------------------------------------
 # empty caches for serve_step lowering (shapes only — works under eval_shape)
 # ---------------------------------------------------------------------------
 def init_block_cache(kind: str, cfg, batch: int, s_max: int, dtype=jnp.bfloat16,
@@ -410,3 +506,19 @@ def init_block_cache(kind: str, cfg, batch: int, s_max: int, dtype=jnp.bfloat16,
         return {"conv": jnp.zeros((batch, cfg.ssm_conv - 1, d["conv_ch"]), dtype),
                 "ssm": jnp.zeros((batch, d["heads"], d["p"], d["n"]), dtype)}
     raise ValueError(kind)
+
+
+def init_block_pool(kind: str, cfg, num_pages: int, page_size: int,
+                    dtype=jnp.bfloat16, int8_kv: bool = False):
+    """Page pool for a full-attention block: ``num_pages`` usable pages plus
+    the sentinel page as the LAST pool row (block-table id ``num_pages``)."""
+    if kind not in ("attn", "moe_attn"):
+        raise ValueError(f"only full-attention blocks page, got {kind!r}")
+    g, hd = cfg.num_kv_heads, cfg.head_dim
+    shape = (num_pages + 1, page_size, g, hd)
+    if int8_kv:
+        return {"k": jnp.zeros(shape, jnp.int8),
+                "ks": jnp.zeros(shape[:-1], jnp.float32),
+                "v": jnp.zeros(shape, jnp.int8),
+                "vs": jnp.zeros(shape[:-1], jnp.float32)}
+    return {"k": jnp.zeros(shape, dtype), "v": jnp.zeros(shape, dtype)}

@@ -477,6 +477,223 @@ def commit_verify(caches: PyTree, deltas: PyTree, cache_len: jnp.ndarray,
 
 
 # ---------------------------------------------------------------------------
+# paged KV serving (DESIGN.md §13): full-attention KV lives in global
+# per-layer page pools addressed through per-slot block tables; every other
+# cache kind (local rings, recurrent state) keeps its dense per-slot layout.
+# The sentinel page is the LAST pool row; host-side allocation lives in
+# repro.infer.kvcache.PageAllocator.
+# ---------------------------------------------------------------------------
+def _is_pool_leaf(path) -> bool:
+    names = [str(getattr(p, "key", getattr(p, "idx", ""))) for p in path]
+    block = next((n for n in names if "_" in n), "")
+    return block.endswith("_attn") and names[-1] in ("k", "v", "ks", "vs")
+
+
+def init_paged_cache(cfg: ArchConfig, batch: int, s_max: int, *,
+                     page_size: int, num_pages: int, dtype=None,
+                     int8_kv: bool = False, mesh=None) -> PyTree:
+    """Like :func:`init_cache`, but attn/moe_attn KV is a page pool
+    ``(num_pages + 1, page_size, G, Dh)`` per layer (last row = sentinel
+    page) shared by all slots; non-attention caches stay per-slot dense."""
+    dtype = dtype or _dtype(cfg)
+    stage_caches = {}
+    for i, kind in enumerate(cfg.stage_pattern):
+        if kind in ("attn", "moe_attn"):
+            one = lambda _, kind=kind: B.init_block_pool(
+                kind, cfg, num_pages, page_size, dtype, int8_kv=int8_kv)
+        else:
+            one = lambda _, kind=kind: B.init_block_cache(
+                kind, cfg, batch, s_max, dtype, int8_kv=int8_kv)
+        stage_caches[f"b{i}_{kind}"] = jax.vmap(one)(jnp.arange(cfg.num_stages))
+    tail = {}
+    for i, kind in enumerate(cfg.tail_pattern):
+        if kind in ("attn", "moe_attn"):
+            tail[f"t{i}_{kind}"] = B.init_block_pool(
+                kind, cfg, num_pages, page_size, dtype, int8_kv=int8_kv)
+        else:
+            tail[f"t{i}_{kind}"] = B.init_block_cache(
+                kind, cfg, batch, s_max, dtype, int8_kv=int8_kv)
+    caches = {"stages": stage_caches, "tail": tail}
+    if mesh is not None:
+        from jax.sharding import NamedSharding, PartitionSpec
+        caches = jax.device_put(caches, NamedSharding(mesh, PartitionSpec()))
+    return caches
+
+
+def scatter_cache_into_pages(live: PyTree, pref: PyTree, slot, page_ids,
+                             page_size: int) -> PyTree:
+    """Paged admission: write a one-request prefill cache into the live
+    paged cache.  Pool leaves scatter the prompt KV into the slot's
+    reserved pages (``page_ids`` (MP,), sentinel-padded past the
+    allocation — always the full table length, so there is one scatter
+    shape and one retrace); all other leaves write batch row ``slot``
+    exactly like :func:`scatter_cache_into_slot`."""
+    slot = jnp.asarray(slot, jnp.int32)
+    page_ids = jnp.asarray(page_ids, jnp.int32)
+    mp = page_ids.shape[0]
+    cap = mp * page_size
+
+    def visit(stage: bool):
+        def f(path, lv, pv):
+            if lv is None or pv is None:
+                return lv
+            if _is_pool_leaf(path):
+                t_ax = 1 if stage else 0
+                vals = jnp.squeeze(pv, axis=t_ax)          # drop batch-1 axis
+                s = vals.shape[t_ax]
+                if s < cap:
+                    pads = [(0, 0)] * vals.ndim
+                    pads[t_ax] = (0, cap - s)
+                    vals = jnp.pad(vals, pads)
+                shape = vals.shape[:t_ax] + (mp, page_size) + vals.shape[t_ax + 1:]
+                vals = vals.reshape(shape).astype(lv.dtype)
+                if stage:
+                    return lv.at[:, page_ids].set(vals)
+                return lv.at[page_ids].set(vals)
+            return jax.lax.dynamic_update_slice_in_dim(
+                lv, pv.astype(lv.dtype), slot, axis=1 if stage else 0)
+        return f
+
+    return {"stages": jax.tree_util.tree_map_with_path(
+                visit(True), live["stages"], pref["stages"]),
+            "tail": jax.tree_util.tree_map_with_path(
+                visit(False), live["tail"], pref["tail"])}
+
+
+def paged_decode_step(params: PyTree, tokens: jnp.ndarray, caches: PyTree,
+                      cache_len: jnp.ndarray, block_tables: jnp.ndarray,
+                      cfg: ArchConfig, qc: QuantContext = FP, *,
+                      page_size: int) -> Tuple[jnp.ndarray, PyTree]:
+    """Paged twin of :func:`decode_step` (scan form): attn blocks read/write
+    through ``block_tables`` (B, MP); other kinds run their dense path."""
+    x, _ = _embed(qc, params, {"tokens": tokens}, cfg)
+    names = _stage_block_names(cfg)
+    b = tokens.shape[0]
+    clen = jnp.broadcast_to(jnp.asarray(cache_len, jnp.int32), (b,))
+    bt = jnp.asarray(block_tables, jnp.int32)
+
+    def stage_fn(x, scan_in):
+        stage_params, stage_cache = scan_in
+        stage_params = peel_expanded(stage_params)
+        new_caches = {}
+        for name, kind in zip(names, cfg.stage_pattern):
+            x, c = B.block_decode_paged(qc, kind, stage_params[name], x,
+                                        stage_cache[name], cfg, cache_len=clen,
+                                        block_tables=bt, page_size=page_size)
+            new_caches[name] = c
+        return x, new_caches
+
+    x, stage_caches = jax.lax.scan(stage_fn, x, (params["stages"], caches["stages"]))
+
+    tail_caches = {}
+    for i, kind in enumerate(cfg.tail_pattern):
+        name = f"t{i}_{kind}"
+        x, c = B.block_decode_paged(qc, kind, params["tail"][name], x,
+                                    caches["tail"][name], cfg, cache_len=clen,
+                                    block_tables=bt, page_size=page_size)
+        tail_caches[name] = c
+
+    x = L.apply_norm(cfg.norm, params["final_norm"], x)
+    logits = L.logits_apply(qc, params, x, tie_embeddings=cfg.tie_embeddings,
+                            softcap=cfg.logit_softcap)
+    return logits[:, 0, :], {"stages": stage_caches, "tail": tail_caches}
+
+
+def paged_verify_step(params: PyTree, tokens: jnp.ndarray, caches: PyTree,
+                      cache_len: jnp.ndarray, block_tables: jnp.ndarray,
+                      cfg: ArchConfig, qc: QuantContext = FP, *,
+                      page_size: int) -> Tuple[jnp.ndarray, PyTree]:
+    """Paged twin of :func:`verify_step`: read-only chunk scoring against
+    the paged cache; commit via :func:`commit_verify_paged`."""
+    x, _ = _embed(qc, params, {"tokens": tokens}, cfg)
+    names = _stage_block_names(cfg)
+    b = tokens.shape[0]
+    clen = jnp.broadcast_to(jnp.asarray(cache_len, jnp.int32), (b,))
+    bt = jnp.asarray(block_tables, jnp.int32)
+
+    def stage_fn(x, scan_in):
+        stage_params, stage_cache = scan_in
+        stage_params = peel_expanded(stage_params)
+        deltas = {}
+        for name, kind in zip(names, cfg.stage_pattern):
+            x, d = B.block_verify_paged(qc, kind, stage_params[name], x,
+                                        stage_cache[name], cfg, cache_len=clen,
+                                        block_tables=bt, page_size=page_size)
+            deltas[name] = d
+        return x, deltas
+
+    x, stage_deltas = jax.lax.scan(stage_fn, x, (params["stages"], caches["stages"]))
+
+    tail_deltas = {}
+    for i, kind in enumerate(cfg.tail_pattern):
+        name = f"t{i}_{kind}"
+        x, d = B.block_verify_paged(qc, kind, params["tail"][name], x,
+                                    caches["tail"][name], cfg, cache_len=clen,
+                                    block_tables=bt, page_size=page_size)
+        tail_deltas[name] = d
+
+    x = L.apply_norm(cfg.norm, params["final_norm"], x)
+    logits = L.logits_apply(qc, params, x, tie_embeddings=cfg.tie_embeddings,
+                            softcap=cfg.logit_softcap)
+    return logits, {"stages": stage_deltas, "tail": tail_deltas}
+
+
+def _commit_pool(cache: PyTree, delta: PyTree, clen: jnp.ndarray,
+                 block_tables: jnp.ndarray, page_size: int) -> PyTree:
+    """Write a verified chunk into one layer's page pools: all T positions
+    are written (positions past the accepted prefix are stale-but-masked,
+    the same invariant as the dense commit); positions past the block table
+    or on unallocated table slots land on the sentinel page."""
+    t = delta["k"].shape[1]
+    mp = block_tables.shape[1]
+    pos = clen[:, None] + jnp.arange(t)[None, :]                 # (B, T)
+    pidx = pos // page_size
+    pid = jnp.take_along_axis(block_tables, jnp.clip(pidx, 0, mp - 1), axis=1)
+    off = jnp.mod(pos, page_size)
+    out = {}
+    for key in cache:
+        sentinel = cache[key].shape[0] - 1
+        pid_k = jnp.where(pidx < mp, pid, sentinel)
+        out[key] = cache[key].at[pid_k, off].set(
+            delta[key].astype(cache[key].dtype))
+    return out
+
+
+def commit_verify_paged(caches: PyTree, deltas: PyTree, cache_len: jnp.ndarray,
+                        accept: jnp.ndarray, block_tables: jnp.ndarray,
+                        cfg: ArchConfig, *, page_size: int) -> PyTree:
+    """Paged twin of :func:`commit_verify`: attn chunks go through the block
+    tables; every other kind commits exactly as the dense path."""
+    b = accept.shape[0]
+    clen = jnp.broadcast_to(jnp.asarray(cache_len, jnp.int32), (b,))
+    m = jnp.asarray(accept, jnp.int32)
+    bt = jnp.asarray(block_tables, jnp.int32)
+    names = _stage_block_names(cfg)
+    stages = {}
+    for name, kind in zip(names, cfg.stage_pattern):
+        if kind in ("attn", "moe_attn"):
+            stages[name] = jax.vmap(
+                lambda c, d: _commit_pool(c, d, clen, bt, page_size)
+            )(caches["stages"][name], deltas["stages"][name])
+        elif kind == "cross":
+            stages[name] = caches["stages"][name]
+        else:
+            stages[name] = jax.vmap(
+                lambda c, d, kind=kind: _commit_block(kind, cfg, c, d, clen, m)
+            )(caches["stages"][name], deltas["stages"][name])
+    tail = {}
+    for i, kind in enumerate(cfg.tail_pattern):
+        name = f"t{i}_{kind}"
+        if kind in ("attn", "moe_attn"):
+            tail[name] = _commit_pool(caches["tail"][name],
+                                      deltas["tail"][name], clen, bt, page_size)
+        else:
+            tail[name] = _commit_block(kind, cfg, caches["tail"][name],
+                                       deltas["tail"][name], clen, m)
+    return {"stages": stages, "tail": tail}
+
+
+# ---------------------------------------------------------------------------
 # cache construction & input specs (ShapeDtypeStruct stand-ins, no allocation)
 # ---------------------------------------------------------------------------
 def init_cache(cfg: ArchConfig, batch: int, s_max: int, dtype=None,

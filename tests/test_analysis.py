@@ -304,7 +304,8 @@ def test_committed_budget_ledger_holds():
     """Measured dispatch censuses stay within the committed ceilings, and
     the ledger covers every contracted budget_key."""
     ledger = AB.load_budgets()
-    assert set(ledger) == {"decode", "decode_masked", "spec_decode", "prefill"}
+    assert set(ledger) == {"decode", "decode_masked", "spec_decode",
+                           "prefill", "decode_paged", "spec_decode_paged"}
     assert AB.check_budgets(strict=False) == []
 
 
@@ -312,7 +313,8 @@ def test_fused_decode_has_no_host_callbacks(setup):
     """The fused decode step compiles zero host round-trips in-graph."""
     cfg, params = setup
     steps = AB._fixture_steps()
-    for entry in ("decode", "decode_masked", "spec_decode"):
+    for entry in ("decode", "decode_masked", "spec_decode", "decode_paged",
+                  "spec_decode_paged"):
         fn, args = steps[entry]
         assert A.count_host_callbacks(fn, *args) == 0, entry
 

@@ -1,0 +1,361 @@
+"""Paged KV cache (DESIGN.md §13): allocator invariants, page-granular
+admission accounting (incl. the int8-KV dtype-bytes regression), paged
+flash-attention kernel vs the gather-based reference, engine-level token
+identity against the dense slots engine (recycling, EOS, spec decode, QoS
+tiers), and the no-dense-scores jaxpr contract on the paged dispatch."""
+import dataclasses
+
+import jax
+import jax.numpy as jnp
+import numpy as np
+import pytest
+
+from repro.analysis import jaxpr_check as JC
+from repro.configs.base import get_arch
+from repro.core.policy import ExpansionPolicy
+from repro.infer import kvcache
+from repro.infer.serve import Engine, ServeConfig
+from repro.models import attention as ATT
+from repro.models import model as M
+from repro.models.layers import FP, QuantContext
+
+W4A16_T3 = ExpansionPolicy(w_bits=4, a_bits=16, w_terms=3, a_terms=0)
+
+
+@pytest.fixture(scope="module")
+def setup():
+    cfg = get_arch("qwen2_1_5b", smoke=True)
+    params = M.init_params(jax.random.PRNGKey(0), cfg)
+    return cfg, params
+
+
+def _prompts(cfg, lengths, seed=0):
+    r = np.random.default_rng(seed)
+    return [r.integers(0, cfg.vocab_size, l).tolist() for l in lengths]
+
+
+def _sc(**kw):
+    base = dict(max_seq=48, max_slots=3, scheduler="slots")
+    base.update(kw)
+    return ServeConfig(**base)
+
+
+# ---------------------------------------------------------------------------
+# allocator: free-list + refcount invariants under randomized streams
+# ---------------------------------------------------------------------------
+def test_page_allocator_randomized_stream():
+    r = np.random.default_rng(7)
+    alloc = kvcache.PageAllocator(24)
+    held = []                              # list of page lists
+    for _ in range(300):
+        op = r.integers(0, 3)
+        if op == 0:                        # alloc a random footprint
+            n = int(r.integers(0, 9))
+            pages = alloc.alloc(n)
+            if pages is None:
+                assert n > alloc.free_pages    # only failure mode
+            else:
+                assert len(pages) == n and len(set(pages)) == n
+                held.append(pages)
+        elif op == 1 and held:             # free a held footprint
+            alloc.free(held.pop(int(r.integers(0, len(held)))))
+        elif op == 2 and held:             # share + unshare (refcounts)
+            pages = held[int(r.integers(0, len(held)))]
+            alloc.incref(pages)
+            alloc.free(pages)
+        alloc.check()                      # invariant after EVERY op
+        assert alloc.pages_in_use == sum(len(p) for p in held)
+    for pages in held:
+        alloc.free(pages)
+    alloc.check()
+    assert alloc.pages_in_use == 0 and alloc.free_pages == 24
+
+
+def test_page_allocator_misuse_raises():
+    alloc = kvcache.PageAllocator(4)
+    pages = alloc.alloc(2)
+    alloc.free(pages)
+    with pytest.raises(ValueError):        # double free
+        alloc.free(pages)
+    with pytest.raises(ValueError):        # foreign page
+        alloc.free([99])
+    with pytest.raises(ValueError):        # incref of unallocated
+        alloc.incref([0])
+    # sentinel ids are ignored wholesale (block-table rows free padding too)
+    alloc.free([alloc.sentinel, alloc.sentinel])
+    assert alloc.alloc(5) is None          # all-or-nothing beyond capacity
+    assert alloc.free_pages == 4
+
+
+# ---------------------------------------------------------------------------
+# admission accounting: int8-KV dtype bytes + page-granular planning
+# ---------------------------------------------------------------------------
+def test_int8_kv_admission_uses_int8_bytes(setup):
+    """Regression: HBM admission must charge int8-KV caches their int8+scale
+    byte cost, not bf16 — under a fixed budget an int8-KV engine admits
+    MORE slots, never the same or fewer."""
+    cfg, _ = setup
+    per_bf16 = kvcache.total_cache_bytes(cfg, 1, 256)
+    per_int8 = kvcache.total_cache_bytes(cfg, 1, 256, int8_kv=True)
+    assert per_int8 < per_bf16
+    budget = 8 * per_bf16                  # fits exactly 8 bf16 slots
+    cap_bf16 = kvcache.max_batch_for_hbm(cfg, 256, budget, 0.0)
+    cap_int8 = kvcache.max_batch_for_hbm(cfg, 256, budget, 0.0, int8_kv=True)
+    assert cap_bf16 == 8
+    assert cap_int8 > cap_bf16
+
+
+def test_plan_slots_paged_is_page_granular(setup):
+    """Under the same budget the paged bound (fixed state + ONE page per
+    slot) admits at least as many slots as the dense bound (every slot
+    charged max_seq up front) — strictly more whenever pages are the
+    dominant cost."""
+    from repro.infer.scheduler import plan_slots
+    cfg, params = setup
+    per = kvcache.total_cache_bytes(cfg, 1, 256)
+    sc_d = _sc(max_seq=256, max_slots=64, hbm_budget_bytes=4 * per)
+    sc_p = _sc(max_seq=256, max_slots=64, hbm_budget_bytes=4 * per,
+               paged=True, page_size=16)
+    n_dense = plan_slots(cfg, sc_d, {})
+    n_paged = plan_slots(cfg, sc_p, {})
+    assert n_dense == 4
+    assert n_paged > n_dense
+
+
+def test_plan_pages_and_pages_for(setup):
+    cfg, _ = setup
+    assert kvcache.pages_for(0, 8) == 0
+    assert kvcache.pages_for(1, 8) == 1
+    assert kvcache.pages_for(8, 8) == 1
+    assert kvcache.pages_for(9, 8) == 2
+    # no budget: dense-equivalent worst case
+    assert kvcache.plan_pages(cfg, 48, 8, 3) == 3 * 6
+    # with budget: floored at one sequence's pages, never unusable
+    tiny = kvcache.plan_pages(cfg, 48, 8, 3, hbm_bytes=1.0)
+    assert tiny == 6
+    # attention-free arch: nothing pages
+    cfg_ssm = get_arch("mamba2_780m", smoke=True)
+    assert kvcache.plan_pages(cfg_ssm, 48, 8, 3, hbm_bytes=1e12) == 0
+
+
+# ---------------------------------------------------------------------------
+# kernel vs reference: paged flash partial (fp exact-level, int8 tolerance)
+# ---------------------------------------------------------------------------
+@pytest.mark.parametrize("softcap", [0.0, 5.0])
+def test_paged_flash_kernel_matches_ref(softcap):
+    r = np.random.default_rng(3)
+    b, t, g, rep, d, page, mp = 3, 1, 2, 2, 16, 8, 5
+    num_pages = b * mp
+    h = g * rep
+    q = jnp.asarray(r.normal(size=(b, t, h, d)).astype(np.float32))
+    k_pool = jnp.asarray(r.normal(size=(num_pages + 1, page, g, d))
+                         .astype(np.float32))
+    v_pool = jnp.asarray(r.normal(size=(num_pages + 1, page, g, d))
+                         .astype(np.float32))
+    bt = jnp.asarray(r.permutation(num_pages).reshape(b, mp).astype(np.int32))
+    clen = jnp.asarray([7, 23, 40], jnp.int32)
+    k_new = jnp.asarray(r.normal(size=(b, t, g, d)).astype(np.float32))
+    v_new = jnp.asarray(r.normal(size=(b, t, g, d)).astype(np.float32))
+    ref = ATT.paged_decode_attention(q, k_pool, v_pool, bt, clen, k_new,
+                                     v_new, softcap=softcap, use_kernel=False)
+    ker = ATT.paged_decode_attention(q, k_pool, v_pool, bt, clen, k_new,
+                                     v_new, softcap=softcap, use_kernel=True)
+    np.testing.assert_allclose(np.asarray(ker), np.asarray(ref),
+                               rtol=1e-5, atol=1e-5)
+
+
+def test_paged_flash_int8_kernel_close_to_ref():
+    """int8 kernel re-quantizes softmax weights per page (the ref quantizes
+    whole rows), so agreement is tolerance-level, not bitwise; the gather
+    reference remains the engine's token-identity oracle."""
+    r = np.random.default_rng(4)
+    b, t, g, rep, d, page, mp = 2, 3, 2, 2, 16, 8, 4
+    num_pages = b * mp
+    h = g * rep
+    q = jnp.asarray(r.normal(size=(b, t, h, d)).astype(np.float32))
+    kf = r.normal(size=(num_pages + 1, page, g, d)).astype(np.float32)
+    vf = r.normal(size=(num_pages + 1, page, g, d)).astype(np.float32)
+    kq, ks = ATT.quantize_kv(jnp.asarray(kf))
+    vq, vs = ATT.quantize_kv(jnp.asarray(vf))
+    bt = jnp.asarray(r.permutation(num_pages).reshape(b, mp).astype(np.int32))
+    clen = jnp.asarray([11, 27], jnp.int32)
+    k_new = jnp.asarray(r.normal(size=(b, t, g, d)).astype(np.float32))
+    v_new = jnp.asarray(r.normal(size=(b, t, g, d)).astype(np.float32))
+    ref = ATT.paged_chunk_decode_attention_int8(
+        q, kq, ks, vq, vs, bt, clen, k_new, v_new, use_kernel=False)
+    ker = ATT.paged_chunk_decode_attention_int8(
+        q, kq, ks, vq, vs, bt, clen, k_new, v_new, use_kernel=True)
+    ref, ker = np.asarray(ref), np.asarray(ker)
+    rel = np.abs(ker - ref).max() / max(np.abs(ref).max(), 1e-9)
+    assert rel < 0.05, f"int8 paged kernel rel err {rel:.4f}"
+
+
+# ---------------------------------------------------------------------------
+# engine: paged == dense, token for token
+# ---------------------------------------------------------------------------
+@pytest.mark.parametrize("arch", ["qwen2_1_5b", "recurrentgemma_9b"])
+def test_paged_engine_token_identical(arch):
+    """The acceptance contract: greedy paged output is token-identical to
+    the dense slots engine — mixed lengths, more requests than slots, slot
+    AND page recycling — for full-attention and local(ring)+rglru archs."""
+    cfg = get_arch(arch, smoke=True)
+    params = M.init_params(jax.random.PRNGKey(0), cfg)
+    prompts = _prompts(cfg, [7, 12, 3, 9, 15, 5])
+    dense = Engine(cfg, params, serve_cfg=_sc())
+    ids_d = [dense.add_request(p) for p in prompts]
+    ref = dense.run(max_new_tokens=6)
+    paged = Engine(cfg, params, serve_cfg=_sc(paged=True, page_size=8))
+    ids_p = [paged.add_request(p) for p in prompts]
+    out = paged.run(max_new_tokens=6)
+    for a, b in zip(ids_d, ids_p):
+        assert out[b] == ref[a], (arch, ref[a], out[b])
+    st = paged.last_run_stats["paged"]
+    assert st["pages_in_use_end"] == 0     # every page returned
+    if arch == "qwen2_1_5b":               # full attention: pages are real
+        assert 0 < st["pages_hwm"] <= st["num_pages"]
+        # short sequences charge their length, not max_seq
+        assert st["kv_bytes_hwm"] < st["kv_bytes_dense"]
+
+
+def test_paged_engine_eos_recycles_pages(setup):
+    """EOS mid-stream frees the slot AND its pages; a queued request
+    recycles both, and the stream stays identical to the dense engine."""
+    cfg, params = setup
+    prompts = _prompts(cfg, [8, 10, 6])
+    probe = Engine(cfg, params, serve_cfg=_sc(max_slots=1))
+    rid = probe.add_request(prompts[0])
+    eos = probe.run(max_new_tokens=6)[rid][3]
+    dense = Engine(cfg, params, serve_cfg=_sc(max_slots=1, eos_id=eos))
+    ids_d = [dense.add_request(p) for p in prompts]
+    ref = dense.run(max_new_tokens=6)
+    paged = Engine(cfg, params,
+                   serve_cfg=_sc(max_slots=1, eos_id=eos, paged=True,
+                                 page_size=8))
+    ids_p = [paged.add_request(p) for p in prompts]
+    out = paged.run(max_new_tokens=6)
+    for a, b in zip(ids_d, ids_p):
+        assert out[b] == ref[a]
+    assert paged.last_run_stats["paged"]["pages_in_use_end"] == 0
+
+
+def test_paged_spec_decode_token_identical(setup):
+    """Speculative decoding on the paged engine reproduces the
+    non-speculative dense stream (the spec contract composes with paging)."""
+    cfg, params = setup
+    prompts = _prompts(cfg, [5, 9, 13, 7])
+    kw = dict(max_seq=48, max_slots=2)
+    base = Engine(cfg, params, policy=W4A16_T3,
+                  serve_cfg=ServeConfig(**kw))
+    ids_b = [base.add_request(p) for p in prompts]
+    ref = base.run(max_new_tokens=6)
+    spec = Engine(cfg, params, policy=W4A16_T3,
+                  serve_cfg=ServeConfig(spec_terms=1, spec_lookahead=3,
+                                        paged=True, page_size=8, **kw))
+    ids_s = [spec.add_request(p) for p in prompts]
+    out = spec.run(max_new_tokens=6)
+    for a, b in zip(ids_b, ids_s):
+        assert out[b] == ref[a]
+    st = spec.last_run_stats
+    assert st["paged"]["pages_in_use_end"] == 0
+    assert 0.0 <= st["acceptance_rate"] <= 1.0
+
+
+def test_paged_qos_tiers_match_dense(setup):
+    """Per-request QoS tiers ride the paged masked dispatch: tier streams
+    are identical to the dense tiered engine, and per-tier effective terms
+    hold on the paged layout."""
+    cfg, params = setup
+    prompts = _prompts(cfg, [5, 9, 13, 7])
+    qs = ["full", "k2", "k1", "full"]
+    tiers = (("k2", 2), ("k1", 1))
+    dense = Engine(cfg, params, policy=W4A16_T3,
+                   serve_cfg=_sc(tier_budgets=tiers))
+    ids_d = [dense.add_request(p, quality=q) for p, q in zip(prompts, qs)]
+    ref = dense.run(max_new_tokens=5)
+    paged = Engine(cfg, params, policy=W4A16_T3,
+                   serve_cfg=_sc(tier_budgets=tiers, paged=True, page_size=8))
+    ids_p = [paged.add_request(p, quality=q) for p, q in zip(prompts, qs)]
+    out = paged.run(max_new_tokens=5)
+    for a, b in zip(ids_d, ids_p):
+        assert out[b] == ref[a]
+    st = paged.last_run_stats["tiers"]
+    assert st["k1"]["mean_effective_terms"] == 1.0
+    assert st["k2"]["mean_effective_terms"] == 2.0
+
+
+def test_paged_engine_validations(setup):
+    cfg, params = setup
+    with pytest.raises(ValueError):        # grouped scheduler cannot page
+        Engine(cfg, params, serve_cfg=ServeConfig(scheduler="grouped",
+                                                  paged=True))
+    with pytest.raises(ValueError):
+        Engine(cfg, params, serve_cfg=_sc(paged=True, page_size=0))
+
+
+# ---------------------------------------------------------------------------
+# jaxpr contract: no dense (B, max_seq) float intermediates in the paged
+# kernel dispatch — and the tripwire provably sees the dense bug class
+# ---------------------------------------------------------------------------
+def test_no_dense_scores_contract(setup, monkeypatch):
+    from repro.infer import serve as S
+    cfg, params = setup
+    # the kernel gate reads REPRO_NO_PALLAS at trace time; tracing never
+    # executes the kernel, so the check runs on any backend
+    monkeypatch.delenv("REPRO_NO_PALLAS", raising=False)
+    b, s_max, page = 3, 40, 8
+    mp = -(-s_max // page)
+    tok = jnp.ones((b, 1), jnp.int32)
+    clen = jnp.full((b,), 8, jnp.int32)
+    key = jax.random.PRNGKey(1)
+    alive = jnp.ones((b,), bool)
+    eos = jnp.asarray(-1, jnp.int32)
+    temp = jnp.asarray(0.0, jnp.float32)
+    mask = jnp.ones((b,), bool)
+    sizes = (s_max, mp * page)
+
+    # calibration: the dense dispatch MUST trip (scores + cache rows)
+    caches = M.init_cache(cfg, b, s_max)
+    dense = S.make_decode_sample_step(cfg, FP, masked=True)
+    bad = JC.check_no_dense_scores(
+        dense, params, tok, caches, clen, key, alive, eos, temp, mask,
+        batch=b, seq_sizes=sizes, strict=False)
+    assert bad, "tripwire cannot see the dense bug class"
+
+    # the paged KERNEL dispatch must be clean (trace-only: interpret-mode
+    # Pallas traces fine on CPU regardless of REPRO_NO_PALLAS)
+    pc = M.init_paged_cache(cfg, b, s_max, page_size=page, num_pages=b * mp)
+    bt = jnp.arange(b * mp, dtype=jnp.int32).reshape(b, mp)
+    qck = QuantContext(policy=None, use_kernel=True)
+    paged = S.make_paged_decode_step(cfg, qck, page, masked=True)
+    JC.check_no_dense_scores(
+        paged, params, tok, pc, clen, bt, key, alive, eos, temp, mask,
+        batch=b, seq_sizes=sizes, strict=True)
+
+    # the gather-based REF path is the documented exception (it IS the
+    # dense-equivalent oracle) — it trips, which proves the kernel path's
+    # pass is not vacuous
+    paged_ref = S.make_paged_decode_step(cfg, FP, page, masked=True)
+    ref_hits = JC.check_no_dense_scores(
+        paged_ref, params, tok, pc, clen, bt, key, alive, eos, temp, mask,
+        batch=b, seq_sizes=sizes, strict=False)
+    assert ref_hits
+
+
+def test_paged_open_loop_arrivals(setup):
+    """Open-loop arrivals: staggered requests produce the same tokens as
+    the all-at-once batch (arrival timing gates admission, never content)."""
+    cfg, params = setup
+    prompts = _prompts(cfg, [7, 12, 3])
+    ref = Engine(cfg, params, serve_cfg=_sc(max_slots=2, paged=True,
+                                            page_size=8))
+    ids_r = [ref.add_request(p) for p in prompts]
+    out_r = ref.run(max_new_tokens=4)
+    arr = Engine(cfg, params, serve_cfg=_sc(max_slots=2, paged=True,
+                                            page_size=8))
+    ids_a = [arr.add_request(p, arrival=0.02 * i)
+             for i, p in enumerate(prompts)]
+    out_a = arr.run(max_new_tokens=4)
+    for a, b in zip(ids_r, ids_a):
+        assert out_r[a] == out_a[b]
+    m = arr.last_request_metrics
+    assert all(m[i]["ttft_s"] > 0 for i in ids_a)
