@@ -18,7 +18,11 @@ all measured on the ``qwen2_1_5b`` smoke arch, W8A8, reference path):
 * ``spec_decode``   — the fused draft-gamma + verify speculative round;
 * ``prefill``       — padded prefill-into-slot;
 * ``decode_paged``  — the paged (block-table) masked decode step;
-* ``spec_decode_paged`` — the paged speculative round.
+* ``spec_decode_paged`` — the paged speculative round;
+* ``prefill_chunk`` / ``prefill_chunk_paged`` — the chunk-fused
+  decode+prefill round (DESIGN.md §14);
+* ``spec_decode_masked`` / ``spec_decode_paged_masked`` — the row-masked
+  speculative rounds chunked engines dispatch.
 
 Heavy imports (jax, the model zoo) happen inside functions only: importing
 this module costs nothing, so ``python -m repro.analysis`` can lint without
@@ -106,6 +110,26 @@ def _fixture_steps():
     spec_paged = S.make_paged_spec_decode_step(cfg, qc, qc_draft,
                                                fx["spec_lookahead"], page)
 
+    # chunked-prefill round (C=4 chunk width, all rows committing/seeding —
+    # the shape-level superset of fused and standalone chunk rounds) and the
+    # row-masked speculative variants chunked engines use
+    C = 4
+    chunk_tokens = jnp.ones((b, C), jnp.int32)
+    valid = jnp.full((b,), C, jnp.int32)
+    wf = jnp.zeros((b,), jnp.int32)
+    commit = jnp.ones((b,), bool)
+    dec = jnp.zeros((b,), bool)
+    seed = jnp.ones((b,), bool)
+    chunk = S.make_prefill_chunk_step(cfg, qc, paged=False,
+                                      s_max=fx["max_seq"])
+    chunk_paged = S.make_prefill_chunk_step(cfg, qc, paged=True,
+                                            page_size=page,
+                                            s_max=fx["max_seq"])
+    spec_masked = S.make_spec_decode_step(cfg, qc, qc_draft,
+                                          fx["spec_lookahead"], masked=True)
+    spec_paged_masked = S.make_paged_spec_decode_step(
+        cfg, qc, qc_draft, fx["spec_lookahead"], page, masked=True)
+
     return {
         "decode": (decode, (params_q, tok, caches, cache_len, key, alive,
                             eos, temp)),
@@ -117,6 +141,18 @@ def _fixture_steps():
                                  alive, eos, temp, row_mask)),
         "spec_decode_paged": (spec_paged, (params_q, tok, pcaches, cache_len,
                                            bt)),
+        "prefill_chunk": (chunk, (params_q, chunk_tokens, caches, cache_len,
+                                  key, alive, eos, temp, valid, wf, commit,
+                                  dec, seed, tok)),
+        "prefill_chunk_paged": (chunk_paged, (params_q, chunk_tokens,
+                                              pcaches, cache_len, bt, key,
+                                              alive, eos, temp, valid, wf,
+                                              commit, dec, seed, tok)),
+        "spec_decode_masked": (spec_masked, (params_q, tok, caches,
+                                             cache_len, row_mask)),
+        "spec_decode_paged_masked": (spec_paged_masked,
+                                     (params_q, tok, pcaches, cache_len, bt,
+                                      row_mask)),
     }
 
 

@@ -215,6 +215,12 @@ class PageAllocator:
     def pages_in_use(self) -> int:
         return self.num_pages - len(self._free)
 
+    def refcount(self, page: int) -> int:
+        """Current reference count of ``page`` (0 = free)."""
+        if not (0 <= page < self.num_pages):
+            raise ValueError(f"refcount of foreign page {page}")
+        return int(self._ref[page])
+
     def alloc(self, n: int) -> Optional[List[int]]:
         """``n`` fresh pages at refcount 1, or None when the pool cannot
         cover the request (all-or-nothing: no partial allocation to roll
@@ -258,6 +264,166 @@ class PageAllocator:
         if free != ref0:
             raise AssertionError(
                 f"free list {free} != ref-0 pages {ref0} (leak or corruption)")
+
+
+class PrefixCache:
+    """Radix trie over prompt token prefixes at page granularity.
+
+    Each node covers exactly ``page_size`` tokens (keyed by that token
+    tuple) and owns one page id in the paged KV pool.  The trie holds its
+    *own* reference on every adopted page, so a cached prefix outlives the
+    request that produced it: :meth:`match` walks the trie for a new prompt
+    and increfs the matched run *on behalf of the caller* (the scheduler
+    splices those ids into the request's block table and later frees the
+    whole row, dropping exactly the reference ``match`` took).  Because the
+    low-bit series expansion is a deterministic function of the prompt
+    (PAPER.md Theorem 1), matched pages are bit-identical to what a cold
+    prefill would have written — sharing them preserves token-level output.
+
+    Only *full* pages are cached: a prompt's trailing partial page also
+    holds decode positions, which diverge across requests.  Eviction is
+    LRU over leaf nodes whose page refcount is 1 (trie-only — a page any
+    live block table still references is never reclaimed); removing a leaf
+    can expose its parent to the next sweep.  A logical clock orders
+    recency so behaviour is deterministic under test.
+    """
+
+    def __init__(self, alloc: PageAllocator, page_size: int):
+        if page_size < 1:
+            raise ValueError(f"page_size must be >= 1, got {page_size}")
+        self.alloc = alloc
+        self.page_size = int(page_size)
+        self._children: Dict[tuple, dict] = {}
+        self._clock = 0
+        self._n_nodes = 0
+        self.hits = 0
+        self.misses = 0
+        self.evictions = 0
+
+    @property
+    def nodes(self) -> int:
+        return self._n_nodes
+
+    def _key(self, tokens: Sequence[int], pi: int) -> tuple:
+        lo = pi * self.page_size
+        return tuple(int(t) for t in tokens[lo:lo + self.page_size])
+
+    def match(self, tokens: Sequence[int]) -> tuple:
+        """Longest cached page run for ``tokens`` -> (page_ids, n_tokens).
+
+        Increfs every returned page for the caller; the caller owns those
+        references (typically released via the block-table row free)."""
+        self._clock += 1
+        pages: List[int] = []
+        children = self._children
+        for pi in range(len(tokens) // self.page_size):
+            node = children.get(self._key(tokens, pi))
+            if node is None:
+                break
+            node["clock"] = self._clock
+            pages.append(node["page"])
+            children = node["children"]
+        if pages:
+            self.alloc.incref(pages)
+            self.hits += 1
+        else:
+            self.misses += 1
+        return pages, len(pages) * self.page_size
+
+    def insert(self, tokens: Sequence[int], page_ids: Sequence[int]) -> int:
+        """Adopt the full prompt pages of ``tokens`` (backed by
+        ``page_ids``, the request's block-table row) into the trie.
+
+        Existing nodes are kept as-is (first writer wins — a concurrent
+        cold duplicate's own pages simply free when its row releases); new
+        nodes take one trie-owned reference on their page.  Returns the
+        number of newly adopted pages."""
+        self._clock += 1
+        adopted = 0
+        children = self._children
+        for pi in range(len(tokens) // self.page_size):
+            key = self._key(tokens, pi)
+            node = children.get(key)
+            if node is None:
+                page = int(page_ids[pi])
+                if not (0 <= page < self.alloc.num_pages):
+                    raise ValueError(
+                        f"cannot adopt sentinel/foreign page {page}")
+                self.alloc.incref([page])
+                node = {"page": page, "children": {}, "clock": self._clock}
+                children[key] = node
+                self._n_nodes += 1
+                adopted += 1
+            else:
+                node["clock"] = self._clock
+            children = node["children"]
+        return adopted
+
+    def _leaves(self) -> List[tuple]:
+        out: List[tuple] = []
+        stack = [self._children]
+        while stack:
+            children = stack.pop()
+            for key, node in children.items():
+                if node["children"]:
+                    stack.append(node["children"])
+                elif self.alloc.refcount(node["page"]) == 1:
+                    out.append((node["clock"], children, key, node))
+        return out
+
+    def evict(self, n_pages: int) -> int:
+        """Free up to ``n_pages`` pages by dropping least-recently-used
+        leaf nodes whose page only the trie references.  Returns the number
+        actually freed (0 when nothing is evictable)."""
+        freed = 0
+        while freed < n_pages:
+            cands = sorted(self._leaves(), key=lambda c: c[0])
+            if not cands:
+                break
+            for _, children, key, node in cands:
+                if freed >= n_pages:
+                    break
+                del children[key]
+                self._n_nodes -= 1
+                self.alloc.free([node["page"]])
+                freed += 1
+                self.evictions += 1
+        return freed
+
+    def release_all(self) -> None:
+        """Drop every trie-owned reference and clear the trie (end of a
+        serving run — the pool and allocator are rebuilt per run)."""
+        stack = [self._children]
+        while stack:
+            children = stack.pop()
+            for node in children.values():
+                stack.append(node["children"])
+                self.alloc.free([node["page"]])
+        self._children = {}
+        self._n_nodes = 0
+
+    def check(self) -> None:
+        """Audit: node keys span exactly one page, no page is owned by two
+        nodes, and every owned page is live in the allocator."""
+        seen = set()
+        stack = [self._children]
+        while stack:
+            children = stack.pop()
+            for key, node in children.items():
+                if len(key) != self.page_size:
+                    raise AssertionError(f"trie key of length {len(key)}")
+                if node["page"] in seen:
+                    raise AssertionError(
+                        f"page {node['page']} owned by two trie nodes")
+                seen.add(node["page"])
+                if self.alloc.refcount(node["page"]) < 1:
+                    raise AssertionError(
+                        f"trie references freed page {node['page']}")
+                stack.append(node["children"])
+
+    def stats(self) -> Dict[str, int]:
+        return {"nodes": self._n_nodes, "hits": self.hits,
+                "misses": self.misses, "evictions": self.evictions}
 
 
 def param_bytes(params) -> float:

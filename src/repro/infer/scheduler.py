@@ -243,10 +243,22 @@ class SlotScheduler:
             self.bt = np.full((self.n_slots, self.mp), self._sentinel,
                               np.int32)
             self._pages_hwm = 0
+        # chunked prefill + shared-prefix cache (DESIGN.md §14)
+        self.chunk = int(getattr(sc, "prefill_chunk", 0) or 0)
+        self.prefix_on = bool(getattr(sc, "prefix_cache", False))
+        self.prefix: Optional[kvcache.PrefixCache] = None
+        self._fill: Dict[int, Dict[str, Any]] = {}   # slot -> fill progress
+        self._prefix_stats = self._zero_prefix_stats()
         self.chaos = (Q.ChaosInjector(sc.chaos)
                       if sc.chaos is not None else None)
         self.watchdog = self._new_watchdog()
         self.retries = 0               # chaos-failure redispatches (lifetime)
+
+    @staticmethod
+    def _zero_prefix_stats() -> Dict[str, int]:
+        return {"chunk_dispatches": 0, "tokens_computed": 0,
+                "tokens_reused": 0, "hits": 0, "misses": 0,
+                "evictions": 0, "trie_nodes_end": 0}
 
     def _new_watchdog(self) -> FD.DispatchWatchdog:
         sc = self.eng.sc
@@ -340,6 +352,13 @@ class SlotScheduler:
         else:
             live = M.init_cache(eng.cfg, n, sc.max_seq,
                                 int8_kv=eng.qc.int8_kv, mesh=eng.mesh)
+        # fresh trie per run: it references pages of the per-run allocator
+        # (on attention-free archs nothing pages — the trie stays off)
+        self.prefix = (kvcache.PrefixCache(self.alloc, self.page_size)
+                       if self.prefix_on and self.paged
+                       and self.alloc is not None else None)
+        self._fill = {}
+        self._prefix_stats = self._zero_prefix_stats()
         return {
             "live": live,
             "clen": np.zeros(n, np.int32),     # per-slot cache length (host)
@@ -352,27 +371,50 @@ class SlotScheduler:
             "prefill_s": 0.0,
         }
 
-    def _reserve_pages(self, slot: int, prompt_len: int, budget: int) -> bool:
+    def _reserve_pages(self, slot: int, prompt_len: int, budget: int,
+                       matched: Optional[List[int]] = None) -> bool:
         """Reserve this request's FULL page footprint up front (no lazy
         growth, hence no mid-stream allocation deadlock): enough pages to
         cover prompt + every token its budget can emit — plus a verify
         chunk's worth (γ+1) on speculative engines, whose commit may write
         past the budget boundary within the final round.  All-or-nothing:
-        on failure the block-table row is untouched and admission stops."""
+        on failure the block-table row is untouched and admission stops.
+
+        ``matched`` (already increfed by :meth:`PrefixCache.match`, owned
+        by the caller) heads the block-table row; only the uncovered tail
+        is freshly allocated.  When the free list falls short the trie is
+        asked to evict LRU refcount-1 pages before giving up."""
         if not self.paged or self.alloc is None:
             return True
+        matched = matched or []
         need = prompt_len + budget
         if self.eng.spec_enabled:
             need += self.eng.sc.spec_lookahead + 1
-        n_pages = min(kvcache.pages_for(need, self.page_size), self.mp)
-        pages = self.alloc.alloc(n_pages)
+        n_total = min(kvcache.pages_for(need, self.page_size), self.mp)
+        n_own = max(0, n_total - len(matched))
+        pages = self.alloc.alloc(n_own)
+        if pages is None and self.prefix is not None:
+            shortfall = n_own - self.alloc.free_pages
+            if self.prefix.evict(shortfall) >= shortfall:
+                pages = self.alloc.alloc(n_own)
         if pages is None:
             return False
         row = np.full(self.mp, self._sentinel, np.int32)
-        row[:len(pages)] = pages
+        row[:len(matched)] = matched
+        row[len(matched):len(matched) + len(pages)] = pages
         self.bt[slot] = row
         self._pages_hwm = max(self._pages_hwm, self.alloc.pages_in_use)
         return True
+
+    def _prefix_match(self, req: Request) -> tuple:
+        """Trie walk for a request's prompt -> (matched page ids, matched
+        token count).  The returned pages are increfed for this request;
+        the caller must either splice them into the slot's block-table row
+        (freed wholesale on release) or free them on reservation failure."""
+        if self.prefix is None:
+            return [], 0
+        pages, toks = self.prefix.match(req.tokens)
+        return pages, toks
 
     def _release_pages(self, slot: int) -> None:
         """Return a recycled slot's pages to the free list (sentinel padding
@@ -407,22 +449,60 @@ class SlotScheduler:
         eos = jnp.int32(sc.eos_id)
         limit = self.n_slots if limit is None else limit
         t0 = time.perf_counter()
-        while queue and not st["active"].all() \
-                and int(st["active"].sum()) < limit:
+        while queue:
+            occ = st["active"] | self._fill_mask()
+            if occ.all() or int(occ.sum()) >= limit:
+                break
+            if self.prefix is not None and self._fill:
+                # serialize admissions while a fill is in flight: the trie
+                # only publishes a prompt's pages when its FINAL chunk
+                # commits (_advance_fill), so admitting a sibling now would
+                # miss pages it could have reused a few rounds later.
+                # Costs no throughput — _plan_chunk already serializes
+                # fills to one chunk per round from the oldest slot.
+                break
             req = self._next_eligible(queue, time.perf_counter())
             if req is None:
                 break
-            slot = int(np.flatnonzero(~st["active"])[0])
+            slot = int(np.flatnonzero(~occ)[0])
             l = len(req.tokens)
             m = (req.max_new_tokens if req.max_new_tokens is not None
                  else max_new_tokens)
-            if not self._reserve_pages(slot, l, m):
+            matched_pages, matched = self._prefix_match(req)
+            if not self._reserve_pages(slot, l, m, matched_pages):
+                if matched_pages:
+                    self.alloc.free(matched_pages)
                 break
             queue.remove(req)
+            tier = eng.tiers[req.quality]
+            if self.chunk > 0 or matched > 0:
+                # chunked fill (or a warm prefix suffix): the prompt enters
+                # the decode rounds as per-round chunks instead of one
+                # monolithic prefill dispatch.  A fully cached prompt still
+                # recomputes its LAST token (the seed logit must come from
+                # somewhere); its pool writes sit below the write floor and
+                # divert to the sentinel, so shared pages stay untouched.
+                start = min(matched, l - 1)
+                if not self.paged:
+                    # reset the slot row: chunk commits are incremental, so
+                    # a recycled slot must not inherit the previous
+                    # occupant's ring positions / recurrent carries
+                    st["live"] = eng._scatter(st["live"], eng._fresh_row(),
+                                              slot)
+                st["clen"][slot] = start
+                st["slot_req"][slot] = req
+                self._fill[slot] = {
+                    "req": req, "pos": start, "end": l, "wf": matched,
+                    "budget": m,
+                    "b_eff": eng._norm_budget(tier.budget_now(degraded)),
+                }
+                self._prefix_stats["tokens_reused"] += start
+                req.t_admitted = time.perf_counter()
+                out[req.rid] = []
+                continue
             p_len = bucket_length(l, sc.prefill_bucket, sc.max_seq)
             padded = np.zeros((1, p_len), np.int32)
             padded[0, :l] = req.tokens
-            tier = eng.tiers[req.quality]
             prefill = eng._prefill_slot_for(tier.budget_now(degraded))
             logits, pcache = prefill(
                 eng.params, {"tokens": jnp.asarray(padded)},
@@ -440,9 +520,22 @@ class SlotScheduler:
             st["active"][slot] = True
             st["budget"][slot] = m
             st["slot_req"][slot] = req
+            self._prefix_stats["tokens_computed"] += l
+            if self.prefix is not None:
+                # adopt this prompt's full pages (bucket-pad garbage only
+                # ever lands in the partial page / own decode pages, which
+                # the trie never adopts)
+                self.prefix.insert(req.tokens,
+                                   [int(p) for p in self.bt[slot]])
             req.t_admitted = time.perf_counter()
             out[req.rid] = []
         st["prefill_s"] += time.perf_counter() - t0
+
+    def _fill_mask(self) -> np.ndarray:
+        mask = np.zeros(self.n_slots, bool)
+        if self._fill:
+            mask[list(self._fill)] = True
+        return mask
 
     # -- deadlines ------------------------------------------------------
     def _cancel(self, req: Request, out, now: float) -> None:
@@ -469,6 +562,14 @@ class SlotScheduler:
                 st["slot_req"][i] = None
                 self._release_pages(int(i))
                 n_cancelled += 1
+        for slot in [s for s, f in self._fill.items()
+                     if f["req"].deadline is not None
+                     and now > f["req"].deadline]:
+            self._cancel(self._fill[slot]["req"], out, now)
+            del self._fill[slot]
+            st["slot_req"][slot] = None
+            self._release_pages(int(slot))   # matched increfs drop with the row
+            n_cancelled += 1
         return n_cancelled
 
     def _miss_rate(self, st, queue, now: float, usable: int,
@@ -517,6 +618,94 @@ class SlotScheduler:
             groups.setdefault(eff, []).append(int(i))
         order = sorted(groups, key=lambda b: (0, 0) if b is None else (1, -b))
         return [(b, groups[b]) for b in order]
+
+    # -- chunked prefill (DESIGN.md §14) -------------------------------
+    def _plan_chunk(self, st) -> Optional[Dict[str, Any]]:
+        """This round's prefill chunk: the OLDEST filling slot (FCFS —
+        insertion-ordered dict) contributes one chunk of up to
+        ``prefill_chunk`` tokens (with ``prefill_chunk=0``, the whole
+        remaining suffix at a bucketed width — the warm-prefix monolithic
+        case).  Returns the host-side arrays the fused dispatch needs, or
+        None when nothing is filling."""
+        if not self._fill:
+            return None
+        sc = self.eng.sc
+        slot = next(iter(self._fill))
+        f = self._fill[slot]
+        remaining = f["end"] - f["pos"]
+        if self.chunk > 0:
+            width = min(self.chunk, sc.max_seq)
+        else:
+            width = bucket_length(remaining, sc.prefill_bucket, sc.max_seq)
+        valid = min(width, remaining)
+        n = self.n_slots
+        tokens = np.zeros((n, width), np.int32)
+        tokens[slot, :valid] = f["req"].tokens[f["pos"]:f["pos"] + valid]
+        valid_np = np.zeros(n, np.int32)
+        valid_np[slot] = valid
+        wf_np = np.zeros(n, np.int32)
+        wf_np[slot] = f["wf"]
+        return {"slot": slot, "f": f, "valid": valid, "tokens": tokens,
+                "valid_np": valid_np, "wf_np": wf_np,
+                "final": f["pos"] + valid >= f["end"], "b_eff": f["b_eff"]}
+
+    def _dispatch_chunk(self, st, chunk, decode_mask: np.ndarray, clen_dev,
+                        bt_dev, eos, temperature) -> None:
+        """One chunk-fused dispatch: the filling slot's chunk plus (when
+        ``decode_mask`` has members) the decode rows of the budget group it
+        fused with.  Updates tok/live/key/alive exactly like a decode
+        dispatch — non-committing rows keep their state bit-for-bit."""
+        n = self.n_slots
+        commit = decode_mask.copy()
+        commit[chunk["slot"]] = True
+        seed = np.zeros(n, bool)
+        seed[chunk["slot"]] = chunk["final"]
+        fn = self.eng._chunk_for(chunk["b_eff"])
+        args = [self.eng.params, jnp.asarray(chunk["tokens"]), st["live"],
+                clen_dev]
+        if self.paged:
+            args.append(bt_dev)
+        args += [st["key"], st["alive"], eos, temperature,
+                 jnp.asarray(chunk["valid_np"]), jnp.asarray(chunk["wf_np"]),
+                 jnp.asarray(commit), jnp.asarray(decode_mask),
+                 jnp.asarray(seed), st["tok"]]
+        st["tok"], st["live"], st["key"], st["alive"] = \
+            self._dispatch(fn, tuple(args))
+        self._prefix_stats["chunk_dispatches"] += 1
+
+    def _advance_fill(self, st, chunk) -> None:
+        """Post-dispatch bookkeeping for the chunk: advance the fill cursor
+        and cache length; on the final chunk promote the slot to a live
+        decode row (its seed token was just sampled on device, exactly
+        where monolithic admission leaves a fresh slot) and publish the
+        prompt's pages to the trie."""
+        slot, f = chunk["slot"], chunk["f"]
+        st["clen"][slot] += chunk["valid"]
+        f["pos"] += chunk["valid"]
+        self._prefix_stats["tokens_computed"] += chunk["valid"]
+        if chunk["final"]:
+            del self._fill[slot]
+            st["active"][slot] = True
+            st["budget"][slot] = f["budget"]
+            if self.prefix is not None:
+                self.prefix.insert(f["req"].tokens,
+                                   [int(p) for p in self.bt[slot]])
+
+    def _retire_prefix(self) -> None:
+        """End-of-run prefix-cache teardown: snapshot trie stats into the
+        run's prefix ledger, audit trie/allocator coherence, then drop the
+        trie's own page references so ``pages_in_use_end == 0`` (and
+        ``PageAllocator.check()``) keep holding — the cache is per-run;
+        cross-run persistence would pin pool pages past the run report."""
+        if self.prefix is None:
+            return
+        ps = self.prefix.stats()
+        self._prefix_stats["hits"] = ps["hits"]
+        self._prefix_stats["misses"] = ps["misses"]
+        self._prefix_stats["evictions"] = ps["evictions"]
+        self._prefix_stats["trie_nodes_end"] = ps["nodes"]
+        self.prefix.check()
+        self.prefix.release_all()
 
     # ------------------------------------------------------------------
     def _finish_stats(self, requests, *, gen_tokens, steps, occupied_steps,
@@ -603,6 +792,9 @@ class SlotScheduler:
             }
             if self.alloc is not None:
                 self.alloc.check()                # leak/corruption audit
+        if self.chunk > 0 or self.prefix_on:
+            extra["prefix"] = dict(self._prefix_stats)
+            extra["prefix"]["prefill_chunk"] = self.chunk
         return extra
 
     @staticmethod
@@ -659,9 +851,9 @@ class SlotScheduler:
         self._apply_arrivals(requests, t_run0)
         t_prev = None
 
-        while queue or active.any():
+        while queue or active.any() or self._fill:
             now = time.perf_counter()
-            # 1) deadline enforcement (queued + running), slots recycled
+            # 1) deadline enforcement (queued + running + filling)
             self._cancel_expired(st, queue, out, now)
             # 2) effective capacity under the (possibly squeezed) budget
             usable = self.usable_slots_now()
@@ -684,11 +876,13 @@ class SlotScheduler:
             # interleaved prefill: fill any free slot BEFORE the fetch, so a
             # newly admitted slot's first (prefill-sampled) token is read by
             # this iteration's transfer and only then consumed by decode —
-            # admitting between fetch and decode would overwrite it unread
-            if queue and not active.all() and int(active.sum()) < usable:
+            # admitting between fetch and decode would overwrite it unread.
+            # Filling slots count as occupied.
+            occ = active | self._fill_mask()
+            if queue and not occ.all() and int(occ.sum()) < usable:
                 self._admit(st, queue, out, max_new_tokens, limit=usable,
                             degraded=degraded)
-            if not active.any():
+            if not active.any() and not self._fill:
                 if not queue:
                     continue               # drained -> loop exits
                 # open-loop gap: everything queued is still in the future —
@@ -708,27 +902,30 @@ class SlotScheduler:
                         f"({len(queue)} queued, {usable} usable slots)")
                 continue
             idle_iters = 0
-            # the ONE host transfer of this decode step
-            tok_host, alive_host = jax.device_get((st["tok"], st["alive"]))
-            now = time.perf_counter()
-            for i in np.flatnonzero(active):
-                req = st["slot_req"][i]
-                out[req.rid].append(int(tok_host[i, 0]))
-                gen_tokens += 1
-                tier_stats[req.quality]["served_tokens"] += 1
-                if req.t_first_token == 0.0:
-                    req.t_first_token = now
-                budget[i] -= 1
-                if not bool(alive_host[i]) or budget[i] <= 0:
-                    req.t_done = now
-                    req.new_tokens = len(out[req.rid])
-                    active[i] = False
-                    st["slot_req"][i] = None    # slot freed -> recyclable
-                    self._release_pages(int(i))
-            if not active.any():
-                if self.chaos is not None:
-                    self.chaos.tick()
-                continue                        # admit or exit at the top
+            if active.any():
+                # the ONE host transfer of this decode step (fill-only
+                # rounds fetch nothing: no live row has a pending token)
+                tok_host, alive_host = jax.device_get(
+                    (st["tok"], st["alive"]))
+                now = time.perf_counter()
+                for i in np.flatnonzero(active):
+                    req = st["slot_req"][i]
+                    out[req.rid].append(int(tok_host[i, 0]))
+                    gen_tokens += 1
+                    tier_stats[req.quality]["served_tokens"] += 1
+                    if req.t_first_token == 0.0:
+                        req.t_first_token = now
+                    budget[i] -= 1
+                    if not bool(alive_host[i]) or budget[i] <= 0:
+                        req.t_done = now
+                        req.new_tokens = len(out[req.rid])
+                        active[i] = False
+                        st["slot_req"][i] = None  # slot freed -> recyclable
+                        self._release_pages(int(i))
+                if not active.any() and not self._fill:
+                    if self.chaos is not None:
+                        self.chaos.tick()
+                    continue                    # admit or exit at the top
             # count the decode dispatch HERE, after the drain check: counting
             # at the loop top overstated decode_steps by one per drain (an
             # iteration that fetches+emits but dispatches no decode) and
@@ -739,23 +936,33 @@ class SlotScheduler:
             # transfers may alias the host buffer (CPU zero-copy)
             clen_dev = jnp.asarray(clen.copy())
             bt_dev = jnp.asarray(self.bt.copy()) if self.paged else None
+            chunk = self._plan_chunk(st)
+            chunk_fused = False
             # one masked dispatch per distinct effective term budget: only
             # member rows commit token/alive/cache writes, so every active
-            # slot advances exactly one token under its own tier's context
+            # slot advances exactly one token under its own tier's context.
+            # The budget group matching the filling request's tier absorbs
+            # this round's prefill chunk into its dispatch (chunk-fused).
             for b_eff, members in self._budget_groups(st, degraded):
                 mask = np.zeros(n, bool)
                 mask[members] = True
                 dispatches += 1
-                if self.paged:
-                    args = (eng.params, st["tok"], st["live"], clen_dev,
-                            bt_dev, st["key"], st["alive"], eos, temperature,
-                            jnp.asarray(mask))
+                if chunk is not None and not chunk_fused \
+                        and b_eff == chunk["b_eff"]:
+                    self._dispatch_chunk(st, chunk, mask, clen_dev, bt_dev,
+                                         eos, temperature)
+                    chunk_fused = True
                 else:
-                    args = (eng.params, st["tok"], st["live"], clen_dev,
-                            st["key"], st["alive"], eos, temperature,
-                            jnp.asarray(mask))
-                st["tok"], st["live"], st["key"], st["alive"] = \
-                    self._dispatch(eng._decode_for(b_eff), args)
+                    if self.paged:
+                        args = (eng.params, st["tok"], st["live"], clen_dev,
+                                bt_dev, st["key"], st["alive"], eos,
+                                temperature, jnp.asarray(mask))
+                    else:
+                        args = (eng.params, st["tok"], st["live"], clen_dev,
+                                st["key"], st["alive"], eos, temperature,
+                                jnp.asarray(mask))
+                    st["tok"], st["live"], st["key"], st["alive"] = \
+                        self._dispatch(eng._decode_for(b_eff), args)
                 terms = full_terms if b_eff is None else b_eff
                 for i in members:
                     req = st["slot_req"][i]
@@ -764,7 +971,15 @@ class SlotScheduler:
                     ts["term_steps"] += terms
                     if degraded and eng.tiers[req.quality].degradable:
                         ts["degraded_steps"] += 1
+            if chunk is not None and not chunk_fused:
+                # no decode group shares the fill's tier budget (or nothing
+                # is decoding): the chunk dispatches standalone
+                self._dispatch_chunk(st, chunk, np.zeros(n, bool), clen_dev,
+                                     bt_dev, eos, temperature)
+                dispatches += 1
             clen[active] += 1
+            if chunk is not None:
+                self._advance_fill(st, chunk)
             if self.chaos is not None:
                 self.chaos.tick()
             now2 = time.perf_counter()
@@ -772,6 +987,7 @@ class SlotScheduler:
                 wd.observe(steps, now2 - t_prev)
             t_prev = now2
         wall = time.perf_counter() - t_run0
+        self._retire_prefix()
         extra = self._qos_extra(requests, tier_stats, ctrl, st, queue,
                                 dispatches=dispatches, usable_min=usable_min,
                                 retries_before=retries0)
@@ -816,6 +1032,7 @@ class SlotScheduler:
                       for name in eng.tiers}
 
         rounds = 0
+        dispatches = 0
         occupied_steps = 0.0
         gen_tokens = 0
         drafted = 0
@@ -826,15 +1043,18 @@ class SlotScheduler:
         t_run0 = time.perf_counter()
         self._apply_arrivals(requests, t_run0)
         t_prev = None
+        eos = jnp.int32(sc.eos_id)
+        temperature = jnp.float32(sc.temperature)   # greedy (0) by contract
 
-        while queue or active.any():
+        while queue or active.any() or self._fill:
             now = time.perf_counter()
             self._cancel_expired(st, queue, out, now)
             usable = self.usable_slots_now()
             usable_min = min(usable_min, usable)
-            if queue and not active.all() and int(active.sum()) < usable:
+            occ = active | self._fill_mask()
+            if queue and not occ.all() and int(occ.sum()) < usable:
                 self._admit(st, queue, out, max_new_tokens, limit=usable)
-            if not active.any():
+            if not active.any() and not self._fill:
                 if not queue:
                     continue
                 if self._idle_sleep(queue, time.perf_counter()):
@@ -848,60 +1068,82 @@ class SlotScheduler:
                         f"({len(queue)} queued, {usable} usable slots)")
                 continue
             idle_iters = 0
-            rounds += 1
-            occupied_steps += float(active.sum()) / n
-            tok_pre = st["tok"]                # pending tokens entering round
-            if self.paged:
-                spec_args = (eng.params, st["tok"], st["live"],
-                             jnp.asarray(clen.copy()),
-                             jnp.asarray(self.bt.copy()))
-            else:
-                spec_args = (eng.params, st["tok"], st["live"],
-                             jnp.asarray(clen.copy()))
-            st["tok"], st["live"], full, accept = self._dispatch(
-                eng._spec, spec_args)
-            # the ONE host transfer of this round (up to γ+1 tokens/slot)
-            tok_host, full_host, acc_host = jax.device_get(
-                (tok_pre, full, accept))
-            now = time.perf_counter()
-            for i in np.flatnonzero(active):
-                req = st["slot_req"][i]
-                m_i = int(acc_host[i])
-                drafted += gamma
-                accepted += m_i
-                # pending token first, then the m accepted draft tokens
-                # (full_host[i, :m] — identical to the drafts by acceptance);
-                # the correction full_host[i, m] stays on device as the next
-                # pending token
-                emit = [int(tok_host[i, 0])] + \
-                    [int(t) for t in full_host[i, :m_i]]
-                if req.t_first_token == 0.0:
-                    req.t_first_token = now
-                done = False
-                for t in emit:
-                    out[req.rid].append(t)
-                    gen_tokens += 1
-                    tier_stats[req.quality]["served_tokens"] += 1
-                    budget[i] -= 1
-                    if t == sc.eos_id or budget[i] <= 0:
-                        done = True
-                        break
-                clen[i] += m_i + 1             # mirrors commit_verify
-                if done:
-                    req.t_done = now
-                    req.new_tokens = len(out[req.rid])
-                    active[i] = False
-                    st["slot_req"][i] = None
-                    self._release_pages(int(i))
+            clen_dev = jnp.asarray(clen.copy())
+            bt_dev = jnp.asarray(self.bt.copy()) if self.paged else None
+            chunk = self._plan_chunk(st)
+            if active.any():
+                rounds += 1
+                dispatches += 1
+                occupied_steps += float(active.sum()) / n
+                tok_pre = st["tok"]            # pending tokens entering round
+                if self.paged:
+                    spec_args = (eng.params, st["tok"], st["live"], clen_dev,
+                                 bt_dev)
+                else:
+                    spec_args = (eng.params, st["tok"], st["live"], clen_dev)
+                if eng._spec_takes_mask:
+                    # masked variant: filling slots (and empty rows) must not
+                    # see draft-chunk writes in their ring/recurrent/paged
+                    # state — only active rows commit
+                    spec_args = spec_args + (jnp.asarray(active.copy()),)
+                st["tok"], st["live"], full, accept = self._dispatch(
+                    eng._spec, spec_args)
+                # chunk dispatched AFTER spec: its tok passthrough reads the
+                # round's new pending tokens and writes only the seed row
+                if chunk is not None:
+                    self._dispatch_chunk(st, chunk, np.zeros(n, bool),
+                                         clen_dev, bt_dev, eos, temperature)
+                    dispatches += 1
+                # the ONE host transfer of this round (up to γ+1 tokens/slot)
+                tok_host, full_host, acc_host = jax.device_get(
+                    (tok_pre, full, accept))
+                now = time.perf_counter()
+                for i in np.flatnonzero(active):
+                    req = st["slot_req"][i]
+                    m_i = int(acc_host[i])
+                    drafted += gamma
+                    accepted += m_i
+                    # pending token first, then the m accepted draft tokens
+                    # (full_host[i, :m] — identical to the drafts by
+                    # acceptance); the correction full_host[i, m] stays on
+                    # device as the next pending token
+                    emit = [int(tok_host[i, 0])] + \
+                        [int(t) for t in full_host[i, :m_i]]
+                    if req.t_first_token == 0.0:
+                        req.t_first_token = now
+                    done = False
+                    for t in emit:
+                        out[req.rid].append(t)
+                        gen_tokens += 1
+                        tier_stats[req.quality]["served_tokens"] += 1
+                        budget[i] -= 1
+                        if t == sc.eos_id or budget[i] <= 0:
+                            done = True
+                            break
+                    clen[i] += m_i + 1         # mirrors commit_verify
+                    if done:
+                        req.t_done = now
+                        req.new_tokens = len(out[req.rid])
+                        active[i] = False
+                        st["slot_req"][i] = None
+                        self._release_pages(int(i))
+                now2 = time.perf_counter()
+                if t_prev is not None:
+                    wd.observe(rounds, now2 - t_prev)
+                t_prev = now2
+            elif chunk is not None:
+                # fill-only round: no live decode row, no host transfer
+                self._dispatch_chunk(st, chunk, np.zeros(n, bool), clen_dev,
+                                     bt_dev, eos, temperature)
+                dispatches += 1
+            if chunk is not None:
+                self._advance_fill(st, chunk)
             if self.chaos is not None:
                 self.chaos.tick()
-            now2 = time.perf_counter()
-            if t_prev is not None:
-                wd.observe(rounds, now2 - t_prev)
-            t_prev = now2
         wall = time.perf_counter() - t_run0
+        self._retire_prefix()
         extra = self._qos_extra(requests, tier_stats, None, st, queue,
-                                dispatches=rounds, usable_min=usable_min,
+                                dispatches=dispatches, usable_min=usable_min,
                                 retries_before=retries0)
         extra.update({
             "spec_terms": sc.spec_terms,

@@ -99,6 +99,18 @@ class ServeConfig:
     paged: bool = False
     page_size: int = 16           # tokens per KV page
     num_pages: int = 0            # 0 -> derived (hbm budget or slots*max_seq)
+    # -- chunked prefill + shared-prefix caching (DESIGN.md §14) ---------
+    # prefill_chunk > 0: prompts prefill in fixed-size chunks fused into
+    # decode rounds (one dispatch serves live decode rows plus one chunk),
+    # so a long prompt no longer monopolizes a round and queued TTFT stops
+    # scaling with the longest in-flight prompt.  Output stays
+    # token-identical to monolithic prefill.
+    prefill_chunk: int = 0        # 0 = monolithic prefill-into-slot
+    # prefix_cache: radix trie over prompt pages (paged engines only) —
+    # admission increfs matched pages into the block table and prefills
+    # only the uncached suffix; series expansion is deterministic in the
+    # prompt, so shared pages are bit-identical to a cold prefill's.
+    prefix_cache: bool = False
 
 
 def _sample_logits(logits: jnp.ndarray, key, temperature: float) -> jnp.ndarray:
@@ -281,7 +293,8 @@ def _has_expanded(params) -> bool:
 
 
 def make_spec_decode_step(cfg: ArchConfig, qc: QuantContext,
-                          qc_draft: QuantContext, lookahead: int):
+                          qc_draft: QuantContext, lookahead: int,
+                          masked: bool = False):
     """Fused draft-γ + verify speculative round (one dispatch, DESIGN.md §10).
 
     step(params, tok (B,1), caches, cache_len (B,)) ->
@@ -323,12 +336,36 @@ def make_spec_decode_step(cfg: ArchConfig, qc: QuantContext,
     _contract(step, name="spec_decode", transfers_per_round=1,
               int_psum_axes=("expand",), donate_argnums=(2,),
               budget_key="spec_decode")
-    return step
+    if not masked:
+        return step
+
+    # row-masked variant (``masked=True``): required whenever a chunked
+    # prefill can be in flight — an unmasked speculative commit would write
+    # draft garbage into the filling slot's ring/recurrent state.
+    def masked_step(params, tok, caches, cache_len, row_mask):
+        nxt, new_caches, full, accept = step(params, tok, caches, cache_len)
+        nxt = jnp.where(row_mask[:, None], nxt, tok)
+        full = jnp.where(row_mask[:, None], full, 0)
+        accept = jnp.where(row_mask, accept, 0)
+        merged = {
+            "stages": jax.tree_util.tree_map(
+                lambda nw, old: _select_rows(nw, old, row_mask, 1),
+                new_caches["stages"], caches["stages"]),
+            "tail": jax.tree_util.tree_map(
+                lambda nw, old: _select_rows(nw, old, row_mask, 0),
+                new_caches["tail"], caches["tail"]),
+        }
+        return nxt, merged, full, accept
+
+    _contract(masked_step, name="spec_decode_masked", transfers_per_round=1,
+              int_psum_axes=("expand",), dynamic_operands=("row_mask",),
+              donate_argnums=(2,), budget_key="spec_decode_masked")
+    return masked_step
 
 
 def make_paged_spec_decode_step(cfg: ArchConfig, qc: QuantContext,
                                 qc_draft: QuantContext, lookahead: int,
-                                page_size: int):
+                                page_size: int, masked: bool = False):
     """Paged twin of :func:`make_spec_decode_step`: draft steps, the verify
     pass, and the commit all go through the slot block tables.  Admission
     reserves ``lookahead + 1`` extra positions' worth of pages per slot so
@@ -361,6 +398,177 @@ def make_paged_spec_decode_step(cfg: ArchConfig, qc: QuantContext,
               int_psum_axes=("expand",),
               dynamic_operands=("block_tables",), donate_argnums=(2,),
               budget_key="spec_decode_paged")
+    if not masked:
+        return step
+
+    # row-masked paged variant: unmasked rows draft/verify/commit through
+    # an all-sentinel block table (pool writes become no-reads garbage) and
+    # their per-slot leaves merge row-wise — the same two-part merge as the
+    # masked paged decode step.  Required with chunked prefill / prefix
+    # caching: a filling slot's table can hold shared (increfed) pages an
+    # unmasked speculative write would corrupt for every sharer.
+    def masked_step(params, tok, caches, cache_len, block_tables, row_mask):
+        sentinel = _pool_sentinel(caches)
+        bt_eff = block_tables
+        if sentinel is not None:
+            bt_eff = jnp.where(row_mask[:, None], block_tables, sentinel)
+        nxt, new_caches, full, accept = step(
+            params, tok, caches, cache_len, bt_eff)
+        nxt = jnp.where(row_mask[:, None], nxt, tok)
+        full = jnp.where(row_mask[:, None], full, 0)
+        accept = jnp.where(row_mask, accept, 0)
+
+        def merge(axis):
+            def f(path, nw, old):
+                if M._is_pool_leaf(path):
+                    return nw          # unmasked writes went to the sentinel
+                return _select_rows(nw, old, row_mask, axis)
+            return f
+
+        merged = {
+            "stages": jax.tree_util.tree_map_with_path(
+                merge(1), new_caches["stages"], caches["stages"]),
+            "tail": jax.tree_util.tree_map_with_path(
+                merge(0), new_caches["tail"], caches["tail"]),
+        }
+        return nxt, merged, full, accept
+
+    _contract(masked_step, name="spec_decode_paged_masked",
+              transfers_per_round=1, int_psum_axes=("expand",),
+              dynamic_operands=("block_tables", "row_mask"),
+              donate_argnums=(2,), budget_key="spec_decode_paged_masked")
+    return masked_step
+
+
+def make_prefill_chunk_step(cfg: ArchConfig, qc: QuantContext, *,
+                            paged: bool, page_size: int = 0, s_max: int = 0):
+    """Chunk-fused serving step (DESIGN.md §14): ONE dispatch advances the
+    live decode rows by one token AND prefills one chunk of the filling
+    prompt.
+
+    step(params, tokens (B,C), caches, cache_len (B,)[, block_tables],
+         key, alive (B,), eos_id (), temperature (), valid (B,),
+         write_from (B,), commit_rows (B,), decode_rows (B,),
+         seed_rows (B,), tok (B,1))
+        -> (next_tok (B,1), caches', key', alive')
+
+    Row roles (all dynamic bool masks — membership changes never retrace):
+
+    * ``decode_rows``: live decode slots.  Their pending token is spliced
+      into chunk column 0 with ``valid=1`` in-trace, and the chunked-scoring
+      pass (:func:`model.chunk_prefill_step`) keeps them on the split
+      cache/new decode formulation — a T=1 verify is exactly a decode, the
+      identity the speculative engine already rests on — while prefill rows
+      run the positional single-buffer formulation over the ``s_max``-wide
+      cache, bit-identical to monolithic prefill (DESIGN.md §14).
+    * the filling slot carries the real chunk with ``valid`` real tokens
+      starting at position ``cache_len`` (chunk tails may be padding);
+      ``seed_rows`` marks it on its FINAL chunk, when the prompt's last
+      logit seeds the first generated token (monolithic prefill's sampled
+      first token, bit-for-bit).
+    * ``commit_rows`` = decode rows + the filling slot: only their caches
+      advance; everything else keeps its state bit-for-bit (row-wise merge;
+      on the paged layout unmasked rows write through the sentinel table).
+
+    ``write_from`` is the per-row pool-write floor: positions below it are
+    served by shared (increfed) prefix pages that must never be re-written
+    — the recompute row of a fully-cached prompt and the first chunk after
+    a prefix match both rely on it.  The dense layout has no shared rows;
+    the operand is accepted and ignored there (one signature, one
+    scheduler call site)."""
+    def _body(params, tokens, caches, cache_len, block_tables, key, alive,
+              eos_id, temperature, valid, write_from, commit_rows,
+              decode_rows, seed_rows, tok):
+        t = tokens.shape[1]
+        tokens = tokens.at[:, 0].set(
+            jnp.where(decode_rows, tok[:, 0], tokens[:, 0]))
+        valid = jnp.where(decode_rows, jnp.int32(1),
+                          jnp.asarray(valid, jnp.int32))
+        if paged:
+            logits_all, deltas = M.paged_chunk_prefill_step(
+                params, tokens, caches, cache_len, block_tables, decode_rows,
+                cfg, qc, page_size=page_size, s_max=s_max)
+        else:
+            logits_all, deltas = M.chunk_prefill_step(
+                params, tokens, caches, cache_len, decode_rows, cfg, qc,
+                s_max=s_max)
+        # per-row logit at the last real chunk position (col 0 for decode
+        # rows, ``valid-1`` for the filling slot)
+        idx = jnp.clip(valid - 1, 0, t - 1)
+        logits = jnp.take_along_axis(logits_all, idx[:, None, None],
+                                     axis=1)[:, 0]
+        key, sub = jax.random.split(key)
+        nxt = sample_logits_dynamic(logits, sub, temperature)
+        if paged:
+            sentinel = _pool_sentinel(caches)
+            bt_eff = block_tables
+            if sentinel is not None:
+                bt_eff = jnp.where(commit_rows[:, None], block_tables,
+                                   sentinel)
+            new_caches = M.commit_prefill_chunk_paged(
+                caches, deltas, cache_len, valid, write_from, bt_eff, cfg,
+                page_size=page_size)
+
+            def merge(axis):
+                def f(path, nw, old):
+                    if M._is_pool_leaf(path):
+                        return nw      # unmasked writes went to the sentinel
+                    return _select_rows(nw, old, commit_rows, axis)
+                return f
+
+            merged = {
+                "stages": jax.tree_util.tree_map_with_path(
+                    merge(1), new_caches["stages"], caches["stages"]),
+                "tail": jax.tree_util.tree_map_with_path(
+                    merge(0), new_caches["tail"], caches["tail"]),
+            }
+        else:
+            new_caches = M.commit_prefill_chunk(caches, deltas, cache_len,
+                                                valid, cfg)
+            merged = {
+                "stages": jax.tree_util.tree_map(
+                    lambda nw, old: _select_rows(nw, old, commit_rows, 1),
+                    new_caches["stages"], caches["stages"]),
+                "tail": jax.tree_util.tree_map(
+                    lambda nw, old: _select_rows(nw, old, commit_rows, 0),
+                    new_caches["tail"], caches["tail"]),
+            }
+        sample_rows = decode_rows | seed_rows
+        tok_out = jnp.where(sample_rows[:, None], nxt, tok)
+        not_eos = nxt[:, 0] != eos_id
+        alive_out = jnp.where(seed_rows, not_eos,
+                              jnp.where(decode_rows,
+                                        jnp.logical_and(alive, not_eos),
+                                        alive))
+        return tok_out, merged, key, alive_out
+
+    if paged:
+        def step(params, tokens, caches, cache_len, block_tables, key,
+                 alive, eos_id, temperature, valid, write_from, commit_rows,
+                 decode_rows, seed_rows, tok):
+            return _body(params, tokens, caches, cache_len, block_tables,
+                         key, alive, eos_id, temperature, valid, write_from,
+                         commit_rows, decode_rows, seed_rows, tok)
+        _contract(step, name="prefill_chunk_paged", transfers_per_round=1,
+                  int_psum_axes=("expand",),
+                  dynamic_operands=("block_tables", "eos_id", "temperature",
+                                    "valid", "write_from", "commit_rows",
+                                    "decode_rows", "seed_rows"),
+                  donate_argnums=(2,), budget_key="prefill_chunk_paged")
+        return step
+
+    def step(params, tokens, caches, cache_len, key, alive, eos_id,
+             temperature, valid, write_from, commit_rows, decode_rows,
+             seed_rows, tok):
+        return _body(params, tokens, caches, cache_len, None, key, alive,
+                     eos_id, temperature, valid, write_from, commit_rows,
+                     decode_rows, seed_rows, tok)
+    _contract(step, name="prefill_chunk", transfers_per_round=1,
+              int_psum_axes=("expand",),
+              dynamic_operands=("eos_id", "temperature", "valid",
+                                "write_from", "commit_rows", "decode_rows",
+                                "seed_rows"),
+              donate_argnums=(2,), budget_key="prefill_chunk")
     return step
 
 
@@ -454,6 +662,9 @@ class Engine:
         self.paged = serve_cfg.paged
         if self.paged:
             self._validate_paged(serve_cfg)
+        self.chunked = serve_cfg.prefill_chunk > 0 or serve_cfg.prefix_cache
+        if self.chunked:
+            self._validate_chunked(serve_cfg)
         if serve_cfg.term_budget is not None:
             # static whole-engine truncation: by Theorem 1 the k-term prefix
             # is itself a coherent lower-bit model, so the engine simply
@@ -483,6 +694,11 @@ class Engine:
             name="prefill_slot", int_psum_axes=("expand",),
             budget_key="prefill"))
         self._scatter = jax.jit(M.scatter_cache_into_slot, donate_argnums=(0,))
+        # fresh one-row cache for chunked-fill admission on dense engines:
+        # a recycled slot keeps its previous occupant's ring positions and
+        # recurrent carries, which monolithic admission overwrites wholesale
+        # via _scatter but an incremental chunk commit would inherit
+        self._fresh_row_cache = None
         if self.paged:
             page = serve_cfg.page_size
             self._scatter_paged = jax.jit(
@@ -502,7 +718,14 @@ class Engine:
         self._decode_by_budget: Dict[Optional[int], Any] = {None: self._decode}
         self._prefill_by_budget: Dict[Optional[int], Any] = {
             None: self._prefill_slot}
+        # chunk-fused prefill steps, keyed like _decode_by_budget (lazily
+        # traced — an engine that never chunks never traces one)
+        self._chunk_by_budget: Dict[Optional[int], Any] = {}
         self._spec = None
+        # with a chunked fill potentially in flight, speculative rounds
+        # must be row-masked (an unmasked commit would corrupt the filling
+        # slot's state / shared pages)
+        self._spec_takes_mask = serve_cfg.spec_terms > 0 and self.chunked
         if serve_cfg.spec_terms > 0:
             self._validate_spec(serve_cfg)
             self.qc_draft = dataclasses.replace(
@@ -511,12 +734,14 @@ class Engine:
                 self._spec = jax.jit(
                     make_paged_spec_decode_step(cfg, self.qc, self.qc_draft,
                                                 serve_cfg.spec_lookahead,
-                                                serve_cfg.page_size),
+                                                serve_cfg.page_size,
+                                                masked=self._spec_takes_mask),
                     donate_argnums=(2,))
             else:
                 self._spec = jax.jit(
                     make_spec_decode_step(cfg, self.qc, self.qc_draft,
-                                          serve_cfg.spec_lookahead),
+                                          serve_cfg.spec_lookahead,
+                                          masked=self._spec_takes_mask),
                     donate_argnums=(2,))
         self._slots: Optional[SlotScheduler] = None
 
@@ -562,6 +787,54 @@ class Engine:
             raise ValueError(f"page_size must be >= 1, got {sc.page_size}")
         if sc.num_pages < 0:
             raise ValueError(f"num_pages must be >= 0, got {sc.num_pages}")
+
+    def _validate_chunked(self, sc: ServeConfig) -> None:
+        """Chunked-prefill / prefix-cache preconditions (capacity-like:
+        fixed per engine)."""
+        kinds = set(tuple(self.cfg.stage_pattern) + tuple(self.cfg.tail_pattern))
+        if sc.prefill_chunk < 0:
+            raise ValueError(
+                f"prefill_chunk must be >= 0, got {sc.prefill_chunk}")
+        if sc.scheduler != "slots":
+            raise ValueError(
+                "prefill_chunk/prefix_cache require scheduler='slots' (the "
+                "grouped legacy path prefills whole groups monolithically)")
+        if "cross" in kinds:
+            raise ValueError(
+                "chunked prefill does not serve cross-attention archs: the "
+                "chunk-scoring pass carries no image-KV side input, so the "
+                "static cross caches would never be written")
+        if self.qc.int8_kv:
+            raise ValueError(
+                "chunked prefill requires exact (fp) KV caches: int8_kv "
+                "round-trips cached keys through a lossy quantizer, so a "
+                "chunked prefill could never be token-identical to the "
+                "monolithic pass it must reproduce")
+        if sc.paged and sc.max_seq % sc.page_size != 0:
+            raise ValueError(
+                f"chunked prefill over the paged layout requires max_seq "
+                f"({sc.max_seq}) divisible by page_size ({sc.page_size}): "
+                f"the gathered pool buffer (max_pages * page_size wide) must "
+                f"equal the dense slot capacity for the positional "
+                f"formulation to be bit-identical across layouts")
+        if sc.prefix_cache:
+            if not sc.paged:
+                raise ValueError(
+                    "prefix_cache=True requires paged=True: prefixes are "
+                    "shared at page granularity through block tables")
+            if sc.tier_budgets is not None:
+                raise ValueError(
+                    "prefix_cache=True is incompatible with QoS tiers: a "
+                    "cached page holds KV computed under ONE term budget, "
+                    "and sharing it across tiers would break each tier's "
+                    "bit-identity contract")
+            stateful = kinds & {"local", "rglru", "ssm"}
+            if kinds & {"attn", "moe_attn"} and stateful:
+                raise ValueError(
+                    f"prefix_cache=True cannot serve archs mixing paged "
+                    f"attention with {sorted(stateful)} state: pages cannot "
+                    f"reconstruct a matched prefix's per-slot ring/recurrent "
+                    f"carries — serve this arch with prefix_cache=False")
 
     def _validate_qos(self, sc: ServeConfig) -> None:
         """QoS knob preconditions, checked at construction (capacity-like:
@@ -638,6 +911,39 @@ class Engine:
                                             masked=True),
                     donate_argnums=(2,))
         return self._decode_by_budget[budget]
+
+    def _chunk_for(self, budget: Optional[int]):
+        """The chunk-fused prefill step under ``term_budget=budget`` —
+        same lazy per-budget jit cache as ``_decode_for``, so a tier's
+        chunks are scored by exactly the series prefix that will decode
+        it."""
+        budget = self._norm_budget(budget)
+        if budget not in self._chunk_by_budget:
+            if self.paged:
+                fn = make_prefill_chunk_step(self.cfg, self._qc_for(budget),
+                                             paged=True,
+                                             page_size=self.sc.page_size,
+                                             s_max=self.sc.max_seq)
+            else:
+                fn = make_prefill_chunk_step(self.cfg, self._qc_for(budget),
+                                             paged=False,
+                                             s_max=self.sc.max_seq)
+            self._chunk_by_budget[budget] = jax.jit(fn, donate_argnums=(2,))
+        return self._chunk_by_budget[budget]
+
+    def _fresh_row(self):
+        """A zero-initialized one-row dense cache, scattered into a slot at
+        chunked-fill admission.  Chunk commits are incremental, so without
+        this reset a recycled slot would resume from its previous
+        occupant's local-ring ``slot_pos`` and rglru/ssm carries — stale
+        state that monolithic admission's wholesale ``_scatter`` never
+        exposes.  Built once (it is never donated: ``_scatter`` donates the
+        live cache, argument 0)."""
+        if self._fresh_row_cache is None:
+            self._fresh_row_cache = M.init_cache(
+                self.cfg, 1, self.sc.max_seq, int8_kv=self.qc.int8_kv,
+                mesh=self.mesh)
+        return self._fresh_row_cache
 
     def _prefill_slot_for(self, budget: Optional[int]):
         """Length-masked prefill under a tier's term budget: a degraded

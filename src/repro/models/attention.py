@@ -189,6 +189,46 @@ def decode_attention_appended(
     return out.reshape(b, 1, h, d).astype(q.dtype)
 
 
+def positional_prefill_attention(
+    q: jnp.ndarray,           # (B, T, H, D) — rows at absolute positions qpos
+    k_buf: jnp.ndarray,       # (B, S, G, D) — key for position j at index j
+    v_buf: jnp.ndarray,
+    qpos: jnp.ndarray,        # (B, T) int32 absolute positions
+    *,
+    window: int = 0,
+    softcap: float = 0.0,
+) -> jnp.ndarray:
+    """Serving-prefill attention over a positionally-indexed KV buffer.
+
+    The bitwise-reproducibility anchor of chunked prefill (DESIGN.md §14):
+    every query row's computation touches ONE S-wide buffer whose contents
+    and masks depend only on the row's absolute position — not on how the
+    prompt was split into chunks — so monolithic prefill-into-slot and any
+    chunked schedule produce bit-identical outputs per row.  Entries at
+    positions a row cannot see (future, out-of-window, never-written) may
+    hold arbitrary finite values: the mask sends them to ``exp -> 0.0``
+    exactly.  Both :func:`repro.models.blocks.block_forward` (``lengths``
+    path) and the chunk-fused step's prefill rows call THIS function with
+    S equal to the slot capacity; flash attention's online softmax stays
+    the train/eval path (its accumulation order differs at the ulp level,
+    which per-batch quantization amplifies into token flips)."""
+    b, t, h, d = q.shape
+    s, g = k_buf.shape[1], k_buf.shape[2]
+    r = h // g
+    qg = q.reshape(b, t, g, r, d) * (d ** -0.5)
+    sc = jnp.einsum("btgrd,bkgd->bgrtk", qg, k_buf)                # (B,G,R,T,S)
+    if softcap > 0.0:
+        sc = softcap * jnp.tanh(sc / softcap)
+    pos = jnp.arange(s)
+    mask = pos[None, None, :] <= qpos[:, :, None]                  # (B,T,S)
+    if window > 0:
+        mask &= pos[None, None, :] > qpos[:, :, None] - window
+    sc = jnp.where(mask[:, None, None, :, :], sc, NEG_INF)
+    p = jax.nn.softmax(sc.astype(jnp.float32), axis=-1)
+    out = jnp.einsum("bgrtk,bkgd->bgrtd", p.astype(v_buf.dtype), v_buf)
+    return jnp.moveaxis(out, 3, 1).reshape(b, t, h, d).astype(q.dtype)
+
+
 def chunk_decode_attention(
     q: jnp.ndarray,           # (B, T, H, D) — T new tokens per slot
     k_cache: jnp.ndarray,     # (B, S, G, D) — WITHOUT the new tokens

@@ -106,10 +106,26 @@ def block_forward(qc: QuantContext, kind: str, p: Dict, x: jnp.ndarray, cfg, *,
         causal = not cfg.is_encoder
         window = cfg.window if kind == "local" else 0
         q, k, v = _qkv(qc, p["attn"], h, cfg, positions, rope=not cfg.is_encoder)
-        att = ATT.flash_attention(q, k, v, causal=causal, window=window,
-                                  softcap=cfg.attn_softcap,
-                                  q_chunk=cfg.attn_q_chunk or 1024,
-                                  kv_chunk=cfg.attn_kv_chunk or 1024)
+        if lengths is None or not causal:
+            att = ATT.flash_attention(q, k, v, causal=causal, window=window,
+                                      softcap=cfg.attn_softcap,
+                                      q_chunk=cfg.attn_q_chunk or 1024,
+                                      kv_chunk=cfg.attn_kv_chunk or 1024)
+        else:
+            # serving prefill-into-slot: the positional formulation over a
+            # buffer padded to the slot capacity, so a chunked prefill can
+            # reproduce every row bit-for-bit (DESIGN.md §14).  Causal
+            # masking makes the pad keys (>= each row's length) invisible
+            # to valid rows, exactly as under flash.
+            s_buf = max(s_max, k.shape[1])
+            pad = s_buf - k.shape[1]
+            kb = jnp.pad(k, ((0, 0), (0, pad), (0, 0), (0, 0))) if pad else k
+            vb = jnp.pad(v, ((0, 0), (0, pad), (0, 0), (0, 0))) if pad else v
+            qpos = jnp.broadcast_to(positions[None, :].astype(jnp.int32),
+                                    (b, k.shape[1]))
+            att = ATT.positional_prefill_attention(q, kb, vb, qpos,
+                                                   window=window,
+                                                   softcap=cfg.attn_softcap)
         x = x + L.dense(qc, att.reshape(b, att.shape[1], -1), p["attn"]["o"])
         x = _mlp_part(qc, kind, p, x, cfg)
         if kind == "local":
@@ -473,6 +489,121 @@ def block_verify_paged(qc: QuantContext, kind: str, p: Dict, x: jnp.ndarray,
     x = x + L.dense(qc, att.reshape(b, t, -1), p["attn"]["o"])
     x = _mlp_part(qc, kind, p, x, cfg)
     return x, delta
+
+
+# ---------------------------------------------------------------------------
+# chunked prefill (DESIGN.md §14): score one prefill chunk per slot against
+# the cache WITHOUT mutating it, with per-row formulation selection —
+#   decode_rows[b]  : live decode rows spliced into chunk column 0 use the
+#                     split cache/new form (chunk_decode_attention), bitwise-
+#                     matched to the slots decode engine;
+#   prefill rows    : use the positional single-buffer form — chunk keys are
+#                     scattered into a copy of the slot-capacity cache buffer
+#                     at their absolute positions, then attended exactly as
+#                     block_forward's lengths path.  Same function, same
+#                     buffer width, same buffer contents ⇒ chunked prefill is
+#                     bit-identical to monolithic prefill by construction
+#                     (masked positions contribute exactly 0.0).
+# Recurrent kinds route to block_verify_delta: their sequential per-step
+# unroll composes exactly across chunk boundaries (left fold).
+# ---------------------------------------------------------------------------
+def block_chunk_delta(qc: QuantContext, kind: str, p: Dict, x: jnp.ndarray,
+                      cache: Dict, cfg, *, cache_len: jnp.ndarray,
+                      decode_rows: jnp.ndarray, s_max: int
+                      ) -> Tuple[jnp.ndarray, Dict]:
+    """x: (B, T, D); decode_rows: (B,) bool; s_max: slot capacity (the dense
+    cache width).  Returns (x, delta) with the same delta layout as
+    :func:`block_verify_delta`."""
+    b, t = x.shape[0], x.shape[1]
+    clen = jnp.broadcast_to(jnp.asarray(cache_len, jnp.int32), (b,))
+    positions = clen[:, None] + jnp.arange(t)[None, :]         # (B, T)
+    rows = jnp.arange(b)
+    dmask = decode_rows[:, None, None, None]
+    if kind in ("attn", "moe_attn"):
+        if qc.int8_kv:
+            raise ValueError("chunked prefill requires exact (fp) KV caches; "
+                             "int8_kv is rejected at Engine validation")
+        h = L.apply_norm(cfg.norm, p["ln"], x)
+        q, k, v = _qkv(qc, p["attn"], h, cfg, positions, rope=True)
+        att_dec = ATT.chunk_decode_attention(q, cache["k"], cache["v"], k, v,
+                                             clen, softcap=cfg.attn_softcap)
+        kb = cache["k"].at[rows[:, None], positions].set(
+            k.astype(cache["k"].dtype))
+        vb = cache["v"].at[rows[:, None], positions].set(
+            v.astype(cache["v"].dtype))
+        att_pos = ATT.positional_prefill_attention(
+            q, kb, vb, positions, softcap=cfg.attn_softcap)
+        att = jnp.where(dmask, att_dec, att_pos)
+        x = x + L.dense(qc, att.reshape(b, t, -1), p["attn"]["o"])
+        x = _mlp_part(qc, kind, p, x, cfg)
+        return x, {"k": k, "v": v}
+    if kind == "local":
+        h = L.apply_norm(cfg.norm, p["ln"], x)
+        q, k, v = _qkv(qc, p["attn"], h, cfg, positions, rope=True)
+        att_dec = ATT.chunk_decode_attention(q, cache["k"], cache["v"], k, v,
+                                             clen, window=cfg.window,
+                                             slot_pos=cache["slot_pos"],
+                                             softcap=cfg.attn_softcap)
+        # positional reconstruction: scatter the ring into a zero buffer at
+        # the recorded absolute positions (empty slots land on the sliced-off
+        # sentinel row s_max), then the chunk keys at theirs.  The ring holds
+        # every position in [clen - window, clen), so all in-window keys are
+        # present; out-of-window zeros are window-masked to exactly 0.0.
+        g, hd = cfg.num_kv_heads, cfg.head_dim
+        sp = cache["slot_pos"]                                  # (B, w)
+        idx = jnp.where(sp >= 0, sp, s_max).astype(jnp.int32)
+        kb = jnp.zeros((b, s_max + 1, g, hd), k.dtype)
+        vb = jnp.zeros((b, s_max + 1, g, hd), v.dtype)
+        kb = kb.at[rows[:, None], idx].set(cache["k"].astype(k.dtype))
+        vb = vb.at[rows[:, None], idx].set(cache["v"].astype(v.dtype))
+        kb = kb.at[rows[:, None], positions].set(k)[:, :s_max]
+        vb = vb.at[rows[:, None], positions].set(v)[:, :s_max]
+        att_pos = ATT.positional_prefill_attention(
+            q, kb, vb, positions, window=cfg.window, softcap=cfg.attn_softcap)
+        att = jnp.where(dmask, att_dec, att_pos)
+        x = x + L.dense(qc, att.reshape(b, t, -1), p["attn"]["o"])
+        x = _mlp_part(qc, kind, p, x, cfg)
+        return x, {"k": k, "v": v}
+    return block_verify_delta(qc, kind, p, x, cache, cfg, cache_len=cache_len)
+
+
+def block_chunk_paged(qc: QuantContext, kind: str, p: Dict, x: jnp.ndarray,
+                      cache: Dict, cfg, *, cache_len: jnp.ndarray,
+                      block_tables: jnp.ndarray, page_size: int,
+                      decode_rows: jnp.ndarray, s_max: int
+                      ) -> Tuple[jnp.ndarray, Dict]:
+    """Paged twin of :func:`block_chunk_delta` (full-attention kinds only;
+    others keep dense caches).  The gathered pool buffer is positionally
+    indexed by construction — logical position j of row b lives at dense
+    index j through the block table — so prefill rows reuse the same
+    positional formulation over ``gather_pages`` (requires
+    ``MP * page_size == s_max``, validated at Engine construction)."""
+    if kind not in ("attn", "moe_attn"):
+        return block_chunk_delta(qc, kind, p, x, cache, cfg,
+                                 cache_len=cache_len,
+                                 decode_rows=decode_rows, s_max=s_max)
+    if qc.int8_kv:
+        raise ValueError("chunked prefill requires exact (fp) KV caches; "
+                         "int8_kv is rejected at Engine validation")
+    b, t = x.shape[0], x.shape[1]
+    clen = jnp.broadcast_to(jnp.asarray(cache_len, jnp.int32), (b,))
+    positions = clen[:, None] + jnp.arange(t)[None, :]
+    rows = jnp.arange(b)
+    h = L.apply_norm(cfg.norm, p["ln"], x)
+    q, k, v = _qkv(qc, p["attn"], h, cfg, positions, rope=True)
+    att_dec = ATT.paged_chunk_decode_attention(
+        q, cache["k"], cache["v"], block_tables, clen, k, v,
+        softcap=cfg.attn_softcap, use_kernel=_use_paged_kernel(qc))
+    kd = ATT.gather_pages(cache["k"], block_tables)            # (B, MP*page, …)
+    vd = ATT.gather_pages(cache["v"], block_tables)
+    kb = kd.at[rows[:, None], positions].set(k.astype(kd.dtype))
+    vb = vd.at[rows[:, None], positions].set(v.astype(vd.dtype))
+    att_pos = ATT.positional_prefill_attention(
+        q, kb, vb, positions, softcap=cfg.attn_softcap)
+    att = jnp.where(decode_rows[:, None, None, None], att_dec, att_pos)
+    x = x + L.dense(qc, att.reshape(b, t, -1), p["attn"]["o"])
+    x = _mlp_part(qc, kind, p, x, cfg)
+    return x, {"k": k, "v": v}
 
 
 # ---------------------------------------------------------------------------

@@ -99,7 +99,7 @@ def _embed(qc, params, batch, cfg) -> Tuple[jnp.ndarray, Optional[Dict]]:
 # forward (train) / prefill
 # ---------------------------------------------------------------------------
 def _run_stack(qc, params, x, cfg, *, positions, side, remat: bool, collect_cache: bool,
-               act_constraint=None, lengths=None):
+               act_constraint=None, lengths=None, s_max: int = 0):
     names = _stage_block_names(cfg)
 
     def stage_fn(x, stage_params):
@@ -108,7 +108,7 @@ def _run_stack(qc, params, x, cfg, *, positions, side, remat: bool, collect_cach
         for name, kind in zip(names, cfg.stage_pattern):
             x, c = B.block_forward(qc, kind, stage_params[name], x, cfg,
                                    positions=positions, side=side,
-                                   lengths=lengths)
+                                   lengths=lengths, s_max=s_max)
             caches[name] = c if collect_cache else None
         if act_constraint is not None:  # e.g. sequence-parallel residual stream
             x = act_constraint(x)
@@ -123,7 +123,7 @@ def _run_stack(qc, params, x, cfg, *, positions, side, remat: bool, collect_cach
             name = f"t{i}_{kind}"
             x, c = B.block_forward(qc, kind, params["tail"][name], x, cfg,
                                    positions=positions, side=side,
-                                   lengths=lengths)
+                                   lengths=lengths, s_max=s_max)
             tail_caches[name] = c if collect_cache else None
     return x, stage_caches, tail_caches
 
@@ -163,7 +163,8 @@ def prefill(params: PyTree, batch: Dict, cfg: ArchConfig, qc: QuantContext = FP,
         lengths = jnp.asarray(lengths, jnp.int32)
     x, stage_caches, tail_caches = _run_stack(
         qc, params, x, cfg, positions=positions, side=side, remat=False,
-        collect_cache=True, act_constraint=act_constraint, lengths=lengths)
+        collect_cache=True, act_constraint=act_constraint, lengths=lengths,
+        s_max=s_max)
     if lengths is None:
         x_last = x[:, -1:, :]
     else:
@@ -638,6 +639,99 @@ def paged_verify_step(params: PyTree, tokens: jnp.ndarray, caches: PyTree,
     return logits, {"stages": stage_deltas, "tail": tail_deltas}
 
 
+# ---------------------------------------------------------------------------
+# chunked prefill scoring (DESIGN.md §14): verify_step's layout with per-row
+# formulation selection so prefill rows reproduce monolithic prefill
+# bit-for-bit while spliced decode rows reproduce the decode engine.
+# ---------------------------------------------------------------------------
+def chunk_prefill_step(params: PyTree, tokens: jnp.ndarray, caches: PyTree,
+                       cache_len: jnp.ndarray, decode_rows: jnp.ndarray,
+                       cfg: ArchConfig, qc: QuantContext = FP, *,
+                       s_max: int) -> Tuple[jnp.ndarray, PyTree]:
+    """Score one prefill chunk (B, T) read-only against the dense caches.
+
+    Identical delta layout and commit path as :func:`verify_step`, but
+    attention dispatches per row on ``decode_rows`` (B,) bool:
+    prefill rows use the positional single-buffer formulation (bit-identical
+    to :func:`prefill`'s lengths path over the same ``s_max``-wide buffer),
+    decode rows keep the split cache/new decode formulation."""
+    x, _ = _embed(qc, params, {"tokens": tokens}, cfg)
+    names = _stage_block_names(cfg)
+    b = tokens.shape[0]
+    clen = jnp.broadcast_to(jnp.asarray(cache_len, jnp.int32), (b,))
+    dmask = jnp.asarray(decode_rows, bool)
+
+    def stage_fn(x, scan_in):
+        stage_params, stage_cache = scan_in
+        stage_params = peel_expanded(stage_params)
+        deltas = {}
+        for name, kind in zip(names, cfg.stage_pattern):
+            x, d = B.block_chunk_delta(qc, kind, stage_params[name], x,
+                                       stage_cache[name], cfg, cache_len=clen,
+                                       decode_rows=dmask, s_max=s_max)
+            deltas[name] = d
+        return x, deltas
+
+    x, stage_deltas = jax.lax.scan(stage_fn, x, (params["stages"], caches["stages"]))
+
+    tail_deltas = {}
+    for i, kind in enumerate(cfg.tail_pattern):
+        name = f"t{i}_{kind}"
+        x, d = B.block_chunk_delta(qc, kind, params["tail"][name], x,
+                                   caches["tail"][name], cfg, cache_len=clen,
+                                   decode_rows=dmask, s_max=s_max)
+        tail_deltas[name] = d
+
+    x = L.apply_norm(cfg.norm, params["final_norm"], x)
+    logits = L.logits_apply(qc, params, x, tie_embeddings=cfg.tie_embeddings,
+                            softcap=cfg.logit_softcap)
+    return logits, {"stages": stage_deltas, "tail": tail_deltas}
+
+
+def paged_chunk_prefill_step(params: PyTree, tokens: jnp.ndarray,
+                             caches: PyTree, cache_len: jnp.ndarray,
+                             block_tables: jnp.ndarray,
+                             decode_rows: jnp.ndarray, cfg: ArchConfig,
+                             qc: QuantContext = FP, *, page_size: int,
+                             s_max: int) -> Tuple[jnp.ndarray, PyTree]:
+    """Paged twin of :func:`chunk_prefill_step` (commit via
+    :func:`commit_prefill_chunk_paged`)."""
+    x, _ = _embed(qc, params, {"tokens": tokens}, cfg)
+    names = _stage_block_names(cfg)
+    b = tokens.shape[0]
+    clen = jnp.broadcast_to(jnp.asarray(cache_len, jnp.int32), (b,))
+    bt = jnp.asarray(block_tables, jnp.int32)
+    dmask = jnp.asarray(decode_rows, bool)
+
+    def stage_fn(x, scan_in):
+        stage_params, stage_cache = scan_in
+        stage_params = peel_expanded(stage_params)
+        deltas = {}
+        for name, kind in zip(names, cfg.stage_pattern):
+            x, d = B.block_chunk_paged(qc, kind, stage_params[name], x,
+                                       stage_cache[name], cfg, cache_len=clen,
+                                       block_tables=bt, page_size=page_size,
+                                       decode_rows=dmask, s_max=s_max)
+            deltas[name] = d
+        return x, deltas
+
+    x, stage_deltas = jax.lax.scan(stage_fn, x, (params["stages"], caches["stages"]))
+
+    tail_deltas = {}
+    for i, kind in enumerate(cfg.tail_pattern):
+        name = f"t{i}_{kind}"
+        x, d = B.block_chunk_paged(qc, kind, params["tail"][name], x,
+                                   caches["tail"][name], cfg, cache_len=clen,
+                                   block_tables=bt, page_size=page_size,
+                                   decode_rows=dmask, s_max=s_max)
+        tail_deltas[name] = d
+
+    x = L.apply_norm(cfg.norm, params["final_norm"], x)
+    logits = L.logits_apply(qc, params, x, tie_embeddings=cfg.tie_embeddings,
+                            softcap=cfg.logit_softcap)
+    return logits, {"stages": stage_deltas, "tail": tail_deltas}
+
+
 def _commit_pool(cache: PyTree, delta: PyTree, clen: jnp.ndarray,
                  block_tables: jnp.ndarray, page_size: int) -> PyTree:
     """Write a verified chunk into one layer's page pools: all T positions
@@ -690,6 +784,168 @@ def commit_verify_paged(caches: PyTree, deltas: PyTree, cache_len: jnp.ndarray,
         else:
             tail[name] = _commit_block(kind, cfg, caches["tail"][name],
                                        deltas["tail"][name], clen, m)
+    return {"stages": stages, "tail": tail}
+
+
+# ---------------------------------------------------------------------------
+# chunked prefill (DESIGN.md §14): a prompt is fed through verify_step /
+# paged_verify_step in fixed-size chunks that resume at the slot's current
+# cache offset; the commits below differ from the verify commits in taking a
+# per-row *valid* count (chunk tails can be bucket padding) instead of an
+# accepted-draft count, and — for the paged pool — a per-row *write floor*
+# protecting shared (increfed) prefix pages from being re-written.
+# ---------------------------------------------------------------------------
+def _commit_chunk_block(kind: str, cfg: ArchConfig, cache: PyTree,
+                        delta: PyTree, clen: jnp.ndarray,
+                        valid: jnp.ndarray) -> PyTree:
+    """Write one block's prefill chunk into its live cache row-wise.
+
+    ``valid`` (B,) counts the real (non-padding) tokens at the head of the
+    chunk; the slot's cache length advances to ``clen + valid``:
+
+    * attn/moe_attn: all T rows are written — rows past ``clen + valid``
+      are stale-but-masked (reads mask strictly below the cache length) and
+      are overwritten by later chunks/decodes before ever unmasking.
+    * local ring: gather-based — for each ring slot j the final position it
+      should hold is ``last - ((last - j) mod W)`` with
+      ``last = clen + valid - 1``; slots whose final position falls inside
+      the chunk take the chunk entry, the rest keep their pre-chunk entry
+      (by the ring invariant it is already the newest position ≡ j mod W
+      below ``clen``).  Unlike the verify commit this handles T > W: a
+      chunk wider than the window simply rewrites the whole ring.
+    * rglru/ssm: gather the per-step state at index ``valid - 1`` (state
+      after the last real token; padding never advances the carry).
+    * cross: static — untouched (chunked prefill rejects cross archs at
+      engine construction, so this branch only sees passthrough).
+    """
+    if kind == "cross" or delta is None:
+        return cache
+    b = clen.shape[0]
+    rows = jnp.arange(b)
+    if kind in ("attn", "moe_attn"):
+        t = delta["k"].shape[1]
+        idx = clen[:, None] + jnp.arange(t)[None, :]            # (B, T)
+        return {key: cache[key].at[rows[:, None], idx].set(
+                    delta[key].astype(cache[key].dtype))
+                for key in cache}
+    if kind == "local":
+        w = cache["k"].shape[1]
+        t = delta["k"].shape[1]
+        j = jnp.arange(w)[None, :]                              # (1, W)
+        last = (clen + valid - 1)[:, None]                      # (B, 1)
+        ring_pos = last - jnp.mod(last - j, w)                  # (B, W)
+        from_chunk = (ring_pos >= clen[:, None]) & (valid[:, None] > 0)
+        idx = jnp.clip(ring_pos - clen[:, None], 0, t - 1)
+        gk = jnp.take_along_axis(delta["k"].astype(cache["k"].dtype),
+                                 idx[:, :, None, None], axis=1)
+        gv = jnp.take_along_axis(delta["v"].astype(cache["v"].dtype),
+                                 idx[:, :, None, None], axis=1)
+        sp = cache["slot_pos"]
+        return {"k": jnp.where(from_chunk[:, :, None, None], gk, cache["k"]),
+                "v": jnp.where(from_chunk[:, :, None, None], gv, cache["v"]),
+                "slot_pos": jnp.where(from_chunk, ring_pos, sp).astype(sp.dtype)}
+    # recurrent kinds: per-step stacked states — state after the last real token
+    def pick(buf, d):
+        i = jnp.clip(valid - 1, 0, d.shape[1] - 1)
+        i = i.reshape((b,) + (1,) * (d.ndim - 1))
+        return jnp.take_along_axis(d, i, axis=1)[:, 0].astype(buf.dtype)
+    return {key: pick(cache[key], delta[key]) for key in cache}
+
+
+def commit_prefill_chunk(caches: PyTree, deltas: PyTree, cache_len: jnp.ndarray,
+                         valid: jnp.ndarray, cfg: ArchConfig) -> PyTree:
+    """Apply :func:`verify_step` deltas as a prefill chunk: the caches come
+    out exactly as if positions ``cache_len .. cache_len+valid-1`` had been
+    prefilled monolithically (modulo fp reassociation of the chunked GEMMs);
+    padding positions (``>= valid``) never become visible."""
+    b = valid.shape[0]
+    clen = jnp.broadcast_to(jnp.asarray(cache_len, jnp.int32), (b,))
+    vld = jnp.asarray(valid, jnp.int32)
+    names = _stage_block_names(cfg)
+    stages = {}
+    for name, kind in zip(names, cfg.stage_pattern):
+        if kind == "cross":
+            stages[name] = caches["stages"][name]
+            continue
+        stages[name] = jax.vmap(
+            lambda c, d, kind=kind: _commit_chunk_block(kind, cfg, c, d,
+                                                        clen, vld)
+        )(caches["stages"][name], deltas["stages"][name])
+    tail = {}
+    for i, kind in enumerate(cfg.tail_pattern):
+        name = f"t{i}_{kind}"
+        tail[name] = _commit_chunk_block(kind, cfg, caches["tail"][name],
+                                         deltas["tail"][name], clen, vld)
+    return {"stages": stages, "tail": tail}
+
+
+def _commit_pool_chunk(cache: PyTree, delta: PyTree, clen: jnp.ndarray,
+                       valid: jnp.ndarray, write_from: jnp.ndarray,
+                       block_tables: jnp.ndarray, page_size: int) -> PyTree:
+    """Write a prefill chunk into one layer's page pools.
+
+    Unlike :func:`_commit_pool` the write set is *exact*: only positions in
+    ``[max(clen, write_from), clen + valid)`` land on real pages — padding
+    rows and positions below the per-row write floor divert to the sentinel.
+    The floor is what keeps shared prefixes sound: a request whose block
+    table starts with increfed (trie-owned) pages must never re-write them,
+    and a bucketed chunk tail must never leak pad KV into a page another
+    request can match (the ``prefill_bucket`` x chunking interaction)."""
+    t = delta["k"].shape[1]
+    mp = block_tables.shape[1]
+    pos = clen[:, None] + jnp.arange(t)[None, :]                 # (B, T)
+    pidx = pos // page_size
+    pid = jnp.take_along_axis(block_tables, jnp.clip(pidx, 0, mp - 1), axis=1)
+    off = jnp.mod(pos, page_size)
+    ok = ((pos >= write_from[:, None]) & (pos < (clen + valid)[:, None])
+          & (pidx < mp))
+    out = {}
+    for key in cache:
+        sentinel = cache[key].shape[0] - 1
+        pid_k = jnp.where(ok, pid, sentinel)
+        out[key] = cache[key].at[pid_k, off].set(
+            delta[key].astype(cache[key].dtype))
+    return out
+
+
+def commit_prefill_chunk_paged(caches: PyTree, deltas: PyTree,
+                               cache_len: jnp.ndarray, valid: jnp.ndarray,
+                               write_from: jnp.ndarray,
+                               block_tables: jnp.ndarray, cfg: ArchConfig, *,
+                               page_size: int) -> PyTree:
+    """Paged twin of :func:`commit_prefill_chunk`: attn chunks go through
+    the block tables with the shared-page write floor; every other kind
+    commits exactly as the dense chunk path."""
+    b = valid.shape[0]
+    clen = jnp.broadcast_to(jnp.asarray(cache_len, jnp.int32), (b,))
+    vld = jnp.asarray(valid, jnp.int32)
+    wf = jnp.asarray(write_from, jnp.int32)
+    bt = jnp.asarray(block_tables, jnp.int32)
+    names = _stage_block_names(cfg)
+    stages = {}
+    for name, kind in zip(names, cfg.stage_pattern):
+        if kind in ("attn", "moe_attn"):
+            stages[name] = jax.vmap(
+                lambda c, d: _commit_pool_chunk(c, d, clen, vld, wf, bt,
+                                                page_size)
+            )(caches["stages"][name], deltas["stages"][name])
+        elif kind == "cross":
+            stages[name] = caches["stages"][name]
+        else:
+            stages[name] = jax.vmap(
+                lambda c, d, kind=kind: _commit_chunk_block(kind, cfg, c, d,
+                                                            clen, vld)
+            )(caches["stages"][name], deltas["stages"][name])
+    tail = {}
+    for i, kind in enumerate(cfg.tail_pattern):
+        name = f"t{i}_{kind}"
+        if kind in ("attn", "moe_attn"):
+            tail[name] = _commit_pool_chunk(caches["tail"][name],
+                                            deltas["tail"][name], clen, vld,
+                                            wf, bt, page_size)
+        else:
+            tail[name] = _commit_chunk_block(kind, cfg, caches["tail"][name],
+                                             deltas["tail"][name], clen, vld)
     return {"stages": stages, "tail": tail}
 
 

@@ -63,13 +63,28 @@ def rglru_apply(qc: QuantContext, params: Dict, x_in: jnp.ndarray,
         valid = (jnp.arange(x_in.shape[1])[None, :] < lengths[:, None])[..., None]
         a = jnp.where(valid, a, 1.0)                          # carry h through pad
         b = jnp.where(valid, b, 0.0)
+        # serving prefill-into-slot: the sequential left fold.  A left fold
+        # splits exactly at any chunk boundary and steps in precisely
+        # rglru_verify / rglru_decode_step's per-token form, so chunked
+        # prefill reproduces the trajectory bit-for-bit (DESIGN.md §14) —
+        # the associative-scan tree reassociates intermediate states at the
+        # ulp level, which per-batch quantization amplifies into token flips.
 
-    def combine(e1, e2):
-        a1, b1 = e1
-        a2, b2 = e2
-        return a1 * a2, a2 * b1 + b2
+        def step(h_c, ab):
+            a_t, b_t = ab
+            h_n = a_t * h_c + b_t
+            return h_n, h_n
 
-    a_sc, h = jax.lax.associative_scan(combine, (a, b), axis=1)
+        _, h = jax.lax.scan(step, jnp.zeros_like(a[:, 0]),
+                            (jnp.moveaxis(a, 1, 0), jnp.moveaxis(b, 1, 0)))
+        h = jnp.moveaxis(h, 0, 1)                             # (B,L,Dr)
+    else:
+        def combine(e1, e2):
+            a1, b1 = e1
+            a2, b2 = e2
+            return a1 * a2, a2 * b1 + b2
+
+        _, h = jax.lax.associative_scan(combine, (a, b), axis=1)
     out = L.dense(qc, h * gate, params["out"])
     k = params["conv"]["w"].shape[0]
     l_ = x_in.shape[1]

@@ -126,8 +126,33 @@ def ssm_apply(qc: QuantContext, params: Dict, x_in: jnp.ndarray, cfg,
     a = -jnp.exp(params["a_log"])
     b_, l_ = x_in.shape[0], x_in.shape[1]
     xh = xs.reshape(b_, l_, d["heads"], d["p"])
-    y, s_final = ssd_chunked(xh, dt, a, bv, cv, chunk=chunk)
-    y = y + params["d_skip"][None, None, :, None] * xh
+    if lengths is not None:
+        # serving prefill-into-slot: sequential left fold in exactly
+        # ssm_verify / ssm_decode_step's per-token form.  A left fold splits
+        # exactly at any chunk boundary, so chunked prefill reproduces the
+        # state trajectory bit-for-bit (DESIGN.md §14); ssd_chunked's
+        # GEMM-recast reassociates sums at the ulp level, which per-batch
+        # quantization amplifies into token flips.
+        da = jnp.exp(dt * a)                                # (B,L,H)
+
+        def step(s_c, inp):
+            dt_j, da_j, bv_j, cv_j, xh_j = inp
+            s_n = s_c * da_j[:, :, None, None] + jnp.einsum(
+                "bh,bn,bhp->bhpn", dt_j, bv_j, xh_j)
+            y_j = (jnp.einsum("bn,bhpn->bhp", cv_j, s_n)
+                   + params["d_skip"][None, :, None] * xh_j)
+            return s_n, y_j
+
+        s0 = jnp.zeros((b_, d["heads"], d["p"], d["n"]), xh.dtype)
+        s_final, y = jax.lax.scan(
+            step, s0,
+            (jnp.moveaxis(dt, 1, 0), jnp.moveaxis(da, 1, 0),
+             jnp.moveaxis(bv, 1, 0), jnp.moveaxis(cv, 1, 0),
+             jnp.moveaxis(xh, 1, 0)))
+        y = jnp.moveaxis(y, 0, 1)                           # (B,L,H,P)
+    else:
+        y, s_final = ssd_chunked(xh, dt, a, bv, cv, chunk=chunk)
+        y = y + params["d_skip"][None, None, :, None] * xh
     y = y.reshape(b_, l_, d["d_inner"])
     y = L.rmsnorm(params["norm"], y * jax.nn.silu(z))
     out = L.dense(qc, y, params["out_proj"])

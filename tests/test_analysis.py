@@ -305,7 +305,9 @@ def test_committed_budget_ledger_holds():
     the ledger covers every contracted budget_key."""
     ledger = AB.load_budgets()
     assert set(ledger) == {"decode", "decode_masked", "spec_decode",
-                           "prefill", "decode_paged", "spec_decode_paged"}
+                           "spec_decode_masked", "prefill", "decode_paged",
+                           "spec_decode_paged", "spec_decode_paged_masked",
+                           "prefill_chunk", "prefill_chunk_paged"}
     assert AB.check_budgets(strict=False) == []
 
 
@@ -314,7 +316,8 @@ def test_fused_decode_has_no_host_callbacks(setup):
     cfg, params = setup
     steps = AB._fixture_steps()
     for entry in ("decode", "decode_masked", "spec_decode", "decode_paged",
-                  "spec_decode_paged"):
+                  "spec_decode_paged", "prefill_chunk",
+                  "prefill_chunk_paged"):
         fn, args = steps[entry]
         assert A.count_host_callbacks(fn, *args) == 0, entry
 
@@ -374,6 +377,10 @@ def _run_censused(eng, prompts, *, max_new_tokens, qualities=None):
         orig_decode_for(b), f"decode[k={b}]")
     if eng._spec is not None:
         eng._spec = census.wrap_dispatch(eng._spec, "spec")
+    if getattr(eng, "chunked", False):
+        orig_chunk_for = eng._chunk_for
+        eng._chunk_for = lambda b: census.wrap_dispatch(
+            orig_chunk_for(b), f"chunk[k={b}]")
     ids = []
     for i, p in enumerate(prompts):
         q = qualities[i % len(qualities)] if qualities else "full"
@@ -392,6 +399,36 @@ def test_transfer_census_plain_slots(setup):
     assert census.rounds > 0
     assert census.check(max_per_round=1) == []
     assert all(len(v) == 5 for v in out.values())
+
+
+def test_transfer_census_chunked_prefill(setup):
+    """Chunked-prefill engine: one host transfer per fused chunk round —
+    splicing live decode rows into the chunk dispatch must not add a second
+    per-round transfer (DESIGN.md §14)."""
+    cfg, params = setup
+    eng = Engine(cfg, params, serve_cfg=ServeConfig(
+        max_seq=48, max_slots=3, prefill_chunk=8))
+    out, census = _run_censused(eng, _prompts(cfg, [19, 8, 12, 21]),
+                                max_new_tokens=5)
+    assert census.rounds > 0
+    assert census.check(max_per_round=1) == []
+    assert all(len(v) == 5 for v in out.values())
+
+
+def test_transfer_census_prefix_cached(setup):
+    """Paged prefix-cache engine: shared-prefix admission (trie walk,
+    increfs, recompute-row planning) stays host-side — the fused rounds
+    still issue exactly one transfer each."""
+    cfg, params = setup
+    eng = Engine(cfg, params, serve_cfg=ServeConfig(
+        max_seq=48, max_slots=3, paged=True, page_size=8, num_pages=48,
+        prefill_chunk=8, prefix_cache=True))
+    common = _prompts(cfg, [16], seed=3)[0]
+    tails = _prompts(cfg, [5, 9, 7], seed=4)
+    out, census = _run_censused(eng, [common + t for t in tails],
+                                max_new_tokens=4)
+    assert census.rounds > 0
+    assert census.check(max_per_round=1) == []
 
 
 def test_transfer_census_speculative(setup):

@@ -1,0 +1,394 @@
+"""Chunked prefill + shared-prefix (radix) caching (DESIGN.md §14).
+
+Three layers, all mandatory:
+
+* **allocator/trie property suite** — hypothesis-driven op sequences over
+  :class:`repro.infer.kvcache.PageAllocator` and
+  :class:`repro.infer.kvcache.PrefixCache`: no double-free, no leak, and
+  the conservation law ``free_pages + |{ref > 0}| == num_pages`` holds at
+  every step (deterministic sweeps cover the same invariants when
+  hypothesis is absent);
+* **token-identity matrix** — subprocess engine runs (test_dist_serving's
+  isolation idiom) assert chunked / prefix-cached serving is TOKEN-
+  IDENTICAL to monolithic uncached prefill across the attn, local+rglru
+  and ssm arch classes, plain / speculative / QoS-tiered, cold and warm.
+  Identity cases pin FP or weight-only (W4A16) policies: per-batch dynamic
+  activation quantization (a_terms > 0) makes activation scales a function
+  of the whole dispatched tensor, so chunked-vs-monolithic bit-identity is
+  undefined there by construction (DESIGN.md §14);
+* **bucket-pad regression** — a prompt whose bucket-padded tail overhangs
+  its true length must not prefill pad rows into shared (increfed) prefix
+  pages: a warm sharer of those pages still decodes identically.
+"""
+import os
+import subprocess
+import sys
+import textwrap
+
+import numpy as np
+import pytest
+
+from _hyp import given, settings, st
+from repro.infer.kvcache import PageAllocator, PrefixCache
+
+REPO = os.path.dirname(os.path.dirname(os.path.abspath(__file__)))
+
+
+# ===========================================================================
+# PageAllocator: refcounted sharing
+# ===========================================================================
+def _conserved(alloc):
+    """The conservation law: every page is exactly one of free / referenced."""
+    live = int(np.count_nonzero([alloc.refcount(p) >= 1
+                                 for p in range(alloc.num_pages)]))
+    assert alloc.free_pages + live == alloc.num_pages
+    alloc.check()
+
+
+def test_alloc_free_roundtrip():
+    a = PageAllocator(8)
+    pages = a.alloc(5)
+    assert len(pages) == 5 and a.pages_in_use == 5
+    assert all(a.refcount(p) == 1 for p in pages)
+    _conserved(a)
+    a.free(pages)
+    assert a.pages_in_use == 0 and a.free_pages == 8
+    _conserved(a)
+
+
+def test_alloc_all_or_nothing():
+    a = PageAllocator(4)
+    assert a.alloc(5) is None          # over-ask: nothing allocated
+    assert a.pages_in_use == 0
+    got = a.alloc(4)
+    assert a.alloc(1) is None and len(got) == 4
+    _conserved(a)
+
+
+def test_incref_shares_and_free_releases_once():
+    a = PageAllocator(4)
+    pages = a.alloc(2)
+    a.incref(pages)                    # second sharer
+    a.free(pages)                      # first sharer releases
+    assert a.pages_in_use == 2         # still held
+    _conserved(a)
+    a.free(pages)                      # last reference
+    assert a.pages_in_use == 0
+    _conserved(a)
+
+
+def test_double_free_and_foreign_ops_raise():
+    a = PageAllocator(4)
+    pages = a.alloc(1)
+    a.free(pages)
+    with pytest.raises(ValueError):
+        a.free(pages)                  # double free
+    with pytest.raises(ValueError):
+        a.free([99])                   # foreign page
+    with pytest.raises(ValueError):
+        a.incref(pages)                # incref of a freed page
+    a.free([a.sentinel])               # sentinel frees are ignored
+    _conserved(a)
+
+
+@settings(max_examples=200, deadline=None)
+@given(st.lists(st.tuples(st.sampled_from(["alloc", "incref", "free"]),
+                          st.integers(0, 5)), max_size=60),
+       st.integers(1, 12))
+def test_allocator_property_no_leak_no_double_free(ops, num_pages):
+    """Random alloc/incref/free interleavings against a shadow model:
+    conservation holds at every step, operations past the shadow's
+    outstanding references raise (never corrupt), and releasing every
+    outstanding reference returns the pool to fully-free."""
+    a = PageAllocator(num_pages)
+    held = []                                      # one entry per reference
+    for op, n in ops:
+        if op == "alloc":
+            got = a.alloc(n)
+            if got is not None:
+                held.extend(got)
+        elif op == "incref" and held:
+            p = held[n % len(held)]
+            a.incref([p])
+            held.append(p)
+        elif op == "free" and held:
+            p = held.pop(n % len(held))
+            a.free([p])
+        _conserved(a)
+    for p in held:
+        a.free([p])
+    assert a.free_pages == a.num_pages
+    _conserved(a)
+
+
+# ===========================================================================
+# PrefixCache: radix trie insert / match / evict
+# ===========================================================================
+def _toks(rng, n):
+    return rng.integers(0, 50, n).tolist()
+
+
+def test_trie_match_increfs_and_insert_adopts():
+    a = PageAllocator(16)
+    pc = PrefixCache(a, page_size=4)
+    rng = np.random.default_rng(0)
+    prompt = _toks(rng, 10)                        # 2 full pages + tail
+    row = a.alloc(3)                               # the cold request's row
+    assert pc.match(prompt) == ([], 0)             # cold miss
+    assert pc.insert(prompt, row) == 2             # only FULL pages adopt
+    pc.check(); _conserved(a)
+    a.free(row)                                    # request retires
+    assert a.pages_in_use == 2                     # trie keeps its own refs
+    pages, n = pc.match(prompt)                    # warm sharer
+    assert n == 8 and pages == row[:2]
+    assert all(a.refcount(p) == 2 for p in pages)  # trie + caller
+    a.free(pages)
+    pc.release_all()
+    assert a.pages_in_use == 0
+    _conserved(a)
+
+
+def test_trie_evict_lru_spares_referenced_pages():
+    a = PageAllocator(16)
+    pc = PrefixCache(a, page_size=2)
+    rng = np.random.default_rng(1)
+    pa, pb = _toks(rng, 4), _toks(rng, 4)
+    ra, rb = a.alloc(2), a.alloc(2)
+    pc.insert(pa, ra); a.free(ra)
+    pc.insert(pb, rb); a.free(rb)
+    held, _ = pc.match(pa)                         # caller still holds pa
+    assert pc.evict(10) == 2                       # only pb's chain evicts
+    assert a.refcount(held[-1]) >= 1
+    pc.check(); _conserved(a)
+    a.free(held)
+    assert pc.evict(10) == 2                       # now pa's chain goes too
+    assert a.pages_in_use == 0
+    _conserved(a)
+
+
+@settings(max_examples=100, deadline=None)
+@given(st.lists(st.tuples(st.sampled_from(["admit", "evict", "retire"]),
+                          st.integers(0, 7)), max_size=40),
+       st.integers(1, 3))
+def test_trie_property_conservation(ops, page_size):
+    """Random admit (match + alloc suffix + insert) / retire / evict
+    sequences: trie and allocator audits pass at every step, and draining
+    everything returns the pool to fully-free — no page is ever freed while
+    the trie or a live row still references it, none leaks."""
+    a = PageAllocator(12)
+    pc = PrefixCache(a, page_size)
+    rng = np.random.default_rng(42)
+    pool = [_toks(rng, page_size * k) for k in (1, 2, 3, 2, 1, 3, 2, 1)]
+    rows = []                                      # live block-table rows
+    for op, i in ops:
+        if op == "admit":
+            toks = pool[i % len(pool)]
+            matched, n = pc.match(toks)
+            need = (len(toks) - n) // page_size
+            fresh = a.alloc(need)
+            if fresh is None:
+                pc.evict(need)
+                fresh = a.alloc(need)
+            if fresh is None:
+                a.free(matched)                    # admission failed: undo
+            else:
+                row = matched + fresh
+                pc.insert(toks, row)
+                rows.append(row)
+        elif op == "retire" and rows:
+            a.free(rows.pop(i % len(rows)))
+        elif op == "evict":
+            pc.evict(i)
+        pc.check(); _conserved(a)
+    for row in rows:
+        a.free(row)
+    pc.release_all()
+    assert pc.evict(1) == 0 and a.pages_in_use == 0
+    _conserved(a)
+
+
+# ===========================================================================
+# token-identity matrix (subprocess isolation, test_dist_serving's idiom)
+# ===========================================================================
+def _run(*parts: str, timeout=560):
+    py_src = "\n".join(textwrap.dedent(p) for p in parts)
+    assert "OK" in py_src.rsplit("print", 1)[-1], "test body must print ...OK"
+    env = dict(os.environ)
+    env["PYTHONPATH"] = os.path.join(REPO, "src")
+    env["REPRO_NO_PALLAS"] = "1"
+    out = subprocess.run([sys.executable, "-c", py_src],
+                         capture_output=True, text=True, timeout=timeout,
+                         env=env)
+    assert out.returncode == 0, f"STDOUT:\n{out.stdout}\nSTDERR:\n{out.stderr[-3000:]}"
+    assert "OK" in out.stdout, f"script did not reach its OK print:\n{out.stdout}"
+    return out.stdout
+
+
+_COMMON = """
+    import jax, jax.numpy as jnp, numpy as np
+    from repro.configs.base import get_arch
+    from repro.core.policy import ExpansionPolicy
+    from repro.infer.serve import Engine, ServeConfig
+    from repro.models import model as M
+
+    W4A16 = ExpansionPolicy(w_bits=4, a_bits=16, w_terms=2, a_terms=0)
+    W4A16_T3 = ExpansionPolicy(w_bits=4, a_bits=16, w_terms=3, a_terms=0)
+
+    def build(arch):
+        cfg = get_arch(arch, smoke=True)
+        return cfg, M.init_params(jax.random.PRNGKey(0), cfg)
+
+    def prompts(cfg, lens, seed=1, prefix=0):
+        rng = np.random.default_rng(seed)
+        common = rng.integers(0, cfg.vocab_size, prefix).tolist()
+        return [common + rng.integers(0, cfg.vocab_size, l).tolist()
+                for l in lens]
+
+    def serve(cfg, params, sc, reqs, policy=None, qualities=None, max_new=8):
+        eng = Engine(cfg, params, policy=policy, serve_cfg=sc)
+        ids = []
+        for i, p in enumerate(reqs):
+            kw = {"quality": qualities[i % len(qualities)]} if qualities else {}
+            ids.append(eng.add_request(p, **kw))
+        out = eng.run(max_new_tokens=max_new)
+        return [list(out[i]) for i in ids], eng.last_run_stats
+
+    def assert_identical(a, b, tag):
+        for i, (x, y) in enumerate(zip(a, b)):
+            assert x == y, (tag, i, x, y)
+"""
+
+
+# {chunked vs monolithic} x {attn, local+rglru, ssm} x {fp, w4a16}, with
+# slot recycling (n_req > slots) and mixed non-bucket-aligned lengths
+@pytest.mark.parametrize("arch,quant", [
+    ("qwen2_1_5b", "fp"), ("qwen2_1_5b", "w4a16"),
+    ("recurrentgemma_9b", "w4a16"), ("mamba2_780m", "w4a16"),
+])
+def test_identity_chunked_dense(arch, quant):
+    _run(_COMMON, f"""
+    cfg, params = build({arch!r})
+    pol = None if {quant!r} == "fp" else W4A16
+    reqs = prompts(cfg, [5, 19, 9, 21, 13])
+    base = dict(max_seq=64, max_slots=3)
+    mono, _ = serve(cfg, params, ServeConfig(**base), reqs, policy=pol)
+    chunk, _ = serve(cfg, params, ServeConfig(**base, prefill_chunk=8),
+                     reqs, policy=pol)
+    assert_identical(mono, chunk, "chunked-vs-monolithic")
+    print("OK")
+    """)
+
+
+def test_identity_prefix_cold_and_warm():
+    """Paged + prefix: the cold pass (trie empty), a warm same-run sharer,
+    and a warm second run all match the uncached monolithic engine; warm
+    passes actually reuse pages, and the run ends with zero pages in use."""
+    _run(_COMMON, """
+    cfg, params = build("qwen2_1_5b")
+    reqs = prompts(cfg, [5, 13, 9, 21], prefix=16)
+    base = dict(max_seq=64, max_slots=2, paged=True, page_size=8,
+                num_pages=64)
+    mono, _ = serve(cfg, params, ServeConfig(**base), reqs, policy=W4A16)
+    eng = Engine(cfg, params, policy=W4A16, serve_cfg=ServeConfig(
+        **base, prefill_chunk=8, prefix_cache=True))
+    ids = [eng.add_request(p) for p in reqs]
+    out = eng.run(max_new_tokens=8)
+    st1 = eng.last_run_stats
+    assert_identical(mono, [list(out[i]) for i in ids], "cold+warm run 1")
+    assert st1["prefix"]["tokens_reused"] > 0, st1["prefix"]
+    assert st1["paged"]["pages_in_use_end"] == 0, st1
+    # second run on the SAME engine: the trie survives between runs, so
+    # every request warm-hits the shared prefix now
+    ids = [eng.add_request(p) for p in reqs]
+    out = eng.run(max_new_tokens=8)
+    st2 = eng.last_run_stats
+    assert_identical(mono, [list(out[i]) for i in ids], "warm run 2")
+    assert st2["prefix"]["tokens_reused"] >= st1["prefix"]["tokens_reused"]
+    assert st2["paged"]["pages_in_use_end"] == 0, st2
+    print("OK")
+    """)
+
+
+def test_identity_chunked_speculative():
+    """Self-speculative decoding over chunked prefill: token-identical to
+    the monolithic speculative engine (greedy spec is itself identical to
+    non-spec, so this pins the whole chain)."""
+    _run(_COMMON, """
+    cfg, params = build("qwen2_1_5b")
+    reqs = prompts(cfg, [5, 17, 9, 12])
+    base = dict(max_seq=64, max_slots=2, spec_terms=1, spec_lookahead=2)
+    mono, _ = serve(cfg, params, ServeConfig(**base), reqs, policy=W4A16_T3)
+    chunk, _ = serve(cfg, params, ServeConfig(**base, prefill_chunk=8),
+                     reqs, policy=W4A16_T3)
+    assert_identical(mono, chunk, "spec")
+    print("OK")
+    """)
+
+
+def test_identity_chunked_qos_tiers():
+    """Mixed-quality (term-truncated) requests over chunked prefill match
+    the monolithic tiered engine tier-for-tier.  Load-adaptive degradation
+    is pinned OFF: it keys on queue depth per scheduler ROUND, and chunked
+    fills take more rounds than a monolithic prefill, so the two engines
+    would legitimately degrade over different token windows — identity is
+    only defined for the static tier budgets."""
+    _run(_COMMON, """
+    from repro.infer.qos import DegradeConfig
+    cfg, params = build("qwen2_1_5b")
+    reqs = prompts(cfg, [5, 18, 9, 13])
+    quals = ["full", "k2", "k1", "k2"]
+    base = dict(max_seq=64, max_slots=2,
+                tier_budgets=(("k2", 2), ("k1", 1)),
+                degrade=DegradeConfig(enabled=False))
+    mono, _ = serve(cfg, params, ServeConfig(**base), reqs,
+                    policy=W4A16_T3, qualities=quals)
+    chunk, _ = serve(cfg, params, ServeConfig(**base, prefill_chunk=8),
+                     reqs, policy=W4A16_T3, qualities=quals)
+    assert_identical(mono, chunk, "qos")
+    print("OK")
+    """)
+
+
+def test_bucket_pad_never_writes_shared_pages():
+    """Regression (chunk tail x shared pages): prompt lengths sit just past
+    a page boundary, so the final chunk's bucket padding overhangs into the
+    region a LATER sharer will extend.  If pad rows were committed past
+    ``valid`` (or below the per-row ``write_from`` floor on matched pages),
+    the warm request would read corrupted prefix KV and diverge from the
+    monolithic engine."""
+    _run(_COMMON, """
+    cfg, params = build("qwen2_1_5b")
+    # 16-token shared prefix = 2 full pages; suffixes of 1 and 3 tokens put
+    # every true length barely past the shared boundary while the chunk
+    # (and bucket) padding extends well beyond it
+    reqs = prompts(cfg, [1, 3, 1, 3], prefix=16)
+    base = dict(max_seq=64, max_slots=2, paged=True, page_size=8,
+                num_pages=48, prefill_bucket=16)
+    mono, _ = serve(cfg, params, ServeConfig(**base), reqs, policy=W4A16)
+    cached, stats = serve(cfg, params, ServeConfig(
+        **base, prefill_chunk=8, prefix_cache=True), reqs, policy=W4A16)
+    assert_identical(mono, cached, "bucket-pad")
+    assert stats["prefix"]["tokens_reused"] > 0, stats["prefix"]
+    assert stats["paged"]["pages_in_use_end"] == 0, stats
+    print("OK")
+    """)
+
+
+def test_fully_cached_prompt_recompute_row():
+    """A prompt whose pages are ALL cached still needs its last position's
+    logits: the scheduler recomputes exactly one row (start = len-1) from
+    shared pages without writing them, and output stays identical."""
+    _run(_COMMON, """
+    cfg, params = build("qwen2_1_5b")
+    # identical 24-token prompts: the second is fully covered by the trie
+    reqs = prompts(cfg, [0, 0], prefix=24)
+    base = dict(max_seq=64, max_slots=2, paged=True, page_size=8,
+                num_pages=48)
+    mono, _ = serve(cfg, params, ServeConfig(**base), reqs, policy=W4A16)
+    cached, stats = serve(cfg, params, ServeConfig(
+        **base, prefill_chunk=8, prefix_cache=True), reqs, policy=W4A16)
+    assert_identical(mono, cached, "fully-cached")
+    assert stats["prefix"]["tokens_reused"] > 0, stats["prefix"]
+    assert stats["paged"]["pages_in_use_end"] == 0, stats
+    print("OK")
+    """)
