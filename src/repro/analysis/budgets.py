@@ -22,7 +22,12 @@ all measured on the ``qwen2_1_5b`` smoke arch, W8A8, reference path):
 * ``prefill_chunk`` / ``prefill_chunk_paged`` — the chunk-fused
   decode+prefill round (DESIGN.md §14);
 * ``spec_decode_masked`` / ``spec_decode_paged_masked`` — the row-masked
-  speculative rounds chunked engines dispatch.
+  speculative rounds chunked engines dispatch;
+* ``decode_moe`` — the masked decode step on the ``moe_attn`` smoke arch
+  (``grok_1_314b``, stats rider on): its ``dot_general`` ceiling pins the
+  grouped series-GEMM dispatch count at O(terms) per MoE layer — a regression
+  to per-expert loops (O(E·terms) dispatches) blows the budget (DESIGN.md
+  §15).
 
 Heavy imports (jax, the model zoo) happen inside functions only: importing
 this module costs nothing, so ``python -m repro.analysis`` can lint without
@@ -45,7 +50,8 @@ BUDGETED_KEYS = ("dot_general", "pallas_call", "callbacks", "round",
 #: the fixture every entry is measured on (committed alongside the numbers
 #: so a ledger mismatch is attributable)
 FIXTURE = {"arch": "qwen2_1_5b", "smoke": True, "policy": "W8A8",
-           "max_seq": 32, "batch": 2, "spec_lookahead": 2, "page_size": 8}
+           "max_seq": 32, "batch": 2, "spec_lookahead": 2, "page_size": 8,
+           "moe_arch": "grok_1_314b"}
 
 
 def load_budgets(path: str = LEDGER_PATH) -> Dict[str, Dict[str, int]]:
@@ -130,6 +136,20 @@ def _fixture_steps():
     spec_paged_masked = S.make_paged_spec_decode_step(
         cfg, qc, qc_draft, fx["spec_lookahead"], page, masked=True)
 
+    # MoE serving entry (DESIGN.md §15): the masked decode step on the
+    # moe_attn smoke arch, serving-contract routing ("token") with the
+    # expert-load stats rider on.  Its dot_general ceiling is what pins the
+    # grouped series GEMM at O(terms) dispatches per MoE layer.
+    import repro.configs.grok_1_314b  # noqa: F401 (registers the arch)
+    mcfg = get_arch(fx["moe_arch"], smoke=True)
+    mqc = dataclasses.replace(qc, moe_routing="token")
+    mparams = PTQ.expand_params(M.init_params(jax.random.PRNGKey(2), mcfg),
+                                W8A8)
+    _, mcaches = M.prefill(mparams, {"tokens": prompt}, mcfg, mqc,
+                           s_max=s_max)
+    moe_step = S.make_decode_sample_step(mcfg, mqc, masked=True,
+                                         moe_stats=True)
+
     return {
         "decode": (decode, (params_q, tok, caches, cache_len, key, alive,
                             eos, temp)),
@@ -153,6 +173,8 @@ def _fixture_steps():
         "spec_decode_paged_masked": (spec_paged_masked,
                                      (params_q, tok, pcaches, cache_len, bt,
                                       row_mask)),
+        "decode_moe": (moe_step, (mparams, tok, mcaches, cache_len, key,
+                                  alive, eos, temp, row_mask)),
     }
 
 

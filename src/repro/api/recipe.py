@@ -42,9 +42,9 @@ class QuantRecipe:
               it None.
       smoke:  whether ``arch`` refers to the smoke-scaled config.
       placement: default multi-device placement a Runtime binds this
-              artifact under (``replicated`` | ``term`` | ``tensor``, see
-              DESIGN.md §9) — recorded intent; ``Runtime(placement=...)``
-              overrides it per deployment.
+              artifact under (``replicated`` | ``term`` | ``tensor`` |
+              ``expert``, see DESIGN.md §9 and §15) — recorded intent;
+              ``Runtime(placement=...)`` overrides it per deployment.
       spec_terms: default self-speculative draft budget (DESIGN.md §10):
               serve with the first K series terms as the draft model,
               verified by the full series.  Recorded intent like
@@ -86,6 +86,12 @@ class QuantRecipe:
                 f"placement='term' distributes series terms; method "
                 f"{self.method!r} produces plain FP reconstructions with no "
                 f"term axis (use placement='tensor' or 'replicated')")
+        if self.placement == "expert" and self.method != "fpxint":
+            raise ValueError(
+                f"placement='expert' shards stacked expert expansions over "
+                f"the grouped series GEMM; method {self.method!r} produces "
+                f"plain FP reconstructions with no expansion to shard "
+                f"(use placement='tensor' or 'replicated')")
         if self.spec_terms < 0:
             raise ValueError(f"spec_terms must be >= 0, got {self.spec_terms}")
         if self.spec_terms > 0 and self.method != "fpxint":

@@ -25,8 +25,10 @@ A Runtime resolves the model config from the artifact's recorded ``arch``
 Multi-device serving (DESIGN.md §9): ``Runtime(artifact, mesh=...,
 placement=...)`` binds the artifact *placed* over a 1-D device mesh —
 ``"term"`` scatters series terms (Theorem-2 expansion parallelism, one psum
-per expanded GEMM), ``"tensor"`` shards output-feature columns, and
-``"replicated"`` (the default) keeps the single-device layout.  The
+per expanded GEMM), ``"tensor"`` shards output-feature columns, ``"expert"``
+shards stacked MoE expert expansions over an ``"expert"`` axis (grouped
+series GEMM + int32 psum, DESIGN.md §15), and ``"replicated"`` (the
+default) keeps the single-device layout.  The
 placement defaults from ``recipe.placement``; ``apply``/``lm_loss``/
 ``serve`` all run under it.
 """
@@ -70,6 +72,11 @@ class Runtime:
                 raise ValueError(
                     f"placement='term' distributes series terms; method "
                     f"{artifact.method!r} has no term axis — use 'tensor'")
+            if placement == "expert" and not artifact.expanded:
+                raise ValueError(
+                    f"placement='expert' shards stacked expert expansions; "
+                    f"method {artifact.method!r} has no expansion to shard "
+                    f"— use 'tensor'")
             if mesh is None:
                 mesh = make_serve_mesh(0, placement)
         self.artifact = artifact
@@ -77,8 +84,8 @@ class Runtime:
         self.mesh = mesh
         self.placement = placement
         qc = artifact.quant_context(backend)
-        if placement == "term":
-            qc = dataclasses.replace(qc, mesh=mesh, placement="term")
+        if placement in ("term", "expert"):
+            qc = dataclasses.replace(qc, mesh=mesh, placement=placement)
         self.qc = qc
         self.params = place_params(artifact.runtime_params(backend), mesh,
                                    placement)

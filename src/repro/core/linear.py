@@ -145,6 +145,87 @@ def expanded_apply(
     return out.reshape(*lead, n)
 
 
+def _grouped_epilogue(out: jnp.ndarray, xt: jnp.ndarray, bias_a, sigma,
+                      w_et: ExpandedTensor) -> jnp.ndarray:
+    """Eq. 4 affine corrections, batched over the leading expert axis —
+    shared verbatim by the local grouped apply and the expert-parallel
+    executor so the two stay bit-identical."""
+    wv = w_et.unbatched_view()
+
+    def _epi(out_e, xt_e, bias_a_e, sigma_e, we):
+        if we.bias is not None:
+            out_e = out_e + jnp.sum(xt_e, axis=-1, keepdims=True) * we.bias
+        if we.sat is not None:
+            out_e = out_e + xt_e @ we.sat
+        if bias_a_e is not None:
+            out_e = out_e + bias_a_e * full_colsum(we)[None, :]
+        if sigma_e is not None:
+            out_e = out_e + sigma_e @ E.reconstruct(we)
+        return out_e
+
+    return jax.vmap(_epi)(out, xt, bias_a, sigma, wv)
+
+
+def grouped_expanded_apply(
+    x: jnp.ndarray,
+    w_et: ExpandedTensor,
+    policy: ExpansionPolicy,
+    *,
+    a_bits: Optional[int] = None,
+    a_terms: Optional[int] = None,
+    use_kernel: bool = False,
+    term_budget: Optional[int] = None,
+) -> jnp.ndarray:
+    """Batched (per-expert) twin of :func:`expanded_apply`.
+
+    x: (E, M, K); ``w_et`` is a ``batch_dims == 1`` stacked expansion with
+    planes (E, tw, K, N) — independent quantizers per expert
+    (``expand_batched``).  Activation params are computed per expert
+    (matching a Python loop of per-slice ``expanded_apply`` bit-for-bit),
+    but the series GEMM runs as ONE grouped dispatch over the expert axis
+    (``ops.grouped_series_matmul``), so the MXU dispatch count is O(terms),
+    not O(E * terms).  Returns (E, M, N) f32."""
+    if w_et.batch_dims != 1:
+        raise ValueError(
+            f"grouped_expanded_apply needs batch_dims=1, got {w_et}")
+    a_bits = a_bits if a_bits is not None else policy.a_bits
+    a_terms = a_terms if a_terms is not None else policy.a_terms
+    if term_budget is not None:
+        w_et = E.truncate(w_et, term_budget)
+    if w_et.packed:
+        w_et = E.unpack(w_et)
+    e, m, k = x.shape
+    n = w_et.orig_shape[-1]
+    x32 = x.astype(jnp.float32)
+    tw = w_et.num_terms
+
+    if a_terms <= 0 or a_bits >= 16:
+        # weight-only: exact FP activation x per-expert reconstructed weight
+        wv = w_et.unbatched_view()
+
+        def _one(xe, we):
+            scales = we.scales if we.per_channel else \
+                jnp.broadcast_to(we.scales[:, None], (we.num_terms, n))
+            out_e = ops.dequant_matmul(xe, we.planes, scales)
+            if we.bias is not None:
+                out_e = out_e + jnp.sum(xe, axis=-1, keepdims=True) * we.bias
+            if we.sat is not None:
+                out_e = out_e + xe @ we.sat
+            return out_e
+
+        return jax.vmap(_one)(x32, wv)
+
+    xt, bias_a, sigma, a_scale1 = jax.vmap(
+        lambda xe: _dynamic_act_params(xe, policy, a_bits))(x32)
+
+    w_scales = w_et.scales if w_et.per_channel else \
+        jnp.broadcast_to(w_et.scales[..., None], (e, tw, n))
+    out = ops.grouped_series_matmul(
+        xt, a_scale1, w_et.planes, w_scales,
+        a_bits=a_bits, a_terms=a_terms, use_kernel=use_kernel)
+    return _grouped_epilogue(out, xt, bias_a, sigma, w_et)
+
+
 def dense(x: jnp.ndarray, w, policy: Optional[ExpansionPolicy] = None, **kw) -> jnp.ndarray:
     """Dispatch: ExpandedTensor -> expanded_apply; plain array -> x @ w."""
     if isinstance(w, ExpandedTensor):

@@ -1,0 +1,318 @@
+"""Expert parallelism: stacked MoE expansions sharded over an "expert" axis.
+
+The third serving placement (DESIGN.md §15).  A stacked per-expert
+expansion (``expand_batched``: planes ``(E, tw, K, N)``, independent
+quantizers per expert) scatters its *expert* axis over a 1-D ``"expert"``
+mesh axis; every device runs the grouped series GEMM for its local experts
+and ONE ``psum`` combines the per-expert INT32 accumulators — the Abelian
+contract of DESIGN.md §9 on a second mesh axis.  Each global accumulator
+slot is written by exactly one device (zeros — the group identity —
+elsewhere), so the integer psum is exact for ANY device count: the f32
+epilogue (dyadic scale folds, Eq. 4 affine corrections, router
+dispatch/combine einsums) runs replicated, bit-identically on every
+device, which is what makes expert-parallel serving token-identical to the
+replicated oracle.
+
+Composition with term parallelism: :func:`make_moe_mesh` builds a 2-D
+``("expert", "expand")`` mesh.  Expert kernels shard their expert axis over
+``"expert"`` (their term axis stays replicated — the expert axis is the
+distribution unit); dense/attention expansions term-shard over ``"expand"``
+exactly as under ``placement="term"`` (``QuantContext.term_parallel`` is
+true on such a mesh), so the two integer-psum contracts coexist, one per
+axis.
+
+Two entry layers, mirroring ``dist/expansion_parallel.py``:
+
+* :func:`grouped_parallel_apply` — the distributed twin of
+  ``core.linear.grouped_expanded_apply`` (used by ``models.moe._expert_mm``
+  when a ``QuantContext`` carries ``placement="expert"``);
+* :func:`shard_moe_params` — the artifact-bind step: MoE expert kernels
+  scatter their expert axis; router/attention/norm/dense leaves replicate
+  (or term-shard when the mesh carries a non-trivial ``"expand"`` axis).
+"""
+from __future__ import annotations
+
+import dataclasses
+from functools import partial
+from typing import Any
+
+import jax
+import jax.numpy as jnp
+from jax.experimental.shard_map import shard_map
+from jax.sharding import Mesh, NamedSharding, PartitionSpec as P
+
+from repro.analysis.contracts import annotate as _contract
+from repro.core import expansion as E
+from repro.core import linear as LIN
+from repro.core.expansion import ExpandedTensor
+from repro.core.policy import ExpansionPolicy
+from repro.kernels import ref
+
+AXIS = "expert"
+
+#: subtree key whose GEMM kernels are stacked per-expert (models/moe.py)
+_MOE_KEY = "moe"
+_EXPERT_KERNELS = ("wi", "wg", "wo")
+
+PyTree = Any
+
+
+def make_moe_mesh(n_expert: int, n_term: int = 1) -> Mesh:
+    """Mesh for expert-parallel serving: 1-D ``("expert",)`` when
+    ``n_term == 1``, else the 2-D ``("expert", "expand")`` composition
+    (expert kernels shard experts; dense kernels shard series terms)."""
+    import numpy as np
+
+    n = n_expert * n_term
+    if n > jax.device_count():
+        raise ValueError(
+            f"mesh wants {n} devices; only {jax.device_count()} visible "
+            f"(set XLA_FLAGS=--xla_force_host_platform_device_count={n} "
+            f"for a fake-device mesh)")
+    devs = np.array(jax.devices()[:n])
+    if n_term == 1:
+        return Mesh(devs, (AXIS,))
+    return Mesh(devs.reshape(n_expert, n_term), (AXIS, "expand"))
+
+
+# ---------------------------------------------------------------------------
+# artifact-bind placement
+# ---------------------------------------------------------------------------
+def _is_expert_leaf(path) -> bool:
+    """Is this tree path a stacked per-expert GEMM kernel?  MoE expert
+    kernels live under a ``"moe"`` subtree at keys ``wi``/``wg``/``wo``
+    (``models/moe.py``); the router and the shared expert (``moe/shared/
+    wi...`` — a dense always-on MLP, llama4 flavor) stay dense."""
+    keys = [k.key for k in path if hasattr(k, "key")]
+    if _MOE_KEY not in keys:
+        return False
+    i = keys.index(_MOE_KEY)
+    if "shared" in keys[i:]:
+        return False
+    return any(k in _EXPERT_KERNELS for k in keys[i:])
+
+
+def expert_sharding_spec(et: ExpandedTensor, mesh: Mesh) -> ExpandedTensor:
+    """Per-component NamedShardings for one stacked expert leaf: every data
+    field scatters its expert axis — the LAST batch axis (stage-stacked
+    ``(L, E, ...)`` leaves carry ``batch_dims == 2``, tail leaves
+    ``(E, ...)`` carry 1) — over ``AXIS``; everything else replicates."""
+    ax = et.batch_dims - 1
+    if ax < 0:
+        raise ValueError(f"expert leaf must be batched, got {et}")
+
+    def spec(arr):
+        if arr is None:
+            return None
+        return NamedSharding(
+            mesh, P(*([None] * ax + [AXIS] + [None] * (arr.ndim - ax - 1))))
+
+    return dataclasses.replace(
+        et, planes=spec(et.planes), scales=spec(et.scales),
+        bias=spec(et.bias), sat=spec(et.sat))
+
+
+def shard_moe_params(params: PyTree, mesh: Mesh) -> PyTree:
+    """Artifact-bind placement for ``placement="expert"`` serving: stacked
+    expert kernels scatter their expert axis over ``"expert"``; every other
+    leaf replicates — unless the mesh carries a non-trivial ``"expand"``
+    axis, in which case non-expert ``ExpandedTensor`` leaves term-shard
+    over it (the 2-D expert x term composition).  Packed expert leaves are
+    unpacked first (the expert axis, not the byte axis, distributes)."""
+    from jax.tree_util import tree_flatten_with_path, tree_unflatten
+
+    is_et = lambda l: isinstance(l, ExpandedTensor)
+    term_too = mesh.shape.get("expand", 1) > 1
+    if term_too:
+        from repro.dist.expansion_parallel import pad_terms, term_sharding_spec
+
+    leaves, treedef = tree_flatten_with_path(params, is_leaf=is_et)
+    placed = []
+    for path, leaf in leaves:
+        if is_et(leaf) and _is_expert_leaf(path):
+            if leaf.packed:
+                leaf = E.unpack(leaf)
+            n = mesh.shape[AXIS]
+            e_ax = leaf.batch_dims - 1
+            if leaf.planes.shape[e_ax] % n:
+                raise ValueError(
+                    f"expert count {leaf.planes.shape[e_ax]} does not divide "
+                    f"the {AXIS!r} mesh axis ({n}); pick a mesh whose expert "
+                    f"axis divides num_experts")
+            placed.append(jax.device_put(leaf, expert_sharding_spec(leaf, mesh)))
+        elif is_et(leaf) and term_too:
+            leaf = pad_terms(leaf, mesh.shape["expand"])
+            placed.append(jax.device_put(leaf, term_sharding_spec(leaf, mesh)))
+        else:
+            placed.append(jax.device_put(leaf, NamedSharding(mesh, P())))
+    return tree_unflatten(treedef, placed)
+
+
+def replicated_einsum(spec: str, a: jnp.ndarray, b: jnp.ndarray,
+                      mesh: Mesh) -> jnp.ndarray:
+    """An einsum pinned to single-device reduction order on every device.
+
+    The MoE combine (``te,etd->td`` / ``gsec,gecd->gsd``) contracts over
+    the expert axis.  Outside a manual region GSPMD is free to partition
+    that contraction over the mesh (it sees the producer was
+    expert-sharded), which splits the f32 sum into per-device partials and
+    reassociates it — an ulp wobble that the next layer's activation
+    requantization amplifies into token flips (observed: bisect showed
+    every grouped GEMM bit-exact while this one einsum differed by 1 ulp).
+    Inside shard_map with fully-replicated specs each device computes the
+    complete contraction locally in the canonical single-device order, so
+    the expert engine's combine is bit-identical to the replicated
+    oracle's."""
+    @partial(shard_map, mesh=mesh, in_specs=(P(), P()), out_specs=P())
+    def _run(a_r, b_r):
+        return jnp.einsum(spec, a_r, b_r)
+
+    return _run(a, b)
+
+
+# ---------------------------------------------------------------------------
+# the distributed grouped apply
+# ---------------------------------------------------------------------------
+def grouped_parallel_apply(x: jnp.ndarray, w_et: ExpandedTensor,
+                           policy: ExpansionPolicy, mesh: Mesh,
+                           term_budget: int = None) -> jnp.ndarray:
+    """Distributed twin of ``core.linear.grouped_expanded_apply`` (expert
+    sharding): each device computes the INT8xINT8->INT32 series accumulators
+    of its local experts, one ``psum`` over the ``"expert"`` axis combines
+    them in the integer domain, and the f32 epilogue (dyadic scale folds in
+    the canonical oracle order + the shared Eq. 4 batched corrections) runs
+    replicated — so the result is bit-identical to the replicated grouped
+    apply for any device count.
+
+    ``term_budget`` truncates the weight series exactly like the local
+    grouped apply — the term axis is NOT the sharded axis here (experts
+    are), so slicing is shard-safe and keeps the epilogue's ``reconstruct``/
+    ``full_colsum`` corrections bit-identical to the replicated engine's
+    truncated view.  x: (E, M, K) -> (E, M, N) f32."""
+    if w_et.batch_dims != 1:
+        raise ValueError(
+            f"grouped_parallel_apply needs batch_dims=1, got {w_et}")
+    if term_budget is not None:
+        w_et = E.truncate(w_et, term_budget)
+    if w_et.packed:
+        w_et = E.unpack(w_et)
+    a_bits, a_terms = policy.a_bits, policy.a_terms
+    e, m, k = x.shape
+    n = w_et.orig_shape[-1]
+    tw = w_et.num_terms
+    n_shards = mesh.shape[AXIS]
+    if e % n_shards:
+        raise ValueError(
+            f"expert count {e} does not divide the {AXIS!r} mesh axis "
+            f"({n_shards})")
+    loc = e // n_shards
+    x32 = x.astype(jnp.float32)
+
+    # Everything floating-point below runs INSIDE one shard_map manual
+    # region.  Outside a manual region GSPMD owns the partitioning of every
+    # op that touches the expert-sharded weight components — it may split
+    # an f32 reduction (epilogue matmuls, colsums, the scale fold) into
+    # per-device partials and reassociate the sum, and whether it does
+    # depends on the surrounding compiled program (observed: bit-exact
+    # standalone, 1-ulp wobble inside a full decode step).  Inside the
+    # region each device all-gathers the weight shards (pure data movement,
+    # exact) and executes the canonical full-shape single-device
+    # arithmetic, so the result is bit-identical to the replicated oracle
+    # in ANY surrounding program.
+    comps = {"planes": w_et.planes, "scales": w_et.scales}
+    if w_et.bias is not None:
+        comps["bias"] = w_et.bias
+    if w_et.sat is not None:
+        comps["sat"] = w_et.sat
+    in_specs = (P(), {key: P(AXIS) for key in comps})
+
+    def _gather_w(comp_l):
+        full = {key: jax.lax.all_gather(v, AXIS, axis=0, tiled=True)
+                for key, v in comp_l.items()}
+        return dataclasses.replace(
+            w_et, planes=full["planes"], scales=full["scales"],
+            bias=full.get("bias"), sat=full.get("sat"))
+
+    if a_terms <= 0 or a_bits >= 16:
+        # weight-only: per-expert FP GEMMs are wholly local to one device;
+        # the psum only gathers disjoint expert rows (f32, but each slot is
+        # written once over zeros, so no sum is reassociated — the waiver
+        # below documents the domain, not a deviation)
+        @partial(shard_map, mesh=mesh, in_specs=in_specs, out_specs=P(),
+                 check_rep=False)
+        def _dequant(x_full, comp_l):
+            start = jax.lax.axis_index(AXIS) * loc
+            x_l = jax.lax.dynamic_slice_in_dim(x_full, start, loc, 0)
+            scales_l = comp_l["scales"] if w_et.per_channel else \
+                jnp.broadcast_to(comp_l["scales"][..., None], (loc, tw, n))
+            part = jax.vmap(ref.dequant_matmul_ref)(
+                x_l, comp_l["planes"], scales_l.astype(jnp.float32))
+            buf = jnp.zeros((e, m, n), jnp.float32)
+            buf = jax.lax.dynamic_update_slice(buf, part, (start, 0, 0))
+            out = jax.lax.psum(buf, AXIS)
+            return LIN._grouped_epilogue(out, x_full, None, None,
+                                         _gather_w(comp_l))
+
+        return _dequant(x32, comps)
+
+    @partial(shard_map, mesh=mesh, in_specs=in_specs, out_specs=P(),
+             check_rep=False)
+    def _series(x_full, comp_l):
+        # per-expert dynamic activation params + residual planes, computed
+        # at full shape on every device — identical f32 arithmetic to the
+        # replicated grouped apply
+        xt, bias_a, sigma, a_scale1 = jax.vmap(
+            lambda xe: LIN._dynamic_act_params(xe, policy, a_bits))(x_full)
+        a_planes = jax.vmap(
+            lambda xe, s: ref.residual_quantize_ref(xe, s, a_bits, a_terms)
+        )(xt, a_scale1)                               # (E, ta, M, K) int8
+
+        # int32 series accumulators for the LOCAL experts only — the
+        # per-expert GEMMs never split, only their int32 results travel
+        start = jax.lax.axis_index(AXIS) * loc
+        ap_l = jax.lax.dynamic_slice_in_dim(a_planes, start, loc, 0)
+
+        def _one(ap_e, pl_e):
+            acc = jnp.stack([
+                jax.lax.dot_general(ap_e[i], pl_e[j],
+                                    (((1,), (0,)), ((), ())),
+                                    preferred_element_type=jnp.int32)
+                for i in range(a_terms) for j in range(tw)])
+            return acc.reshape(a_terms, tw, m, n)
+
+        acc_l = jax.vmap(_one)(ap_l, comp_l["planes"])  # (loc, ta, tw, M, N)
+        buf = jnp.zeros((e, a_terms, tw, m, n), jnp.int32)
+        buf = jax.lax.dynamic_update_slice(buf, acc_l, (start, 0, 0, 0, 0))
+        # exact: integer AbelianAdd — each expert's slots are written by
+        # exactly one device (zeros, the group identity, elsewhere)
+        accs = jax.lax.psum(buf, AXIS)                # (E, ta, tw, M, N)
+
+        w_full = _gather_w(comp_l)
+        scales = w_full.scales if w_et.per_channel else \
+            jnp.broadcast_to(w_full.scales[..., None], (e, tw, n))
+        scales = scales.astype(jnp.float32)
+
+        # f32 scale-fold in the canonical oracle order (i-outer, j-inner —
+        # matches ref.series_matmul_ref / the grouped ref fallback)
+        out = jnp.zeros((e, m, n), jnp.float32)
+        for i in range(a_terms):
+            sa_i = a_scale1 / float(ref._scale_ratio(a_bits) ** i)   # (E,)
+            for j in range(tw):
+                out = out + (sa_i[:, None, None] * scales[:, j, None, :]) \
+                    * accs[:, i, j].astype(jnp.float32)
+
+        return LIN._grouped_epilogue(out, xt, bias_a, sigma, w_full)
+
+    return _series(x32, comps)
+
+
+# the integer-domain psum contract (DESIGN.md §9/§15), checked by
+# repro.analysis.check_integer_psum on axes=("expert",): the series path
+# psums int32 accumulators; the weight-only path psums disjoint FP expert
+# rows and carries the waiver (reported, never failed).
+_contract(grouped_parallel_apply, name="grouped_parallel_apply",
+          int_psum_axes=(AXIS,),
+          float_psum_waiver=(
+              "weight-only path (a_terms == 0 or a_bits >= 16) psums FP "
+              "per-expert partials: each expert row is written by exactly "
+              "one device over zeros, so no floating sum is reassociated"))

@@ -13,7 +13,13 @@ The deployment axis the Runtime/Engine expose (DESIGN.md §9):
 * ``"tensor"``     — column-parallel over a ``"model"`` axis
   (``dist/sharding.py``): each device owns a slice of every GEMM's output
   features.  Works for expanded *and* plain-FP params; contractions are
-  never reassociated, so logits are exact.
+  never reassociated, so logits are exact;
+* ``"expert"``     — MoE expert parallelism: stacked per-expert expansions
+  scatter their expert axis over a 1-D ``"expert"`` mesh axis and the
+  grouped series GEMM psums INT32 accumulators
+  (``dist/expert_parallel.py``).  Composes with term parallelism on a 2-D
+  ``("expert", "expand")`` mesh (``make_moe_mesh``): dense expansions then
+  term-shard exactly as under ``"term"``.
 
 This module is the small dispatcher the serving stack wires through:
 :func:`make_serve_mesh` builds the 1-D mesh with the axis name the
@@ -29,25 +35,32 @@ from jax.sharding import Mesh, NamedSharding, PartitionSpec as P
 
 PyTree = Any
 
-PLACEMENTS = ("replicated", "term", "tensor")
+PLACEMENTS = ("replicated", "term", "tensor", "expert")
 
 #: mesh axis name each placement's collectives are written against
-PLACEMENT_AXIS = {"term": "expand", "tensor": "model"}
+PLACEMENT_AXIS = {"term": "expand", "tensor": "model", "expert": "expert"}
 
 #: mesh axes whose psums must reduce in the INTEGER domain (the Abelian
 #: exactness contract, DESIGN.md §9).  "term" contracts series partials —
 #: f32 psums there reassociate per device count and diverge through
-#: requantization; "tensor" shards output columns (no contraction is
-#: reassociated), so it carries no integer-domain requirement.
-#: ``repro.analysis.check_integer_psum`` reads this to know which axes to
-#: police when tracing a placed computation.
-INT_PSUM_AXES = ("expand",)
+#: requantization; "expert" combines per-expert series accumulators the
+#: same way on its own axis (DESIGN.md §15); "tensor" shards output
+#: columns (no contraction is reassociated), so it carries no
+#: integer-domain requirement.  ``repro.analysis.check_integer_psum``
+#: reads this to know which axes to police when tracing a placed
+#: computation.
+INT_PSUM_AXES = ("expand", "expert")
 
 
 def int_psum_axes(placement: str) -> tuple:
     """The mesh axes the integer-domain psum rule applies to under a
-    placement (empty for placements with no reassociated contraction)."""
+    placement (empty for placements with no reassociated contraction).
+    ``"expert"`` polices both its own axis and ``"expand"`` — a 2-D
+    expert x term mesh runs both contracts, and policing an absent axis
+    is harmless."""
     check_placement(placement)
+    if placement == "expert":
+        return ("expert", "expand")
     axis = PLACEMENT_AXIS.get(placement)
     return (axis,) if axis in INT_PSUM_AXES else ()
 
@@ -105,4 +118,12 @@ def place_params(params: PyTree, mesh: Optional[Mesh],
                 f"placement='tensor' needs a mesh with a 'model' axis; got "
                 f"{tuple(mesh.shape)} (use make_serve_mesh(n, 'tensor'))")
         return shard_params_column_parallel(params, mesh)
+    if placement == "expert":
+        from repro.dist.expert_parallel import AXIS, shard_moe_params
+        if AXIS not in mesh.shape:
+            raise ValueError(
+                f"placement='expert' needs a mesh with an {AXIS!r} axis; got "
+                f"{tuple(mesh.shape)} (use make_serve_mesh(n, 'expert') or "
+                f"dist.expert_parallel.make_moe_mesh)")
+        return shard_moe_params(params, mesh)
     return jax.device_put(params, NamedSharding(mesh, P()))

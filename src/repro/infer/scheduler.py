@@ -797,6 +797,55 @@ class SlotScheduler:
             extra["prefix"]["prefill_chunk"] = self.chunk
         return extra
 
+    # -- MoE expert-load telemetry (DESIGN.md §15) ---------------------
+    def _moe_init(self):
+        """Device-side accumulators for the per-dispatch MoE stats rider
+        (None when the engine's decode step carries no stats)."""
+        if not getattr(self.eng, "_moe_stats", False):
+            return None
+        e = self.eng.cfg.num_experts
+        return {"load": jnp.zeros((e,), jnp.int32),
+                "round_max": jnp.float32(0.0),
+                "round_mean": jnp.float32(0.0),
+                "dropped": jnp.int32(0),
+                "assigned": jnp.int32(0),
+                "dispatches": 0}
+
+    @staticmethod
+    def _fold_moe(moe, mst) -> None:
+        """Fold one dispatch's stats rider into the accumulators ON DEVICE
+        (a handful of (E,)-sized adds — the host transfer happens once, at
+        the end of the run, never per round)."""
+        lf = mst["load"].astype(jnp.float32)
+        moe["load"] = moe["load"] + mst["load"]
+        moe["round_max"] = moe["round_max"] + jnp.max(lf)
+        moe["round_mean"] = moe["round_mean"] + jnp.mean(lf)
+        moe["dropped"] = moe["dropped"] + mst["dropped"]
+        moe["assigned"] = moe["assigned"] + mst["assigned"]
+        moe["dispatches"] += 1
+
+    @staticmethod
+    def _moe_extra(moe) -> Dict[str, Any]:
+        """Expert-imbalance summary for ``last_run_stats["moe"]``: per-round
+        mean of max/mean tokens-per-expert (layer-summed), their ratio, and
+        the drop fraction (structurally 0.0 under token routing)."""
+        if moe is None or moe["dispatches"] == 0:
+            return {}
+        load, rmax, rmean, dropped, assigned = jax.device_get(
+            (moe["load"], moe["round_max"], moe["round_mean"],
+             moe["dropped"], moe["assigned"]))
+        n = moe["dispatches"]
+        max_r, mean_r = float(rmax) / n, float(rmean) / n
+        return {"moe": {
+            "dispatches": n,
+            "tokens_per_expert": [int(v) for v in load],
+            "max_tokens_per_expert": max_r,
+            "mean_tokens_per_expert": mean_r,
+            "imbalance": (max_r / mean_r) if mean_r > 0 else 0.0,
+            "drop_fraction": (float(dropped) / float(assigned)
+                              if assigned else 0.0),
+        }}
+
     @staticmethod
     def _apply_arrivals(requests: List[Request], t0: float) -> None:
         """Open-loop arrivals: a request with ``arrival > 0`` enqueues at
@@ -843,6 +892,7 @@ class SlotScheduler:
         steps = 0             # decode DISPATCH iterations — the final drain
         occupied_steps = 0.0  # (emitting last pending tokens) dispatches none
         gen_tokens = 0
+        moe = self._moe_init()
         dispatches = 0        # masked group dispatches (>= steps with tiers)
         idle_iters = 0
         usable_min = n
@@ -961,8 +1011,10 @@ class SlotScheduler:
                         args = (eng.params, st["tok"], st["live"], clen_dev,
                                 st["key"], st["alive"], eos, temperature,
                                 jnp.asarray(mask))
-                    st["tok"], st["live"], st["key"], st["alive"] = \
-                        self._dispatch(eng._decode_for(b_eff), args)
+                    res = self._dispatch(eng._decode_for(b_eff), args)
+                    st["tok"], st["live"], st["key"], st["alive"] = res[:4]
+                    if moe is not None and len(res) > 4:
+                        self._fold_moe(moe, res[4])
                 terms = full_terms if b_eff is None else b_eff
                 for i in members:
                     req = st["slot_req"][i]
@@ -991,6 +1043,7 @@ class SlotScheduler:
         extra = self._qos_extra(requests, tier_stats, ctrl, st, queue,
                                 dispatches=dispatches, usable_min=usable_min,
                                 retries_before=retries0)
+        extra.update(self._moe_extra(moe))
         self._finish_stats(requests, gen_tokens=gen_tokens, steps=steps,
                            occupied_steps=occupied_steps, wall=wall,
                            prefill_s=st["prefill_s"], extra=extra)

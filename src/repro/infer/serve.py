@@ -151,7 +151,7 @@ def _select_rows(new, old, mask, axis):
 
 
 def make_decode_sample_step(cfg: ArchConfig, qc: QuantContext = FP,
-                            masked: bool = False):
+                            masked: bool = False, moe_stats: bool = False):
     """Fused decode + sample + EOS-mask step (all on device).
 
     step(params, tok (B,1), caches, cache_len () or (B,), key, alive (B,),
@@ -170,16 +170,32 @@ def make_decode_sample_step(cfg: ArchConfig, qc: QuantContext = FP,
     advances under exactly its own tier's ``QuantContext.term_budget``
     (the ``jnp.where`` merges fuse into the cache scatter — no extra cache
     materialization).  Stage cache leaves are stacked ``(L, B, ...)``
-    (batch axis 1), tail leaves ``(B, ...)`` (axis 0)."""
+    (batch axis 1), tail leaves ``(B, ...)`` (axis 0).
+
+    ``moe_stats=True`` (static) appends the round's MoE routing telemetry
+    (summed over every ``moe_attn`` block — :func:`moe.zero_stats`
+    structure) as a FIFTH output, which the scheduler folds into its
+    expert-imbalance stats.  It rides the same fused dispatch and the same
+    single host transfer; under the masked variant it is NOT row-merged
+    (token routing counts every batch row — the signal measures the
+    compute each expert performs per dispatch, DESIGN.md §15)."""
     def step(params, tok, caches, cache_len, key, alive, eos_id, temperature):
-        logits, caches = M.decode_step(params, tok, caches, cache_len, cfg, qc)
+        if moe_stats:
+            logits, caches, mst = M.decode_step(params, tok, caches,
+                                                cache_len, cfg, qc,
+                                                moe_stats=True)
+        else:
+            logits, caches = M.decode_step(params, tok, caches, cache_len,
+                                           cfg, qc)
         key, sub = jax.random.split(key)
         nxt = sample_logits_dynamic(logits, sub, temperature)
         alive = jnp.logical_and(alive, nxt[:, 0] != eos_id)
+        if moe_stats:
+            return nxt, caches, key, alive, mst
         return nxt, caches, key, alive
 
     _contract(step, name="fused_decode", transfers_per_round=1,
-              int_psum_axes=("expand",),
+              int_psum_axes=("expand", "expert"),
               dynamic_operands=("eos_id", "temperature"),
               donate_argnums=(2,), budget_key="decode")
     if not masked:
@@ -187,8 +203,9 @@ def make_decode_sample_step(cfg: ArchConfig, qc: QuantContext = FP,
 
     def masked_step(params, tok, caches, cache_len, key, alive, eos_id,
                     temperature, row_mask):
-        nxt, new_caches, key, alive_new = step(
-            params, tok, caches, cache_len, key, alive, eos_id, temperature)
+        res = step(params, tok, caches, cache_len, key, alive, eos_id,
+                   temperature)
+        nxt, new_caches, key, alive_new = res[:4]
         nxt = jnp.where(row_mask[:, None], nxt, tok)
         alive_out = jnp.where(row_mask, alive_new, alive)
         merged = {
@@ -199,10 +216,10 @@ def make_decode_sample_step(cfg: ArchConfig, qc: QuantContext = FP,
                 lambda nw, old: _select_rows(nw, old, row_mask, 0),
                 new_caches["tail"], caches["tail"]),
         }
-        return nxt, merged, key, alive_out
+        return (nxt, merged, key, alive_out) + tuple(res[4:])
 
     _contract(masked_step, name="fused_decode_masked", transfers_per_round=1,
-              int_psum_axes=("expand",),
+              int_psum_axes=("expand", "expert"),
               dynamic_operands=("eos_id", "temperature", "row_mask"),
               donate_argnums=(2,), budget_key="decode_masked")
     return masked_step
@@ -242,7 +259,7 @@ def make_paged_decode_step(cfg: ArchConfig, qc: QuantContext, page_size: int,
         return nxt, caches, key, alive
 
     _contract(step, name="fused_decode_paged", transfers_per_round=1,
-              int_psum_axes=("expand",),
+              int_psum_axes=("expand", "expert"),
               dynamic_operands=("block_tables", "eos_id", "temperature"),
               donate_argnums=(2,), budget_key="decode_paged")
     if not masked:
@@ -276,7 +293,7 @@ def make_paged_decode_step(cfg: ArchConfig, qc: QuantContext, page_size: int,
         return nxt, merged, key, alive_out
 
     _contract(masked_step, name="fused_decode_paged_masked",
-              transfers_per_round=1, int_psum_axes=("expand",),
+              transfers_per_round=1, int_psum_axes=("expand", "expert"),
               dynamic_operands=("block_tables", "eos_id", "temperature",
                                 "row_mask"),
               donate_argnums=(2,), budget_key="decode_paged")
@@ -334,7 +351,7 @@ def make_spec_decode_step(cfg: ArchConfig, qc: QuantContext,
         return next_tok, caches, full, accept
 
     _contract(step, name="spec_decode", transfers_per_round=1,
-              int_psum_axes=("expand",), donate_argnums=(2,),
+              int_psum_axes=("expand", "expert"), donate_argnums=(2,),
               budget_key="spec_decode")
     if not masked:
         return step
@@ -358,7 +375,7 @@ def make_spec_decode_step(cfg: ArchConfig, qc: QuantContext,
         return nxt, merged, full, accept
 
     _contract(masked_step, name="spec_decode_masked", transfers_per_round=1,
-              int_psum_axes=("expand",), dynamic_operands=("row_mask",),
+              int_psum_axes=("expand", "expert"), dynamic_operands=("row_mask",),
               donate_argnums=(2,), budget_key="spec_decode_masked")
     return masked_step
 
@@ -395,7 +412,7 @@ def make_paged_spec_decode_step(cfg: ArchConfig, qc: QuantContext,
         return next_tok, caches, full, accept
 
     _contract(step, name="spec_decode_paged", transfers_per_round=1,
-              int_psum_axes=("expand",),
+              int_psum_axes=("expand", "expert"),
               dynamic_operands=("block_tables",), donate_argnums=(2,),
               budget_key="spec_decode_paged")
     if not masked:
@@ -434,7 +451,7 @@ def make_paged_spec_decode_step(cfg: ArchConfig, qc: QuantContext,
         return nxt, merged, full, accept
 
     _contract(masked_step, name="spec_decode_paged_masked",
-              transfers_per_round=1, int_psum_axes=("expand",),
+              transfers_per_round=1, int_psum_axes=("expand", "expert"),
               dynamic_operands=("block_tables", "row_mask"),
               donate_argnums=(2,), budget_key="spec_decode_paged_masked")
     return masked_step
@@ -550,7 +567,7 @@ def make_prefill_chunk_step(cfg: ArchConfig, qc: QuantContext, *,
                          key, alive, eos_id, temperature, valid, write_from,
                          commit_rows, decode_rows, seed_rows, tok)
         _contract(step, name="prefill_chunk_paged", transfers_per_round=1,
-                  int_psum_axes=("expand",),
+                  int_psum_axes=("expand", "expert"),
                   dynamic_operands=("block_tables", "eos_id", "temperature",
                                     "valid", "write_from", "commit_rows",
                                     "decode_rows", "seed_rows"),
@@ -564,7 +581,7 @@ def make_prefill_chunk_step(cfg: ArchConfig, qc: QuantContext, *,
                      eos_id, temperature, valid, write_from, commit_rows,
                      decode_rows, seed_rows, tok)
     _contract(step, name="prefill_chunk", transfers_per_round=1,
-              int_psum_axes=("expand",),
+              int_psum_axes=("expand", "expert"),
               dynamic_operands=("eos_id", "temperature", "valid",
                                 "write_from", "commit_rows", "decode_rows",
                                 "seed_rows"),
@@ -647,15 +664,39 @@ class Engine:
                         "params carry no ExpandedTensor leaves (FP or "
                         "baseline-PTQ model) — use placement='tensor' or "
                         "'replicated'")
+            if self.placement == "expert":
+                kinds = tuple(cfg.stage_pattern) + tuple(cfg.tail_pattern)
+                if "moe_attn" not in kinds:
+                    raise ValueError(
+                        "placement='expert' shards MoE experts, but this "
+                        "arch has no moe_attn blocks — use placement="
+                        "'term', 'tensor' or 'replicated'")
+                if not _has_expanded(params):
+                    raise ValueError(
+                        "placement='expert' runs the grouped series GEMM "
+                        "over sharded expert expansions, but these params "
+                        "carry no ExpandedTensor leaves (FP or baseline-PTQ "
+                        "model) — expand first (quantize) or use "
+                        "placement='replicated'")
             # params may arrive pre-placed from Runtime — place_params is
             # idempotent there (padding an already-padded tree and device_put
             # onto an identical sharding are no-ops), so re-placing keeps the
             # direct Engine(..., mesh=..., placement=...) entry equivalent
             # without duplicating a Runtime's placed weights
             params = place_params(params, mesh, self.placement)
-            if self.placement == "term":
+            if self.placement in ("term", "expert"):
                 self.qc = dataclasses.replace(self.qc, mesh=mesh,
-                                              placement="term")
+                                              placement=self.placement)
+        self.has_moe = "moe_attn" in (tuple(cfg.stage_pattern)
+                                      + tuple(cfg.tail_pattern))
+        if self.has_moe:
+            # serving routing contract (DESIGN.md §15): dropless per-token
+            # dispatch.  A row's routing is a function of that row alone —
+            # no capacity cumsum coupling it to co-scheduled rows — so slot
+            # recycling, row masks, and batch composition never perturb a
+            # request's tokens, and every placement serves the identical
+            # stream.
+            self.qc = dataclasses.replace(self.qc, moe_routing="token")
         self.params = params
         self.expanded = _has_expanded(params)
         self._validate_qos(serve_cfg)
@@ -691,7 +732,7 @@ class Engine:
         self._prefill_slot = jax.jit(_contract(
             lambda p, batch, lengths: M.prefill(p, batch, cfg, self.qc,
                                                 s_max=s_max, lengths=lengths),
-            name="prefill_slot", int_psum_axes=("expand",),
+            name="prefill_slot", int_psum_axes=("expand", "expert"),
             budget_key="prefill"))
         self._scatter = jax.jit(M.scatter_cache_into_slot, donate_argnums=(0,))
         # fresh one-row cache for chunked-fill admission on dense engines:
@@ -699,6 +740,7 @@ class Engine:
         # recurrent carries, which monolithic admission overwrites wholesale
         # via _scatter but an incremental chunk commit would inherit
         self._fresh_row_cache = None
+        self._moe_stats = False
         if self.paged:
             page = serve_cfg.page_size
             self._scatter_paged = jax.jit(
@@ -709,8 +751,15 @@ class Engine:
                 make_paged_decode_step(cfg, self.qc, page, masked=True),
                 donate_argnums=(2,))
         else:
+            # per-round expert-load telemetry rides the fused decode step on
+            # MoE archs (plain slots decode only: the spec/paged/chunk
+            # dispatches stay stats-free — DESIGN.md §15)
+            self._moe_stats = (self.has_moe
+                               and serve_cfg.scheduler == "slots"
+                               and serve_cfg.spec_terms == 0)
             self._decode = jax.jit(
-                make_decode_sample_step(cfg, self.qc, masked=True),
+                make_decode_sample_step(cfg, self.qc, masked=True,
+                                        moe_stats=self._moe_stats),
                 donate_argnums=(2,))
         # per-term-budget jitted callables (QoS tiers): budget None = the
         # engine's own context.  Populated lazily — an engine that never
@@ -908,7 +957,8 @@ class Engine:
             else:
                 self._decode_by_budget[budget] = jax.jit(
                     make_decode_sample_step(self.cfg, self._qc_for(budget),
-                                            masked=True),
+                                            masked=True,
+                                            moe_stats=self._moe_stats),
                     donate_argnums=(2,))
         return self._decode_by_budget[budget]
 

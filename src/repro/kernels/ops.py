@@ -29,7 +29,10 @@ from repro.kernels import ref
 from repro.kernels.dequant_matmul import dequant_matmul_pallas
 from repro.kernels.pack import pack_int4, unpack_int4
 from repro.kernels.residual_quantize import residual_quantize_pallas
-from repro.kernels.series_matmul import series_matmul_pallas
+from repro.kernels.series_matmul import (
+    grouped_series_matmul_pallas,
+    series_matmul_pallas,
+)
 
 
 def _on_tpu() -> bool:
@@ -82,6 +85,9 @@ VMEM_BUDGET_BYTES = int(os.environ.get("REPRO_VMEM_BUDGET", 12 << 20))
 # the accumulator.  M tiles are independent.
 _SEMANTICS = {
     "series": ("parallel", "arbitrary", "arbitrary"),
+    # grouped (stacked-expert) series GEMM: leading expert grid dim is
+    # independent; per-expert the semantics match "series"
+    "grouped_series": ("parallel", "parallel", "arbitrary", "arbitrary"),
     "dequant": ("parallel", "parallel", "arbitrary"),
     "quant": ("parallel", "parallel"),
     # paged flash attention: slots are independent; the page axis carries
@@ -271,6 +277,49 @@ def series_matmul(
         dimension_semantics=cfg.dimension_semantics,
     )
     return out[:m, :n]
+
+
+@partial(jax.jit, static_argnames=("a_bits", "a_terms", "use_kernel", "block_m", "block_n", "block_k"))
+def grouped_series_matmul(
+    x: jnp.ndarray,
+    a_scale1: jnp.ndarray,
+    w_planes: jnp.ndarray,
+    w_scales: jnp.ndarray,
+    *,
+    a_bits: int,
+    a_terms: int,
+    use_kernel: bool = True,
+    block_m: Optional[int] = None,
+    block_n: Optional[int] = None,
+    block_k: Optional[int] = None,
+) -> jnp.ndarray:
+    """Grouped (stacked-expert) series GEMM: x (E, M, K); a_scale1 (E,);
+    w_planes (E, tw, K, N); w_scales (E, tw) or (E, tw, N) -> (E, M, N) f32.
+
+    ONE dispatch covers the whole expert axis — a Pallas call whose grid
+    leads with E (per-expert tiles autotuned like "series"), or a batched
+    jnp fallback whose every dot_general carries E on the batch axis — so
+    the expert GEMM count stays O(terms), not O(E * terms)
+    (``dispatch_census`` budget entries ``moe_*``)."""
+    e, tw, k, n = w_planes.shape
+    if w_scales.ndim == 2:  # canonicalize to per-channel
+        w_scales = jnp.broadcast_to(w_scales[..., None], (e, tw, n))
+    if not (use_kernel and kernels_enabled()):
+        fn = partial(ref.series_matmul_ref, a_bits=a_bits, a_terms=a_terms)
+        return jax.vmap(fn)(x, a_scale1, w_planes, w_scales)
+    m = x.shape[1]
+    cfg = _resolve_blocks("series", m, k, n, a_terms, tw,
+                          block_m, block_n, block_k)
+    bm, bn, bk = cfg.blocks
+    xp = _pad_to(x, (bm, bk), (1, 2))
+    wp = _pad_to(w_planes, (bk, bn), (2, 3))
+    wsp = _pad_to(w_scales, (bn,), (2,))
+    out = grouped_series_matmul_pallas(
+        xp, a_scale1, wp, wsp, a_bits=a_bits, a_terms=a_terms,
+        block_m=bm, block_n=bn, block_k=bk, interpret=not _on_tpu(),
+        dimension_semantics=_SEMANTICS["grouped_series"],
+    )
+    return out[:, :m, :n]
 
 
 @partial(jax.jit, static_argnames=("use_kernel", "block_m", "block_n", "block_k"))

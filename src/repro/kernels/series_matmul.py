@@ -94,6 +94,108 @@ def _kernel(x_ref, s_ref, w_ref, ws_ref, o_ref, qa_ref, acc_ref,
         o_ref[...] = acc_ref[...]                    # single HBM write
 
 
+def _grouped_kernel(x_ref, s_ref, w_ref, ws_ref, o_ref, qa_ref, acc_ref,
+                    *, a_bits: int, a_terms: int, tw: int, block_k: int):
+    # grid (E, M/bm, N/bn, K/bk): the expert axis rides a leading grid dim;
+    # every ref carries a singleton expert-block axis.  The quantize-once
+    # scratch caches the (e, m) strip's planes — (e, i) are outer grid dims,
+    # so the j == 0 guard re-extracts exactly when the strip changes.
+    j = pl.program_id(2)
+    kk = pl.program_id(3)
+    nk = pl.num_programs(3)
+
+    @pl.when(kk == 0)
+    def _zero():
+        acc_ref[...] = jnp.zeros_like(acc_ref)
+
+    sa1 = s_ref[0, 0]
+
+    @pl.when(j == 0)
+    def _extract():
+        r = x_ref[0].astype(jnp.float32)
+        for i in range(a_terms):             # static unroll, runs in VREGs
+            sa_i = sa1 / float(_scale_ratio(a_bits) ** i)
+            lo, hi = _plane_limits(a_bits, i)
+            q = jnp.clip(jnp.round(r / sa_i), lo, hi)
+            r = r - sa_i * q
+            qa_ref[i, :, pl.ds(kk * block_k, block_k)] = q.astype(jnp.int8)
+
+    a = qa_ref[:, :, pl.ds(kk * block_k, block_k)]   # (ta, bm, bk) int8
+    w = w_ref[0]                                     # (tw, bk, bn) int8
+    ws = ws_ref[0]                                   # (tw, bn) f32
+    acc = acc_ref[...]
+    for i in range(a_terms):
+        sa_i = sa1 / float(_scale_ratio(a_bits) ** i)
+        p = jax.lax.dot_general(
+            jnp.broadcast_to(a[i][None], w.shape[:1] + a[i].shape), w,
+            (((2,), (1,)), ((0,), (0,))),
+            preferred_element_type=jnp.int32,
+        )                                            # (tw, bm, bn) int32
+        for jj in range(tw):
+            acc = acc + (sa_i * ws[jj]) * p[jj].astype(jnp.float32)
+    acc_ref[...] = acc
+
+    @pl.when(kk == nk - 1)
+    def _flush():
+        o_ref[0] = acc_ref[...]                      # single HBM write
+
+
+def grouped_series_matmul_pallas(
+    x: jnp.ndarray,           # (E, M, K) f32 — centered & clipped per expert
+    a_scale1: jnp.ndarray,    # (E,) f32 — independent per-expert quantizers
+    w_planes: jnp.ndarray,    # (E, tw, K, N) int8
+    w_scales: jnp.ndarray,    # (E, tw, N) f32
+    *,
+    a_bits: int,
+    a_terms: int,
+    block_m: int = 256,
+    block_n: int = 256,
+    block_k: int = 512,
+    interpret: bool = True,
+    dimension_semantics: tuple = ("parallel", "parallel", "arbitrary",
+                                  "arbitrary"),
+) -> jnp.ndarray:
+    """Grouped (stacked-expert) twin of :func:`series_matmul_pallas`: ONE
+    autotuned Pallas dispatch whose grid covers the expert axis, instead of
+    E per-expert kernel launches — the MoE expert GEMM stays O(terms) in
+    dispatch count regardless of E."""
+    e, m, k = x.shape
+    e2, tw, k2, n = w_planes.shape
+    assert e == e2 and k == k2 and w_scales.shape == (e, tw, n), (
+        x.shape, w_planes.shape, w_scales.shape)
+    assert a_scale1.shape == (e,), a_scale1.shape
+    assert m % block_m == 0 and n % block_n == 0 and k % block_k == 0, (
+        (m, k, n), (block_m, block_k, block_n))
+    grid = (e, m // block_m, n // block_n, k // block_k)
+    return pl.pallas_call(
+        functools.partial(_grouped_kernel, a_bits=a_bits, a_terms=a_terms,
+                          tw=tw, block_k=block_k),
+        out_shape=jax.ShapeDtypeStruct((e, m, n), jnp.float32),
+        grid=grid,
+        in_specs=[
+            pl.BlockSpec((1, block_m, block_k), lambda g, i, j, kk: (g, i, kk)),
+            pl.BlockSpec((1, 1), lambda g, i, j, kk: (g, 0)),
+            pl.BlockSpec((1, tw, block_k, block_n),
+                         lambda g, i, j, kk: (g, 0, kk, j)),
+            pl.BlockSpec((1, tw, block_n), lambda g, i, j, kk: (g, 0, j)),
+        ],
+        out_specs=pl.BlockSpec((1, block_m, block_n),
+                               lambda g, i, j, kk: (g, i, j)),
+        scratch_shapes=[
+            pltpu.VMEM((a_terms, block_m, k), jnp.int8),   # cached act planes
+            pltpu.VMEM((block_m, block_n), jnp.float32),   # f32 accumulator
+        ],
+        compiler_params=pltpu.TPUCompilerParams(
+            dimension_semantics=dimension_semantics),
+        interpret=interpret,
+    )(
+        x.astype(jnp.float32),
+        a_scale1.reshape(e, 1).astype(jnp.float32),
+        w_planes,
+        w_scales.astype(jnp.float32),
+    )
+
+
 def series_matmul_pallas(
     x: jnp.ndarray,           # (M, K) f32 — centered & clipped activations
     a_scale1: jnp.ndarray,    # () f32

@@ -91,10 +91,12 @@ def add_serve_args(ap: argparse.ArgumentParser, *,
                     help="serve over the first N local devices (0 = single "
                          "device unless --placement is sharded, then all)")
     ap.add_argument("--placement", default="replicated",
-                    choices=("replicated", "term", "tensor"),
-                    help="multi-device placement (DESIGN.md §9): term = "
+                    choices=("replicated", "term", "tensor", "expert"),
+                    help="multi-device placement (DESIGN.md §9/§15): term = "
                          "Theorem-2 series-term scattering (shard_map + one "
                          "psum per expanded GEMM); tensor = column-parallel; "
+                         "expert = MoE expert parallelism (stacked expert "
+                         "expansions sharded, int32 psum; moe_attn archs); "
                          "replicated = single-device behavior")
     return ap
 
@@ -197,7 +199,8 @@ def mesh_from_args(args) -> Tuple[Optional[object], str]:
 
     Replicated with ``--mesh 0`` stays mesh-less (today's single-device
     path); a sharded placement builds the 1-D mesh with the axis name its
-    collectives expect (``"expand"`` for term, ``"model"`` for tensor)."""
+    collectives expect (``"expand"`` for term, ``"model"`` for tensor,
+    ``"expert"`` for MoE expert parallelism)."""
     from repro.dist.placement import make_serve_mesh
 
     if args.placement == "replicated" and not args.mesh:

@@ -111,16 +111,22 @@ def build_cell(arch: str, shape_name: str, mesh, *, serve_policy=SERVE_POLICY,
                remat: bool = True, moe_ep: bool = True,
                grad_accum: int = 0, int8_kv: bool = False,
                attn_chunks: str = "", fp_serve: bool = False,
-               capacity_factor: float = 0.0):
+               capacity_factor: float = 0.0, smoke: bool = False):
     """Returns (fn, example_args_structs, in_shardings, donate_argnums)."""
     import dataclasses as _dc
-    cfg = get_arch(arch)
+    cfg = get_arch(arch, smoke=smoke)
     if attn_chunks:
         qc_, kc_ = (int(x) for x in attn_chunks.split(","))
         cfg = _dc.replace(cfg, attn_q_chunk=qc_, attn_kv_chunk=kc_)
     if capacity_factor:
         cfg = _dc.replace(cfg, capacity_factor=capacity_factor)
     sh = SHAPES[shape_name]
+    if smoke:
+        # CI-shrunk cell: smoke arch dims + a shape small enough to lower
+        # and compile in seconds — exercises the same sharding rules,
+        # collectives, and cost-analysis plumbing as the production cell
+        sh = _dc.replace(sh, seq_len=min(sh.seq_len, 128),
+                         global_batch=min(sh.global_batch, 16))
     dp = dp_axes(mesh)
     dp_size = 1
     for a in dp:
@@ -202,6 +208,8 @@ def run_cell(arch: str, shape_name: str, mesh_kind: str, *, save: bool = True,
         mem = compiled.memory_analysis()
         print(mem)                      # proves it fits (bytes per device)
         ca = compiled.cost_analysis()
+        if isinstance(ca, (list, tuple)):   # older jax: one dict per program
+            ca = ca[0] if ca else {}
         print({k: ca.get(k) for k in ("flops", "bytes accessed")})
         hlo_text = compiled.as_text()
         coll = parse_collectives(hlo_text)
@@ -254,10 +262,16 @@ def main():
     ap.add_argument("--attn-chunks", default="", help="e.g. 2048,4096")
     ap.add_argument("--fp-serve", action="store_true", help="unquantized serving baseline")
     ap.add_argument("--capacity-factor", type=float, default=0.0)
+    ap.add_argument("--smoke", action="store_true",
+                    help="CI-shrunk cell: smoke arch dims + tiny shape")
+    ap.add_argument("--no-save", action="store_true",
+                    help="don't write the result JSON (CI smoke checks)")
     ap.add_argument("--skip-existing", action="store_true")
     args = ap.parse_args()
 
     meshes = ("single", "multi") if args.mesh == "both" else (args.mesh,)
+    if args.smoke and not args.tag:
+        args.tag = "smoke"   # keep CI-shrunk results off the production cells
     if args.all:
         cells = [(a, s) for a in ARCH_IDS for s in applicable_shapes(get_arch(a))]
     else:
@@ -267,7 +281,8 @@ def main():
     build_kw = dict(use_sp=not args.no_sp, fsdp=not args.no_fsdp,
                     remat=not args.no_remat, grad_accum=args.grad_accum,
                     int8_kv=args.int8_kv, attn_chunks=args.attn_chunks,
-                    fp_serve=args.fp_serve, capacity_factor=args.capacity_factor)
+                    fp_serve=args.fp_serve, capacity_factor=args.capacity_factor,
+                    smoke=args.smoke)
     n_ok = 0
     for arch, shape in cells:
         for mk in meshes:
@@ -280,7 +295,8 @@ def main():
                         print(f"skip (cached ok): {arch} {shape} {mk}")
                         continue
             print(f"=== {arch} {shape} {mk} ===", flush=True)
-            rec = run_cell(arch, shape, mk, tag=args.tag, **build_kw)
+            rec = run_cell(arch, shape, mk, tag=args.tag,
+                           save=not args.no_save, **build_kw)
             n_ok += bool(rec.get("ok"))
     total = len(cells) * len(meshes)
     print(f"\n{n_ok}/{total} cells compiled OK")

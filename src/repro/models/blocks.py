@@ -197,11 +197,20 @@ def make_image_kv(qc: QuantContext, p: Dict, image_emb: jnp.ndarray, cfg):
 # decode (single token against cache)
 # ---------------------------------------------------------------------------
 def block_decode(qc: QuantContext, kind: str, p: Dict, x: jnp.ndarray, cache: Dict,
-                 cfg, *, cache_len: jnp.ndarray) -> Tuple[jnp.ndarray, Dict]:
+                 cfg, *, cache_len: jnp.ndarray, moe_stats: bool = False
+                 ) -> Tuple[jnp.ndarray, Dict]:
     """x: (B, 1, D); cache_len: () or (B,) — tokens already in each row's
     cache (the new token lands at position cache_len[b]).  A scalar serves
     the lock-step legacy path; a vector serves slots at different sequence
-    positions in one step (continuous batching)."""
+    positions in one step (continuous batching).
+
+    ``moe_stats=True`` (static) returns ``(x, cache', stats)`` where stats
+    is the MoE routing telemetry of this block (:func:`moe.zero_stats`
+    structure; the zero element for non-MoE kinds) — the channel
+    ``decode_step`` sums into the scheduler's expert-imbalance signal."""
+    if moe_stats and kind != "moe_attn":
+        x, cache = block_decode(qc, kind, p, x, cache, cfg, cache_len=cache_len)
+        return x, cache, MOE.zero_stats(cfg)
     b = x.shape[0]
     clen = jnp.broadcast_to(jnp.asarray(cache_len, jnp.int32), (b,))
     pos = clen[:, None]                                        # per-slot rope
@@ -228,6 +237,10 @@ def block_decode(qc: QuantContext, kind: str, p: Dict, x: jnp.ndarray, cache: Di
                                        softcap=cfg.attn_softcap)
             new_cache = {"k": kc, "v": vc}
         x = x + L.dense(qc, att.reshape(b, 1, -1), p["attn"]["o"])
+        if moe_stats:                                  # kind == "moe_attn"
+            h2 = L.apply_norm(cfg.norm, p["mlp_ln"], x)
+            y, stats = MOE.moe_apply(qc, p["moe"], h2, cfg, return_stats=True)
+            return x + y, new_cache, stats
         x = _mlp_part(qc, kind, p, x, cfg)
         return x, new_cache
     if kind == "local":

@@ -45,8 +45,14 @@ class QuantContext:
     use_kernel: bool = False  # Pallas path (CPU interpret / TPU Mosaic)
     int8_kv: bool = False     # int8 KV cache + int8 attention dots (serving)
     mesh: Optional[Any] = None       # jax.sharding.Mesh (hashable) or None
-    placement: str = "replicated"    # "replicated" | "term" | "tensor"
+    placement: str = "replicated"    # "replicated"|"term"|"tensor"|"expert"
     term_budget: Optional[int] = None  # k-term series prefix (draft model)
+    # MoE routing rule (models/moe.py): "group" = capacity/drop batch
+    # semantics; "token" = dropless per-token dispatch — the serving
+    # contract (bit-frozen per row, slot-order invariant), set by the
+    # Engine so decode/verify/chunk rounds never couple rows through a
+    # shared capacity cumsum.
+    moe_routing: str = "group"       # "group" | "token"
 
     @property
     def enabled(self) -> bool:
@@ -54,7 +60,18 @@ class QuantContext:
 
     @property
     def term_parallel(self) -> bool:
-        return self.placement == "term" and self.mesh is not None
+        if self.mesh is None:
+            return False
+        if self.placement == "term":
+            return True
+        # 2-D expert×term composition: an "expert" placement whose mesh
+        # carries a non-trivial "expand" axis also term-shards dense leaves
+        return (self.placement == "expert"
+                and self.mesh.shape.get("expand", 1) > 1)
+
+    @property
+    def expert_parallel(self) -> bool:
+        return self.placement == "expert" and self.mesh is not None
 
 
 FP = QuantContext(policy=None)

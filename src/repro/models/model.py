@@ -24,6 +24,7 @@ from repro.configs.base import ArchConfig, SHAPES, ShapeConfig
 from repro.core.expansion import ExpandedTensor
 from repro.models import blocks as B
 from repro.models import layers as L
+from repro.models import moe as MOE
 from repro.models.layers import FP, QuantContext
 
 PyTree = Any
@@ -256,7 +257,8 @@ def scatter_cache_into_slot(live: PyTree, pref: PyTree, slot) -> PyTree:
 
 def decode_step(params: PyTree, tokens: jnp.ndarray, caches: PyTree,
                 cache_len: jnp.ndarray, cfg: ArchConfig, qc: QuantContext = FP,
-                *, inplace: bool = False) -> Tuple[jnp.ndarray, PyTree]:
+                *, inplace: bool = False, moe_stats: bool = False
+                ) -> Tuple[jnp.ndarray, PyTree]:
     """One token step: tokens (B, 1) -> (logits (B, V), updated caches).
 
     ``cache_len`` is a scalar () for the lock-step path or a (B,) vector for
@@ -270,13 +272,21 @@ def decode_step(params: PyTree, tokens: jnp.ndarray, caches: PyTree,
     container's CPU backend the fori carry defeats XLA's buffer aliasing
     (measured 7x MORE traffic than the scan form — EXPERIMENTS.md §Perf
     iteration D2), so the default here is the scan form; flip the default
-    when deploying on real TPUs."""
+    when deploying on real TPUs.
+
+    ``moe_stats=True`` (static; scan form only) returns
+    ``(logits, caches, stats)`` with the MoE routing telemetry summed over
+    every ``moe_attn`` block — the per-round expert-load signal the slot
+    scheduler folds into its imbalance stats (DESIGN.md §15)."""
     batch = {"tokens": tokens}
     x, _ = _embed(qc, params, batch, cfg)
     names = _stage_block_names(cfg)
     b = tokens.shape[0]
     clen = jnp.broadcast_to(jnp.asarray(cache_len, jnp.int32), (b,))
     rows = jnp.arange(b)
+
+    if moe_stats and inplace:
+        raise ValueError("moe_stats requires the scan decode form")
 
     if inplace:
         def write_delta(kind, stacked, delta, i):
@@ -327,26 +337,52 @@ def decode_step(params: PyTree, tokens: jnp.ndarray, caches: PyTree,
             stage_params, stage_cache = scan_in
             stage_params = peel_expanded(stage_params)
             new_caches = {}
+            stats = MOE.zero_stats(cfg) if moe_stats else None
             for name, kind in zip(names, cfg.stage_pattern):
-                x, c = B.block_decode(qc, kind, stage_params[name], x, stage_cache[name],
-                                      cfg, cache_len=clen)
+                if moe_stats:
+                    x, c, st = B.block_decode(qc, kind, stage_params[name], x,
+                                              stage_cache[name], cfg,
+                                              cache_len=clen, moe_stats=True)
+                    stats = MOE.add_stats(stats, st)
+                else:
+                    x, c = B.block_decode(qc, kind, stage_params[name], x,
+                                          stage_cache[name], cfg, cache_len=clen)
                 new_caches[name] = c
+            if moe_stats:
+                return x, (new_caches, stats)
             return x, new_caches
 
-        x, stage_caches = jax.lax.scan(stage_fn, x, (params["stages"], caches["stages"]))
+        if moe_stats:
+            x, (stage_caches, stage_stats) = jax.lax.scan(
+                stage_fn, x, (params["stages"], caches["stages"]))
+            # scan stacks per-stage stats (L, ...); sum to the round total
+            moe_totals = jax.tree_util.tree_map(
+                lambda a: jnp.sum(a, axis=0), stage_stats)
+        else:
+            x, stage_caches = jax.lax.scan(
+                stage_fn, x, (params["stages"], caches["stages"]))
 
     tail_caches = {}
     if cfg.tail_pattern:
         for i, kind in enumerate(cfg.tail_pattern):
             name = f"t{i}_{kind}"
-            x, c = B.block_decode(qc, kind, params["tail"][name], x,
-                                  caches["tail"][name], cfg, cache_len=clen)
+            if moe_stats:
+                x, c, st = B.block_decode(qc, kind, params["tail"][name], x,
+                                          caches["tail"][name], cfg,
+                                          cache_len=clen, moe_stats=True)
+                moe_totals = MOE.add_stats(moe_totals, st)
+            else:
+                x, c = B.block_decode(qc, kind, params["tail"][name], x,
+                                      caches["tail"][name], cfg, cache_len=clen)
             tail_caches[name] = c
 
     x = L.apply_norm(cfg.norm, params["final_norm"], x)
     logits = L.logits_apply(qc, params, x, tie_embeddings=cfg.tie_embeddings,
                             softcap=cfg.logit_softcap)
-    return logits[:, 0, :], {"stages": stage_caches, "tail": tail_caches}
+    caches_out = {"stages": stage_caches, "tail": tail_caches}
+    if moe_stats:
+        return logits[:, 0, :], caches_out, moe_totals
+    return logits[:, 0, :], caches_out
 
 
 # ---------------------------------------------------------------------------

@@ -1,14 +1,30 @@
-"""Mixture-of-Experts FFN with capacity-based einsum dispatch (MaxText-style).
+"""Mixture-of-Experts FFN: capacity einsum dispatch + the serving contract.
 
-Tokens are routed top-k with a per-group capacity ``C = ceil(group * k / E *
-capacity_factor)``; overflow tokens are dropped (standard Switch/GShard
-semantics).  Dispatch/combine are one-hot einsums — fully SPMD-shardable:
-the expert axis maps to the ``model`` mesh axis (expert parallelism), the
-group axis follows the batch sharding.
+Two routing rules (DESIGN.md §15):
+
+* ``routing="group"`` — MaxText-style capacity dispatch: tokens are routed
+  top-k with a per-group capacity ``C = ceil(group * k / E *
+  capacity_factor)``; overflow tokens are dropped (standard Switch/GShard
+  semantics).  Throughput/training semantics; token counts that do not
+  divide the group size are right-padded with zero-gate rows (an exact
+  no-op: pad rows claim no capacity slots and contribute nothing).
+* ``routing="token"`` — the serving contract: dropless per-token dispatch.
+  Every token reaches each of its top-k experts unconditionally (dispatch
+  is the membership one-hot, combine the renormalized gates), so there is
+  no cross-token capacity cumsum: a row's routing is a function of that
+  row alone — bit-frozen for non-participant rows under serving row masks
+  (the PR 9 role-mask discipline), invariant to slot order, and drop
+  fraction is structurally zero.  Decode/verify/chunk rounds run under
+  this rule (``QuantContext.moe_routing``, set by the Engine).
 
 Expert GEMM weights are stacked ``(E, D, F)`` kernels; under FP=xINT they
 are expanded per-expert (``expand_batched``: independent quantizers per
-expert) and applied through a vmap of the expanded matmul.
+expert) and applied through the grouped series GEMM
+(``core.linear.grouped_expanded_apply`` -> ``ops.grouped_series_matmul``:
+one dispatch over the expert axis, O(terms) not O(E*terms)).  Under
+``placement="expert"`` the stacked GEMM runs through
+``dist.expert_parallel.grouped_parallel_apply`` — experts sharded over the
+``"expert"`` mesh axis, int32-psum reduction per the Abelian contract.
 """
 from __future__ import annotations
 
@@ -19,7 +35,6 @@ import jax
 import jax.numpy as jnp
 
 from repro.core.expansion import ExpandedTensor
-from repro.core.linear import expanded_apply
 from repro.models import layers as L
 from repro.models.layers import QuantContext
 
@@ -39,41 +54,81 @@ def moe_init(key, cfg, dtype=jnp.float32) -> Dict:
     return p
 
 
-def _expert_mm(qc: QuantContext, x_e: jnp.ndarray, w, act=None) -> jnp.ndarray:
+def _expert_mm(qc: QuantContext, x_e: jnp.ndarray, w) -> jnp.ndarray:
     """x_e: (E, C', D) @ stacked kernels (E, D, F) -> (E, C', F)."""
-    if isinstance(w["kernel"], ExpandedTensor):
-        et = w["kernel"]
-        if et.batch_dims != 1:
-            raise ValueError(f"stacked expert kernel must have batch_dims=1, got {et}")
-        out = jax.vmap(lambda xe, we: expanded_apply(xe, we, qc.policy, use_kernel=qc.use_kernel))(
-            x_e, et.unbatched_view())
-    else:
-        out = jnp.einsum("ecd,edf->ecf", x_e, w["kernel"])
-    return out
+    kern = w["kernel"]
+    if isinstance(kern, ExpandedTensor):
+        if kern.batch_dims != 1:
+            raise ValueError(
+                f"stacked expert kernel must have batch_dims=1, got {kern}")
+        if getattr(qc, "expert_parallel", False):
+            from repro.dist.expert_parallel import grouped_parallel_apply
+            return grouped_parallel_apply(x_e, kern, qc.policy, qc.mesh,
+                                          term_budget=qc.term_budget)
+        from repro.core.linear import grouped_expanded_apply
+        return grouped_expanded_apply(x_e, kern, qc.policy,
+                                      use_kernel=qc.use_kernel,
+                                      term_budget=qc.term_budget)
+    return jnp.einsum("ecd,edf->ecf", x_e, kern)
 
 
-def moe_apply(qc: QuantContext, params: Dict, x: jnp.ndarray, cfg,
-              *, group_size: int = 4096) -> jnp.ndarray:
-    """x: (B, S, D) -> (B, S, D)."""
+def _router_gates(qc: QuantContext, params: Dict, x: jnp.ndarray, k: int):
+    """Top-k router: renormalized gate values + chosen expert indices."""
+    logits = L.dense(qc, x, params["router"])
+    probs = jax.nn.softmax(logits.astype(jnp.float32), axis=-1)
+    gate_vals, gate_idx = jax.lax.top_k(probs, k)
+    if k > 1:
+        gate_vals = gate_vals / jnp.sum(gate_vals, axis=-1, keepdims=True)
+    return gate_vals, gate_idx
+
+
+def _combine_einsum(qc: QuantContext, spec: str, a: jnp.ndarray,
+                    b: jnp.ndarray) -> jnp.ndarray:
+    """Dispatch/combine contraction over the expert axis.  Under
+    ``placement="expert"`` it is pinned replicated (a shard_map manual
+    region): left free, GSPMD may partition the contraction over the mesh
+    and reassociate the f32 sum — an ulp seed the next activation
+    requantization amplifies (DESIGN.md §15)."""
+    if getattr(qc, "expert_parallel", False):
+        from repro.dist.expert_parallel import replicated_einsum
+        return replicated_einsum(spec, a, b, qc.mesh)
+    return jnp.einsum(spec, a, b)
+
+
+def _experts_ffn(qc: QuantContext, params: Dict, x_e: jnp.ndarray) -> jnp.ndarray:
+    """The gated expert FFN over stacked per-expert token buffers."""
+    h = _expert_mm(qc, x_e, params["wi"])
+    hg = _expert_mm(qc, x_e, params["wg"])
+    h = jax.nn.silu(hg) * h
+    return _expert_mm(qc, h, params["wo"])
+
+
+def _route_group(qc: QuantContext, params: Dict, x: jnp.ndarray, cfg,
+                 group_size: int):
+    """Capacity-based grouped dispatch; returns (y (B,S,D) f32, stats)."""
     b, s, d = x.shape
     e, k = cfg.num_experts, cfg.experts_per_token
     tokens = b * s
     g_sz = min(group_size, tokens)
-    if tokens % g_sz != 0:
-        raise ValueError(
-            f"token count {tokens} not divisible by MoE group size {g_sz}")
-    g = tokens // g_sz
+    pad = (-tokens) % g_sz
+    xf = x.reshape(tokens, d)
+    if pad:
+        # right-pad into the last group with zero-gate rows: their routing
+        # one-hot is zeroed below, so they claim no capacity slots (the
+        # cumsum never sees them) and contribute/receive exactly nothing
+        xf = jnp.pad(xf, ((0, pad), (0, 0)))
+    g = (tokens + pad) // g_sz
     cap = min(g_sz, max(k, math.ceil(g_sz * k / e * cfg.capacity_factor)))
 
-    xg = x.reshape(g, g_sz, d)
-    logits = L.dense(qc, xg, params["router"])               # (G, S', E)
-    probs = jax.nn.softmax(logits.astype(jnp.float32), axis=-1)
-    gate_vals, gate_idx = jax.lax.top_k(probs, k)            # (G, S', k)
-    if k > 1:
-        gate_vals = gate_vals / jnp.sum(gate_vals, axis=-1, keepdims=True)
+    xg = xf.reshape(g, g_sz, d)
+    gate_vals, gate_idx = _router_gates(qc, params, xg, k)   # (G, S', k)
 
     # position of each (token, slot) within its expert queue
     onehot = jax.nn.one_hot(gate_idx, e, dtype=jnp.int32)    # (G, S', k, E)
+    if pad:
+        valid = (jnp.arange(tokens + pad) < tokens).reshape(g, g_sz)
+        onehot = onehot * valid[:, :, None, None]
+        gate_vals = gate_vals * valid[:, :, None]
     flat = onehot.reshape(g, g_sz * k, e)
     pos = jnp.cumsum(flat, axis=1) - 1                       # arrival order per expert
     pos = pos.reshape(g, g_sz, k, e)
@@ -84,19 +139,85 @@ def moe_apply(qc: QuantContext, params: Dict, x: jnp.ndarray, cfg,
     dispatch = jnp.any(disp, axis=2).astype(x.dtype)         # (G, S', E, C) 0/1
     combine = jnp.einsum("gsk,gskec->gsec", gate_vals, disp.astype(jnp.float32))
 
-    x_e = jnp.einsum("gsec,gsd->gecd", dispatch, xg)         # (G, E, C, D)
+    x_e = _combine_einsum(qc, "gsec,gsd->gecd", dispatch, xg)  # (G, E, C, D)
     x_e = x_e.transpose(1, 0, 2, 3).reshape(e, g * cap, d)
-    h = _expert_mm(qc, x_e, params["wi"])
-    hg = _expert_mm(qc, x_e, params["wg"])
-    h = jax.nn.silu(hg) * h
-    y_e = _expert_mm(qc, h, params["wo"])                    # (E, G*C, D)
+    y_e = _experts_ffn(qc, params, x_e)                      # (E, G*C, D)
     y_e = y_e.reshape(e, g, cap, d).transpose(1, 0, 2, 3)    # (G, E, C, D)
-    y = jnp.einsum("gsec,gecd->gsd", combine, y_e)
+    y = _combine_einsum(qc, "gsec,gecd->gsd", combine, y_e)
+    y = y.reshape(tokens + pad, d)[:tokens].reshape(b, s, d)
+
+    kept = jnp.sum(keep.astype(jnp.int32), axis=(0, 1, 2))   # (E,) tokens/expert
+    assigned = jnp.asarray(tokens * k, jnp.int32)
+    stats = {"load": kept,
+             "dropped": assigned - jnp.sum(kept),
+             "assigned": assigned}
+    return y, stats
+
+
+def _route_token(qc: QuantContext, params: Dict, x: jnp.ndarray, cfg):
+    """Dropless per-token dispatch (the serving rule); (y, stats)."""
+    b, s, d = x.shape
+    e, k = cfg.num_experts, cfg.experts_per_token
+    t = b * s
+    xt = x.reshape(t, d)
+    gate_vals, gate_idx = _router_gates(qc, params, xt, k)   # (T, k)
+
+    onehot = jax.nn.one_hot(gate_idx, e, dtype=jnp.float32)  # (T, k, E)
+    member = jnp.max(onehot, axis=1)                         # (T, E) 0/1
+    gates = jnp.einsum("tk,tke->te", gate_vals, onehot)      # (T, E)
+
+    x_e = jnp.einsum("te,td->etd", member.astype(x.dtype), xt)  # (E, T, D)
+    y_e = _experts_ffn(qc, params, x_e)                      # (E, T, D) f32
+    y = _combine_einsum(qc, "te,etd->td", gates, y_e.astype(jnp.float32))
     y = y.reshape(b, s, d)
+
+    # load counts every batch row (masked serving rows included): it
+    # measures the compute each expert performs this round, which is what
+    # the imbalance signal is for
+    load = jnp.sum(member, axis=0).astype(jnp.int32)         # (E,)
+    stats = {"load": load,
+             "dropped": jnp.asarray(0, jnp.int32),
+             "assigned": jnp.asarray(t * k, jnp.int32)}
+    return y, stats
+
+
+def moe_apply(qc: QuantContext, params: Dict, x: jnp.ndarray, cfg,
+              *, group_size: int = 4096, routing: str = None,
+              return_stats: bool = False):
+    """x: (B, S, D) -> (B, S, D)  [, routing stats].
+
+    ``routing`` defaults to the context's ``moe_routing`` ("group" unless a
+    serving engine switched the contract to "token").  ``return_stats``
+    additionally returns ``{"load": (E,) int32 tokens-per-expert,
+    "dropped": () int32, "assigned": () int32}`` for the scheduler's
+    expert-imbalance telemetry."""
+    if routing is None:
+        routing = getattr(qc, "moe_routing", "group")
+    if routing == "token":
+        y, stats = _route_token(qc, params, x, cfg)
+    elif routing == "group":
+        y, stats = _route_group(qc, params, x, cfg, group_size)
+    else:
+        raise ValueError(f"unknown MoE routing {routing!r}; "
+                         f"one of ('group', 'token')")
 
     if "shared" in params:
         y = y + L.mlp_apply(qc, params["shared"], x, "silu")
-    return y.astype(x.dtype)
+    y = y.astype(x.dtype)
+    return (y, stats) if return_stats else y
+
+
+def zero_stats(cfg) -> Dict:
+    """The identity element of the per-round stats accumulation — blocks
+    without a MoE FFN contribute this so heterogeneous stage patterns sum
+    to a fixed-structure stats pytree."""
+    return {"load": jnp.zeros((cfg.num_experts,), jnp.int32),
+            "dropped": jnp.asarray(0, jnp.int32),
+            "assigned": jnp.asarray(0, jnp.int32)}
+
+
+def add_stats(a: Dict, b: Dict) -> Dict:
+    return jax.tree_util.tree_map(lambda u, v: u + v, a, b)
 
 
 def load_balance_loss(logits: jnp.ndarray, gate_idx: jnp.ndarray, e: int) -> jnp.ndarray:

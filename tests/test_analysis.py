@@ -307,7 +307,8 @@ def test_committed_budget_ledger_holds():
     assert set(ledger) == {"decode", "decode_masked", "spec_decode",
                            "spec_decode_masked", "prefill", "decode_paged",
                            "spec_decode_paged", "spec_decode_paged_masked",
-                           "prefill_chunk", "prefill_chunk_paged"}
+                           "prefill_chunk", "prefill_chunk_paged",
+                           "decode_moe"}
     assert AB.check_budgets(strict=False) == []
 
 
@@ -334,7 +335,10 @@ def test_contracts_declared_on_entry_points(setup):
         c = A.get_contract(fn)
         assert c is not None and c.name == name
         assert c.transfers_per_round == 1
-        assert c.int_psum_axes == ("expand",)
+        # both integer-psum contracts are policed on every serving entry
+        # point: "expand" (term placement, §9) and "expert" (MoE expert
+        # placement, §15) — policing an absent mesh axis is a no-op
+        assert c.int_psum_axes == ("expand", "expert")
 
 
 def test_placement_psum_axes():
@@ -342,6 +346,7 @@ def test_placement_psum_axes():
     assert int_psum_axes("term") == ("expand",)
     assert int_psum_axes("tensor") == ()
     assert int_psum_axes("replicated") == ()
+    assert int_psum_axes("expert") == ("expert", "expand")
 
 
 def test_hlo_collective_census_cross_check():

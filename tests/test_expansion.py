@@ -179,3 +179,65 @@ def test_property_reconstruct_idempotent(seed, bits, terms):
     rec2 = E.reconstruct(et2)
     np.testing.assert_allclose(np.asarray(rec), np.asarray(rec2),
                                atol=float(E.theoretical_residual_bound(et)) * 0.1 + 1e-6)
+
+
+def test_batched_quantizers_fully_independent(rng):
+    """Per-expert quantizer independence: EVERY field of the batched
+    expansion (planes, scales, bias, sat) is bit-identical to a Python loop
+    of per-slice ``expand`` — each slice gets its own clip/scale schedule,
+    so stacking experts never couples their quantizers."""
+    m = _rand(rng, (3, 16, 24), scale=2.0)
+    kw = dict(per_channel=True, saturating=True, symmetric=False,
+              keep_sat=True)
+    et = E.expand_batched(m, 4, 3, **kw)
+    assert et.batch_dims == 1
+    for e in range(3):
+        ref = E.expand(m[e], 4, 3, **kw)
+        np.testing.assert_array_equal(np.asarray(et.planes[e]),
+                                      np.asarray(ref.planes))
+        np.testing.assert_array_equal(np.asarray(et.scales[e]),
+                                      np.asarray(ref.scales))
+        np.testing.assert_array_equal(np.asarray(et.bias[e]),
+                                      np.asarray(ref.bias))
+        np.testing.assert_array_equal(np.asarray(et.sat[e]),
+                                      np.asarray(ref.sat))
+        np.testing.assert_array_equal(np.asarray(E.reconstruct(et)[e]),
+                                      np.asarray(E.reconstruct(ref)))
+
+
+@pytest.mark.parametrize("e", (3, 5))
+def test_batched_pack_odd_expert_count(rng, e):
+    """INT4-packing a stacked expansion with an ODD expert count and an odd
+    last axis: the nibble pad applies per-row on the last axis only (the
+    expert axis is never halved), and unpack restores every expert
+    bit-exactly."""
+    m = _rand(rng, (e, 8, 7))               # odd columns -> one pad nibble
+    et = E.expand_batched(m, 4, 2, per_channel=True, pack_safe=True)
+    p = E.pack(et)
+    assert p.packed and p.pack_pad == 1
+    assert p.planes.shape[0] == e           # expert axis untouched
+    assert p.planes.shape[-1] == 4          # ceil(7/2) bytes
+    u = E.unpack(p)
+    np.testing.assert_array_equal(np.asarray(u.planes), np.asarray(et.planes))
+    np.testing.assert_array_equal(np.asarray(E.reconstruct(p)),
+                                  np.asarray(E.reconstruct(et)))
+
+
+def test_batched_truncate_per_expert(rng):
+    """truncate(k) on a batched expansion slices the TERM axis (axis
+    batch_dims), not the expert axis, and equals the per-slice truncate of
+    each expert's own expansion — QoS term budgets work per-expert."""
+    m = _rand(rng, (4, 12, 10))
+    et = E.expand_batched(m, 4, 3, per_channel=True)
+    for k in (1, 2):
+        t = E.truncate(et, k)
+        assert t.num_terms == k and t.batch_dims == 1
+        assert t.planes.shape == (4, k, 12, 10)
+        for e in range(4):
+            ref = E.truncate(E.expand(m[e], 4, 3, per_channel=True), k)
+            np.testing.assert_array_equal(np.asarray(t.planes[e]),
+                                          np.asarray(ref.planes))
+            np.testing.assert_array_equal(np.asarray(t.scales[e]),
+                                          np.asarray(ref.scales))
+            np.testing.assert_array_equal(np.asarray(E.reconstruct(t)[e]),
+                                          np.asarray(E.reconstruct(ref)))

@@ -1,0 +1,280 @@
+"""Quantized MoE serving end-to-end (DESIGN.md §15), fake devices via
+subprocess — the main pytest process must keep 1 device, per the dry-run
+isolation contract (same pattern as test_dist_serving.py):
+
+* ``placement="expert"`` (stacked per-expert expansions sharded over an
+  "expert" mesh axis, grouped series GEMM + one int32 psum) serves the
+  slot-scheduler continuous-batching workload TOKEN-IDENTICAL to the
+  replicated oracle on 1/2/4 fake devices — through mixed lengths, slot
+  recycling, per-request budgets, QoS quality tiers and self-speculative
+  decode — for both MoE arch flavors (grok: top-2 + softcaps; llama4:
+  top-1 + shared expert);
+* the integer-psum contract holds on the ``"expert"`` axis
+  (``check_integer_psum(axes=("expert",))``) and the 2-D
+  ``("expert", "expand")`` composition serves token-identically too;
+* the grouped dispatch is O(terms), not O(E·terms): the expert-GEMM
+  ``dot_general`` census is independent of E (in-process — tracing only);
+* the slot scheduler reports per-round expert-load imbalance
+  (``last_run_stats["moe"]``) with one end-of-run host transfer.
+"""
+import os
+import subprocess
+import sys
+import textwrap
+
+import pytest
+
+REPO = os.path.dirname(os.path.dirname(os.path.abspath(__file__)))
+
+
+def _run(*parts: str, n_devices: int = 4, timeout=560):
+    """Run the dedented concatenation of ``parts`` in a fake-device
+    subprocess; the combined script must end by printing OK."""
+    py_src = "\n".join(textwrap.dedent(p) for p in parts)
+    assert "OK" in py_src.rsplit("print", 1)[-1], "test body must print ...OK"
+    env = dict(os.environ)
+    env["XLA_FLAGS"] = f"--xla_force_host_platform_device_count={n_devices}"
+    env["PYTHONPATH"] = os.path.join(REPO, "src")
+    env["REPRO_NO_PALLAS"] = "1"   # sharded placements serve the ref path
+    out = subprocess.run([sys.executable, "-c", py_src],
+                         capture_output=True, text=True, timeout=timeout, env=env)
+    assert out.returncode == 0, f"STDOUT:\n{out.stdout}\nSTDERR:\n{out.stderr[-3000:]}"
+    assert "OK" in out.stdout, f"script did not reach its OK print:\n{out.stdout}"
+    return out.stdout
+
+
+_COMMON = """
+    import jax, jax.numpy as jnp, numpy as np
+    from repro.api import QuantRecipe, Runtime, quantize
+    from repro.configs.base import get_arch
+    from repro.core.policy import W4A4, W4A16, W8A8
+    from repro.dist.expert_parallel import make_moe_mesh
+    from repro.dist.placement import make_serve_mesh
+    from repro.infer.serve import ServeConfig
+    from repro.models import model as M
+
+    def build(arch, policy, placement, mesh=None, cfg=None, art=None):
+        cfg = cfg or get_arch(arch, smoke=True)
+        if art is None:
+            params = M.init_params(jax.random.PRNGKey(0), cfg)
+            art = quantize(params, QuantRecipe(policy=policy, arch=arch,
+                                               smoke=True))
+        rt = Runtime(art, backend="ref", cfg=cfg, mesh=mesh,
+                     placement=placement)
+        return cfg, art, rt
+
+    def serve_workload(rt, cfg, *, n_req=6, slots=2, max_seq=48, seed=1,
+                       sc=None, qualities=None):
+        # mixed lengths + per-request budgets + recycling (n_req > slots)
+        eng = rt.serve(sc or ServeConfig(max_seq=max_seq, max_batch=slots,
+                                         max_slots=slots))
+        rng = np.random.default_rng(seed)
+        for i in range(n_req):
+            L = int(rng.integers(4, 14))
+            kw = {}
+            if qualities:
+                kw["quality"] = qualities[i % len(qualities)]
+            eng.add_request(rng.integers(0, cfg.vocab_size, L).tolist(),
+                            max_new_tokens=int(rng.integers(3, 7)), **kw)
+        out = eng.run(max_new_tokens=6)
+        return out, eng.last_run_stats
+"""
+
+
+@pytest.mark.parametrize("n_devices", [1, 2, 4])
+def test_expert_parallel_token_identical_grok(n_devices):
+    """grok flavor (top-2, softcaps, E=4 smoke) on a 1/2/4-device expert
+    mesh: generated tokens identical to the replicated oracle through slot
+    recycling; the scheduler reports expert-load telemetry with zero drops
+    (the serving routing rule is dropless by construction)."""
+    _run(_COMMON, f"""
+        n = {n_devices}
+        arch = "grok_1_314b"
+        cfg, art, rt_rep = build(arch, W4A4, "replicated")
+        mesh = make_moe_mesh(n)
+        _, _, rt_ep = build(arch, W4A4, "expert", mesh, cfg=cfg, art=art)
+
+        out_rep, st_rep = serve_workload(rt_rep, cfg)
+        out_ep, st_ep = serve_workload(rt_ep, cfg)
+        assert out_ep == out_rep, (out_ep, out_rep)
+        assert st_ep["placement"] == "expert"
+        assert st_ep["mesh_devices"] == n
+        for st in (st_rep, st_ep):
+            moe = st["moe"]
+            assert len(moe["tokens_per_expert"]) == cfg.num_experts
+            assert moe["dispatches"] > 0
+            assert moe["drop_fraction"] == 0.0
+            assert moe["imbalance"] >= 1.0
+        assert st_ep["moe"] == st_rep["moe"]   # telemetry is placement-blind
+        print("expert-parallel grok OK")
+    """, n_devices=n_devices)
+
+
+def test_expert_parallel_token_identical_llama4_shared():
+    """llama4 flavor (top-1 + shared expert, E=4 smoke) on 4 devices: the
+    dense shared-expert branch runs replicated next to the sharded routed
+    experts and the stream stays token-identical; weight-only policies take
+    the FP-dequant expert path (the waivered psum) and match too."""
+    _run(_COMMON, """
+        arch = "llama4_scout_17b_a16e"
+        mesh = make_moe_mesh(4)
+        for policy in (W4A4, W4A16):
+            cfg, art, rt_rep = build(arch, policy, "replicated")
+            _, _, rt_ep = build(arch, policy, "expert", mesh, cfg=cfg,
+                                art=art)
+            out_rep, _ = serve_workload(rt_rep, cfg)
+            out_ep, _ = serve_workload(rt_ep, cfg)
+            assert out_ep == out_rep, (policy, out_ep, out_rep)
+        print("expert-parallel llama4 OK")
+    """)
+
+
+def test_expert_parallel_qos_tiers_token_identical():
+    """QoS quality tiers (per-request term budgets -> masked per-tier
+    dispatch groups) on the expert placement: the term budget masks
+    trailing scales inside the grouped GEMM, and every tier's stream is
+    token-identical to the replicated engine serving the same ladder."""
+    _run(_COMMON, """
+        arch = "grok_1_314b"
+        cfg, art, rt_rep = build(arch, W4A4, "replicated")
+        mesh = make_moe_mesh(2)
+        _, _, rt_ep = build(arch, W4A4, "expert", mesh, cfg=cfg, art=art)
+
+        sc = ServeConfig(max_seq=48, max_batch=2, max_slots=2,
+                         tier_budgets=(("k1", 1),))
+        out_rep, _ = serve_workload(rt_rep, cfg, sc=sc,
+                                    qualities=("full", "k1"))
+        sc2 = ServeConfig(max_seq=48, max_batch=2, max_slots=2,
+                          tier_budgets=(("k1", 1),))
+        out_ep, st = serve_workload(rt_ep, cfg, sc=sc2,
+                                    qualities=("full", "k1"))
+        assert out_ep == out_rep, (out_ep, out_rep)
+        assert st["tiers"]["k1"]["served_tokens"] > 0
+        assert st["tiers"]["k1"]["mean_effective_terms"] == 1.0
+        print("expert-parallel QoS tiers OK")
+    """, n_devices=2)
+
+
+def test_expert_parallel_spec_decode_token_identical():
+    """Self-speculative decode (k-term draft + full-series verify) over the
+    expert placement: greedy output must stay token-identical to both the
+    replicated speculative engine and the non-speculative oracle."""
+    _run(_COMMON, """
+        arch = "grok_1_314b"
+        cfg, art, rt_rep = build(arch, W4A4, "replicated")
+        mesh = make_moe_mesh(2)
+        _, _, rt_ep = build(arch, W4A4, "expert", mesh, cfg=cfg, art=art)
+
+        plain = ServeConfig(max_seq=48, max_batch=2, max_slots=2)
+        spec = ServeConfig(max_seq=48, max_batch=2, max_slots=2,
+                           spec_terms=1, spec_lookahead=2)
+        out_oracle, _ = serve_workload(rt_rep, cfg, sc=plain)
+        out_rep, _ = serve_workload(rt_rep, cfg, sc=spec)
+        out_ep, st = serve_workload(rt_ep, cfg, sc=spec)
+        assert out_rep == out_oracle, (out_rep, out_oracle)
+        assert out_ep == out_rep, (out_ep, out_rep)
+        assert st["spec_rounds"] > 0
+        print("expert-parallel spec decode OK")
+    """, n_devices=2)
+
+
+def test_expert_axis_integer_psum_and_2d_mesh():
+    """The Abelian contract on the second mesh axis: ``check_integer_psum``
+    passes on ``axes=("expert",)`` for the series path, and the 2-D
+    ``("expert", "expand")`` composition (experts sharded AND dense terms
+    scattered) serves token-identically to the replicated oracle."""
+    _run(_COMMON, """
+        from repro.analysis.jaxpr_check import check_integer_psum
+        from repro.core.policy import W4A4 as POL
+        from repro.dist.expert_parallel import grouped_parallel_apply
+
+        mesh1 = make_moe_mesh(2)
+        cfg, art, rt_rep = build("grok_1_314b", W4A4, "replicated")
+        w_et = rt_rep.params["stages"]["b0_moe_attn"]["moe"]["wi"]["kernel"]
+        # the stage-stacked leaf is (L, E, ...); take stage 0 -> (E, ...)
+        import dataclasses as dc
+        if w_et.batch_dims == 2:
+            w_et = dc.replace(
+                w_et,
+                planes=w_et.planes[0], scales=w_et.scales[0],
+                bias=None if w_et.bias is None else w_et.bias[0],
+                sat=None if w_et.sat is None else w_et.sat[0],
+                batch_dims=1)
+        x = jnp.ones((cfg.num_experts, 3, cfg.d_model), jnp.float32)
+        check_integer_psum(
+            lambda xx: grouped_parallel_apply(xx, w_et, POL, mesh1),
+            x, axes=("expert",), strict=True)
+        print("integer psum on expert axis OK")
+
+        mesh2 = make_moe_mesh(2, 2)        # 2 experts x 2 term shards
+        assert dict(mesh2.shape) == {"expert": 2, "expand": 2}
+        _, _, rt_2d = build("grok_1_314b", W4A4, "expert", mesh2, cfg=cfg,
+                            art=art)
+        assert rt_2d.qc.term_parallel and rt_2d.qc.expert_parallel
+        out_rep, _ = serve_workload(rt_rep, cfg)
+        out_2d, st = serve_workload(rt_2d, cfg)
+        assert out_2d == out_rep, (out_2d, out_rep)
+        assert st["mesh_devices"] == 4
+        print("2-D expert x term mesh OK")
+    """)
+
+
+def test_grouped_dispatch_census_independent_of_expert_count():
+    """O(terms), not O(E·terms): the dot_general census of the MoE FFN is
+    identical for E=4 and E=8 — the grouped series GEMM batches the expert
+    axis inside each dispatch (tracing only; no fake devices needed)."""
+    import dataclasses
+
+    import jax
+    import jax.numpy as jnp
+
+    from repro.analysis.jaxpr_check import dispatch_census
+    from repro.configs.base import get_arch
+    from repro.core.policy import W8A8
+    from repro.core.ptq import expand_params
+    from repro.models import moe as MOE
+    from repro.models.layers import QuantContext
+
+    counts = {}
+    for e in (4, 8):
+        cfg = dataclasses.replace(get_arch("grok_1_314b", smoke=True),
+                                  num_experts=e)
+        params = expand_params(MOE.moe_init(jax.random.PRNGKey(0), cfg),
+                               W8A8)
+        qc = QuantContext(policy=W8A8, moe_routing="token")
+        x = jnp.ones((2, 1, cfg.d_model), jnp.float32)
+        counts[e] = dispatch_census(
+            lambda p, xx: MOE.moe_apply(qc, p, xx, cfg), params, x)
+    assert counts[4]["dot_general"] == counts[8]["dot_general"], counts
+    assert counts[4]["dot_general"] > 0
+
+
+def test_moe_stats_channel_single_device():
+    """last_run_stats["moe"]: per-round expert-load imbalance telemetry on
+    a plain single-device slots run — load vector length E, max/mean per
+    round coherent, dropless under the serving routing rule."""
+    import jax
+    import numpy as np
+
+    from repro.configs.base import get_arch
+    from repro.core.policy import W8A8
+    from repro.infer.serve import Engine, ServeConfig
+    from repro.models import model as M
+
+    cfg = get_arch("llama4_scout_17b_a16e", smoke=True)
+    params = M.init_params(jax.random.PRNGKey(0), cfg)
+    eng = Engine(cfg, params, policy=W8A8,
+                 serve_cfg=ServeConfig(max_seq=48, max_batch=2, max_slots=2))
+    rng = np.random.default_rng(0)
+    for _ in range(4):
+        eng.add_request(rng.integers(0, cfg.vocab_size, 6).tolist(),
+                        max_new_tokens=4)
+    out = eng.run(max_new_tokens=4)
+    assert len(out) == 4
+    moe = eng.last_run_stats["moe"]
+    assert len(moe["tokens_per_expert"]) == cfg.num_experts
+    assert moe["dispatches"] > 0
+    assert sum(moe["tokens_per_expert"]) > 0
+    assert moe["max_tokens_per_expert"] >= moe["mean_tokens_per_expert"] > 0
+    assert moe["imbalance"] >= 1.0
+    assert moe["drop_fraction"] == 0.0
